@@ -1,0 +1,84 @@
+//! End-to-end driver: all three layers composed on a real workload.
+//!
+//! Loads the `gpt-mini` functional artifact (JAX/Pallas decode step,
+//! AOT-lowered to HLO text by `make artifacts`, executed through the
+//! PJRT CPU client), serves a batch of generation requests through the
+//! rust coordinator's FIFO server, and co-simulates the PIM-GPT timing
+//! model — reporting functional throughput (wall clock), simulated
+//! hardware latency/energy, and the generated tokens.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_generation
+//! ```
+//!
+//! The run recorded in EXPERIMENTS.md §E2E comes from this binary.
+
+use std::path::PathBuf;
+
+use pim_gpt::config::HwConfig;
+use pim_gpt::coordinator::{PimGptSystem, Request, Server};
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "gpt-mini".to_string());
+    let dir = PathBuf::from("artifacts");
+    if !dir.join(format!("{model}.meta.json")).exists() {
+        anyhow::bail!("artifact '{model}' not found — run `make artifacts` first");
+    }
+    let cfg = HwConfig::paper_baseline();
+
+    println!("== PIM-GPT end-to-end: functional decode + timing co-simulation ==");
+    let cfg2 = cfg.clone();
+    let m2 = model.clone();
+    let server = Server::start(move || PimGptSystem::with_artifact(&m2, &dir, &cfg2));
+
+    // A small trace of requests: varied prompts and lengths.
+    let prompts: Vec<(Vec<i32>, usize)> = (0..12)
+        .map(|i| {
+            let prompt: Vec<i32> = (1..=(3 + i % 5) as i32).collect();
+            (prompt, 16 + 4 * (i % 3) as usize)
+        })
+        .collect();
+    let n_req = prompts.len() as u64;
+
+    let wall0 = std::time::Instant::now();
+    for (id, (prompt, n_new)) in prompts.into_iter().enumerate() {
+        server.submit(Request { id: id as u64, prompt, n_new })?;
+    }
+    let mut sim_total = 0.0;
+    let mut tok_total = 0usize;
+    for _ in 0..n_req {
+        let r = server.recv()?;
+        if let Some(e) = r.error {
+            println!("req {:>2}: ERROR {e}", r.id);
+            continue;
+        }
+        sim_total += r.sim_seconds;
+        tok_total += r.tokens.len();
+        println!(
+            "req {:>2}: {:>2} tokens  sim {:>8.1} us ({:>5.2} us/tok)  wall {:>6.1} ms  out: {:?}",
+            r.id,
+            r.tokens.len(),
+            r.sim_seconds * 1e6,
+            r.sim_seconds * 1e6 / r.tokens.len() as f64,
+            r.wall_seconds * 1e3,
+            &r.tokens[..r.tokens.len().min(10)],
+        );
+    }
+    let wall = wall0.elapsed().as_secs_f64();
+    let metrics = server.shutdown();
+
+    println!("\n== summary ==");
+    println!("requests            : {} ({} failed)", metrics.requests, metrics.failed);
+    println!("tokens generated    : {tok_total}");
+    println!("functional wall     : {:.2} s ({:.1} tok/s real numerics on CPU PJRT)", wall, tok_total as f64 / wall);
+    println!(
+        "simulated PIM-GPT   : {:.2} ms total ({:.0} tok/s on the accelerator)",
+        sim_total * 1e3,
+        tok_total as f64 / sim_total
+    );
+    println!(
+        "speedup vs wall     : {:.0}x (simulated hardware vs CPU functional execution)",
+        wall / sim_total
+    );
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Edge-serving scenario (the paper's motivating deployment): PIM-GPT as
+//! an on-device inference engine, where the ASIC clock is scaled down to
+//! save power (Fig. 12's claim: performance is insensitive to ASIC
+//! frequency, justifying edge frequency scaling).
+//!
+//! Serves the same request trace at 1 GHz, 200 MHz and 100 MHz ASIC
+//! clocks and reports simulated latency + energy per configuration.
+//!
+//! ```bash
+//! cargo run --release --example edge_serving
+//! ```
+
+use pim_gpt::config::HwConfig;
+use pim_gpt::coordinator::{PimGptSystem, Request, Server};
+use pim_gpt::model::gpt::by_name;
+
+fn serve_trace(cfg: HwConfig, model: &str, n_req: u64) -> anyhow::Result<(f64, f64)> {
+    let name = model.to_string();
+    let server = Server::start(move || {
+        let m = by_name(&name).unwrap();
+        PimGptSystem::timing_only(&m, &cfg)
+    });
+    for id in 0..n_req {
+        server.submit(Request {
+            id,
+            prompt: (1..=4 + (id % 4) as i32).collect(),
+            n_new: 24,
+        })?;
+    }
+    let mut sim_s = 0.0;
+    let mut toks = 0u64;
+    for _ in 0..n_req {
+        let r = server.recv()?;
+        anyhow::ensure!(r.error.is_none(), "request failed: {:?}", r.error);
+        sim_s += r.sim_seconds;
+        toks += r.tokens.len() as u64;
+    }
+    server.shutdown();
+    Ok((sim_s, toks as f64))
+}
+
+fn main() -> anyhow::Result<()> {
+    let model = "gpt2-small";
+    println!("== edge serving: ASIC frequency scaling on {model} ==\n");
+    println!("{:<10} {:>14} {:>14} {:>10}", "ASIC clk", "sim latency", "per token", "vs 1 GHz");
+    let mut base = None;
+    for freq in [1.0, 0.5, 0.2, 0.1] {
+        let cfg = HwConfig::paper_baseline().with_asic_freq_ghz(freq);
+        let (sim_s, toks) = serve_trace(cfg, model, 6)?;
+        let per_tok = sim_s / toks;
+        let b = *base.get_or_insert(sim_s);
+        println!(
+            "{:<10} {:>11.2} ms {:>11.2} us {:>9.3}x",
+            format!("{} MHz", (freq * 1000.0) as u32),
+            sim_s * 1e3,
+            per_tok * 1e6,
+            sim_s / b
+        );
+    }
+    println!("\npaper Fig. 12: scaling 1 GHz -> 100 MHz costs at most ~20% latency —");
+    println!("the ASIC is not the bottleneck, so edge deployments can clock it down.");
+    Ok(())
+}

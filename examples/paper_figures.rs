@@ -1,0 +1,40 @@
+//! Regenerate every table and figure of the paper's evaluation section.
+//!
+//! ```bash
+//! cargo run --release --example paper_figures            # quick (64 tokens)
+//! cargo run --release --example paper_figures -- 1024    # paper scale
+//! ```
+//!
+//! Paper targets are embedded in each title; EXPERIMENTS.md records the
+//! paper-vs-measured comparison produced by this binary.
+
+use pim_gpt::config::HwConfig;
+use pim_gpt::report;
+
+fn main() -> anyhow::Result<()> {
+    let tokens: u64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(64);
+    let sweep_tokens = tokens.min(64); // sensitivity sweeps re-run 8 models x points
+
+    let mut reports = vec![
+        report::fig1_model_zoo(),
+        report::table1_config(&HwConfig::paper_baseline()),
+        report::fig8_9_speedup_energy(tokens)?,
+        report::fig10_breakdown(tokens)?,
+        report::fig11_locality(tokens)?,
+        report::fig12_asic_freq(sweep_tokens)?,
+        report::fig13_bandwidth(sweep_tokens)?,
+    ];
+    if tokens >= 512 {
+        reports.push(report::fig14_long_token(&[1024, 2048, 4096, 8096])?);
+    } else {
+        reports.push(report::fig14_long_token(&[128, 256, 512, 1024])?);
+    }
+    reports.push(report::fig15_scalability(sweep_tokens)?);
+    reports.push(report::table2_comparison(tokens)?);
+
+    for r in &reports {
+        println!("{}\n{}", r.title, r.rendered);
+    }
+    println!("(regenerated {} experiments at {} tokens)", reports.len(), tokens);
+    Ok(())
+}

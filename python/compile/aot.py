@@ -1,0 +1,122 @@
+"""AOT compile path: lower the L2 decode step to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT ``lowered.compile().serialize()`` —
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+image's xla_extension 0.5.1 (behind the published ``xla`` 0.1.6 crate)
+rejects; the text parser reassigns ids and round-trips cleanly.
+
+Per functional model this emits into ``artifacts/``:
+
+* ``<name>.hlo.txt``      — the decode step (token, pos, kc, vc, *params)
+* ``<name>.weights.bin``  — little-endian f32 dump of every parameter, in
+                            ``model.PARAM_NAMES`` order, contiguous
+* ``<name>.meta.json``    — input signature (names/shapes/dtypes/offsets)
+                            the rust runtime uses to build literals
+
+Run via ``make artifacts`` (no-op when outputs are newer than inputs).
+Python never runs after this step.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .configs import FUNC_CONFIGS
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(name: str, seed: int = 0):
+    cfg = FUNC_CONFIGS[name]
+    params = M.init_params(cfg, seed=seed)
+    kc, vc = M.empty_caches(cfg)
+    token = jnp.zeros((1,), jnp.int32)
+    pos = jnp.zeros((1,), jnp.int32)
+    flat = [params[n] for n in M.PARAM_NAMES]
+    fn = M.aot_decode_fn(cfg)
+    lowered = jax.jit(fn).lower(token, pos, kc, vc, *flat)
+    return cfg, params, lowered
+
+
+def emit(name: str, outdir: str, seed: int = 0) -> dict:
+    cfg, params, lowered = lower_model(name, seed)
+    os.makedirs(outdir, exist_ok=True)
+
+    hlo_path = os.path.join(outdir, f"{name}.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    # Weight blob + metadata describing the artifact's input signature.
+    weights_path = os.path.join(outdir, f"{name}.weights.bin")
+    inputs, offset = [], 0
+    inputs.append({"name": "token", "shape": [1], "dtype": "i32", "kind": "token"})
+    inputs.append({"name": "pos", "shape": [1], "dtype": "i32", "kind": "pos"})
+    cache_shape = [cfg.n_layer, cfg.max_seq, cfg.d_model]
+    inputs.append({"name": "k_cache", "shape": cache_shape, "dtype": "f32",
+                   "kind": "cache"})
+    inputs.append({"name": "v_cache", "shape": cache_shape, "dtype": "f32",
+                   "kind": "cache"})
+    with open(weights_path, "wb") as f:
+        for pname in M.PARAM_NAMES:
+            arr = np.asarray(params[pname], dtype="<f4")
+            f.write(arr.tobytes(order="C"))
+            inputs.append({
+                "name": pname, "shape": list(arr.shape), "dtype": "f32",
+                "kind": "param", "offset": offset, "nbytes": arr.nbytes,
+            })
+            offset += arr.nbytes
+
+    cache_elems = cfg.n_layer * cfg.max_seq * cfg.d_model
+    meta = {
+        "name": name,
+        "config": {
+            "n_layer": cfg.n_layer, "d_model": cfg.d_model,
+            "n_head": cfg.n_head, "vocab": cfg.vocab,
+            "max_seq": cfg.max_seq,
+        },
+        # Single flat f32 output (see model.aot_decode_fn): the rust
+        # runtime splits it at these element counts.
+        "outputs": {"kind": "flat",
+                    "splits": [["logits", cfg.vocab],
+                               ["k_cache", cache_elems],
+                               ["v_cache", cache_elems]]},
+        "inputs": inputs,
+        "weights_bin": os.path.basename(weights_path),
+        "hlo": os.path.basename(hlo_path),
+        "seed": seed,
+    }
+    meta_path = os.path.join(outdir, f"{name}.meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=1)
+    return meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--models", nargs="*", default=list(FUNC_CONFIGS),
+                    help=f"functional models to lower (default: all of "
+                         f"{list(FUNC_CONFIGS)})")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    for name in args.models:
+        meta = emit(name, args.out, seed=args.seed)
+        print(f"wrote {meta['hlo']} + weights ({name})")
+
+
+if __name__ == "__main__":
+    main()

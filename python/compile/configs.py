@@ -1,0 +1,82 @@
+"""Model configurations.
+
+Two families:
+
+* ``FUNC_CONFIGS`` — tiny functional models that are AOT-lowered to HLO
+  artifacts and actually executed by the rust coordinator (L3) through PJRT.
+  Weights are synthetic (seeded), since no checkpoints are available offline;
+  timing behaviour in the simulator depends only on shapes.
+
+* ``PAPER_CONFIGS`` — the 8 GPT-2/GPT-3 model shapes evaluated in the paper
+  (Fig. 8-15). These are mirrored on the rust side (``model::gpt``); they are
+  kept here so python tests can cross-check parameter/FLOP counts (Fig. 1).
+"""
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class GptConfig:
+    name: str
+    n_layer: int
+    d_model: int
+    n_head: int
+    vocab: int
+    max_seq: int
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_head
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+    def n_params(self) -> int:
+        """Parameter count (weights + biases + layernorms + embeddings)."""
+        d, L = self.d_model, self.n_layer
+        per_layer = (
+            d * 3 * d + 3 * d          # qkv
+            + d * d + d                # attn proj
+            + d * self.d_ff + self.d_ff  # fc1
+            + self.d_ff * d + d        # fc2
+            + 4 * d                    # 2x layernorm (gamma, beta)
+        )
+        emb = self.vocab * d + self.max_seq * d
+        return L * per_layer + emb + 2 * d  # final layernorm
+
+    def flops_per_token(self, seq_len: int) -> int:
+        """MAC-dominated op count for decoding one token at context length
+        ``seq_len`` (multiply+add counted as 2 ops), incl. the LM head."""
+        d, L = self.d_model, self.n_layer
+        per_layer = 2 * (
+            d * 3 * d        # qkv
+            + d * seq_len    # q @ K^T  (all heads combined)
+            + seq_len * d    # scores @ V
+            + d * d          # attn proj
+            + d * self.d_ff  # fc1
+            + self.d_ff * d  # fc2
+        )
+        return L * per_layer + 2 * d * self.vocab  # lm head
+
+
+# Functional (executable) configs — small on purpose: these run per-token on
+# the CPU PJRT client inside the rust serving loop.
+FUNC_CONFIGS = {
+    "gpt-nano": GptConfig("gpt-nano", n_layer=2, d_model=128, n_head=4,
+                          vocab=512, max_seq=128),
+    "gpt-mini": GptConfig("gpt-mini", n_layer=4, d_model=256, n_head=8,
+                          vocab=2048, max_seq=256),
+}
+
+# The 8 models of the paper's evaluation (Table of §V.A, Fig. 8/9).
+PAPER_CONFIGS = {
+    "gpt2-small":  GptConfig("gpt2-small",  12, 768,  12, 50257, 1024),
+    "gpt2-medium": GptConfig("gpt2-medium", 24, 1024, 16, 50257, 1024),
+    "gpt2-large":  GptConfig("gpt2-large",  36, 1280, 20, 50257, 1024),
+    "gpt2-xl":     GptConfig("gpt2-xl",     48, 1600, 25, 50257, 1024),
+    "gpt3-small":  GptConfig("gpt3-small",  12, 768,  12, 50257, 2048),
+    "gpt3-medium": GptConfig("gpt3-medium", 24, 1024, 16, 50257, 2048),
+    "gpt3-large":  GptConfig("gpt3-large",  24, 1536, 16, 50257, 2048),
+    "gpt3-xl":     GptConfig("gpt3-xl",     24, 2048, 24, 50257, 2048),
+}

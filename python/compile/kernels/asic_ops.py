@@ -1,0 +1,192 @@
+"""ASIC computation-engine ops, add/mul-only approximation algorithms.
+
+The PIM-GPT ASIC implements every non-VMM function with adders and
+multipliers only (paper §III.D):
+
+* ``exp``  — range-reduced Taylor series, 6 terms (paper: "Taylor series
+  approximation with the first six items"). Raw Taylor-6 diverges for
+  x < -4, so like any fixed-precision hardware implementation we first
+  split x = k·ln2 + r with r ∈ [-ln2/2, ln2/2] (one multiply + round) and
+  reconstruct 2^k by integer exponent assembly (a bit-pack, the same
+  hardware primitive Algorithm 2 already requires).
+* ``tanh`` — via exp identity tanh(x) = 1 - 2/(e^{2x}+1), reusing the
+  Taylor exp and the Newton-Raphson reciprocal.
+* ``reciprocal`` — paper Algorithm 1 (Newton-Raphson division): scale D
+  into [0.5, 1) by exponent subtraction, X0 = 48/17 - 32/17·D', three
+  iterations X = X + X·(1 - D'X), rescale.
+* ``rsqrt`` — paper Algorithm 2 (Quake fast inverse square root): bit
+  trick 0x5f3759df - (L >> 1) followed by two Newton iterations
+  X = X·(1.5 - 0.5·D·X²).
+
+All functions are jax-traceable, work elementwise on f32/bf16 arrays, and
+lower into the same HLO as the rest of the model. They are exercised both
+directly (pytest error bounds vs kernels.ref) and inside the Pallas
+kernels below.
+
+The rust ``arith`` module mirrors these algorithms bit-for-bit on scalars;
+``python/tests/test_asic_ops.py`` pins a table of golden values that the
+rust unit tests replicate, keeping the two implementations locked.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+LN2 = 0.6931471805599453
+INV_LN2 = 1.4426950408889634
+
+# Reciprocal of factorials for the 6-term Taylor series of exp:
+# 1 + x + x^2/2 + x^3/6 + x^4/24 + x^5/120
+_EXP_TAYLOR_COEF = (1.0, 1.0, 0.5, 1.0 / 6.0, 1.0 / 24.0, 1.0 / 120.0)
+
+
+def _as_f32(x):
+    return jnp.asarray(x).astype(jnp.float32)
+
+
+def exp_taylor6(x):
+    """Range-reduced 6-term Taylor exp. Add/mul + exponent assembly only."""
+    x = _as_f32(x)
+    # Clamp to the representable range so 2^k stays a normal f32 (the ASIC
+    # saturates likewise); softmax inputs are max-subtracted so x <= 0.
+    x = jnp.clip(x, -87.0, 87.0)
+    k = jnp.round(x * INV_LN2)
+    r = x - k * LN2
+    # Horner evaluation of the Taylor polynomial (5 mul + 5 add).
+    p = _EXP_TAYLOR_COEF[5]
+    for c in _EXP_TAYLOR_COEF[4::-1]:
+        p = p * r + c
+    # 2^k by assembling the exponent field: bits = (k + 127) << 23.
+    biased = (k + 127.0).astype(jnp.int32)
+    biased = jnp.clip(biased, 1, 254)
+    two_k = jax.lax.bitcast_convert_type(biased << 23, jnp.float32)
+    return p * two_k
+
+
+def reciprocal_nr(d, iters=3):
+    """Paper Algorithm 1: Newton-Raphson division (reciprocal of d).
+
+    d is scaled into [0.5, 1) by exponent subtraction; X0 = 48/17 - 32/17 d';
+    ``iters`` NR steps double the correct bits each time (3 steps ≥ f32).
+    Handles negative inputs via sign restore; d must be non-zero & finite.
+    """
+    d = _as_f32(d)
+    sign = jnp.where(d < 0, -1.0, 1.0).astype(jnp.float32)
+    mag = d * sign
+    bits = jax.lax.bitcast_convert_type(mag, jnp.int32)
+    e = ((bits >> 23) & 0xFF) - 127  # unbiased exponent, mag = m * 2^e
+    # d' = mag / 2^(e+1) in [0.5, 1): subtract e+1 from the exponent field.
+    dp = jax.lax.bitcast_convert_type(bits - ((e + 1) << 23), jnp.float32)
+    x = 48.0 / 17.0 - (32.0 / 17.0) * dp
+    for _ in range(iters):
+        x = x + x * (1.0 - dp * x)
+    # Rescale: 1/mag = x / 2^(e+1), again via exponent arithmetic.
+    xbits = jax.lax.bitcast_convert_type(x, jnp.int32)
+    out = jax.lax.bitcast_convert_type(xbits - ((e + 1) << 23), jnp.float32)
+    return out * sign
+
+
+def rsqrt_fast(d, iters=2):
+    """Paper Algorithm 2: Quake fast inverse square root, two NR steps."""
+    d = _as_f32(d)
+    half = 0.5 * d
+    bits = jax.lax.bitcast_convert_type(d, jnp.int32)
+    magic = jnp.int32(0x5F3759DF)
+    x = jax.lax.bitcast_convert_type(magic - (bits >> 1), jnp.float32)
+    for _ in range(iters):
+        x = x * (1.5 - half * x * x)
+    return x
+
+
+def tanh_exp(x):
+    """tanh via the exp identity (reuses Taylor exp + NR reciprocal)."""
+    x = _as_f32(x)
+    # tanh saturates: |x| > 9 => ±1 within bf16. Clamp keeps exp in range.
+    xc = jnp.clip(x, -9.0, 9.0)
+    e2x = exp_taylor6(2.0 * xc)
+    return 1.0 - 2.0 * reciprocal_nr(e2x + 1.0)
+
+
+def softmax_asic(x, mask=None):
+    """Masked softmax with ASIC arithmetic (max-subtract, Taylor exp,
+    adder-tree sum, NR reciprocal). Last-axis reduction."""
+    x = _as_f32(x)
+    neg = jnp.float32(-1e30)
+    if mask is not None:
+        x = jnp.where(mask, x, neg)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = exp_taylor6(x - m)
+    if mask is not None:
+        e = jnp.where(mask, e, 0.0)
+    s = jnp.sum(e, axis=-1, keepdims=True)
+    return e * reciprocal_nr(s)
+
+
+def layernorm_asic(x, gamma, beta, eps=1e-5):
+    """LayerNorm with ASIC arithmetic: mean/var via adder tree + constant
+    1/n multiplies, then fast inverse sqrt (Algorithm 2)."""
+    x = _as_f32(x)
+    n = x.shape[-1]
+    inv_n = jnp.float32(1.0 / n)  # constant, precomputed at compile time
+    mu = jnp.sum(x, axis=-1, keepdims=True) * inv_n
+    var = jnp.sum((x - mu) * (x - mu), axis=-1, keepdims=True) * inv_n
+    y = (x - mu) * rsqrt_fast(var + eps)
+    return y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)
+
+
+def gelu_asic(x):
+    """Paper Eq. 4 GELU with the ASIC tanh."""
+    x = _as_f32(x)
+    c = 0.7978845608028654  # sqrt(2/pi)
+    return 0.5 * x * (1.0 + tanh_exp(c * (x + 0.044715 * x * x * x)))
+
+
+# ---------------------------------------------------------------------------
+# Pallas-wrapped kernels (interpret=True): same math staged as explicit
+# kernels so the ASIC ops can be unit-benchmarked/tested at the kernel level.
+# ---------------------------------------------------------------------------
+
+def _softmax_kernel(x_ref, o_ref):
+    o_ref[...] = softmax_asic(x_ref[...]).astype(o_ref.dtype)
+
+
+def softmax_kernel(x, interpret=True):
+    """Pallas softmax over the last axis of a 1-D or 2-D array."""
+    return pl.pallas_call(
+        _softmax_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=interpret,
+    )(x)
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, o_ref):
+    o_ref[...] = layernorm_asic(x_ref[...], g_ref[...], b_ref[...]).astype(o_ref.dtype)
+
+
+def layernorm_kernel(x, gamma, beta, interpret=True):
+    return pl.pallas_call(
+        _layernorm_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=interpret,
+    )(x, gamma, beta)
+
+
+def _gelu_kernel(x_ref, o_ref):
+    o_ref[...] = gelu_asic(x_ref[...]).astype(o_ref.dtype)
+
+
+def gelu_kernel(x, interpret=True):
+    return pl.pallas_call(
+        _gelu_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=interpret,
+    )(x)
+
+
+__all__ = [
+    "exp_taylor6", "reciprocal_nr", "rsqrt_fast", "tanh_exp",
+    "softmax_asic", "layernorm_asic", "gelu_asic",
+    "softmax_kernel", "layernorm_kernel", "gelu_kernel", "ref",
+]

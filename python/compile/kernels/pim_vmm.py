@@ -1,0 +1,113 @@
+"""Bank-tiled Pallas VMM kernel — the L1 compute hot-spot.
+
+Computes ``y = x @ W`` for a single token vector, partitioned exactly the
+way the PIM-GPT mapping compiler (rust ``mapping`` module) partitions a
+weight matrix over the DRAM hierarchy:
+
+* the grid has one step per (channel, bank) pair — 8 x 16 = 128 MAC units
+  in the paper's baseline configuration;
+* each grid step owns a contiguous slice of output columns (the rust
+  mapper distributes columns of the head-concatenated matrix evenly across
+  channels, then banks — Fig. 6b);
+* inside a step, the 16-lane MAC pipeline is modeled literally: a
+  ``fori_loop`` consumes 16 input elements x 16-wide weight rows per
+  iteration and accumulates into f32 (the bank adder tree);
+* the input vector block is broadcast to every grid step — the channel
+  global-buffer broadcast.
+
+On a real TPU the same kernel would tile for the MXU instead (see
+DESIGN.md §Hardware-Adaptation); ``interpret=True`` is mandatory on the
+CPU PJRT backend.
+
+``python/tests/test_kernel.py`` sweeps shapes/dtypes with hypothesis and
+asserts allclose against ``ref.vmm_ref``; a dedicated test checks that the
+kernel's column partition agrees block-for-block with the rust mapper's
+(same formula, mirrored in ``mapping::weight_map`` unit tests).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+MAC_LANES = 16      # multipliers per bank MAC unit (paper Fig. 4c)
+N_CHANNELS = 8      # GDDR6 channels (Table I)
+N_BANKS = 16        # banks per channel (Table I)
+
+
+def pad_to(n: int, mult: int) -> int:
+    """Smallest multiple of ``mult`` that is >= n."""
+    return (n + mult - 1) // mult * mult
+
+
+def bank_partition(d_out: int, n_units: int):
+    """Columns-per-unit of the padded even partition.
+
+    Mirrors rust ``mapping::weight_map::columns_per_unit`` — keep in sync.
+    """
+    return pad_to(d_out, n_units) // n_units
+
+
+def _mac_kernel(x_ref, w_ref, o_ref, *, lanes: int):
+    """One bank's MAC pipeline over its column slice."""
+    d_in = x_ref.shape[0]
+    cols = o_ref.shape[0]
+    acc0 = jnp.zeros((cols,), jnp.float32)
+
+    def body(k, acc):
+        # 16 input values from the global buffer ...
+        xv = x_ref[pl.ds(k * lanes, lanes)].astype(jnp.float32)
+        # ... MACed against 16 row-contiguous weight rows from the open row.
+        wv = w_ref[pl.ds(k * lanes, lanes), :].astype(jnp.float32)
+        return acc + xv @ wv
+
+    acc = jax.lax.fori_loop(0, d_in // lanes, body, acc0)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_channels", "n_banks", "lanes", "interpret"),
+)
+def pim_vmm(x, w, *, n_channels=N_CHANNELS, n_banks=N_BANKS,
+            lanes=MAC_LANES, interpret=True):
+    """y = x @ W, bank-tiled. x: (d_in,), w: (d_in, d_out) -> (d_out,).
+
+    Output dtype follows x. Accumulation is f32 (the adder tree operates at
+    full precision before the result vector is sent to the ASIC).
+    """
+    d_in, d_out = w.shape
+    assert x.shape == (d_in,), (x.shape, w.shape)
+    n_units = n_channels * n_banks
+
+    d_in_p = pad_to(d_in, lanes)
+    cols_pu = bank_partition(d_out, n_units)
+    d_out_p = cols_pu * n_units
+
+    if d_in_p != d_in:
+        x = jnp.pad(x, (0, d_in_p - d_in))
+        w = jnp.pad(w, ((0, d_in_p - d_in), (0, 0)))
+    if d_out_p != d_out:
+        w = jnp.pad(w, ((0, 0), (0, d_out_p - d_out)))
+
+    y = pl.pallas_call(
+        functools.partial(_mac_kernel, lanes=lanes),
+        grid=(n_units,),
+        in_specs=[
+            # Global-buffer broadcast: every unit sees the whole vector.
+            pl.BlockSpec((d_in_p,), lambda i: (0,)),
+            # Each unit owns a contiguous column slice of the matrix.
+            pl.BlockSpec((d_in_p, cols_pu), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((cols_pu,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((d_out_p,), x.dtype),
+        interpret=interpret,
+    )(x, w)
+    return y[:d_out]
+
+
+def pim_vmm_bias(x, w, b, **kw):
+    """VMM + bias add (bias addition happens on the ASIC in hardware)."""
+    return (pim_vmm(x, w, **kw).astype(jnp.float32)
+            + b.astype(jnp.float32)).astype(x.dtype)

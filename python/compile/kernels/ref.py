@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for the L1 kernels.
+
+These use exact math (``jnp.exp``, ``jnp.tanh``, true division, ``sqrt``)
+and are the correctness references both for the Pallas kernels and — via
+mirrored unit tests — for the rust ``arith`` module that models the ASIC
+computation engines.
+"""
+
+import jax.numpy as jnp
+
+
+def vmm_ref(x, w):
+    """y = x @ W with f32 accumulation. x: (d_in,), w: (d_in, d_out)."""
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)).astype(x.dtype)
+
+
+def softmax_ref(x, mask=None):
+    """Numerically-stable masked softmax over the last axis."""
+    x = x.astype(jnp.float32)
+    if mask is not None:
+        x = jnp.where(mask, x, -jnp.inf)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    if mask is not None:
+        e = jnp.where(mask, e, 0.0)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def layernorm_ref(x, gamma, beta, eps=1e-5):
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) / jnp.sqrt(var + eps)
+    return y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)
+
+
+def gelu_ref(x):
+    """tanh-approximated GELU (the paper's Eq. 4 target form, exact tanh)."""
+    x = x.astype(jnp.float32)
+    return 0.5 * x * (1.0 + jnp.tanh(jnp.sqrt(2.0 / jnp.pi)
+                                     * (x + 0.044715 * x ** 3)))
+
+
+def reciprocal_ref(x):
+    return 1.0 / x.astype(jnp.float32)
+
+
+def rsqrt_ref(x):
+    return 1.0 / jnp.sqrt(x.astype(jnp.float32))
+
+
+def exp_ref(x):
+    return jnp.exp(x.astype(jnp.float32))
+
+
+def tanh_ref(x):
+    return jnp.tanh(x.astype(jnp.float32))

@@ -1,0 +1,216 @@
+"""L2: GPT decode step in JAX, calling the L1 Pallas kernels.
+
+This is the *functional* twin of the hardware dataflow the rust simulator
+times: a decoder-only (GPT-2 style, pre-LN) transformer that processes one
+token per step against a KV cache, exactly like PIM-GPT generates tokens.
+
+* All weight-matrix products go through ``kernels.pim_vmm`` (bank-tiled
+  Pallas VMM — the PIM side of the paper's hybrid).
+* All non-VMM math (layernorm, softmax, GELU, residual adds) uses the
+  ASIC approximation algorithms from ``kernels.asic_ops`` (the ASIC side).
+
+``decode_step`` is AOT-lowered once by ``aot.py`` into an HLO-text
+artifact; the rust coordinator loads it via PJRT and calls it per token.
+Python never runs at serving time.
+
+``reference_decode_step`` is the exact-math oracle (jnp matmul, true
+softmax/LN/GELU) used by pytest to bound the approximation error of the
+whole step.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .configs import GptConfig
+from .kernels import asic_ops
+from .kernels.pim_vmm import pim_vmm, pim_vmm_bias
+from .kernels import ref as kref
+
+# Deterministic parameter order for the AOT artifact's input signature.
+# rust reads the same order out of <name>.meta.json.
+PARAM_NAMES = [
+    "wte", "wpe",
+    "ln1_g", "ln1_b", "wqkv", "bqkv", "wo", "bo",
+    "ln2_g", "ln2_b", "w1", "b1", "w2", "b2",
+    "lnf_g", "lnf_b",
+]
+
+
+def param_shapes(cfg: GptConfig):
+    """Shape of every parameter array, keyed by PARAM_NAMES entries."""
+    L, D, F, V, T = cfg.n_layer, cfg.d_model, cfg.d_ff, cfg.vocab, cfg.max_seq
+    return {
+        "wte": (V, D), "wpe": (T, D),
+        "ln1_g": (L, D), "ln1_b": (L, D),
+        "wqkv": (L, D, 3 * D), "bqkv": (L, 3 * D),
+        "wo": (L, D, D), "bo": (L, D),
+        "ln2_g": (L, D), "ln2_b": (L, D),
+        "w1": (L, D, F), "b1": (L, F),
+        "w2": (L, F, D), "b2": (L, D),
+        "lnf_g": (D,), "lnf_b": (D,),
+    }
+
+
+def init_params(cfg: GptConfig, seed: int = 0, dtype=jnp.float32):
+    """GPT-2-style init (N(0, 0.02) weights, unit layernorm gains)."""
+    shapes = param_shapes(cfg)
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(PARAM_NAMES))
+    params = {}
+    for name, key in zip(PARAM_NAMES, keys):
+        shp = shapes[name]
+        if name.endswith("_g"):
+            params[name] = jnp.ones(shp, dtype)
+        elif name.endswith("_b") or name.startswith("b"):
+            params[name] = jnp.zeros(shp, dtype)
+        else:
+            params[name] = (0.02 * jax.random.normal(key, shp)).astype(dtype)
+    return params
+
+
+def _attention(cfg, q, k_cache_l, v_cache_l, pos, *, exact=False):
+    """Single-token multi-head attention against one layer's KV cache.
+
+    q: (D,); k_cache_l/v_cache_l: (T, D); pos: i32 scalar (current index).
+    """
+    H, Dh, T = cfg.n_head, cfg.d_head, cfg.max_seq
+    qh = q.reshape(H, Dh).astype(jnp.float32)
+    kh = k_cache_l.reshape(T, H, Dh).astype(jnp.float32)
+    vh = v_cache_l.reshape(T, H, Dh).astype(jnp.float32)
+    # Attention scores: per-head q . k_t, exactly the row-major K-cache MAC
+    # the PIM banks execute (Fig. 7a).
+    scores = jnp.einsum("hd,thd->ht", qh, kh) / jnp.sqrt(jnp.float32(Dh))
+    mask = (jnp.arange(T) <= pos)[None, :]  # (1, T) -> broadcast over heads
+    if exact:
+        probs = kref.softmax_ref(scores, mask)
+    else:
+        probs = asic_ops.softmax_asic(scores, mask)
+    # scores @ V: the column-major V-cache MAC (Fig. 7b).
+    out = jnp.einsum("ht,thd->hd", probs, vh)
+    return out.reshape(cfg.d_model)
+
+
+def _block(cfg, params, l, x, k_cache, v_cache, pos, *, exact, interpret):
+    """One transformer block (pre-LN). Returns (x, k_cache, v_cache)."""
+    ln = kref.layernorm_ref if exact else asic_ops.layernorm_asic
+    gelu = kref.gelu_ref if exact else asic_ops.gelu_asic
+    if exact:
+        mm = lambda v, w, b: kref.vmm_ref(v, w).astype(jnp.float32) + b
+    else:
+        mm = functools.partial(pim_vmm_bias, interpret=interpret)
+
+    D = cfg.d_model
+    h = ln(x, params["ln1_g"][l], params["ln1_b"][l])
+    qkv = mm(h.astype(x.dtype), params["wqkv"][l], params["bqkv"][l])
+    qkv = qkv.astype(jnp.float32)
+    q, k, v = qkv[:D], qkv[D:2 * D], qkv[2 * D:]
+
+    # Write back k (row-major) and v (column-major in HW; layout here is
+    # logical) into the reserved cache rows for this position.
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k.astype(k_cache.dtype)[None, None, :], (l, pos, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, v.astype(v_cache.dtype)[None, None, :], (l, pos, 0))
+
+    attn = _attention(cfg, q, k_cache[l], v_cache[l], pos, exact=exact)
+    proj = mm(attn.astype(x.dtype), params["wo"][l], params["bo"][l])
+    x = x + proj.astype(jnp.float32)
+
+    h2 = ln(x, params["ln2_g"][l], params["ln2_b"][l])
+    f = mm(h2.astype(x.dtype), params["w1"][l], params["b1"][l])
+    f = gelu(f)
+    out = mm(f.astype(x.dtype), params["w2"][l], params["b2"][l])
+    return x + out.astype(jnp.float32), k_cache, v_cache
+
+
+def decode_step(cfg: GptConfig, params, token, pos, k_cache, v_cache,
+                *, exact: bool = False, interpret: bool = True):
+    """Decode one token.
+
+    token: i32[1]; pos: i32[1]; caches: f32[L, T, D].
+    Returns (logits f32[vocab], k_cache, v_cache).
+    """
+    tok = token[0]
+    p = pos[0]
+    x = (jnp.take(params["wte"], tok, axis=0).astype(jnp.float32)
+         + jnp.take(params["wpe"], p, axis=0).astype(jnp.float32))
+
+    for l in range(cfg.n_layer):
+        x, k_cache, v_cache = _block(cfg, params, l, x, k_cache, v_cache, p,
+                                     exact=exact, interpret=interpret)
+
+    if exact:
+        x = kref.layernorm_ref(x, params["lnf_g"], params["lnf_b"])
+        logits = kref.vmm_ref(x, params["wte"].T.astype(jnp.float32))
+    else:
+        x = asic_ops.layernorm_asic(x, params["lnf_g"], params["lnf_b"])
+        logits = pim_vmm(x.astype(params["wte"].dtype),
+                         jnp.transpose(params["wte"]),
+                         interpret=interpret).astype(jnp.float32)
+    return logits, k_cache, v_cache
+
+
+def reference_decode_step(cfg, params, token, pos, k_cache, v_cache):
+    """Exact-math oracle for ``decode_step`` (no Pallas, no approximations)."""
+    return decode_step(cfg, params, token, pos, k_cache, v_cache, exact=True)
+
+
+def empty_caches(cfg: GptConfig, dtype=jnp.float32):
+    shape = (cfg.n_layer, cfg.max_seq, cfg.d_model)
+    return jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
+
+
+def flat_decode_fn(cfg: GptConfig, *, exact=False, interpret=True):
+    """Decode step with a flat positional signature for AOT lowering:
+
+    f(token, pos, k_cache, v_cache, *params_in_PARAM_NAMES_order)
+    """
+    def fn(token, pos, k_cache, v_cache, *flat_params):
+        params = dict(zip(PARAM_NAMES, flat_params))
+        return decode_step(cfg, params, token, pos, k_cache, v_cache,
+                           exact=exact, interpret=interpret)
+    return fn
+
+
+def aot_decode_fn(cfg: GptConfig, *, interpret=True):
+    """AOT entrypoint: same as ``flat_decode_fn`` but returns ONE flat
+    f32 vector ``concat(logits, k_cache.ravel(), v_cache.ravel())``.
+
+    Rationale: the rust side runs on the xla crate's PJRT CPU client,
+    whose ``to_literal_sync`` cannot convert multi-element tuple buffers;
+    a single array (wrapped by lowering into a 1-tuple) round-trips
+    cleanly. The rust runtime re-splits using the sizes in meta.json.
+    """
+    base = flat_decode_fn(cfg, interpret=interpret)
+
+    def fn(token, pos, k_cache, v_cache, *flat_params):
+        logits, kc, vc = base(token, pos, k_cache, v_cache, *flat_params)
+        return jnp.concatenate([
+            logits.astype(jnp.float32).reshape(-1),
+            kc.astype(jnp.float32).reshape(-1),
+            vc.astype(jnp.float32).reshape(-1),
+        ])
+    return fn
+
+
+def generate(cfg, params, prompt, n_new, *, exact=False, interpret=True):
+    """Pure-python greedy generation (test/debug path; rust owns serving)."""
+    step = jax.jit(functools.partial(decode_step, cfg,
+                                     exact=exact, interpret=interpret))
+    k_cache, v_cache = empty_caches(cfg)
+    toks = list(prompt)
+    logits = None
+    for i, t in enumerate(toks):
+        logits, k_cache, v_cache = step(
+            params, jnp.array([t], jnp.int32), jnp.array([i], jnp.int32),
+            k_cache, v_cache)
+    for i in range(len(prompt), len(prompt) + n_new):
+        nxt = int(jnp.argmax(logits))
+        toks.append(nxt)
+        if i + 1 >= cfg.max_seq:
+            break
+        logits, k_cache, v_cache = step(
+            params, jnp.array([nxt], jnp.int32), jnp.array([i], jnp.int32),
+            k_cache, v_cache)
+    return toks

@@ -1,0 +1,174 @@
+"""ASIC approximation algorithms (paper §III.D, Algorithms 1-2) vs exact
+math: error bounds over the operating ranges, golden values shared with
+the rust ``arith`` module, and the Pallas-wrapped kernel variants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import asic_ops as A
+from compile.kernels import ref as R
+
+finite = dict(allow_nan=False, allow_infinity=False)
+
+
+# --- exp: range-reduced Taylor-6 --------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(min_value=-80.0, max_value=10.0, **finite))
+def test_exp_rel_error(x):
+    got = float(A.exp_taylor6(jnp.float32(x)))
+    want = float(np.exp(np.float32(x)))
+    assert got == np.float32(got)  # finite
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_exp_softmax_range_vector():
+    xs = jnp.linspace(-30.0, 0.0, 601)
+    rel = jnp.abs(A.exp_taylor6(xs) - jnp.exp(xs)) / jnp.exp(xs)
+    assert float(jnp.max(rel)) < 1e-5
+
+
+def test_exp_saturates_not_nan():
+    xs = jnp.array([-1e4, -200.0, 100.0, 1e4], jnp.float32)
+    out = np.asarray(A.exp_taylor6(xs))
+    assert np.all(np.isfinite(out))
+
+
+# --- reciprocal: Newton-Raphson division (Algorithm 1) -----------------------
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(min_value=1e-20, max_value=1e20, **finite),
+       st.booleans())
+def test_reciprocal_rel_error(x, neg):
+    if neg:
+        x = -x
+    got = float(A.reciprocal_nr(jnp.float32(x)))
+    np.testing.assert_allclose(got, 1.0 / np.float32(x), rtol=1e-5)
+
+
+def test_reciprocal_three_iterations_suffice():
+    """Paper: for 16-bit precision three iterations give an accurate
+    result; for f32, three iterations are also enough (quadratic conv.)."""
+    d = jnp.array([0.37, 1.0, 2.0, 9.87e6, 3.3e-7], jnp.float32)
+    rel = jnp.abs(A.reciprocal_nr(d, iters=3) * d - 1.0)
+    assert float(jnp.max(rel)) < 2e-6
+
+
+def test_reciprocal_bf16_two_iterations():
+    """bf16 (8 mantissa bits) converges even faster — 2 iterations."""
+    d = jnp.array([0.37, 1.0, 2.0, 100.0], jnp.float32)
+    rel = jnp.abs(A.reciprocal_nr(d, iters=2) * d - 1.0)
+    assert float(jnp.max(rel)) < 1e-4  # well inside bf16 epsilon (~0.0078)
+
+
+# --- rsqrt: Quake fast inverse square root (Algorithm 2) ---------------------
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(min_value=1e-30, max_value=1e30, **finite))
+def test_rsqrt_rel_error(x):
+    got = float(A.rsqrt_fast(jnp.float32(x)))
+    want = 1.0 / np.sqrt(np.float32(x))
+    np.testing.assert_allclose(got, want, rtol=5e-5)
+
+
+def test_rsqrt_single_iteration_bf16():
+    """Paper: 'it can converge in a single step iteration' at bf16; the
+    design takes a conservative two."""
+    d = jnp.array([0.5, 1.0, 2.0, 42.0], jnp.float32)
+    rel = jnp.abs(A.rsqrt_fast(d, iters=1) * jnp.sqrt(d) - 1.0)
+    assert float(jnp.max(rel)) < 5e-3  # within bf16 epsilon
+
+
+# --- tanh / GELU -------------------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(min_value=-50.0, max_value=50.0, **finite))
+def test_tanh_abs_error(x):
+    got = float(A.tanh_exp(jnp.float32(x)))
+    np.testing.assert_allclose(got, np.tanh(np.float32(x)), atol=2e-6)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(min_value=-30.0, max_value=30.0, **finite))
+def test_gelu_abs_error(x):
+    got = float(A.gelu_asic(jnp.float32(x)))
+    want = float(R.gelu_ref(jnp.float32(x)))
+    np.testing.assert_allclose(got, want, atol=1e-5 * max(1.0, abs(want)))
+
+
+# --- softmax / layernorm -----------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 300), scale=st.floats(0.1, 20.0, **finite),
+       seed=st.integers(0, 2**31 - 1))
+def test_softmax_matches_ref(n, scale, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n,)) * scale
+    got = np.asarray(A.softmax_asic(x))
+    want = np.asarray(R.softmax_ref(x))
+    np.testing.assert_allclose(got, want, atol=1e-5)
+    np.testing.assert_allclose(got.sum(), 1.0, atol=1e-4)
+
+
+def test_softmax_masked():
+    x = jnp.arange(16, dtype=jnp.float32)
+    mask = jnp.arange(16) <= 7
+    got = np.asarray(A.softmax_asic(x, mask))
+    assert np.all(got[8:] == 0.0)
+    np.testing.assert_allclose(got.sum(), 1.0, atol=1e-4)
+    want = np.asarray(R.softmax_ref(x, mask))
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(2, 512), seed=st.integers(0, 2**31 - 1))
+def test_layernorm_matches_ref(n, seed):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(k1, (n,)) * 3 + 0.5
+    g = jax.random.normal(k2, (n,)) * 0.2 + 1.0
+    b = jax.random.normal(k3, (n,)) * 0.1
+    np.testing.assert_allclose(np.asarray(A.layernorm_asic(x, g, b)),
+                               np.asarray(R.layernorm_ref(x, g, b)),
+                               atol=5e-4)
+
+
+# --- Pallas-wrapped kernels --------------------------------------------------
+
+def test_softmax_kernel_pallas():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 64)) * 2
+    np.testing.assert_allclose(np.asarray(A.softmax_kernel(x)),
+                               np.asarray(R.softmax_ref(x)), atol=1e-5)
+
+
+def test_layernorm_kernel_pallas():
+    x = jax.random.normal(jax.random.PRNGKey(1), (128,))
+    g, b = jnp.ones(128), jnp.zeros(128)
+    np.testing.assert_allclose(np.asarray(A.layernorm_kernel(x, g, b)),
+                               np.asarray(R.layernorm_ref(x, g, b)),
+                               atol=5e-4)
+
+
+def test_gelu_kernel_pallas():
+    x = jnp.linspace(-4, 4, 64)
+    np.testing.assert_allclose(np.asarray(A.gelu_kernel(x)),
+                               np.asarray(R.gelu_ref(x)), atol=2e-6)
+
+
+# --- golden values shared with rust arith ------------------------------------
+
+def test_golden_values_rust_mirror():
+    """These exact tuples are replicated in rust `arith::tests`; if this
+    table changes, change both sides."""
+    golden_recip = {1.0: 1.0, 2.0: 0.5, 0.25: 4.0, 3.0: 0.3333333}
+    for d, want in golden_recip.items():
+        np.testing.assert_allclose(float(A.reciprocal_nr(jnp.float32(d))),
+                                   want, rtol=1e-5)
+    golden_rsqrt = {1.0: 1.0, 4.0: 0.5, 0.25: 2.0, 2.0: 0.70710678}
+    for d, want in golden_rsqrt.items():
+        np.testing.assert_allclose(float(A.rsqrt_fast(jnp.float32(d))),
+                                   want, rtol=5e-5)
+    np.testing.assert_allclose(float(A.exp_taylor6(jnp.float32(-1.0))),
+                               0.36787944, rtol=1e-5)
+    np.testing.assert_allclose(float(A.tanh_exp(jnp.float32(0.5))),
+                               0.46211716, rtol=1e-4)

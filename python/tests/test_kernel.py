@@ -1,0 +1,103 @@
+"""L1 Pallas VMM kernel vs the pure-jnp oracle — the core correctness
+signal. Hypothesis sweeps shapes and dtypes; fixed tests pin the bank
+partition layout against the rust mapper's formula."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import pim_vmm as PV
+from compile.kernels import ref as R
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+def _tol(dtype):
+    # bf16 storage keeps ~8 bits of mantissa; accumulation is f32.
+    return dict(rtol=5e-2, atol=5e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    d_in=st.integers(1, 300),
+    d_out=st.integers(1, 300),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_vmm_matches_ref_shapes_dtypes(d_in, d_out, dtype, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = _rand(k1, (d_in,), dtype)
+    w = _rand(k2, (d_in, d_out), dtype)
+    y = PV.pim_vmm(x, w)
+    yr = R.vmm_ref(x, w)
+    assert y.shape == (d_out,)
+    assert y.dtype == dtype
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("d_in,d_out", [(16, 128), (100, 300), (1, 1),
+                                        (768, 2304), (64, 257)])
+def test_vmm_f32_exact_shapes(d_in, d_out):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(d_in * 7 + d_out))
+    x = _rand(k1, (d_in,), jnp.float32)
+    w = _rand(k2, (d_in, d_out), jnp.float32)
+    np.testing.assert_allclose(PV.pim_vmm(x, w), R.vmm_ref(x, w),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("ch,banks", [(8, 16), (4, 16), (1, 1), (2, 4)])
+def test_vmm_custom_geometry(ch, banks):
+    """The kernel must be correct for any channel/bank partition (the
+    Fig. 15b scalability sweep changes these)."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    x = _rand(k1, (96,), jnp.float32)
+    w = _rand(k2, (96, 200), jnp.float32)
+    y = PV.pim_vmm(x, w, n_channels=ch, n_banks=banks)
+    np.testing.assert_allclose(y, R.vmm_ref(x, w), rtol=1e-5, atol=1e-5)
+
+
+def test_vmm_zero_input():
+    w = jnp.ones((32, 64), jnp.float32)
+    y = PV.pim_vmm(jnp.zeros((32,), jnp.float32), w)
+    assert np.all(np.asarray(y) == 0.0)
+
+
+def test_vmm_bias():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(9))
+    x = _rand(k1, (48,), jnp.float32)
+    w = _rand(k2, (48, 80), jnp.float32)
+    b = jnp.arange(80, dtype=jnp.float32)
+    np.testing.assert_allclose(PV.pim_vmm_bias(x, w, b),
+                               R.vmm_ref(x, w) + b, rtol=1e-5, atol=1e-5)
+
+
+def test_bank_partition_matches_rust_mapper():
+    """Mirrors rust ``mapping::weight_map`` unit test `columns_per_unit`:
+    the Pallas grid and the simulator must slice matrices identically."""
+    cases = {
+        # (d_out, n_units) -> cols_per_unit
+        (2304, 128): 18,
+        (768, 128): 6,
+        (50257, 128): 393,
+        (1, 128): 1,
+        (129, 128): 2,
+        (512, 8): 64,
+    }
+    for (d_out, n_units), want in cases.items():
+        assert PV.bank_partition(d_out, n_units) == want, (d_out, n_units)
+
+
+@settings(max_examples=20, deadline=None)
+@given(d_out=st.integers(1, 10_000), n_units=st.integers(1, 512))
+def test_bank_partition_properties(d_out, n_units):
+    cols = PV.bank_partition(d_out, n_units)
+    # Covers the matrix...
+    assert cols * n_units >= d_out
+    # ...with minimal padding (< one unit's worth of columns).
+    assert (cols - 1) * n_units < d_out or cols == 1

@@ -1,0 +1,76 @@
+"""Hypothesis sweeps over the Pallas-wrapped kernels' shapes and dtypes —
+the L1 coverage requirement: every kernel correct for arbitrary shapes,
+both storage dtypes, against the pure-jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import asic_ops as A
+from compile.kernels import pim_vmm as PV
+from compile.kernels import ref as R
+
+
+@settings(max_examples=15, deadline=None)
+@given(rows=st.integers(1, 8), n=st.integers(2, 256),
+       seed=st.integers(0, 2**31 - 1))
+def test_softmax_kernel_shape_sweep(rows, n, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (rows, n)) * 3
+    got = np.asarray(A.softmax_kernel(x))
+    want = np.asarray(R.softmax_ref(x))
+    np.testing.assert_allclose(got, want, atol=1e-5)
+    np.testing.assert_allclose(got.sum(axis=-1), 1.0, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(2, 512), seed=st.integers(0, 2**31 - 1))
+def test_layernorm_kernel_shape_sweep(n, seed):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(k1, (n,)) * 2 + 1
+    g = 1.0 + 0.1 * jax.random.normal(k2, (n,))
+    b = 0.1 * jax.random.normal(k3, (n,))
+    np.testing.assert_allclose(np.asarray(A.layernorm_kernel(x, g, b)),
+                               np.asarray(R.layernorm_ref(x, g, b)),
+                               atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 1024), lo=st.floats(-8, 0), hi=st.floats(0, 8),
+       seed=st.integers(0, 2**31 - 1))
+def test_gelu_kernel_shape_sweep(n, lo, hi, seed):
+    x = jax.random.uniform(jax.random.PRNGKey(seed), (n,),
+                           minval=lo, maxval=hi)
+    np.testing.assert_allclose(np.asarray(A.gelu_kernel(x)),
+                               np.asarray(R.gelu_ref(x)), atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(d_in=st.integers(1, 200), d_out=st.integers(1, 200),
+       seed=st.integers(0, 2**31 - 1))
+def test_vmm_bf16_storage_f32_accumulate(d_in, d_out, seed):
+    """bf16 storage with f32 accumulation (the bank adder tree): error
+    stays at bf16-input level, not bf16-accumulation level."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(k1, (d_in,)).astype(jnp.bfloat16)
+    w = jax.random.normal(k2, (d_in, d_out)).astype(jnp.bfloat16)
+    got = np.asarray(PV.pim_vmm(x, w), np.float32)
+    want = np.asarray(
+        jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)), np.float32)
+    # rtol ~ bf16 eps * modest growth; a bf16 accumulator would be much worse
+    tol = 0.02 * max(1.0, float(np.abs(want).max()))
+    np.testing.assert_allclose(got, want, atol=tol)
+
+
+def test_vmm_kernel_vs_model_partition_consistency():
+    """The kernel's grid partition and the rust mapper must agree on the
+    per-unit column counts for all paper-model matrix shapes."""
+    shapes = [(768, 2304), (1024, 3072), (1280, 3840), (1600, 4800),
+              (1536, 4608), (2048, 6144), (768, 50257), (8192, 2048)]
+    for d_in, d_out in shapes:
+        cols = PV.bank_partition(d_out, 128)
+        covered = sum(
+            max(0, min((u + 1) * cols, d_out) - min(u * cols, d_out))
+            for u in range(128)
+        )
+        assert covered == d_out, (d_in, d_out)

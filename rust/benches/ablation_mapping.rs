@@ -1,0 +1,114 @@
+//! Ablation of the two mapping design choices DESIGN.md calls out
+//! (paper §IV.B, Fig. 6):
+//!
+//! 1. **Head concatenation** (`maxRowHit`): map the head-concatenated
+//!    matrix as fully-packed consecutive rows vs. mapping each attention
+//!    head separately (per-head tail rows, scattered segments).
+//! 2. **Open-row policy**: keep the row open between consecutive MAC
+//!    bursts vs. a close-row policy (modeled by forcing a row switch
+//!    after every burst).
+//!
+//! Both ablations run one channel-level VMM of GPT2-small's W_qkv slice
+//! and compare cycles, ACTs and row-hit rate.
+
+use pim_gpt::config::HwConfig;
+use pim_gpt::dram::bank::RowBlock;
+use pim_gpt::dram::{RowSegment, TimingCycles};
+use pim_gpt::pim::{Channel, UnitWork, VmmPlan};
+use pim_gpt::util::bench::bench;
+
+fn run_plan(cfg: &HwConfig, plan: &VmmPlan) -> (u64, u64, f64) {
+    let t = TimingCycles::from_config(cfg);
+    let mut ch = Channel::new(cfg);
+    let e = ch.execute_vmm(cfg, &t, 0, plan);
+    let (stats, cmds) = ch.stats();
+    (e.finish, cmds.act, stats.hit_rate())
+}
+
+fn main() {
+    let cfg = HwConfig::paper_baseline();
+    // One bank's share of GPT2-small W_qkv: 768 x 18 columns = 13,824
+    // elements = 13.5 fully-packed rows.
+    let elems_per_bank: u64 = 768 * 18;
+    let row_elems = cfg.gddr6.row_elems();
+    let full_rows = (elems_per_bank / row_elems) as u32;
+    let tail = (elems_per_bank % row_elems) as u32;
+    let n_banks = cfg.gddr6.banks_per_channel;
+
+    // (1a) concatenated: one contiguous block per bank.
+    let concat_plan = VmmPlan {
+        bank_work: (0..n_banks)
+            .map(|_| UnitWork::Block(RowBlock { base_row: 0, full_rows, tail_elems: tail }))
+            .collect(),
+        input_elems: 768,
+        output_elems: 18 * n_banks as u64,
+    };
+
+    // (1b) per-head: 12 heads, each head's share is a separate region
+    // with its own partial tail row (no row sharing across heads).
+    let per_head = elems_per_bank / 12;
+    let head_rows = (per_head / row_elems) as u32; // 1 full row ...
+    let head_tail = (per_head % row_elems) as u32; // ... + 128-elem tail
+    let no_concat_plan = VmmPlan {
+        bank_work: (0..n_banks)
+            .map(|_| {
+                let mut segs = Vec::new();
+                for h in 0..12u32 {
+                    let base = h * (head_rows + 1 + (head_tail > 0) as u32);
+                    for r in 0..head_rows {
+                        segs.push(RowSegment { row: base + r, elems: row_elems as u32 });
+                    }
+                    if head_tail > 0 {
+                        segs.push(RowSegment { row: base + head_rows, elems: head_tail });
+                    }
+                }
+                UnitWork::Segments(segs)
+            })
+            .collect(),
+        input_elems: 768,
+        output_elems: 18 * n_banks as u64,
+    };
+
+    // (2) close-row policy: a row switch after every 256-element burst.
+    let close_row_plan = VmmPlan {
+        bank_work: (0..n_banks)
+            .map(|_| {
+                let mut segs = Vec::new();
+                let bursts = elems_per_bank / 256;
+                for b in 0..bursts as u32 {
+                    // alternate rows to force PRE+ACT between bursts
+                    segs.push(RowSegment { row: 1000 + (b % 2), elems: 256 });
+                }
+                UnitWork::Segments(segs)
+            })
+            .collect(),
+        input_elems: 768,
+        output_elems: 18 * n_banks as u64,
+    };
+
+    println!("== mapping ablation: one channel VMM over GPT2-small W_qkv share ==\n");
+    let mut results = Vec::new();
+    for (name, plan) in [
+        ("head-concat + open-row (paper)", &concat_plan),
+        ("per-head mapping (no concat)", &no_concat_plan),
+        ("close-row policy", &close_row_plan),
+    ] {
+        let mut out = (0, 0, 0.0);
+        bench(&format!("ablation: {name}"), 2, 50, || {
+            out = run_plan(&cfg, plan);
+        });
+        results.push((name, out));
+    }
+    println!("\n{:<36} {:>9} {:>6} {:>9}", "variant", "cycles", "ACTs", "hit rate");
+    let base = results[0].1 .0 as f64;
+    for (name, (cycles, acts, hit)) in &results {
+        println!(
+            "{:<36} {:>9} {:>6} {:>8.2}%  ({:.2}x vs paper mapping)",
+            name,
+            cycles,
+            acts,
+            100.0 * hit,
+            *cycles as f64 / base
+        );
+    }
+}

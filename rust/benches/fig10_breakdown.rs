@@ -1,0 +1,14 @@
+//! Bench: regenerate Fig. 10 (layer-wise latency breakdown, GPT3-small
+//! and GPT3-XL). Paper: VMM dominates; arithmetic ~1.16% on GPT3-XL.
+use pim_gpt::report::fig10_breakdown;
+use pim_gpt::util::bench::bench;
+
+fn main() {
+    let tokens: u64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(256);
+    let mut out = None;
+    bench("fig10: latency breakdown", 0, 1, || {
+        out = Some(fig10_breakdown(tokens).unwrap());
+    });
+    let r = out.unwrap();
+    println!("{}\n{}", r.title, r.rendered);
+}

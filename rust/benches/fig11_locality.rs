@@ -1,0 +1,14 @@
+//! Bench: regenerate Fig. 11 (row-hit rate ~98%; data-movement reduction
+//! 110-259x).
+use pim_gpt::report::fig11_locality;
+use pim_gpt::util::bench::bench;
+
+fn main() {
+    let tokens: u64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(256);
+    let mut out = None;
+    bench("fig11: locality sweep (8 models)", 0, 1, || {
+        out = Some(fig11_locality(tokens).unwrap());
+    });
+    let r = out.unwrap();
+    println!("{}\n{}", r.title, r.rendered);
+}

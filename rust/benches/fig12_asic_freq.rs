@@ -1,0 +1,14 @@
+//! Bench: regenerate Fig. 12 (ASIC frequency sensitivity). Paper: worst
+//! +20% at 100 MHz; larger models less sensitive.
+use pim_gpt::report::fig12_asic_freq;
+use pim_gpt::util::bench::bench;
+
+fn main() {
+    let tokens: u64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(32);
+    let mut out = None;
+    bench("fig12: ASIC frequency sweep (8 models x 4 freqs)", 0, 1, || {
+        out = Some(fig12_asic_freq(tokens).unwrap());
+    });
+    let r = out.unwrap();
+    println!("{}\n{}", r.title, r.rendered);
+}

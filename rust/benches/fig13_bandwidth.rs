@@ -1,0 +1,14 @@
+//! Bench: regenerate Fig. 13 (interface data-rate sensitivity). Paper:
+//! ~1.5x at 2 Gb/s, ~2x at 1 Gb/s on average.
+use pim_gpt::report::fig13_bandwidth;
+use pim_gpt::util::bench::bench;
+
+fn main() {
+    let tokens: u64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(32);
+    let mut out = None;
+    bench("fig13: bandwidth sweep (8 models x 5 rates)", 0, 1, || {
+        out = Some(fig13_bandwidth(tokens).unwrap());
+    });
+    let r = out.unwrap();
+    println!("{}\n{}", r.title, r.rendered);
+}

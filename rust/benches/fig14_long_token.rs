@@ -1,0 +1,15 @@
+//! Bench: regenerate Fig. 14 (GPT3-XL latency at 1k/2k/4k/8k tokens).
+//! Paper: long-token support beyond 8k, super-linear latency growth.
+use pim_gpt::report::fig14_long_token;
+use pim_gpt::util::bench::bench;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let lengths: &[u64] = if full { &[1024, 2048, 4096, 8096] } else { &[256, 512, 1024, 2048] };
+    let mut out = None;
+    bench("fig14: long-token sweep (GPT3-XL)", 0, 1, || {
+        out = Some(fig14_long_token(lengths).unwrap());
+    });
+    let r = out.unwrap();
+    println!("{}\n{}", r.title, r.rendered);
+}

@@ -1,0 +1,14 @@
+//! Bench: regenerate Fig. 15 (scalability: MAC lanes 16->64 gives
+//! 1.8-2.0x, paper; channel count scales near-linearly).
+use pim_gpt::report::fig15_scalability;
+use pim_gpt::util::bench::bench;
+
+fn main() {
+    let tokens: u64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(32);
+    let mut out = None;
+    bench("fig15: scalability sweep", 0, 1, || {
+        out = Some(fig15_scalability(tokens).unwrap());
+    });
+    let r = out.unwrap();
+    println!("{}\n{}", r.title, r.rendered);
+}

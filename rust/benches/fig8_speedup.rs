@@ -1,0 +1,14 @@
+//! Bench: regenerate Fig. 8 (speedup over GPU/CPU, 8 models) and time
+//! the harness itself. Paper bands: GPU 41-137x, CPU 631-1074x.
+use pim_gpt::report::fig8_9_speedup_energy;
+use pim_gpt::util::bench::bench;
+
+fn main() {
+    let tokens: u64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(256);
+    let mut out = None;
+    bench("fig8: speedup sweep (8 models)", 0, 1, || {
+        out = Some(fig8_9_speedup_energy(tokens).unwrap());
+    });
+    let r = out.unwrap();
+    println!("{}\n{}", r.title, r.rendered);
+}

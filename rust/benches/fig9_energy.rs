@@ -1,0 +1,15 @@
+//! Bench: regenerate Fig. 9 (energy efficiency over GPU/CPU, 8 models).
+//! Paper bands: GPU 339-1085x, CPU 890-1632x. (Same harness as Fig. 8 —
+//! the paper derives both from one run; reprinted here for completeness.)
+use pim_gpt::report::fig8_9_speedup_energy;
+use pim_gpt::util::bench::bench;
+
+fn main() {
+    let tokens: u64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(256);
+    let mut out = None;
+    bench("fig9: energy-efficiency sweep (8 models)", 0, 1, || {
+        out = Some(fig8_9_speedup_energy(tokens).unwrap());
+    });
+    let r = out.unwrap();
+    println!("{}\n{}", r.title, r.rendered);
+}

@@ -1,0 +1,35 @@
+//! Microbenchmarks of the simulator hot path (the §Perf targets):
+//! per-token decode cost across model sizes and context lengths, the
+//! mapping stage, and graph compilation.
+use pim_gpt::compiler::compile;
+use pim_gpt::config::HwConfig;
+use pim_gpt::mapping::ModelMapping;
+use pim_gpt::model::gpt::by_name;
+use pim_gpt::model::DecodeGraph;
+use pim_gpt::sim::Simulator;
+use pim_gpt::util::bench::{bench, black_box};
+
+fn main() {
+    let cfg = HwConfig::paper_baseline();
+
+    for name in ["gpt2-small", "gpt3-xl"] {
+        let m = by_name(name).unwrap();
+        bench(&format!("mapping::build {name}"), 1, 5, || {
+            black_box(ModelMapping::build(&m, &cfg).unwrap());
+        });
+        bench(&format!("graph+compile {name} pos=1023"), 2, 20, || {
+            let g = DecodeGraph::build(&m, 1023);
+            black_box(compile(&g, &cfg).unwrap());
+        });
+        let mut sim = Simulator::new(&m, &cfg).unwrap();
+        let mut pos = 0u64;
+        bench(&format!("sim::decode_step {name} (growing ctx)"), 8, 256, || {
+            sim.decode_step(pos % m.max_seq as u64).unwrap();
+            pos += 1;
+        });
+        let mut sim2 = Simulator::new(&m, &cfg).unwrap();
+        bench(&format!("sim::generate {name} 64 tokens"), 0, 3, || {
+            black_box(sim2.generate(64).unwrap());
+        });
+    }
+}

@@ -1,0 +1,14 @@
+//! Bench: regenerate Table II (vs SpAtten/TransPIM/DFX). Paper anchor:
+//! PIM-GPT 89x speedup / 618x energy on GPT2-medium, 1024 tokens.
+use pim_gpt::report::table2_comparison;
+use pim_gpt::util::bench::bench;
+
+fn main() {
+    let tokens: u64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(1024);
+    let mut out = None;
+    bench("table2: accelerator comparison (GPT2-medium)", 0, 1, || {
+        out = Some(table2_comparison(tokens).unwrap());
+    });
+    let r = out.unwrap();
+    println!("{}\n{}", r.title, r.rendered);
+}

@@ -1,0 +1,236 @@
+//! Add/mul-only approximation algorithms (paper §III.D).
+//!
+//! * `exp_taylor6` — range-reduced 6-term Taylor series.
+//! * `reciprocal_nr` — Algorithm 1, Newton-Raphson division.
+//! * `rsqrt_fast` — Algorithm 2, Quake fast inverse square root.
+//! * `tanh_exp` — tanh via the exp identity.
+//! * vector ops `softmax_asic` / `layernorm_asic` / `gelu_asic` built on
+//!   the scalar primitives, matching the ASIC engine dataflow.
+//!
+//! Mirrors `python/compile/kernels/asic_ops.py`; the golden-value tests at
+//! the bottom replicate `test_asic_ops.py::test_golden_values_rust_mirror`.
+
+const LN2: f32 = 0.693_147_18;
+const INV_LN2: f32 = 1.442_695_04;
+const EXP_COEF: [f32; 6] = [1.0, 1.0, 0.5, 1.0 / 6.0, 1.0 / 24.0, 1.0 / 120.0];
+
+/// Range-reduced 6-term Taylor exp: x = k ln2 + r, e^x = 2^k * P(r).
+pub fn exp_taylor6(x: f32) -> f32 {
+    let x = x.clamp(-87.0, 87.0);
+    let k = (x * INV_LN2).round();
+    let r = x - k * LN2;
+    // Horner (5 mul + 5 add), identical coefficient order to python.
+    let mut p = EXP_COEF[5];
+    for c in EXP_COEF[..5].iter().rev() {
+        p = p * r + c;
+    }
+    // 2^k by exponent assembly.
+    let biased = ((k + 127.0) as i32).clamp(1, 254);
+    let two_k = f32::from_bits((biased as u32) << 23);
+    p * two_k
+}
+
+/// Paper Algorithm 1: Newton-Raphson reciprocal.
+/// D scaled into [0.5, 1) by exponent subtraction; X0 = 48/17 - 32/17 D';
+/// `iters` quadratic refinement steps; rescale by the same exponent.
+pub fn reciprocal_nr(d: f32, iters: u32) -> f32 {
+    debug_assert!(d != 0.0 && d.is_finite());
+    let sign = if d < 0.0 { -1.0f32 } else { 1.0 };
+    let mag = d * sign;
+    let bits = mag.to_bits() as i32;
+    let e = ((bits >> 23) & 0xFF) - 127;
+    let dp = f32::from_bits((bits - ((e + 1) << 23)) as u32); // in [0.5, 1)
+    let mut x = 48.0 / 17.0 - (32.0 / 17.0) * dp;
+    for _ in 0..iters {
+        x = x + x * (1.0 - dp * x);
+    }
+    let xbits = x.to_bits() as i32;
+    f32::from_bits((xbits - ((e + 1) << 23)) as u32) * sign
+}
+
+/// Paper Algorithm 2: Quake fast inverse square root, `iters` NR steps.
+pub fn rsqrt_fast(d: f32, iters: u32) -> f32 {
+    debug_assert!(d > 0.0);
+    let half = 0.5 * d;
+    let mut x = f32::from_bits(0x5F37_59DF - (d.to_bits() >> 1));
+    for _ in 0..iters {
+        x = x * (1.5 - half * x * x);
+    }
+    x
+}
+
+/// tanh via exp identity: 1 - 2 / (e^{2x} + 1).
+pub fn tanh_exp(x: f32) -> f32 {
+    let xc = x.clamp(-9.0, 9.0);
+    let e2x = exp_taylor6(2.0 * xc);
+    1.0 - 2.0 * reciprocal_nr(e2x + 1.0, 3)
+}
+
+/// Masked softmax with ASIC arithmetic (max-subtract, Taylor exp,
+/// adder-tree sum, NR reciprocal). In-place over `xs[..n_valid]`; entries
+/// at and beyond `n_valid` are zeroed.
+pub fn softmax_asic(xs: &mut [f32], n_valid: usize) {
+    assert!(n_valid > 0 && n_valid <= xs.len());
+    let m = xs[..n_valid].iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for v in xs[..n_valid].iter_mut() {
+        *v = exp_taylor6(*v - m);
+        sum += *v;
+    }
+    let inv = reciprocal_nr(sum, 3);
+    for v in xs[..n_valid].iter_mut() {
+        *v *= inv;
+    }
+    for v in xs[n_valid..].iter_mut() {
+        *v = 0.0;
+    }
+}
+
+/// LayerNorm with ASIC arithmetic (1/n constant multiplies + Algorithm 2).
+pub fn layernorm_asic(xs: &[f32], gamma: &[f32], beta: &[f32], eps: f32) -> Vec<f32> {
+    let n = xs.len();
+    assert!(n > 0 && gamma.len() == n && beta.len() == n);
+    let inv_n = 1.0 / n as f32; // compile-time constant in hardware
+    let mu: f32 = xs.iter().sum::<f32>() * inv_n;
+    let var: f32 = xs.iter().map(|x| (x - mu) * (x - mu)).sum::<f32>() * inv_n;
+    let rs = rsqrt_fast(var + eps, 2);
+    xs.iter()
+        .zip(gamma.iter().zip(beta))
+        .map(|(&x, (&g, &b))| (x - mu) * rs * g + b)
+        .collect()
+}
+
+/// Paper Eq. 4 GELU with the ASIC tanh.
+pub fn gelu_asic(x: f32) -> f32 {
+    const C: f32 = 0.797_884_56; // sqrt(2/pi)
+    0.5 * x * (1.0 + tanh_exp(C * (x + 0.044715 * x * x * x)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn rel(a: f32, b: f32) -> f32 {
+        ((a - b) / b).abs()
+    }
+
+    // --- golden values mirrored from python test_asic_ops.py ---
+    #[test]
+    fn golden_values_python_mirror() {
+        assert!(rel(reciprocal_nr(1.0, 3), 1.0) < 1e-5);
+        assert!(rel(reciprocal_nr(2.0, 3), 0.5) < 1e-5);
+        assert!(rel(reciprocal_nr(0.25, 3), 4.0) < 1e-5);
+        assert!(rel(reciprocal_nr(3.0, 3), 0.333_333_3) < 1e-5);
+        assert!(rel(rsqrt_fast(1.0, 2), 1.0) < 5e-5);
+        assert!(rel(rsqrt_fast(4.0, 2), 0.5) < 5e-5);
+        assert!(rel(rsqrt_fast(0.25, 2), 2.0) < 5e-5);
+        assert!(rel(rsqrt_fast(2.0, 2), 0.707_106_78) < 5e-5);
+        assert!(rel(exp_taylor6(-1.0), 0.367_879_44) < 1e-5);
+        assert!(rel(tanh_exp(0.5), 0.462_117_16) < 1e-4);
+    }
+
+    #[test]
+    fn prop_exp_matches_libm() {
+        check("exp_taylor6 rel error", 500, |rng| {
+            let x = (rng.f64() * 90.0 - 80.0) as f32;
+            let got = exp_taylor6(x);
+            let want = x.exp();
+            let r = rel(got, want);
+            if r < 1e-5 { Ok(()) } else { Err(format!("x={x} rel={r}")) }
+        });
+    }
+
+    #[test]
+    fn prop_reciprocal_matches() {
+        check("reciprocal_nr rel error", 500, |rng| {
+            let mag = 10f32.powf((rng.f64() * 40.0 - 20.0) as f32);
+            let x = if rng.bool() { mag } else { -mag };
+            let r = rel(reciprocal_nr(x, 3), 1.0 / x);
+            if r < 1e-5 { Ok(()) } else { Err(format!("x={x} rel={r}")) }
+        });
+    }
+
+    #[test]
+    fn prop_rsqrt_matches() {
+        check("rsqrt_fast rel error", 500, |rng| {
+            let x = 10f32.powf((rng.f64() * 60.0 - 30.0) as f32);
+            let r = rel(rsqrt_fast(x, 2), 1.0 / x.sqrt());
+            if r < 5e-5 { Ok(()) } else { Err(format!("x={x} rel={r}")) }
+        });
+    }
+
+    #[test]
+    fn prop_tanh_abs_error() {
+        check("tanh_exp abs error", 500, |rng| {
+            let x = (rng.f64() * 100.0 - 50.0) as f32;
+            let err = (tanh_exp(x) - x.tanh()).abs();
+            if err < 2e-6 { Ok(()) } else { Err(format!("x={x} err={err}")) }
+        });
+    }
+
+    #[test]
+    fn softmax_normalizes_and_masks() {
+        let mut xs = vec![1.0, 2.0, 3.0, 99.0, 99.0];
+        softmax_asic(&mut xs, 3);
+        let sum: f32 = xs[..3].iter().sum();
+        assert!((sum - 1.0).abs() < 1e-4, "{sum}");
+        assert_eq!(&xs[3..], &[0.0, 0.0]);
+        assert!(xs[2] > xs[1] && xs[1] > xs[0]);
+    }
+
+    #[test]
+    fn prop_softmax_matches_exact() {
+        check("softmax_asic vs exact", 200, |rng| {
+            let n = rng.usize_in(1, 64);
+            let xs: Vec<f32> = (0..n).map(|_| (rng.normal() * 4.0) as f32).collect();
+            let mut got = xs.clone();
+            softmax_asic(&mut got, n);
+            // exact
+            let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let es: Vec<f32> = xs.iter().map(|x| (x - m).exp()).collect();
+            let s: f32 = es.iter().sum();
+            for (g, e) in got.iter().zip(es.iter()) {
+                if (g - e / s).abs() > 1e-5 {
+                    return Err(format!("n={n} {g} vs {}", e / s));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn layernorm_matches_exact() {
+        check("layernorm_asic vs exact", 200, |rng| {
+            let n = rng.usize_in(2, 256);
+            let xs: Vec<f32> = (0..n).map(|_| (rng.normal() * 3.0 + 0.5) as f32).collect();
+            let gamma = vec![1.0f32; n];
+            let beta = vec![0.0f32; n];
+            let got = layernorm_asic(&xs, &gamma, &beta, 1e-5);
+            let mu = xs.iter().sum::<f32>() / n as f32;
+            let var = xs.iter().map(|x| (x - mu).powi(2)).sum::<f32>() / n as f32;
+            for (g, x) in got.iter().zip(xs.iter()) {
+                let want = (x - mu) / (var + 1e-5).sqrt();
+                if (g - want).abs() > 5e-4 {
+                    return Err(format!("n={n} got {g} want {want}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gelu_matches_reference() {
+        check("gelu_asic vs tanh reference", 300, |rng| {
+            let x = (rng.f64() * 20.0 - 10.0) as f32;
+            let c = (2.0f32 / std::f32::consts::PI).sqrt();
+            let want = 0.5 * x * (1.0 + (c * (x + 0.044715 * x * x * x)).tanh());
+            let got = gelu_asic(x);
+            if (got - want).abs() < 1e-5 * want.abs().max(1.0) {
+                Ok(())
+            } else {
+                Err(format!("x={x} got={got} want={want}"))
+            }
+        });
+    }
+}

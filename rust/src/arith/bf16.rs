@@ -1,0 +1,120 @@
+//! Software bfloat16: the datatype of every PIM-GPT tensor (paper §III.A —
+//! "All data in PIM-GPT are in bfloat16 format"). bf16 is the 16 high bits
+//! of an IEEE-754 f32; conversion rounds to nearest-even.
+
+/// A bfloat16 value (bit pattern).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Bf16(pub u16);
+
+impl Bf16 {
+    pub const ZERO: Bf16 = Bf16(0);
+    pub const ONE: Bf16 = Bf16(0x3F80);
+
+    /// Round-to-nearest-even conversion from f32.
+    pub fn from_f32(v: f32) -> Self {
+        let bits = v.to_bits();
+        if v.is_nan() {
+            // Preserve NaN, force a quiet mantissa bit.
+            return Bf16(((bits >> 16) as u16) | 0x0040);
+        }
+        let round_bit = 0x0000_8000u32;
+        let lower = bits & 0xFFFF;
+        let mut hi = (bits >> 16) as u16;
+        // round to nearest, ties to even
+        if lower > round_bit || (lower == round_bit && (hi & 1) == 1) {
+            hi = hi.wrapping_add(1);
+        }
+        Bf16(hi)
+    }
+
+    pub fn to_f32(self) -> f32 {
+        f32::from_bits((self.0 as u32) << 16)
+    }
+
+    /// Machine epsilon of bf16 (2^-8).
+    pub const EPSILON: f32 = 0.0078125;
+}
+
+impl From<f32> for Bf16 {
+    fn from(v: f32) -> Self {
+        Bf16::from_f32(v)
+    }
+}
+
+impl From<Bf16> for f32 {
+    fn from(v: Bf16) -> f32 {
+        v.to_f32()
+    }
+}
+
+/// Quantize an f32 slice through bf16 (storage precision of the PIM banks).
+pub fn quantize_slice(xs: &[f32]) -> Vec<f32> {
+    xs.iter().map(|&x| Bf16::from_f32(x).to_f32()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn exact_values_roundtrip() {
+        for v in [0.0f32, 1.0, -1.0, 0.5, 2.0, -0.25, 1024.0] {
+            assert_eq!(Bf16::from_f32(v).to_f32(), v, "{v}");
+        }
+    }
+
+    #[test]
+    fn one_has_known_bits() {
+        assert_eq!(Bf16::from_f32(1.0), Bf16::ONE);
+        assert_eq!(Bf16::from_f32(0.0), Bf16::ZERO);
+    }
+
+    #[test]
+    fn rounds_to_nearest_even() {
+        // 1.0 + eps/2 rounds down to 1.0 (tie -> even)
+        let tie = f32::from_bits(0x3F80_8000);
+        assert_eq!(Bf16::from_f32(tie).to_f32(), 1.0);
+        // just above the tie rounds up
+        let up = f32::from_bits(0x3F80_8001);
+        assert_eq!(Bf16::from_f32(up).to_f32(), 1.0 + Bf16::EPSILON);
+    }
+
+    #[test]
+    fn nan_and_inf_preserved() {
+        assert!(Bf16::from_f32(f32::NAN).to_f32().is_nan());
+        assert_eq!(Bf16::from_f32(f32::INFINITY).to_f32(), f32::INFINITY);
+        assert_eq!(Bf16::from_f32(f32::NEG_INFINITY).to_f32(), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn prop_relative_error_bounded() {
+        check("bf16 rel error < eps", 1000, |rng| {
+            let x = (rng.normal() as f32) * 100.0;
+            if x == 0.0 {
+                return Ok(());
+            }
+            let q = Bf16::from_f32(x).to_f32();
+            let rel = ((q - x) / x).abs();
+            if rel <= Bf16::EPSILON {
+                Ok(())
+            } else {
+                Err(format!("x={x} q={q} rel={rel}"))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_roundtrip_idempotent() {
+        check("bf16 quantization idempotent", 1000, |rng| {
+            let x = (rng.normal() as f32) * 10.0;
+            let q1 = Bf16::from_f32(x).to_f32();
+            let q2 = Bf16::from_f32(q1).to_f32();
+            if q1.to_bits() == q2.to_bits() {
+                Ok(())
+            } else {
+                Err(format!("{x}: {q1} != {q2}"))
+            }
+        });
+    }
+}

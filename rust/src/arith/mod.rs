@@ -1,0 +1,14 @@
+//! ASIC arithmetic: software bfloat16 and the add/mul-only approximation
+//! algorithms of paper §III.D (Algorithms 1-2).
+//!
+//! These are the *functional* twins of the cycle models in `asic::engine`
+//! and are mirrored bit-for-bit by `python/compile/kernels/asic_ops.py`
+//! (shared golden-value tests keep the two locked). The rust side is used
+//! by unit tests, failure-injection tests and the functional cross-checks
+//! of the coordinator.
+
+pub mod approx;
+pub mod bf16;
+
+pub use approx::{exp_taylor6, gelu_asic, layernorm_asic, reciprocal_nr, rsqrt_fast, softmax_asic, tanh_exp};
+pub use bf16::Bf16;

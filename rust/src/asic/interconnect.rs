@@ -1,0 +1,98 @@
+//! PIM↔ASIC interconnect: memory bus + crossbar (paper Fig. 5).
+//!
+//! The ASIC reaches every channel over its GDDR6 interface (32 GB/s per
+//! channel at the Table-I data rate; Fig. 13 sweeps this down to 1 Gb/s
+//! per pin). The crossbar supports: fetch from one channel, send to one
+//! channel, or broadcast to all channels. Transfers to *different*
+//! channels proceed in parallel; transfers to the same channel serialize
+//! (tracked per channel in `pim::Channel::bus_busy_until`); this module
+//! models the ASIC-side cost and counts global traffic (Fig. 11b).
+
+use crate::config::HwConfig;
+
+/// ASIC-side transfer bookkeeping.
+#[derive(Clone, Debug, Default)]
+pub struct Interconnect {
+    /// Total bytes ASIC<->PIM in both directions.
+    pub bytes_moved: u64,
+    /// Cycles the ASIC spent sourcing/sinking transfers.
+    pub busy_cycles: u64,
+}
+
+impl Interconnect {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Cycles to move `bytes` to/from a single channel.
+    pub fn xfer_cycles(cfg: &HwConfig, bytes: u64) -> u64 {
+        let per_cycle = cfg.gddr6.channel_bytes_per_cycle();
+        (bytes as f64 / per_cycle).ceil() as u64
+    }
+
+    /// Broadcast `bytes` to all channels: the ASIC drives every channel
+    /// interface simultaneously, so the cost is one channel's transfer.
+    pub fn broadcast(&mut self, cfg: &HwConfig, bytes: u64) -> u64 {
+        let cycles = Self::xfer_cycles(cfg, bytes);
+        self.bytes_moved += bytes * cfg.gddr6.channels as u64;
+        self.busy_cycles += cycles;
+        cycles
+    }
+
+    /// Gather `bytes_per_channel` from every channel in parallel.
+    pub fn gather(&mut self, cfg: &HwConfig, bytes_per_channel: u64) -> u64 {
+        let cycles = Self::xfer_cycles(cfg, bytes_per_channel);
+        self.bytes_moved += bytes_per_channel * cfg.gddr6.channels as u64;
+        self.busy_cycles += cycles;
+        cycles
+    }
+
+    /// Point-to-point transfer to/from one channel.
+    pub fn unicast(&mut self, cfg: &HwConfig, bytes: u64) -> u64 {
+        let cycles = Self::xfer_cycles(cfg, bytes);
+        self.bytes_moved += bytes;
+        self.busy_cycles += cycles;
+        cycles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_rate_32_bytes_per_cycle() {
+        let cfg = HwConfig::paper_baseline();
+        assert_eq!(Interconnect::xfer_cycles(&cfg, 2048), 64);
+        assert_eq!(Interconnect::xfer_cycles(&cfg, 1), 1);
+        assert_eq!(Interconnect::xfer_cycles(&cfg, 0), 0);
+    }
+
+    #[test]
+    fn fig13_rate_sweep_slows_transfers() {
+        // 16 -> 2 Gb/s/pin: 8x slower transfers.
+        let fast = HwConfig::paper_baseline();
+        let slow = HwConfig::paper_baseline().with_data_rate_gbps(2.0);
+        let f = Interconnect::xfer_cycles(&fast, 4096);
+        let s = Interconnect::xfer_cycles(&slow, 4096);
+        assert_eq!(s, f * 8);
+    }
+
+    #[test]
+    fn broadcast_counts_fanout_traffic() {
+        let cfg = HwConfig::paper_baseline();
+        let mut ic = Interconnect::new();
+        let cycles = ic.broadcast(&cfg, 2048);
+        assert_eq!(cycles, 64);
+        assert_eq!(ic.bytes_moved, 2048 * 8);
+    }
+
+    #[test]
+    fn gather_parallel_across_channels() {
+        let cfg = HwConfig::paper_baseline();
+        let mut ic = Interconnect::new();
+        let cycles = ic.gather(&cfg, 256);
+        assert_eq!(cycles, 8); // 256 B / 32 B-per-cycle
+        assert_eq!(ic.bytes_moved, 256 * 8);
+    }
+}

@@ -1,0 +1,10 @@
+//! ASIC model: computation engines, SRAM buffer and the PIM↔ASIC
+//! interconnect (paper §III.C-D, Fig. 5).
+
+pub mod engine;
+pub mod interconnect;
+pub mod sram;
+
+pub use engine::{AsicOp, Engine, OpCost};
+pub use interconnect::Interconnect;
+pub use sram::Sram;

@@ -1,0 +1,101 @@
+//! 128 KB ASIC SRAM buffer (Table I): capacity tracking for intermediate
+//! vectors (input vectors, partial sums, attention scores). The compiler
+//! checks every intermediate against this capacity; overflow is a mapping
+//! bug, not a runtime reallocation.
+
+use crate::config::HwConfig;
+
+/// SRAM occupancy tracker.
+#[derive(Clone, Debug)]
+pub struct Sram {
+    capacity_bytes: usize,
+    used_bytes: usize,
+    /// High-water mark for reporting.
+    pub peak_bytes: usize,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[error("SRAM overflow: need {need} bytes, {used} of {cap} in use")]
+pub struct SramOverflow {
+    pub need: usize,
+    pub used: usize,
+    pub cap: usize,
+}
+
+impl Sram {
+    pub fn new(cfg: &HwConfig) -> Self {
+        Self { capacity_bytes: cfg.asic.sram_kb * 1024, used_bytes: 0, peak_bytes: 0 }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity_bytes
+    }
+
+    pub fn used(&self) -> usize {
+        self.used_bytes
+    }
+
+    /// Reserve `bytes`; errors on overflow.
+    pub fn alloc(&mut self, bytes: usize) -> Result<(), SramOverflow> {
+        if self.used_bytes + bytes > self.capacity_bytes {
+            return Err(SramOverflow { need: bytes, used: self.used_bytes, cap: self.capacity_bytes });
+        }
+        self.used_bytes += bytes;
+        self.peak_bytes = self.peak_bytes.max(self.used_bytes);
+        Ok(())
+    }
+
+    pub fn free(&mut self, bytes: usize) {
+        debug_assert!(bytes <= self.used_bytes, "freeing more than allocated");
+        self.used_bytes = self.used_bytes.saturating_sub(bytes);
+    }
+
+    pub fn reset(&mut self) {
+        self.used_bytes = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sram() -> Sram {
+        Sram::new(&HwConfig::paper_baseline())
+    }
+
+    #[test]
+    fn capacity_is_128kb() {
+        assert_eq!(sram().capacity(), 128 * 1024);
+    }
+
+    #[test]
+    fn alloc_free_cycle() {
+        let mut s = sram();
+        s.alloc(100_000).unwrap();
+        assert_eq!(s.used(), 100_000);
+        s.free(60_000);
+        assert_eq!(s.used(), 40_000);
+        s.alloc(80_000).unwrap();
+        assert_eq!(s.peak_bytes, 120_000);
+    }
+
+    #[test]
+    fn overflow_detected() {
+        let mut s = sram();
+        s.alloc(128 * 1024).unwrap();
+        let err = s.alloc(1).unwrap_err();
+        assert_eq!(err.need, 1);
+        assert_eq!(err.used, 128 * 1024);
+    }
+
+    #[test]
+    fn gpt3_xl_vectors_fit() {
+        // Largest model: d=2048, d_ff=8192 bf16 elements must fit with
+        // room for double-buffering: (2048 + 8192) * 2 bytes = 20.5 KB.
+        let mut s = sram();
+        s.alloc(2048 * 2).unwrap();
+        s.alloc(8192 * 2).unwrap();
+        s.alloc(8192 * 2).unwrap(); // double buffer
+        assert!(s.used() < s.capacity());
+    }
+}

@@ -1,0 +1,70 @@
+//! Reported numbers of prior GPT accelerators (paper Table II) — used to
+//! regenerate the comparison table.
+
+/// A prior accelerator's published results.
+#[derive(Clone, Copy, Debug)]
+pub struct PriorAccel {
+    pub name: &'static str,
+    pub memory: &'static str,
+    pub end_to_end: bool,
+    pub pim: bool,
+    pub data_type: &'static str,
+    pub largest_model: &'static str,
+    pub longest_token: Option<u64>,
+    /// Speedup over their GPU baseline.
+    pub speedup: f64,
+    /// Energy efficiency over their GPU baseline (None = not reported).
+    pub energy_eff: Option<f64>,
+}
+
+/// Table II rows for SpAtten, TransPIM and DFX (as published).
+pub const PRIOR_ACCELERATORS: [PriorAccel; 3] = [
+    PriorAccel {
+        name: "SpAtten",
+        memory: "HBM",
+        end_to_end: false,
+        pim: false,
+        data_type: "INT",
+        largest_model: "GPT2-medium",
+        longest_token: Some(32),
+        speedup: 35.0,
+        energy_eff: Some(382.0),
+    },
+    PriorAccel {
+        name: "TransPIM",
+        memory: "HBM",
+        end_to_end: false,
+        pim: true,
+        data_type: "INT",
+        largest_model: "GPT2-medium",
+        longest_token: None,
+        speedup: 33.0,
+        energy_eff: Some(250.0),
+    },
+    PriorAccel {
+        name: "DFX",
+        memory: "HBM+DDR",
+        end_to_end: true,
+        pim: false,
+        data_type: "FP16",
+        largest_model: "GPT2-XL",
+        longest_token: Some(128),
+        speedup: 3.2,
+        energy_eff: Some(3.99),
+    },
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_static_data() {
+        assert_eq!(PRIOR_ACCELERATORS.len(), 3);
+        let spatten = &PRIOR_ACCELERATORS[0];
+        assert_eq!(spatten.speedup, 35.0);
+        let dfx = &PRIOR_ACCELERATORS[2];
+        assert!(dfx.end_to_end);
+        assert_eq!(dfx.longest_token, Some(128));
+    }
+}

@@ -1,0 +1,15 @@
+//! GPU / CPU baselines and prior-accelerator comparison data.
+//!
+//! The paper *measures* an NVIDIA T4 (torch + `torch.cuda.Event`/pynvml)
+//! and an Intel Xeon Gold 6154 (`time.time()` + s-tui). Neither device
+//! is available offline, so these are analytical roofline+overhead
+//! models whose constants were calibrated once against the paper's
+//! anchor (GPT2-medium: 89x speedup, 618x energy vs T4 — Table II) and
+//! then *held fixed* across all 8 models; every per-model number is
+//! therefore a prediction of the model, not a fit (DESIGN.md §5-6).
+
+pub mod accelerators;
+pub mod device;
+
+pub use accelerators::{PriorAccel, PRIOR_ACCELERATORS};
+pub use device::{cpu_xeon_6154, gpu_t4, DeviceModel};

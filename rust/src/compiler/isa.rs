@@ -1,0 +1,64 @@
+//! The PIM-GPT instruction set.
+//!
+//! Two command streams (paper Fig. 3b): DRAM commands (VMM + KV writes,
+//! expanded to ACT/MAC/WR/PRE bursts by the bank state machine) and ASIC
+//! commands (arithmetic engines + data movement). Instructions carry
+//! explicit dependencies; the scheduler is data-triggered (§III.A).
+
+use crate::asic::AsicOp;
+use crate::model::{MatrixId, VmmClass};
+
+/// One instruction.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Instr {
+    /// Broadcast `in_elems` to all channels' GBs, MAC `matrix`, drain
+    /// `out_elems`. `parts > 1` means the input exceeded the 2 KB GB and
+    /// is streamed in chunks (a PartialSum ASIC op follows).
+    PimVmm {
+        matrix: MatrixId,
+        class: VmmClass,
+        in_elems: u64,
+        out_elems: u64,
+        parts: u64,
+    },
+    /// Arithmetic on the ASIC computation engines.
+    Asic(AsicOp),
+    /// Write token `pos`'s Key vector (row-major) to its reserved rows.
+    WriteK { layer: usize },
+    /// Write token `pos`'s Value elements (column-major) to all units.
+    WriteV { layer: usize },
+}
+
+/// Instruction + dependencies (indices into the program).
+#[derive(Clone, Debug)]
+pub struct InstrNode {
+    pub instr: Instr,
+    pub deps: Vec<usize>,
+}
+
+/// A compiled decode step.
+#[derive(Clone, Debug)]
+pub struct Program {
+    pub nodes: Vec<InstrNode>,
+    /// Context length this step attends over (pos + 1).
+    pub ltoken: u64,
+    /// Peak SRAM bytes needed by intermediates.
+    pub peak_sram_bytes: usize,
+}
+
+impl Program {
+    /// Count instructions of each broad class (for tests/reports).
+    pub fn counts(&self) -> (usize, usize, usize) {
+        let mut vmm = 0;
+        let mut asic = 0;
+        let mut kv = 0;
+        for n in &self.nodes {
+            match n.instr {
+                Instr::PimVmm { .. } => vmm += 1,
+                Instr::Asic(_) => asic += 1,
+                Instr::WriteK { .. } | Instr::WriteV { .. } => kv += 1,
+            }
+        }
+        (vmm, asic, kv)
+    }
+}

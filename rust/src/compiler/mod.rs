@@ -1,0 +1,8 @@
+//! Instruction compiler: lowers the per-token `DecodeGraph` into a
+//! dependency-tagged PIM/ASIC instruction stream (paper Fig. 3b).
+
+pub mod isa;
+pub mod lower;
+
+pub use isa::{Instr, InstrNode, Program};
+pub use lower::compile;

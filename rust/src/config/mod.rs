@@ -1,0 +1,325 @@
+//! Hardware and simulation configuration — paper Table I is the default.
+//!
+//! Every sensitivity/scalability experiment (Fig. 12/13/15) is a pure
+//! config transformation: ASIC frequency scaling, memory-interface data
+//! rate, MAC width and channel count are all knobs here. Configs can be
+//! overridden from a JSON file (`HwConfig::from_json`), giving the
+//! "real config system" of the launcher.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+/// GDDR6 timing constraints, in nanoseconds (1 cycle = 1 ns @ 1 GHz).
+/// Values from Table I; tRAS is not published there — we use a
+/// conservative GDDR5-class 28 ns (documented assumption, DESIGN.md §6).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TimingConfig {
+    pub trcd: u64,
+    pub trp: u64,
+    pub tccd: u64,
+    pub twr: u64,
+    pub trfc: u64,
+    pub trefi: u64,
+    pub tras: u64,
+}
+
+impl Default for TimingConfig {
+    fn default() -> Self {
+        Self { trcd: 12, trp: 12, tccd: 1, twr: 12, trfc: 455, trefi: 6825, tras: 28 }
+    }
+}
+
+/// DRAM IDD current values (mA), Table I (DDR5 datasheet-derived).
+#[derive(Clone, Debug, PartialEq)]
+pub struct IddConfig {
+    pub idd2n: f64,
+    pub idd3n: f64,
+    pub idd0: f64,
+    pub idd4r: f64,
+    pub idd4w: f64,
+    pub idd5b: f64,
+}
+
+impl Default for IddConfig {
+    fn default() -> Self {
+        Self { idd2n: 92.0, idd3n: 142.0, idd0: 122.0, idd4r: 530.0, idd4w: 470.0, idd5b: 277.0 }
+    }
+}
+
+/// GDDR6 geometry + interface (Table I).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Gddr6Config {
+    pub channels: usize,
+    pub banks_per_channel: usize,
+    /// Per-channel capacity in gigabits.
+    pub capacity_gbit: f64,
+    /// Bytes per DRAM row (2 KB -> 1024 bf16 values).
+    pub row_bytes: usize,
+    /// DRAM core frequency in GHz (1 cycle = 1/freq ns).
+    pub freq_ghz: f64,
+    pub pins_per_channel: usize,
+    /// Interface data rate per pin, Gb/s (Fig. 13 sweeps this).
+    pub gbps_per_pin: f64,
+    /// Supply voltage (GDDR6: 1.25 V).
+    pub vdd: f64,
+}
+
+impl Default for Gddr6Config {
+    fn default() -> Self {
+        Self {
+            channels: 8,
+            banks_per_channel: 16,
+            capacity_gbit: 4.0,
+            row_bytes: 2048,
+            freq_ghz: 1.0,
+            pins_per_channel: 16,
+            gbps_per_pin: 16.0,
+            vdd: 1.25,
+        }
+    }
+}
+
+impl Gddr6Config {
+    /// Rows per bank, derived: capacity / banks / row size. DRAM capacity
+    /// is binary: 4 Gb = 4 x 2^30 bits -> 16384 rows (paper: "16k").
+    pub fn rows_per_bank(&self) -> u64 {
+        let bytes_per_channel = (self.capacity_gbit * (1u64 << 30) as f64 / 8.0) as u64;
+        bytes_per_channel / self.banks_per_channel as u64 / self.row_bytes as u64
+    }
+
+    /// bf16 values per row.
+    pub fn row_elems(&self) -> u64 {
+        (self.row_bytes / 2) as u64
+    }
+
+    /// Per-channel interface bandwidth in bytes/second.
+    pub fn channel_bw_bytes_per_s(&self) -> f64 {
+        self.pins_per_channel as f64 * self.gbps_per_pin * 1e9 / 8.0
+    }
+
+    /// Interface bytes transferred per DRAM clock cycle per channel.
+    pub fn channel_bytes_per_cycle(&self) -> f64 {
+        self.channel_bw_bytes_per_s() / (self.freq_ghz * 1e9)
+    }
+}
+
+/// PIM extensions to the DRAM chip (Table I).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PimConfig {
+    /// Global buffer per channel, bytes (2 KB).
+    pub gb_bytes: usize,
+    /// Multiplier lanes per bank MAC unit (16; Fig. 15a sweeps 16..64).
+    pub mac_lanes: usize,
+    /// MAC power for the 16 units of one channel, mW (synthesized, x1.5
+    /// routing margin — paper §V.A).
+    pub mac_power_mw_per_channel: f64,
+    /// MAC pipeline depth: multiplier stage + log2(lanes) adder-tree
+    /// stages; affects only the fill latency of each segment.
+    pub pipeline_fill: u64,
+}
+
+impl Default for PimConfig {
+    fn default() -> Self {
+        Self { gb_bytes: 2048, mac_lanes: 16, mac_power_mw_per_channel: 149.29, pipeline_fill: 5 }
+    }
+}
+
+impl PimConfig {
+    /// bf16 elements the global buffer can hold.
+    pub fn gb_elems(&self) -> usize {
+        self.gb_bytes / 2
+    }
+}
+
+/// ASIC configuration (Table I + synthesis results §V.A).
+#[derive(Clone, Debug, PartialEq)]
+pub struct AsicConfig {
+    /// Clock in GHz (Fig. 12 sweeps 1.0 down to 0.1).
+    pub freq_ghz: f64,
+    pub sram_kb: usize,
+    pub n_adders: usize,
+    pub n_multipliers: usize,
+    pub area_mm2: f64,
+    /// Peak power, mW.
+    pub power_mw: f64,
+}
+
+impl Default for AsicConfig {
+    fn default() -> Self {
+        Self { freq_ghz: 1.0, sram_kb: 128, n_adders: 256, n_multipliers: 128, area_mm2: 0.64, power_mw: 304.59 }
+    }
+}
+
+/// Full system configuration.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct HwConfig {
+    pub timing: TimingConfig,
+    pub idd: IddConfig,
+    pub gddr6: Gddr6Config,
+    pub pim: PimConfig,
+    pub asic: AsicConfig,
+}
+
+impl HwConfig {
+    /// Paper Table I baseline.
+    pub fn paper_baseline() -> Self {
+        Self::default()
+    }
+
+    /// Total MAC units in the system.
+    pub fn total_mac_units(&self) -> usize {
+        self.gddr6.channels * self.gddr6.banks_per_channel
+    }
+
+    /// Fig. 12 knob: scale ASIC frequency.
+    pub fn with_asic_freq_ghz(mut self, f: f64) -> Self {
+        assert!(f > 0.0);
+        self.asic.freq_ghz = f;
+        self
+    }
+
+    /// Fig. 13 knob: memory interface data rate (Gb/s/pin).
+    pub fn with_data_rate_gbps(mut self, r: f64) -> Self {
+        assert!(r > 0.0);
+        self.gddr6.gbps_per_pin = r;
+        self
+    }
+
+    /// Fig. 15a knob: MAC lanes per bank.
+    pub fn with_mac_lanes(mut self, lanes: usize) -> Self {
+        assert!(lanes.is_power_of_two());
+        self.pim.mac_lanes = lanes;
+        self.pim.pipeline_fill = 1 + (lanes as f64).log2() as u64;
+        self
+    }
+
+    /// Fig. 15b knob: number of PIM channels.
+    pub fn with_channels(mut self, ch: usize) -> Self {
+        assert!(ch > 0);
+        self.gddr6.channels = ch;
+        self
+    }
+
+    /// Apply overrides from a JSON object, e.g.
+    /// `{"asic": {"freq_ghz": 0.5}, "gddr6": {"channels": 16}}`.
+    pub fn from_json(json: &Json) -> Result<Self> {
+        let mut cfg = Self::default();
+        cfg.apply_json(json)?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        let json = Json::parse(&text).with_context(|| format!("parsing {path}"))?;
+        Self::from_json(&json)
+    }
+
+    pub fn apply_json(&mut self, json: &Json) -> Result<()> {
+        let obj = match json.as_obj() {
+            Some(o) => o,
+            None => bail!("config root must be an object"),
+        };
+        for (section, value) in obj {
+            let fields = value
+                .as_obj()
+                .with_context(|| format!("section '{section}' must be an object"))?;
+            for (key, v) in fields {
+                let n = v
+                    .as_f64()
+                    .with_context(|| format!("{section}.{key} must be a number"))?;
+                self.set_field(section, key, n)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn set_field(&mut self, section: &str, key: &str, n: f64) -> Result<()> {
+        macro_rules! set {
+            ($field:expr, u64) => { $field = n as u64 };
+            ($field:expr, usize) => { $field = n as usize };
+            ($field:expr, f64) => { $field = n };
+        }
+        match (section, key) {
+            ("timing", "trcd") => set!(self.timing.trcd, u64),
+            ("timing", "trp") => set!(self.timing.trp, u64),
+            ("timing", "tccd") => set!(self.timing.tccd, u64),
+            ("timing", "twr") => set!(self.timing.twr, u64),
+            ("timing", "trfc") => set!(self.timing.trfc, u64),
+            ("timing", "trefi") => set!(self.timing.trefi, u64),
+            ("timing", "tras") => set!(self.timing.tras, u64),
+            ("idd", "idd2n") => set!(self.idd.idd2n, f64),
+            ("idd", "idd3n") => set!(self.idd.idd3n, f64),
+            ("idd", "idd0") => set!(self.idd.idd0, f64),
+            ("idd", "idd4r") => set!(self.idd.idd4r, f64),
+            ("idd", "idd4w") => set!(self.idd.idd4w, f64),
+            ("idd", "idd5b") => set!(self.idd.idd5b, f64),
+            ("gddr6", "channels") => set!(self.gddr6.channels, usize),
+            ("gddr6", "banks_per_channel") => set!(self.gddr6.banks_per_channel, usize),
+            ("gddr6", "capacity_gbit") => set!(self.gddr6.capacity_gbit, f64),
+            ("gddr6", "row_bytes") => set!(self.gddr6.row_bytes, usize),
+            ("gddr6", "freq_ghz") => set!(self.gddr6.freq_ghz, f64),
+            ("gddr6", "pins_per_channel") => set!(self.gddr6.pins_per_channel, usize),
+            ("gddr6", "gbps_per_pin") => set!(self.gddr6.gbps_per_pin, f64),
+            ("gddr6", "vdd") => set!(self.gddr6.vdd, f64),
+            ("pim", "gb_bytes") => set!(self.pim.gb_bytes, usize),
+            ("pim", "mac_lanes") => set!(self.pim.mac_lanes, usize),
+            ("pim", "mac_power_mw_per_channel") => set!(self.pim.mac_power_mw_per_channel, f64),
+            ("pim", "pipeline_fill") => set!(self.pim.pipeline_fill, u64),
+            ("asic", "freq_ghz") => set!(self.asic.freq_ghz, f64),
+            ("asic", "sram_kb") => set!(self.asic.sram_kb, usize),
+            ("asic", "n_adders") => set!(self.asic.n_adders, usize),
+            ("asic", "n_multipliers") => set!(self.asic.n_multipliers, usize),
+            ("asic", "area_mm2") => set!(self.asic.area_mm2, f64),
+            ("asic", "power_mw") => set!(self.asic.power_mw, f64),
+            _ => bail!("unknown config field {section}.{key}"),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_derived_values() {
+        let cfg = HwConfig::paper_baseline();
+        // 4 Gb / 16 banks / 2 KB rows = 16384 rows per bank (paper: 16k)
+        assert_eq!(cfg.gddr6.rows_per_bank(), 16384);
+        assert_eq!(cfg.gddr6.row_elems(), 1024);
+        // 16 pins x 16 Gb/s = 32 GB/s per channel
+        assert!((cfg.gddr6.channel_bw_bytes_per_s() - 32e9).abs() < 1e-3);
+        assert_eq!(cfg.total_mac_units(), 128);
+        assert_eq!(cfg.pim.gb_elems(), 1024);
+    }
+
+    #[test]
+    fn knobs() {
+        let cfg = HwConfig::paper_baseline()
+            .with_asic_freq_ghz(0.2)
+            .with_data_rate_gbps(2.0)
+            .with_mac_lanes(64)
+            .with_channels(16);
+        assert_eq!(cfg.asic.freq_ghz, 0.2);
+        assert_eq!(cfg.gddr6.gbps_per_pin, 2.0);
+        assert_eq!(cfg.pim.mac_lanes, 64);
+        assert_eq!(cfg.pim.pipeline_fill, 7);
+        assert_eq!(cfg.gddr6.channels, 16);
+    }
+
+    #[test]
+    fn json_overrides() {
+        let j = Json::parse(r#"{"asic": {"freq_ghz": 0.5}, "timing": {"trcd": 14}}"#).unwrap();
+        let cfg = HwConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.asic.freq_ghz, 0.5);
+        assert_eq!(cfg.timing.trcd, 14);
+        assert_eq!(cfg.timing.trp, 12); // untouched default
+    }
+
+    #[test]
+    fn json_unknown_field_rejected() {
+        let j = Json::parse(r#"{"asic": {"nope": 1}}"#).unwrap();
+        assert!(HwConfig::from_json(&j).is_err());
+    }
+}

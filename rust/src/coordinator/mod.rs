@@ -1,0 +1,9 @@
+//! The L3 coordinator: owns the mapped model, the timing simulator and
+//! (optionally) the functional PJRT artifact, and drives end-to-end
+//! token generation and request serving.
+
+pub mod generation;
+pub mod server;
+
+pub use generation::{GenerationResult, PimGptSystem};
+pub use server::{Request, Response, Server, ServerMetrics};

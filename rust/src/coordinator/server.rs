@@ -1,0 +1,215 @@
+//! Request-serving loop: a FIFO queue in front of the (batch-1,
+//! autoregressive) PIM-GPT engine.
+//!
+//! PIM-GPT generates one token at a time for one sequence — the paper's
+//! edge-inference scenario — so the scheduler is a fair FIFO: requests
+//! queue on a channel, a worker thread owns the `PimGptSystem` and
+//! serves them in arrival order, reporting per-request latency (both
+//! simulated-hardware and wall-clock) and aggregate throughput.
+//! (std threads + mpsc stand in for tokio, unavailable offline —
+//! DESIGN.md §5.) The PJRT client types are not `Send`, so the worker
+//! *constructs* the system inside its own thread from a factory closure.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use super::generation::PimGptSystem;
+use anyhow::{anyhow, Result};
+
+/// A generation request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub n_new: usize,
+}
+
+/// A served response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    /// Simulated PIM-GPT latency for this request, seconds.
+    pub sim_seconds: f64,
+    /// Wall-clock time spent in the functional decode, seconds.
+    pub wall_seconds: f64,
+    /// Queueing delay in *simulated* seconds (time the request waited
+    /// behind earlier requests on the simulated hardware).
+    pub sim_queue_seconds: f64,
+    pub error: Option<String>,
+}
+
+/// Aggregate serving metrics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServerMetrics {
+    pub requests: u64,
+    pub failed: u64,
+    pub tokens: u64,
+    pub sim_seconds: f64,
+    pub wall_seconds: f64,
+}
+
+impl ServerMetrics {
+    pub fn sim_tokens_per_s(&self) -> f64 {
+        if self.sim_seconds == 0.0 {
+            return 0.0;
+        }
+        self.tokens as f64 / self.sim_seconds
+    }
+}
+
+/// FIFO serving loop around a `PimGptSystem`.
+pub struct Server {
+    tx: Option<mpsc::Sender<Request>>,
+    rx_resp: mpsc::Receiver<Response>,
+    worker: Option<JoinHandle<ServerMetrics>>,
+}
+
+impl Server {
+    /// Spawn the worker thread; `factory` builds the `PimGptSystem`
+    /// inside the thread (PJRT handles are not `Send`).
+    pub fn start<F>(factory: F) -> Self
+    where
+        F: FnOnce() -> anyhow::Result<PimGptSystem> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (tx_resp, rx_resp) = mpsc::channel::<Response>();
+        let worker = std::thread::spawn(move || {
+            let mut metrics = ServerMetrics::default();
+            let mut sim_busy_until = 0.0f64;
+            let mut system = match factory() {
+                Ok(s) => s,
+                Err(e) => {
+                    // Fail every request with the construction error.
+                    while let Ok(req) = rx.recv() {
+                        metrics.requests += 1;
+                        metrics.failed += 1;
+                        let _ = tx_resp.send(Response {
+                            id: req.id,
+                            tokens: vec![],
+                            sim_seconds: 0.0,
+                            wall_seconds: 0.0,
+                            sim_queue_seconds: 0.0,
+                            error: Some(format!("system init failed: {e}")),
+                        });
+                    }
+                    return metrics;
+                }
+            };
+            while let Ok(req) = rx.recv() {
+                let wall0 = std::time::Instant::now();
+                metrics.requests += 1;
+                match system.generate(&req.prompt, req.n_new) {
+                    Ok(r) => {
+                        let wall = wall0.elapsed().as_secs_f64();
+                        metrics.tokens += r.tokens.len() as u64;
+                        metrics.sim_seconds += r.sim_seconds;
+                        metrics.wall_seconds += wall;
+                        let resp = Response {
+                            id: req.id,
+                            tokens: r.tokens,
+                            sim_seconds: r.sim_seconds,
+                            wall_seconds: wall,
+                            sim_queue_seconds: sim_busy_until,
+                            error: None,
+                        };
+                        sim_busy_until += r.sim_seconds;
+                        let _ = tx_resp.send(resp);
+                    }
+                    Err(e) => {
+                        metrics.failed += 1;
+                        let _ = tx_resp.send(Response {
+                            id: req.id,
+                            tokens: vec![],
+                            sim_seconds: 0.0,
+                            wall_seconds: wall0.elapsed().as_secs_f64(),
+                            sim_queue_seconds: sim_busy_until,
+                            error: Some(e.to_string()),
+                        });
+                    }
+                }
+            }
+            metrics
+        });
+        Self { tx: Some(tx), rx_resp, worker: Some(worker) }
+    }
+
+    /// Enqueue a request.
+    pub fn submit(&self, req: Request) -> Result<()> {
+        self.tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("server shut down"))?
+            .send(req)
+            .map_err(|e| anyhow!("submit failed: {e}"))
+    }
+
+    /// Block for the next response.
+    pub fn recv(&self) -> Result<Response> {
+        self.rx_resp.recv().map_err(|e| anyhow!("recv failed: {e}"))
+    }
+
+    /// Close the queue and join the worker, returning aggregate metrics.
+    pub fn shutdown(mut self) -> ServerMetrics {
+        drop(self.tx.take());
+        self.worker.take().map(|w| w.join().unwrap_or_default()).unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HwConfig;
+    use crate::model::gpt::by_name;
+
+    fn server(model: &str) -> Server {
+        let name = model.to_string();
+        Server::start(move || {
+            let m = by_name(&name).unwrap();
+            PimGptSystem::timing_only(&m, &HwConfig::paper_baseline())
+        })
+    }
+
+    #[test]
+    fn serves_fifo_order() {
+        let s = server("gpt-nano");
+        for id in 0..4 {
+            s.submit(Request { id, prompt: vec![1, 2], n_new: 3 }).unwrap();
+        }
+        for want in 0..4 {
+            let r = s.recv().unwrap();
+            assert_eq!(r.id, want);
+            assert!(r.error.is_none());
+            assert_eq!(r.tokens.len(), 5);
+        }
+        let m = s.shutdown();
+        assert_eq!(m.requests, 4);
+        assert_eq!(m.failed, 0);
+        assert_eq!(m.tokens, 20);
+        assert!(m.sim_tokens_per_s() > 0.0);
+    }
+
+    #[test]
+    fn queueing_delay_accumulates() {
+        let s = server("gpt-nano");
+        for id in 0..3 {
+            s.submit(Request { id, prompt: vec![1], n_new: 2 }).unwrap();
+        }
+        let r0 = s.recv().unwrap();
+        let r1 = s.recv().unwrap();
+        let r2 = s.recv().unwrap();
+        assert_eq!(r0.sim_queue_seconds, 0.0);
+        assert!(r1.sim_queue_seconds > 0.0);
+        assert!(r2.sim_queue_seconds > r1.sim_queue_seconds);
+        s.shutdown();
+    }
+
+    #[test]
+    fn oversized_request_reports_error() {
+        let s = server("gpt-nano"); // max_seq = 128
+        s.submit(Request { id: 9, prompt: vec![0; 120], n_new: 100 }).unwrap();
+        let r = s.recv().unwrap();
+        assert!(r.error.is_some());
+        let m = s.shutdown();
+        assert_eq!(m.failed, 1);
+    }
+}

@@ -1,0 +1,54 @@
+//! DRAM command accounting.
+//!
+//! The simulator does not enqueue individual column commands (that would
+//! be ~10^9 objects for a 1024-token run); instead every bank tracks the
+//! *counts* and *busy cycles* per command class, which is exactly what the
+//! IDD power model consumes. Timing correctness is enforced by the bank
+//! state machine when it lays out each command burst.
+
+/// Per-class DRAM command counters (one per bank, merged upward).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CommandCounts {
+    /// Row activations issued.
+    pub act: u64,
+    /// Precharges issued.
+    pub pre: u64,
+    /// Column-read cycles spent feeding the MAC units (tCCD each).
+    pub mac_read_cycles: u64,
+    /// Column-write cycles (KV write-back).
+    pub write_cycles: u64,
+    /// Write-recovery waits (tWR) incurred.
+    pub write_recoveries: u64,
+    /// Refresh commands (tRFC each) — counted at channel level.
+    pub refresh: u64,
+    /// Cycles the bank spent busy (any command in flight).
+    pub busy_cycles: u64,
+}
+
+impl CommandCounts {
+    pub fn merge(&mut self, other: &CommandCounts) {
+        self.act += other.act;
+        self.pre += other.pre;
+        self.mac_read_cycles += other.mac_read_cycles;
+        self.write_cycles += other.write_cycles;
+        self.write_recoveries += other.write_recoveries;
+        self.refresh += other.refresh;
+        self.busy_cycles += other.busy_cycles;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_adds_fields() {
+        let mut a = CommandCounts { act: 1, pre: 2, mac_read_cycles: 3, ..Default::default() };
+        let b = CommandCounts { act: 10, write_cycles: 5, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.act, 11);
+        assert_eq!(a.pre, 2);
+        assert_eq!(a.mac_read_cycles, 3);
+        assert_eq!(a.write_cycles, 5);
+    }
+}

@@ -1,0 +1,11 @@
+//! GDDR6 DRAM substrate: command set, timing, bank state machine and the
+//! IDD-based power model (paper Table I, §V.A).
+
+pub mod bank;
+pub mod command;
+pub mod power;
+pub mod timing;
+
+pub use bank::{Bank, BankStats, RowSegment};
+pub use command::CommandCounts;
+pub use timing::TimingCycles;

@@ -1,0 +1,124 @@
+//! IDD-based DRAM power model (paper §V.A: "we multiply the IDD values
+//! consumed during each command with the corresponding latency and VDD,
+//! following the standard procedure" — Micron DDR5 addendum / Ghose et al.).
+//!
+//! IDD currents are *device* (channel) level quantities:
+//!
+//! * activation: `IDD0 * VDD * tRC` per ACT-PRE pair (IDD0 is defined as
+//!   the average device current over one full ACT-PRE cycle) — charged
+//!   per bank activation, the marginal unit of PIM row energy;
+//! * refresh: `(IDD5B - IDD3N) * VDD * tRFC` per all-bank refresh,
+//!   charged once per *channel* refresh event;
+//! * background: `IDD3N * VDD` while the channel has any open bank,
+//!   `IDD2N * VDD` otherwise — charged per channel over the run;
+//! * interface bursts (IDD4R/IDD4W) are charged in `energy::SystemEnergy`
+//!   on actual PIM<->ASIC transfer cycles only: PIM's MAC units consume
+//!   row-buffer data locally and never pay interface burst energy for
+//!   weights — that elimination is the core of the paper's energy claim.
+
+use super::command::CommandCounts;
+use super::timing::TimingCycles;
+use crate::config::HwConfig;
+
+/// DRAM-core energy breakdown, joules.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct DramEnergy {
+    pub activate_j: f64,
+    pub refresh_j: f64,
+    pub background_j: f64,
+}
+
+impl DramEnergy {
+    pub fn total_j(&self) -> f64 {
+        self.activate_j + self.refresh_j + self.background_j
+    }
+
+    pub fn merge(&mut self, o: &DramEnergy) {
+        self.activate_j += o.activate_j;
+        self.refresh_j += o.refresh_j;
+        self.background_j += o.background_j;
+    }
+}
+
+fn cycle_s(cfg: &HwConfig) -> f64 {
+    1e-9 / cfg.gddr6.freq_ghz
+}
+
+/// Energy of one bank's row activations.
+pub fn bank_activate_energy(cfg: &HwConfig, t: &TimingCycles, cmds: &CommandCounts) -> f64 {
+    cfg.idd.idd0 * 1e-3 * cfg.gddr6.vdd * (cmds.act * t.trc()) as f64 * cycle_s(cfg)
+}
+
+/// Energy of `refreshes` all-bank refresh events on one channel.
+pub fn channel_refresh_energy(cfg: &HwConfig, t: &TimingCycles, refreshes: u64) -> f64 {
+    (cfg.idd.idd5b - cfg.idd.idd3n).max(0.0) * 1e-3
+        * cfg.gddr6.vdd
+        * (refreshes * t.trfc) as f64
+        * cycle_s(cfg)
+}
+
+/// Background energy of one channel over `elapsed` cycles, of which
+/// `busy` had at least one bank active.
+pub fn channel_background_energy(cfg: &HwConfig, busy: u64, elapsed: u64) -> f64 {
+    let busy = busy.min(elapsed);
+    let idle = elapsed - busy;
+    (cfg.idd.idd3n * busy as f64 + cfg.idd.idd2n * idle as f64)
+        * 1e-3
+        * cfg.gddr6.vdd
+        * cycle_s(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (HwConfig, TimingCycles) {
+        let cfg = HwConfig::paper_baseline();
+        let t = TimingCycles::from_config(&cfg);
+        (cfg, t)
+    }
+
+    #[test]
+    fn activation_energy_exact() {
+        let (cfg, t) = setup();
+        let cmds = CommandCounts { act: 100, ..Default::default() };
+        let e = bank_activate_energy(&cfg, &t, &cmds);
+        // 100 ACTs * tRC(40 ns) * 122 mA * 1.25 V = 610 nJ
+        let want = 100.0 * 40e-9 * 122e-3 * 1.25;
+        assert!((e - want).abs() / want < 1e-9, "{e} vs {want}");
+    }
+
+    #[test]
+    fn idle_channel_background_is_idd2n() {
+        let (cfg, _) = setup();
+        let e = channel_background_energy(&cfg, 0, 1_000_000);
+        // 92 mA * 1.25 V * 1 ms
+        let want = 92e-3 * 1.25 * 1e-3;
+        assert!((e - want).abs() / want < 1e-9);
+    }
+
+    #[test]
+    fn busy_channel_background_is_idd3n() {
+        let (cfg, _) = setup();
+        let e = channel_background_energy(&cfg, 1_000_000, 1_000_000);
+        let want = 142e-3 * 1.25 * 1e-3;
+        assert!((e - want).abs() / want < 1e-9);
+    }
+
+    #[test]
+    fn refresh_energy_marginal_over_background() {
+        let (cfg, t) = setup();
+        let e = channel_refresh_energy(&cfg, &t, 10);
+        // (277-142) mA * 1.25 V * 10 * 455 ns
+        let want = 135e-3 * 1.25 * 10.0 * 455e-9;
+        assert!((e - want).abs() / want < 1e-9);
+    }
+
+    #[test]
+    fn activation_scales_linearly() {
+        let (cfg, t) = setup();
+        let e1 = bank_activate_energy(&cfg, &t, &CommandCounts { act: 10, ..Default::default() });
+        let e2 = bank_activate_energy(&cfg, &t, &CommandCounts { act: 20, ..Default::default() });
+        assert!((e2 / e1 - 2.0).abs() < 1e-12);
+    }
+}

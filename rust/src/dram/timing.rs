@@ -1,0 +1,66 @@
+//! Timing constraints in DRAM clock cycles.
+//!
+//! The GDDR6 core runs at 1 GHz (Table I) so 1 cycle == 1 ns at the
+//! baseline; all latency math inside the simulator is in cycles and is
+//! converted to seconds only at the reporting boundary.
+
+use crate::config::HwConfig;
+
+/// Table-I timing constraints converted to cycles.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TimingCycles {
+    pub trcd: u64,
+    pub trp: u64,
+    pub tccd: u64,
+    pub twr: u64,
+    pub trfc: u64,
+    pub trefi: u64,
+    pub tras: u64,
+}
+
+impl TimingCycles {
+    pub fn from_config(cfg: &HwConfig) -> Self {
+        let f = cfg.gddr6.freq_ghz; // cycles = ns * freq
+        let c = |ns: u64| ((ns as f64) * f).round().max(1.0) as u64;
+        Self {
+            trcd: c(cfg.timing.trcd),
+            trp: c(cfg.timing.trp),
+            tccd: c(cfg.timing.tccd),
+            twr: c(cfg.timing.twr),
+            trfc: c(cfg.timing.trfc),
+            trefi: c(cfg.timing.trefi),
+            tras: c(cfg.timing.tras),
+        }
+    }
+
+    /// Row cycle time: minimum interval between ACTs to the same bank.
+    pub fn trc(&self) -> u64 {
+        self.tras + self.trp
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_is_identity_at_1ghz() {
+        let t = TimingCycles::from_config(&HwConfig::paper_baseline());
+        assert_eq!(t.trcd, 12);
+        assert_eq!(t.trp, 12);
+        assert_eq!(t.tccd, 1);
+        assert_eq!(t.twr, 12);
+        assert_eq!(t.trfc, 455);
+        assert_eq!(t.trefi, 6825);
+        assert_eq!(t.trc(), 40);
+    }
+
+    #[test]
+    fn scales_with_frequency() {
+        let mut cfg = HwConfig::paper_baseline();
+        cfg.gddr6.freq_ghz = 2.0;
+        let t = TimingCycles::from_config(&cfg);
+        assert_eq!(t.trcd, 24);
+        assert_eq!(t.tccd, 2);
+    }
+}

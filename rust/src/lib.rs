@@ -1,0 +1,32 @@
+//! PIM-GPT: a hybrid process-in-memory accelerator for autoregressive
+//! transformers — full-system reproduction.
+//!
+//! Three-layer architecture:
+//! - L3 (this crate): event-driven clock-cycle-accurate simulator of the
+//!   GDDR6-PIM + ASIC hybrid system, the mapping compiler, baselines and the
+//!   serving coordinator.
+//! - L2 (python/compile/model.py): JAX GPT decode step, AOT-lowered to HLO
+//!   text artifacts.
+//! - L1 (python/compile/kernels/): Pallas kernels (bank-tiled VMM, ASIC
+//!   approximation ops), verified against pure-jnp oracles.
+//!
+//! See DESIGN.md for the full system inventory and the experiment index.
+
+pub mod arith;
+pub mod baselines;
+pub mod asic;
+pub mod compiler;
+pub mod coordinator;
+pub mod config;
+pub mod dram;
+pub mod energy;
+pub mod mapping;
+pub mod model;
+pub mod pim;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Crate version string reported by the CLI.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

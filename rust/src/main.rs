@@ -1,0 +1,281 @@
+//! pim-gpt CLI: the system launcher.
+//!
+//! ```text
+//! pim-gpt info [--config FILE]
+//! pim-gpt simulate --model NAME [--tokens N] [--config FILE] [--json]
+//! pim-gpt figures [--fig ID] [--tokens N]
+//! pim-gpt generate --model NAME [--artifacts DIR] [--prompt 1,2,3] [--n N]
+//! pim-gpt serve --model NAME [--requests N] [--artifacts DIR]
+//! ```
+//!
+//! (Arg parsing is hand-rolled — clap is unavailable offline, DESIGN.md §5.)
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+use pim_gpt::config::HwConfig;
+use pim_gpt::coordinator::{PimGptSystem, Request, Server};
+use pim_gpt::energy::SystemEnergy;
+use pim_gpt::model::gpt::by_name;
+use pim_gpt::report;
+use pim_gpt::sim::Simulator;
+use pim_gpt::util::table::fmt_time_s;
+
+/// Minimal flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    flags: std::collections::BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let mut flags = std::collections::BTreeMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                bail!("unexpected argument '{a}'");
+            }
+        }
+        Ok(Self { flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} must be an integer")),
+            None => Ok(default),
+        }
+    }
+}
+
+fn load_config(args: &Args) -> Result<HwConfig> {
+    match args.get("config") {
+        Some(path) => HwConfig::load(path),
+        None => Ok(HwConfig::paper_baseline()),
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let cmd = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let args = Args::parse(argv.get(1..).unwrap_or(&[]))?;
+    match cmd {
+        "info" => cmd_info(&args),
+        "simulate" => cmd_simulate(&args),
+        "figures" => cmd_figures(&args),
+        "generate" => cmd_generate(&args),
+        "serve" => cmd_serve(&args),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try 'pim-gpt help')"),
+    }
+}
+
+const HELP: &str = "\
+pim-gpt — hybrid process-in-memory accelerator for autoregressive transformers
+
+USAGE:
+  pim-gpt info     [--config FILE]
+  pim-gpt simulate --model NAME [--tokens N] [--config FILE] [--json]
+  pim-gpt figures  [--fig 1|8|10|11|12|13|14|15|t1|t2|all] [--tokens N]
+  pim-gpt generate --model gpt-nano|gpt-mini [--artifacts DIR] [--prompt 1,2,3] [--n N]
+  pim-gpt serve    --model NAME [--requests N] [--artifacts DIR]
+
+MODELS: gpt2-small|medium|large|xl, gpt3-small|medium|large|xl (timing),
+        gpt-nano, gpt-mini (functional artifacts in artifacts/)
+";
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    println!("pim-gpt {}", pim_gpt::VERSION);
+    let t1 = report::table1_config(&cfg);
+    println!("\n{}\n{}", t1.title, t1.rendered);
+    let f1 = report::fig1_model_zoo();
+    println!("{}\n{}", f1.title, f1.rendered);
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let name = args.get("model").ok_or_else(|| anyhow!("--model required"))?;
+    let model = by_name(name).ok_or_else(|| anyhow!("unknown model '{name}'"))?;
+    let tokens = args.u64_or("tokens", 64)?;
+    let cfg = load_config(args)?;
+    let mut sim = Simulator::new(&model, &cfg)?;
+    let wall0 = std::time::Instant::now();
+    sim.generate(tokens)?;
+    sim.finalize_stats();
+    let energy = SystemEnergy::from_sim(&sim);
+    let s = &sim.stats;
+    let secs = s.seconds(cfg.gddr6.freq_ghz);
+    if args.get("json").is_some() {
+        use pim_gpt::util::json::Json;
+        let j = Json::obj(vec![
+            ("model", name.into()),
+            ("tokens", tokens.into()),
+            ("sim_seconds", secs.into()),
+            ("sim_us_per_token", (secs * 1e6 / tokens as f64).into()),
+            ("energy_j", energy.total_j().into()),
+            ("row_hit_rate", s.row_hit_rate().into()),
+            ("bytes_moved", s.bytes_moved().into()),
+            ("vmm_fraction", s.vmm_fraction().into()),
+            ("instructions", s.instructions.into()),
+        ]);
+        println!("{j}");
+    } else {
+        println!("model            : {name} ({} params)", model.n_params());
+        println!("tokens           : {tokens}");
+        println!(
+            "simulated time   : {} ({} / token)",
+            fmt_time_s(secs),
+            fmt_time_s(secs / tokens as f64)
+        );
+        println!(
+            "energy           : {} ({} / token)",
+            pim_gpt::util::table::fmt_energy_j(energy.total_j()),
+            pim_gpt::util::table::fmt_energy_j(energy.total_j() / tokens as f64)
+        );
+        println!("row hit rate     : {:.2}%", 100.0 * s.row_hit_rate());
+        println!("PIM<->ASIC bytes : {:.1} MB", s.bytes_moved() as f64 / 1e6);
+        println!("vmm share        : {:.1}%", 100.0 * s.vmm_fraction());
+        println!("instructions     : {}", s.instructions);
+        println!("wall time        : {}", fmt_time_s(wall0.elapsed().as_secs_f64()));
+    }
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let which = args.get("fig").unwrap_or("all");
+    let tokens = args.u64_or("tokens", 64)?;
+    let mut reports = Vec::new();
+    let all = which == "all";
+    if all || which == "1" {
+        reports.push(report::fig1_model_zoo());
+    }
+    if all || which == "t1" {
+        reports.push(report::table1_config(&HwConfig::paper_baseline()));
+    }
+    if all || which == "8" || which == "9" {
+        reports.push(report::fig8_9_speedup_energy(tokens)?);
+    }
+    if all || which == "10" {
+        reports.push(report::fig10_breakdown(tokens)?);
+    }
+    if all || which == "11" {
+        reports.push(report::fig11_locality(tokens)?);
+    }
+    if all || which == "12" {
+        reports.push(report::fig12_asic_freq(tokens.min(16))?);
+    }
+    if all || which == "13" {
+        reports.push(report::fig13_bandwidth(tokens.min(16))?);
+    }
+    if all || which == "14" {
+        reports.push(report::fig14_long_token(&[1024, 2048, 4096, 8096])?);
+    }
+    if all || which == "15" {
+        reports.push(report::fig15_scalability(tokens.min(16))?);
+    }
+    if all || which == "t2" {
+        reports.push(report::table2_comparison(tokens)?);
+    }
+    if reports.is_empty() {
+        bail!("unknown figure '{which}'");
+    }
+    for r in reports {
+        println!("{}\n{}", r.title, r.rendered);
+    }
+    Ok(())
+}
+
+fn parse_prompt(s: &str) -> Result<Vec<i32>> {
+    s.split(',')
+        .map(|t| t.trim().parse::<i32>().map_err(|_| anyhow!("bad token '{t}'")))
+        .collect()
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let name = args.get("model").unwrap_or("gpt-nano");
+    let dir = args.get("artifacts").unwrap_or("artifacts");
+    let prompt = parse_prompt(args.get("prompt").unwrap_or("1,2,3"))?;
+    let n = args.u64_or("n", 16)? as usize;
+    let cfg = load_config(args)?;
+    let mut sys = PimGptSystem::with_artifact(name, Path::new(dir), &cfg)?;
+    let r = sys.generate(&prompt, n)?;
+    println!("tokens           : {:?}", r.tokens);
+    println!(
+        "simulated        : {} ({} / token)",
+        fmt_time_s(r.sim_seconds),
+        fmt_time_s(r.sim_seconds_per_token)
+    );
+    println!("simulated energy : {}", pim_gpt::util::table::fmt_energy_j(r.sim_energy_j));
+    println!("functional wall  : {}", fmt_time_s(r.wall_seconds));
+    println!("row hit rate     : {:.2}%", 100.0 * r.row_hit_rate);
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let name = args.get("model").unwrap_or("gpt-nano");
+    let n_requests = args.u64_or("requests", 8)?;
+    let cfg = load_config(args)?;
+    let dir = Path::new(args.get("artifacts").unwrap_or("artifacts"));
+    let use_artifact = by_name(name).map(|m| m.max_seq <= 512).unwrap_or(false)
+        && dir.join(format!("{name}.meta.json")).exists();
+    let functional = use_artifact;
+    let name_owned = name.to_string();
+    let dir_owned = dir.to_path_buf();
+    let cfg_owned = cfg.clone();
+    let server = Server::start(move || {
+        if use_artifact {
+            PimGptSystem::with_artifact(&name_owned, &dir_owned, &cfg_owned)
+        } else {
+            let m = by_name(&name_owned)
+                .ok_or_else(|| anyhow!("unknown model '{name_owned}'"))?;
+            PimGptSystem::timing_only(&m, &cfg_owned)
+        }
+    });
+    for id in 0..n_requests {
+        server.submit(Request { id, prompt: vec![1, 2, 3, (id % 17) as i32], n_new: 12 })?;
+    }
+    for _ in 0..n_requests {
+        let r = server.recv()?;
+        match r.error {
+            None => println!(
+                "req {:>3}: {} tokens, sim {} (+{} queue), wall {}",
+                r.id,
+                r.tokens.len(),
+                fmt_time_s(r.sim_seconds),
+                fmt_time_s(r.sim_queue_seconds),
+                fmt_time_s(r.wall_seconds),
+            ),
+            Some(e) => println!("req {:>3}: ERROR {e}", r.id),
+        }
+    }
+    let m = server.shutdown();
+    println!(
+        "\nserved {} requests ({} tokens), functional={functional}, simulated throughput {:.0} tok/s",
+        m.requests,
+        m.tokens,
+        m.sim_tokens_per_s()
+    );
+    Ok(())
+}

@@ -1,0 +1,355 @@
+//! KV-cache region reservation + runtime address computation
+//! (paper Algorithm 3 lines 8-14, Fig. 7).
+//!
+//! * **Key cache** (row-major, Fig. 7a): token `t`'s head-concatenated
+//!   Key vector (d elements) occupies `ceil(d / row_elems)` consecutive
+//!   reserved rows in *one* unit; tokens round-robin over units so the
+//!   growing context spreads evenly. The q@K^T VMM then reads, per unit,
+//!   a short list of full-vector segments — consecutive rows, maximal
+//!   locality.
+//! * **Value cache** (column-major, Fig. 7b): V's `d` columns round-robin
+//!   over units (`cols_pu` columns each); each column owns
+//!   `ceil(max_seq / row_elems)` consecutive rows. Writing token `t`
+//!   touches one row per owned column (ACT + 1 write + PRE each — no
+//!   locality, as the paper notes); the scores@V VMM reads each owned
+//!   column as `ceil(ltoken / row_elems)` row segments.
+
+use super::layout::{BankAllocator, CapacityError, UnitId};
+use crate::config::HwConfig;
+use crate::dram::RowSegment;
+use crate::model::GptModel;
+use crate::util::ceil_div;
+
+/// Longest supported row-fill pattern (rows per stored vector/column):
+/// covers d_model and context lengths up to 16 * row_elems = 16k.
+pub const MAX_PATTERN: usize = 16;
+
+/// Split `elems` into full `row_elems`-sized rows plus a tail.
+fn fill_pattern(elems: u64, row_elems: u64) -> ([u32; MAX_PATTERN], u8) {
+    let full = (elems / row_elems) as usize;
+    let tail = (elems % row_elems) as u32;
+    assert!(full + (tail > 0) as usize <= MAX_PATTERN, "pattern too long ({elems} elems)");
+    let mut pat = [0u32; MAX_PATTERN];
+    for slot in pat.iter_mut().take(full) {
+        *slot = row_elems as u32;
+    }
+    let mut len = full as u8;
+    if tail > 0 {
+        pat[full] = tail;
+        len += 1;
+    }
+    (pat, len)
+}
+
+/// Reserved KV regions for every layer.
+#[derive(Clone, Debug)]
+pub struct KvReservation {
+    /// K region base row per (layer, unit): `k_base[layer][unit]`.
+    pub k_base: Vec<Vec<u32>>,
+    /// V region base row per (layer, unit).
+    pub v_base: Vec<Vec<u32>>,
+    pub d_model: u64,
+    pub max_seq: u64,
+    pub n_units: usize,
+    pub banks_per_channel: usize,
+    /// Rows per stored Key vector (= ceil(d / row_elems)).
+    pub rows_per_k: u32,
+    /// Rows per stored Value column (= ceil(max_seq / row_elems)).
+    pub rows_per_vcol: u32,
+    /// V columns owned per unit.
+    pub v_cols_per_unit: u64,
+    row_elems: u64,
+}
+
+impl KvReservation {
+    pub fn build(
+        model: &GptModel,
+        cfg: &HwConfig,
+        alloc: &mut BankAllocator,
+    ) -> Result<Self, CapacityError> {
+        let n_units = alloc.n_units();
+        let row_elems = cfg.gddr6.row_elems();
+        let d = model.d_model as u64;
+        let max_seq = model.max_seq as u64;
+
+        let rows_per_k = ceil_div(d, row_elems) as u32;
+        let toks_per_unit = ceil_div(max_seq, n_units as u64) as u32;
+        let rows_per_vcol = ceil_div(max_seq, row_elems) as u32;
+        let v_cols_per_unit = super::weight_map::columns_per_unit(d, n_units as u64);
+
+        let mut k_base = Vec::with_capacity(model.n_layer);
+        let mut v_base = Vec::with_capacity(model.n_layer);
+        for _layer in 0..model.n_layer {
+            let mut kb = Vec::with_capacity(n_units);
+            let mut vb = Vec::with_capacity(n_units);
+            for u in 0..n_units {
+                let unit = alloc.unit(u);
+                kb.push(alloc.alloc(unit, toks_per_unit * rows_per_k)?);
+                vb.push(alloc.alloc(unit, v_cols_per_unit as u32 * rows_per_vcol)?);
+            }
+            k_base.push(kb);
+            v_base.push(vb);
+        }
+
+        Ok(Self {
+            k_base,
+            v_base,
+            d_model: d,
+            max_seq,
+            n_units,
+            banks_per_channel: cfg.gddr6.banks_per_channel,
+            rows_per_k,
+            rows_per_vcol,
+            v_cols_per_unit,
+            row_elems,
+        })
+    }
+
+    /// Unit that stores token `t`'s Key vector (round-robin).
+    pub fn k_unit(&self, t: u64) -> usize {
+        (t % self.n_units as u64) as usize
+    }
+
+    /// (unit, row segment list) for writing token `t`'s Key vector.
+    pub fn k_write(&self, layer: usize, t: u64) -> (UnitId, Vec<RowSegment>) {
+        let u = self.k_unit(t);
+        let slot = (t / self.n_units as u64) as u32;
+        let base = self.k_base[layer][u] + slot * self.rows_per_k;
+        let mut segs = Vec::with_capacity(self.rows_per_k as usize);
+        let mut rem = self.d_model;
+        for r in 0..self.rows_per_k {
+            let elems = rem.min(self.row_elems) as u32;
+            segs.push(RowSegment { row: base + r, elems });
+            rem -= elems as u64;
+        }
+        (self.unit_id(u), segs)
+    }
+
+    /// Per-unit segment lists for the q@K^T read at context `ltoken`.
+    pub fn k_read_plan(&self, layer: usize, ltoken: u64) -> Vec<Vec<RowSegment>> {
+        let mut plans = vec![Vec::new(); self.n_units];
+        self.fill_k_read_plan(layer, ltoken, &mut plans);
+        plans
+    }
+
+    /// Allocation-free variant: refills `plans` (one entry per unit,
+    /// capacities retained) — the simulator hot path.
+    pub fn fill_k_read_plan(&self, layer: usize, ltoken: u64, plans: &mut [Vec<RowSegment>]) {
+        assert_eq!(plans.len(), self.n_units);
+        for (u, plan) in plans.iter_mut().enumerate() {
+            plan.clear();
+            // tokens u, u + n_units, ... < ltoken live in consecutive slots
+            let owned = if (u as u64) < ltoken {
+                ceil_div(ltoken - u as u64, self.n_units as u64)
+            } else {
+                0
+            };
+            let base = self.k_base[layer][u];
+            for slot in 0..owned {
+                let row0 = base + slot as u32 * self.rows_per_k;
+                let mut rem = self.d_model;
+                for r in 0..self.rows_per_k {
+                    let elems = rem.min(self.row_elems) as u32;
+                    plan.push(RowSegment { row: row0 + r, elems });
+                    rem -= elems as u64;
+                }
+            }
+        }
+    }
+
+    /// Tokens whose K vectors unit `u` stores at context `ltoken`.
+    pub fn k_owned(&self, u: usize, ltoken: u64) -> u32 {
+        if (u as u64) < ltoken {
+            ceil_div(ltoken - u as u64, self.n_units as u64) as u32
+        } else {
+            0
+        }
+    }
+
+    /// Row-fill pattern of one stored Key vector (e.g. d=1536 ->
+    /// [1024, 512]): `full` rows of `row_elems` plus an optional tail.
+    pub fn k_read_pattern(&self) -> ([u32; MAX_PATTERN], u8) {
+        fill_pattern(self.d_model, self.row_elems)
+    }
+
+    /// Row-fill pattern of one V column read at context `ltoken`.
+    /// When a column's reserved rows exceed the rows actually read
+    /// (ltoken <= row_elems but max_seq > row_elems) the physical rows
+    /// are strided; the cycle cost is identical (all distinct misses).
+    pub fn v_read_pattern(&self, ltoken: u64) -> ([u32; MAX_PATTERN], u8) {
+        fill_pattern(ltoken.max(1), self.row_elems)
+    }
+
+    /// Scores owned by unit `u` at context `ltoken` (one per stored
+    /// token, times heads — heads share the row, segmented accumulation).
+    pub fn k_out_elems(&self, u: usize, ltoken: u64, n_head: u64) -> u64 {
+        if (u as u64) < ltoken {
+            ceil_div(ltoken - u as u64, self.n_units as u64) * n_head
+        } else {
+            0
+        }
+    }
+
+    /// (base_row, n_rows) for writing token `t`'s Value elements into
+    /// unit `u`: one element per owned column, consecutive rows when the
+    /// column's row stride is 1 (max_seq <= row_elems), else strided.
+    pub fn v_write(&self, layer: usize, t: u64, u: usize) -> (u32, u32, u32) {
+        let base = self.v_base[layer][u] + (t / self.row_elems) as u32;
+        let n_cols = self.v_cols(u);
+        (base, n_cols, self.rows_per_vcol)
+    }
+
+    /// Columns of V actually owned by unit `u` (tail units may own fewer).
+    pub fn v_cols(&self, u: usize) -> u32 {
+        let lo = (u as u64 * self.v_cols_per_unit).min(self.d_model);
+        let hi = ((u as u64 + 1) * self.v_cols_per_unit).min(self.d_model);
+        (hi - lo) as u32
+    }
+
+    /// Per-unit segment lists for the scores@V read at context `ltoken`.
+    pub fn v_read_plan(&self, layer: usize, ltoken: u64) -> Vec<Vec<RowSegment>> {
+        let mut plans = vec![Vec::new(); self.n_units];
+        self.fill_v_read_plan(layer, ltoken, &mut plans);
+        plans
+    }
+
+    /// Allocation-free variant of `v_read_plan` (see `fill_k_read_plan`).
+    pub fn fill_v_read_plan(&self, layer: usize, ltoken: u64, plans: &mut [Vec<RowSegment>]) {
+        assert_eq!(plans.len(), self.n_units);
+        let rows_touched = ceil_div(ltoken, self.row_elems) as u32;
+        for (u, plan) in plans.iter_mut().enumerate() {
+            plan.clear();
+            let base = self.v_base[layer][u];
+            for c in 0..self.v_cols(u) {
+                let col_base = base + c * self.rows_per_vcol;
+                let mut rem = ltoken;
+                for r in 0..rows_touched {
+                    let elems = rem.min(self.row_elems) as u32;
+                    plan.push(RowSegment { row: col_base + r, elems });
+                    rem -= elems as u64;
+                }
+            }
+        }
+    }
+
+    fn unit_id(&self, u: usize) -> UnitId {
+        UnitId { channel: u / self.banks_per_channel, bank: u % self.banks_per_channel }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::gpt::by_name;
+    use crate::util::prop::check;
+
+    fn kv(model: &str) -> KvReservation {
+        let m = by_name(model).unwrap();
+        let cfg = HwConfig::paper_baseline();
+        let mut alloc = BankAllocator::new(&cfg);
+        KvReservation::build(&m, &cfg, &mut alloc).unwrap()
+    }
+
+    #[test]
+    fn k_write_spreads_round_robin() {
+        let kv = kv("gpt2-small");
+        let (u0, _) = kv.k_write(0, 0);
+        let (u1, _) = kv.k_write(0, 1);
+        let (u128, s128) = kv.k_write(0, 128);
+        assert_ne!(u0, u1);
+        assert_eq!(u0, u128); // wraps around 128 units
+        // second slot on the same unit is the next reserved row
+        let (_, s0) = kv.k_write(0, 0);
+        assert_eq!(s128[0].row, s0[0].row + kv.rows_per_k);
+    }
+
+    #[test]
+    fn k_write_one_row_when_d_fits() {
+        let kv = kv("gpt2-small"); // d=768 <= 1024
+        let (_, segs) = kv.k_write(0, 5);
+        assert_eq!(segs.len(), 1);
+        assert_eq!(segs[0].elems, 768);
+    }
+
+    #[test]
+    fn k_write_two_rows_for_wide_model() {
+        let kv = kv("gpt3-xl"); // d=2048 -> 2 rows
+        let (_, segs) = kv.k_write(3, 5);
+        assert_eq!(segs.len(), 2);
+        assert_eq!(segs[0].elems + segs[1].elems, 2048);
+    }
+
+    #[test]
+    fn k_read_covers_all_tokens() {
+        let kv = kv("gpt2-small");
+        for ltoken in [1u64, 7, 128, 129, 1000] {
+            let plans = kv.k_read_plan(0, ltoken);
+            let total: u64 = plans.iter().flatten().map(|s| s.elems as u64).sum();
+            assert_eq!(total, ltoken * 768, "ltoken={ltoken}");
+        }
+    }
+
+    #[test]
+    fn k_out_elems_total_is_heads_times_tokens() {
+        let kv = kv("gpt2-small");
+        for ltoken in [1u64, 100, 1024] {
+            let total: u64 = (0..kv.n_units).map(|u| kv.k_out_elems(u, ltoken, 12)).sum();
+            assert_eq!(total, 12 * ltoken);
+        }
+    }
+
+    #[test]
+    fn v_columns_cover_d_model() {
+        let kv = kv("gpt2-large"); // d=1280, 128 units -> 10 cols each
+        let total: u64 = (0..kv.n_units).map(|u| kv.v_cols(u) as u64).sum();
+        assert_eq!(total, 1280);
+    }
+
+    #[test]
+    fn v_read_covers_ltoken_per_column() {
+        let kv = kv("gpt3-small");
+        let plans = kv.v_read_plan(0, 300);
+        let total: u64 = plans.iter().flatten().map(|s| s.elems as u64).sum();
+        assert_eq!(total, 300 * 768);
+    }
+
+    #[test]
+    fn v_read_multi_row_columns_long_context() {
+        let kv = kv("gpt3-xl"); // max_seq=2048 -> 2 rows per column
+        assert_eq!(kv.rows_per_vcol, 2);
+        let plans = kv.v_read_plan(0, 2000);
+        // each owned column contributes 2 segments (1024 + 976)
+        let u0 = &plans[0];
+        assert_eq!(u0.len() as u64, kv.v_cols(0) as u64 * 2);
+    }
+
+    #[test]
+    fn regions_do_not_overlap_across_layers() {
+        let kv = kv("gpt2-small");
+        // layer 1's K base must start after layer 0's K+V regions
+        for u in 0..kv.n_units {
+            assert!(kv.k_base[1][u] > kv.k_base[0][u]);
+            assert!(kv.v_base[0][u] > kv.k_base[0][u]);
+        }
+    }
+
+    #[test]
+    fn prop_k_read_rows_within_reservation() {
+        check("k reads stay inside reserved region", 50, |rng| {
+            let kv = kv("gpt2-medium");
+            let ltoken = rng.gen_range(1024) + 1;
+            let plans = kv.k_read_plan(2, ltoken);
+            let toks_per_unit = ceil_div(kv.max_seq, kv.n_units as u64) as u32;
+            for (u, plan) in plans.iter().enumerate() {
+                let base = kv.k_base[2][u];
+                let end = base + toks_per_unit * kv.rows_per_k;
+                for s in plan {
+                    if s.row < base || s.row >= end {
+                        return Err(format!("unit {u} row {} outside [{base},{end})", s.row));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

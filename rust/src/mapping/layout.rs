@@ -1,0 +1,135 @@
+//! Bank-row allocator: tracks the next free row of every (channel, bank)
+//! unit and hands out contiguous row ranges. All placements are static —
+//! PIM-GPT maps the whole model once before serving (paper Fig. 3a).
+
+use crate::config::HwConfig;
+
+/// Identifies one MAC unit = one (channel, bank) pair.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct UnitId {
+    pub channel: usize,
+    pub bank: usize,
+}
+
+/// Row allocator over all units.
+#[derive(Clone, Debug)]
+pub struct BankAllocator {
+    next_row: Vec<u32>,
+    rows_per_bank: u32,
+    channels: usize,
+    banks: usize,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[error("bank capacity exceeded on ch{channel} bank{bank}: need {need} rows, {free} free")]
+pub struct CapacityError {
+    pub channel: usize,
+    pub bank: usize,
+    pub need: u32,
+    pub free: u32,
+}
+
+impl BankAllocator {
+    pub fn new(cfg: &HwConfig) -> Self {
+        let channels = cfg.gddr6.channels;
+        let banks = cfg.gddr6.banks_per_channel;
+        Self {
+            next_row: vec![0; channels * banks],
+            rows_per_bank: cfg.gddr6.rows_per_bank() as u32,
+            channels,
+            banks,
+        }
+    }
+
+    pub fn n_units(&self) -> usize {
+        self.channels * self.banks
+    }
+
+    /// Linear unit index -> (channel, bank). Units are numbered
+    /// channel-major so consecutive units land on *different banks of the
+    /// same channel* first, matching Fig. 6b's distribution.
+    pub fn unit(&self, idx: usize) -> UnitId {
+        UnitId { channel: idx / self.banks, bank: idx % self.banks }
+    }
+
+    fn slot(&self, u: UnitId) -> usize {
+        u.channel * self.banks + u.bank
+    }
+
+    /// Allocate `rows` consecutive rows on `u`; returns the base row.
+    pub fn alloc(&mut self, u: UnitId, rows: u32) -> Result<u32, CapacityError> {
+        let slot = self.slot(u);
+        let base = self.next_row[slot];
+        let free = self.rows_per_bank - base;
+        if rows > free {
+            return Err(CapacityError { channel: u.channel, bank: u.bank, need: rows, free });
+        }
+        self.next_row[slot] += rows;
+        Ok(base)
+    }
+
+    /// Rows already allocated on `u`.
+    pub fn used(&self, u: UnitId) -> u32 {
+        self.next_row[self.slot(u)]
+    }
+
+    /// Peak fill fraction over all units.
+    pub fn max_fill(&self) -> f64 {
+        let max = self.next_row.iter().copied().max().unwrap_or(0);
+        max as f64 / self.rows_per_bank as f64
+    }
+
+    /// Difference between the most- and least-filled unit, in rows —
+    /// the balance metric the even distribution optimizes.
+    pub fn imbalance_rows(&self) -> u32 {
+        let max = self.next_row.iter().copied().max().unwrap_or(0);
+        let min = self.next_row.iter().copied().min().unwrap_or(0);
+        max - min
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn alloc() -> BankAllocator {
+        BankAllocator::new(&HwConfig::paper_baseline())
+    }
+
+    #[test]
+    fn unit_numbering_is_channel_major() {
+        let a = alloc();
+        assert_eq!(a.unit(0), UnitId { channel: 0, bank: 0 });
+        assert_eq!(a.unit(15), UnitId { channel: 0, bank: 15 });
+        assert_eq!(a.unit(16), UnitId { channel: 1, bank: 0 });
+        assert_eq!(a.n_units(), 128);
+    }
+
+    #[test]
+    fn sequential_allocation() {
+        let mut a = alloc();
+        let u = UnitId { channel: 2, bank: 3 };
+        assert_eq!(a.alloc(u, 10).unwrap(), 0);
+        assert_eq!(a.alloc(u, 5).unwrap(), 10);
+        assert_eq!(a.used(u), 15);
+        // other units untouched
+        assert_eq!(a.used(UnitId { channel: 2, bank: 4 }), 0);
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let mut a = alloc();
+        let u = UnitId { channel: 0, bank: 0 };
+        a.alloc(u, 16384).unwrap();
+        let err = a.alloc(u, 1).unwrap_err();
+        assert_eq!(err.free, 0);
+    }
+
+    #[test]
+    fn imbalance_metric() {
+        let mut a = alloc();
+        assert_eq!(a.imbalance_rows(), 0);
+        a.alloc(UnitId { channel: 0, bank: 0 }, 7).unwrap();
+        assert_eq!(a.imbalance_rows(), 7);
+    }
+}

@@ -1,0 +1,11 @@
+//! Model mapping (paper Algorithm 3, §IV): weight placement with
+//! multi-head concatenation and even channel/bank distribution, plus
+//! KV-cache region reservation (K row-major, V column-major).
+
+pub mod kv_reserve;
+pub mod layout;
+pub mod weight_map;
+
+pub use kv_reserve::KvReservation;
+pub use layout::BankAllocator;
+pub use weight_map::{MatrixPlacement, ModelMapping};

@@ -1,0 +1,212 @@
+//! Weight mapping (paper Algorithm 3 lines 1-7, Fig. 6).
+//!
+//! For every VMM block the attention heads are already concatenated along
+//! the column direction (`maxRowHit` — Fig. 6a: e.g. GPT2-XL heads of 64
+//! columns fill the 1024-element rows), then the concatenated matrix is
+//! split *evenly across all channels and banks* by output columns
+//! (`maxParallel` — Fig. 6b). Each unit's chunk is stored row-major in
+//! consecutive DRAM rows, so a VMM sweeps fully-packed rows: one ACT per
+//! row, 64 hit accesses per ACT.
+//!
+//! The per-unit column count mirrors `python/compile/kernels/pim_vmm.py::
+//! bank_partition` — the Pallas kernel and the simulator must slice
+//! matrices identically (cross-checked in unit tests on both sides).
+
+use std::collections::BTreeMap;
+
+use super::layout::{BankAllocator, CapacityError};
+use crate::config::HwConfig;
+use crate::dram::bank::RowBlock;
+use crate::model::{DecodeGraph, GptModel, MatrixId};
+use crate::util::pad_to;
+
+/// Columns per unit of the padded even partition (mirror of the Pallas
+/// `bank_partition` — keep in sync).
+pub fn columns_per_unit(d_out: u64, n_units: u64) -> u64 {
+    pad_to(d_out, n_units) / n_units
+}
+
+/// Placement of one matrix across all units.
+#[derive(Clone, Debug)]
+pub struct MatrixPlacement {
+    /// Row block per unit (index = linear unit id). Units beyond the
+    /// matrix's column count hold nothing.
+    pub per_unit: Vec<RowBlock>,
+    /// Output columns owned by each unit.
+    pub out_cols: Vec<u64>,
+    pub d_in: u64,
+    pub d_out: u64,
+}
+
+impl MatrixPlacement {
+    /// Total elements stored (== d_in * d_out).
+    pub fn total_elems(&self, row_elems: u32) -> u64 {
+        self.per_unit.iter().map(|b| b.total_elems(row_elems)).sum()
+    }
+}
+
+/// Full model mapping: every weight matrix placed, KV regions reserved.
+#[derive(Clone, Debug)]
+pub struct ModelMapping {
+    pub matrices: BTreeMap<MatrixId, MatrixPlacement>,
+    pub kv: super::KvReservation,
+    pub n_channels: usize,
+    pub banks_per_channel: usize,
+    /// Peak bank fill fraction after mapping.
+    pub fill: f64,
+    /// Row imbalance across units after mapping (rows).
+    pub imbalance_rows: u32,
+}
+
+impl ModelMapping {
+    /// Map `model` onto the PIM system (Algorithm 3).
+    pub fn build(model: &GptModel, cfg: &HwConfig) -> Result<Self, CapacityError> {
+        let mut alloc = BankAllocator::new(cfg);
+        let row_elems = cfg.gddr6.row_elems();
+        let n_units = alloc.n_units() as u64;
+
+        // Reserve KV regions first (Algorithm 3 lines 8-14): their layout
+        // is position-indexed, so a stable base address is required.
+        let kv = super::KvReservation::build(model, cfg, &mut alloc)?;
+
+        // Map weights (lines 1-7).
+        let mut matrices = BTreeMap::new();
+        for (id, d_in, d_out) in DecodeGraph::weight_matrices(model) {
+            let cols_pu = columns_per_unit(d_out, n_units);
+            let mut per_unit = Vec::with_capacity(n_units as usize);
+            let mut out_cols = Vec::with_capacity(n_units as usize);
+            for u in 0..n_units {
+                let col_lo = (u * cols_pu).min(d_out);
+                let col_hi = ((u + 1) * cols_pu).min(d_out);
+                let cols = col_hi - col_lo;
+                let elems = d_in * cols;
+                let full_rows = (elems / row_elems) as u32;
+                let tail_elems = (elems % row_elems) as u32;
+                let rows = full_rows + (tail_elems > 0) as u32;
+                let base_row = if rows > 0 { alloc.alloc(alloc.unit(u as usize), rows)? } else { 0 };
+                per_unit.push(RowBlock { base_row, full_rows, tail_elems });
+                out_cols.push(cols);
+            }
+            matrices.insert(id, MatrixPlacement { per_unit, out_cols, d_in, d_out });
+        }
+
+        Ok(Self {
+            matrices,
+            kv,
+            n_channels: cfg.gddr6.channels,
+            banks_per_channel: cfg.gddr6.banks_per_channel,
+            fill: alloc.max_fill(),
+            imbalance_rows: alloc.imbalance_rows(),
+        })
+    }
+
+    /// Linear unit index range of one channel.
+    pub fn channel_units(&self, channel: usize) -> std::ops::Range<usize> {
+        let b = self.banks_per_channel;
+        channel * b..(channel + 1) * b
+    }
+
+    /// Output elements a channel produces for `matrix` (drain size).
+    pub fn channel_out_elems(&self, matrix: &MatrixId, channel: usize) -> u64 {
+        let p = &self.matrices[matrix];
+        self.channel_units(channel).map(|u| p.out_cols[u]).sum()
+    }
+
+    /// Bound on rows a weight VMM touches in one unit (load-balance
+    /// metric; the even split keeps the spread <= 1 row + tail effects).
+    pub fn rows_per_unit(&self, matrix: &MatrixId) -> (u32, u32) {
+        let p = &self.matrices[matrix];
+        let rows: Vec<u32> = p.per_unit.iter().map(|b| b.total_rows()).collect();
+        (*rows.iter().min().unwrap(), *rows.iter().max().unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::gpt::by_name;
+    use crate::model::MatrixKind;
+    use crate::util::prop::check;
+
+    fn map(model: &str) -> ModelMapping {
+        let m = by_name(model).unwrap();
+        ModelMapping::build(&m, &HwConfig::paper_baseline()).unwrap()
+    }
+
+    #[test]
+    fn columns_per_unit_matches_pallas() {
+        // Mirror of python test_kernel.py::test_bank_partition_matches_rust_mapper
+        assert_eq!(columns_per_unit(2304, 128), 18);
+        assert_eq!(columns_per_unit(768, 128), 6);
+        assert_eq!(columns_per_unit(50257, 128), 393);
+        assert_eq!(columns_per_unit(1, 128), 1);
+        assert_eq!(columns_per_unit(129, 128), 2);
+        assert_eq!(columns_per_unit(512, 8), 64);
+    }
+
+    #[test]
+    fn every_weight_element_stored_exactly_once() {
+        let mm = map("gpt2-small");
+        let m = by_name("gpt2-small").unwrap();
+        for (id, d_in, d_out) in DecodeGraph::weight_matrices(&m) {
+            let p = &mm.matrices[&id];
+            assert_eq!(p.total_elems(1024), d_in * d_out, "{id:?}");
+            let cols: u64 = p.out_cols.iter().sum();
+            assert_eq!(cols, d_out, "{id:?}");
+        }
+    }
+
+    #[test]
+    fn distribution_is_balanced() {
+        // Even split: every unit except possibly the last (padding
+        // remainder, same as the Pallas kernel) holds the same number of
+        // rows, and the last never holds more.
+        let mm = map("gpt2-medium");
+        for (id, p) in &mm.matrices {
+            let rows: Vec<u32> = p.per_unit.iter().map(|b| b.total_rows()).collect();
+            let max = *rows.iter().max().unwrap();
+            let uneven = rows[..rows.len() - 1].iter().filter(|&&r| max - r > 1).count();
+            assert_eq!(uneven, 0, "{id:?}: {rows:?}");
+            assert!(*rows.last().unwrap() <= max, "{id:?}");
+        }
+    }
+
+    #[test]
+    fn all_paper_models_fit() {
+        for m in &crate::model::PAPER_MODELS {
+            let mm = ModelMapping::build(m, &HwConfig::paper_baseline()).unwrap();
+            assert!(mm.fill <= 1.0, "{}: fill {}", m.name, mm.fill);
+        }
+    }
+
+    #[test]
+    fn largest_model_fill_high_but_fits() {
+        let mm = map("gpt2-xl"); // 1.56B params * 2B = 3.1 GB of 4 GiB
+        assert!(mm.fill > 0.7, "fill {}", mm.fill);
+        assert!(mm.fill <= 1.0);
+    }
+
+    #[test]
+    fn channel_out_elems_sum_to_d_out() {
+        let mm = map("gpt2-small");
+        let id = MatrixId::new(0, MatrixKind::Wqkv);
+        let total: u64 = (0..8).map(|c| mm.channel_out_elems(&id, c)).sum();
+        assert_eq!(total, 3 * 768);
+    }
+
+    #[test]
+    fn prop_partition_covers_all_columns() {
+        check("even partition covers matrix", 300, |rng| {
+            let d_out = rng.gen_range(100_000) + 1;
+            let n_units = rng.gen_range(511) + 1;
+            let cols = columns_per_unit(d_out, n_units);
+            let mut total = 0u64;
+            for u in 0..n_units {
+                let lo = (u * cols).min(d_out);
+                let hi = ((u + 1) * cols).min(d_out);
+                total += hi - lo;
+            }
+            if total == d_out { Ok(()) } else { Err(format!("{total} != {d_out}")) }
+        });
+    }
+}

@@ -1,0 +1,141 @@
+//! The GPT model zoo: the 8 models of the paper's evaluation (4x GPT-2,
+//! 4x GPT-3, up to 1.4B parameters) plus the tiny functional configs that
+//! ship as executable artifacts. Mirrors `python/compile/configs.py`.
+
+/// A decoder-only transformer configuration.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct GptModel {
+    pub name: &'static str,
+    pub n_layer: usize,
+    pub d_model: usize,
+    pub n_head: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+}
+
+impl GptModel {
+    pub const fn new(
+        name: &'static str,
+        n_layer: usize,
+        d_model: usize,
+        n_head: usize,
+        vocab: usize,
+        max_seq: usize,
+    ) -> Self {
+        Self { name, n_layer, d_model, n_head, vocab, max_seq }
+    }
+
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_head
+    }
+
+    pub fn d_ff(&self) -> usize {
+        4 * self.d_model
+    }
+
+    /// Parameter count (weights + biases + layernorms + embeddings) —
+    /// cross-checked against published sizes in python `test_model.py`.
+    pub fn n_params(&self) -> u64 {
+        let d = self.d_model as u64;
+        let ff = self.d_ff() as u64;
+        let per_layer = d * 3 * d + 3 * d    // qkv
+            + d * d + d                      // attn proj
+            + d * ff + ff                    // fc1
+            + ff * d + d                     // fc2
+            + 4 * d;                         // 2x layernorm
+        self.n_layer as u64 * per_layer
+            + (self.vocab as u64 + self.max_seq as u64) * d
+            + 2 * d
+    }
+
+    /// MAC-dominated op count for decoding one token at context length
+    /// `seq_len` (mul+add = 2 ops), incl. the LM head. Mirrors python.
+    pub fn flops_per_token(&self, seq_len: u64) -> u64 {
+        let d = self.d_model as u64;
+        let ff = self.d_ff() as u64;
+        let per_layer = 2 * (d * 3 * d + d * seq_len + seq_len * d + d * d + d * ff + ff * d);
+        self.n_layer as u64 * per_layer + 2 * d * self.vocab as u64
+    }
+
+    /// Weight bytes in bf16 (what the PIM banks must store).
+    pub fn weight_bytes(&self) -> u64 {
+        self.n_params() * 2
+    }
+
+    /// KV-cache bytes in bf16 at full context.
+    pub fn kv_bytes(&self) -> u64 {
+        2 * (self.n_layer * self.max_seq * self.d_model) as u64 * 2
+    }
+}
+
+/// The 8 models of the paper's Fig. 8/9 evaluation.
+pub const PAPER_MODELS: [GptModel; 8] = [
+    GptModel::new("gpt2-small", 12, 768, 12, 50257, 1024),
+    GptModel::new("gpt2-medium", 24, 1024, 16, 50257, 1024),
+    GptModel::new("gpt2-large", 36, 1280, 20, 50257, 1024),
+    GptModel::new("gpt2-xl", 48, 1600, 25, 50257, 1024),
+    GptModel::new("gpt3-small", 12, 768, 12, 50257, 2048),
+    GptModel::new("gpt3-medium", 24, 1024, 16, 50257, 2048),
+    GptModel::new("gpt3-large", 24, 1536, 16, 50257, 2048),
+    GptModel::new("gpt3-xl", 24, 2048, 24, 50257, 2048),
+];
+
+/// Look up a paper model or a functional artifact config by name.
+pub fn by_name(name: &str) -> Option<GptModel> {
+    PAPER_MODELS.iter().find(|m| m.name == name).cloned().or(match name {
+        "gpt-nano" => Some(GptModel::new("gpt-nano", 2, 128, 4, 512, 128)),
+        "gpt-mini" => Some(GptModel::new("gpt-mini", 4, 256, 8, 2048, 256)),
+        _ => None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_match_published() {
+        let published: &[(&str, f64)] = &[
+            ("gpt2-small", 124e6),
+            ("gpt2-medium", 355e6),
+            ("gpt2-large", 774e6),
+            ("gpt2-xl", 1558e6),
+            ("gpt3-small", 125e6),
+            ("gpt3-medium", 350e6),
+            ("gpt3-large", 760e6),
+            ("gpt3-xl", 1320e6),
+        ];
+        for (name, want) in published {
+            let got = by_name(name).unwrap().n_params() as f64;
+            let rel = (got - want).abs() / want;
+            assert!(rel < 0.06, "{name}: {got} vs {want} ({rel})");
+        }
+    }
+
+    #[test]
+    fn fig1_ops_per_param_ratio() {
+        // Fig. 1b: GPT ops/parameter ~ 2, the memory-bound motivation.
+        for m in &PAPER_MODELS {
+            let ratio = m.flops_per_token(1024) as f64 / m.n_params() as f64;
+            assert!((1.5..3.0).contains(&ratio), "{}: {ratio}", m.name);
+        }
+    }
+
+    #[test]
+    fn all_models_fit_in_pim_capacity() {
+        // 8 channels x 4 Gb = 4 GiB. Weights + full KV must fit (the
+        // paper stores everything in the PIM banks).
+        let capacity = 8u64 * (4 << 30) / 8;
+        for m in &PAPER_MODELS {
+            let need = m.weight_bytes() + m.kv_bytes();
+            assert!(need < capacity, "{}: {need} > {capacity}", m.name);
+        }
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(by_name("gpt3-xl").unwrap().d_model, 2048);
+        assert_eq!(by_name("gpt-nano").unwrap().n_layer, 2);
+        assert!(by_name("nonexistent").is_none());
+    }
+}

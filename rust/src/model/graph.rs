@@ -1,0 +1,287 @@
+//! Per-token decode computation graph.
+//!
+//! One token's pass through the model is a small DAG of VMMs (PIM), ASIC
+//! ops and KV write-backs. The compiler lowers it to an instruction
+//! stream (paper Fig. 3b); the graph also drives the mapping stage
+//! (Algorithm 3 walks `vmmBlock`s and `write_k/v` blocks).
+//!
+//! Dependency structure within one layer:
+//!
+//! ```text
+//! LN1 -> VMM(qkv)+bias -> { WriteK, WriteV, VMM(scores) }
+//! VMM(scores) needs WriteK;  scale+softmax -> VMM(attn x V) needs WriteV
+//! -> VMM(proj)+bias -> residual -> LN2 -> VMM(fc1)+bias -> GELU
+//! -> VMM(fc2)+bias -> residual
+//! ```
+
+use crate::asic::AsicOp;
+use super::gpt::GptModel;
+
+/// Which stored matrix a VMM reads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum MatrixKind {
+    /// Fused W_Q|W_K|W_V (d x 3d), head-concatenated (Fig. 6a).
+    Wqkv,
+    /// Attention output projection (d x d).
+    Wo,
+    /// FFN up projection (d x 4d).
+    W1,
+    /// FFN down projection (4d x d).
+    W2,
+    /// Tied embedding / LM head (d x vocab).
+    Wte,
+    /// The Key cache region of a layer (read by q @ K^T).
+    KCache,
+    /// The Value cache region of a layer (read by scores @ V).
+    VCache,
+}
+
+/// Identifies one stored matrix (layer-local except Wte).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct MatrixId {
+    pub layer: usize,
+    pub kind: MatrixKind,
+}
+
+impl MatrixId {
+    pub fn new(layer: usize, kind: MatrixKind) -> Self {
+        Self { layer, kind }
+    }
+}
+
+/// Latency-class of a VMM, for the Fig. 10 breakdown.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum VmmClass {
+    Qkv,
+    Score,
+    AttnV,
+    Proj,
+    Fc1,
+    Fc2,
+    LmHead,
+}
+
+/// A node in the decode graph.
+#[derive(Clone, Debug, PartialEq)]
+pub enum GraphOp {
+    /// VMM on the PIM chips.
+    Vmm {
+        matrix: MatrixId,
+        class: VmmClass,
+        /// Input vector elements broadcast to the channels.
+        in_elems: u64,
+        /// Output vector elements gathered back.
+        out_elems: u64,
+    },
+    /// Non-VMM computation on the ASIC.
+    Asic(AsicOp),
+    /// Write the concatenated Key vector (row-major) for this token.
+    WriteK { layer: usize, elems: u64 },
+    /// Write the Value vector (column-major) for this token.
+    WriteV { layer: usize, elems: u64 },
+}
+
+/// A graph node with explicit dependencies (indices into `ops`).
+#[derive(Clone, Debug)]
+pub struct GraphNode {
+    pub op: GraphOp,
+    pub deps: Vec<usize>,
+}
+
+/// The decode-step DAG for one token at context length `ltoken`.
+#[derive(Clone, Debug)]
+pub struct DecodeGraph {
+    pub nodes: Vec<GraphNode>,
+    pub ltoken: u64,
+}
+
+impl DecodeGraph {
+    /// Build the graph for generating the token at position `pos`
+    /// (0-based; the VMMs then attend over `ltoken = pos + 1` tokens).
+    pub fn build(m: &GptModel, pos: u64) -> Self {
+        let ltoken = pos + 1;
+        let d = m.d_model as u64;
+        let ff = m.d_ff() as u64;
+        let h = m.n_head as u64;
+        let v = m.vocab as u64;
+        let mut nodes: Vec<GraphNode> = Vec::with_capacity(m.n_layer * 14 + 3);
+        let mut push = |op: GraphOp, deps: Vec<usize>| -> usize {
+            nodes.push(GraphNode { op, deps });
+            nodes.len() - 1
+        };
+
+        // Embedding lookup is a DRAM row read + add; negligible and
+        // modeled as a residual-add-sized ASIC op.
+        let mut prev = push(GraphOp::Asic(AsicOp::ResidualAdd { n: d }), vec![]);
+
+        for l in 0..m.n_layer {
+            let ln1 = push(GraphOp::Asic(AsicOp::LayerNorm { n: d }), vec![prev]);
+            let qkv = push(
+                GraphOp::Vmm {
+                    matrix: MatrixId::new(l, MatrixKind::Wqkv),
+                    class: VmmClass::Qkv,
+                    in_elems: d,
+                    out_elems: 3 * d,
+                },
+                vec![ln1],
+            );
+            let bias = push(GraphOp::Asic(AsicOp::BiasAdd { n: 3 * d }), vec![qkv]);
+            let wk = push(GraphOp::WriteK { layer: l, elems: d }, vec![bias]);
+            let wv = push(GraphOp::WriteV { layer: l, elems: d }, vec![bias]);
+            // q @ K^T over all heads: reads the K cache (ltoken rows of d).
+            let score = push(
+                GraphOp::Vmm {
+                    matrix: MatrixId::new(l, MatrixKind::KCache),
+                    class: VmmClass::Score,
+                    in_elems: d,
+                    out_elems: h * ltoken,
+                },
+                vec![bias, wk],
+            );
+            let scale = push(GraphOp::Asic(AsicOp::Scale { n: h * ltoken }), vec![score]);
+            let softmax = push(GraphOp::Asic(AsicOp::Softmax { n: h * ltoken, groups: h }), vec![scale]);
+            // scores @ V: reads the V cache (d columns of ltoken).
+            let av = push(
+                GraphOp::Vmm {
+                    matrix: MatrixId::new(l, MatrixKind::VCache),
+                    class: VmmClass::AttnV,
+                    in_elems: h * ltoken,
+                    out_elems: d,
+                },
+                vec![softmax, wv],
+            );
+            let concat = push(GraphOp::Asic(AsicOp::Concat { n: d }), vec![av]);
+            let proj = push(
+                GraphOp::Vmm {
+                    matrix: MatrixId::new(l, MatrixKind::Wo),
+                    class: VmmClass::Proj,
+                    in_elems: d,
+                    out_elems: d,
+                },
+                vec![concat],
+            );
+            let bias2 = push(GraphOp::Asic(AsicOp::BiasAdd { n: d }), vec![proj]);
+            let res1 = push(GraphOp::Asic(AsicOp::ResidualAdd { n: d }), vec![bias2, prev]);
+            let ln2 = push(GraphOp::Asic(AsicOp::LayerNorm { n: d }), vec![res1]);
+            let fc1 = push(
+                GraphOp::Vmm {
+                    matrix: MatrixId::new(l, MatrixKind::W1),
+                    class: VmmClass::Fc1,
+                    in_elems: d,
+                    out_elems: ff,
+                },
+                vec![ln2],
+            );
+            let bias3 = push(GraphOp::Asic(AsicOp::BiasAdd { n: ff }), vec![fc1]);
+            let gelu = push(GraphOp::Asic(AsicOp::Gelu { n: ff }), vec![bias3]);
+            let fc2 = push(
+                GraphOp::Vmm {
+                    matrix: MatrixId::new(l, MatrixKind::W2),
+                    class: VmmClass::Fc2,
+                    in_elems: ff,
+                    out_elems: d,
+                },
+                vec![gelu],
+            );
+            let bias4 = push(GraphOp::Asic(AsicOp::BiasAdd { n: d }), vec![fc2]);
+            prev = push(GraphOp::Asic(AsicOp::ResidualAdd { n: d }), vec![bias4, res1]);
+        }
+
+        let lnf = push(GraphOp::Asic(AsicOp::LayerNorm { n: d }), vec![prev]);
+        push(
+            GraphOp::Vmm {
+                matrix: MatrixId::new(0, MatrixKind::Wte),
+                class: VmmClass::LmHead,
+                in_elems: d,
+                out_elems: v,
+            },
+            vec![lnf],
+        );
+
+        Self { nodes, ltoken }
+    }
+
+    /// All weight matrices the mapper must place for this model.
+    pub fn weight_matrices(m: &GptModel) -> Vec<(MatrixId, u64, u64)> {
+        let d = m.d_model as u64;
+        let ff = m.d_ff() as u64;
+        let mut out = Vec::new();
+        for l in 0..m.n_layer {
+            out.push((MatrixId::new(l, MatrixKind::Wqkv), d, 3 * d));
+            out.push((MatrixId::new(l, MatrixKind::Wo), d, d));
+            out.push((MatrixId::new(l, MatrixKind::W1), d, ff));
+            out.push((MatrixId::new(l, MatrixKind::W2), ff, d));
+        }
+        out.push((MatrixId::new(0, MatrixKind::Wte), d, m.vocab as u64));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::gpt::by_name;
+
+    #[test]
+    fn graph_shape() {
+        let m = by_name("gpt3-small").unwrap();
+        let g = DecodeGraph::build(&m, 0);
+        // 1 embed + 20/layer + LNf + LM head
+        assert_eq!(g.nodes.len(), 1 + 20 * 12 + 2);
+        assert_eq!(g.ltoken, 1);
+    }
+
+    #[test]
+    fn deps_are_acyclic_and_backward() {
+        let m = by_name("gpt2-small").unwrap();
+        let g = DecodeGraph::build(&m, 100);
+        for (i, n) in g.nodes.iter().enumerate() {
+            for &d in &n.deps {
+                assert!(d < i, "node {i} depends on later node {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn vmm_count_per_layer() {
+        let m = by_name("gpt2-small").unwrap();
+        let g = DecodeGraph::build(&m, 7);
+        let vmms = g.nodes.iter().filter(|n| matches!(n.op, GraphOp::Vmm { .. })).count();
+        // 6 per layer (qkv, score, av, proj, fc1, fc2) + lm head
+        assert_eq!(vmms, 6 * 12 + 1);
+    }
+
+    #[test]
+    fn score_av_scale_with_ltoken() {
+        let m = by_name("gpt2-small").unwrap();
+        let g = DecodeGraph::build(&m, 511);
+        let h = m.n_head as u64;
+        let found = g.nodes.iter().any(|n| matches!(
+            n.op,
+            GraphOp::Vmm { class: VmmClass::Score, out_elems, .. } if out_elems == h * 512
+        ));
+        assert!(found);
+    }
+
+    #[test]
+    fn score_depends_on_write_k() {
+        let m = by_name("gpt-nano").unwrap();
+        let g = DecodeGraph::build(&m, 3);
+        for (i, n) in g.nodes.iter().enumerate() {
+            if let GraphOp::Vmm { class: VmmClass::Score, .. } = n.op {
+                let has_wk_dep = n.deps.iter().any(|&d| matches!(g.nodes[d].op, GraphOp::WriteK { .. }));
+                assert!(has_wk_dep, "score node {i} missing WriteK dep");
+            }
+        }
+    }
+
+    #[test]
+    fn weight_matrix_inventory() {
+        let m = by_name("gpt2-medium").unwrap();
+        let ws = DecodeGraph::weight_matrices(&m);
+        assert_eq!(ws.len(), 4 * 24 + 1);
+        let total: u64 = ws.iter().map(|(_, r, c)| r * c).sum();
+        // weight-matrix elements dominate params (no biases/LN here)
+        assert!((total as f64) > 0.95 * m.n_params() as f64 - (m.vocab * m.d_model) as f64);
+    }
+}

@@ -1,0 +1,7 @@
+//! GPT model descriptions and the per-token computation graph.
+
+pub mod gpt;
+pub mod graph;
+
+pub use gpt::{GptModel, PAPER_MODELS};
+pub use graph::{DecodeGraph, GraphOp, MatrixId, MatrixKind, VmmClass};

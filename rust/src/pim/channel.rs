@@ -1,0 +1,364 @@
+//! One GDDR6-PIM channel: a 2 KB global buffer shared by 16 banks, each
+//! with a 16-lane MAC unit (Fig. 4a).
+//!
+//! Timeline of a channel-level VMM (paper §IV.A):
+//!
+//! 1. the ASIC broadcasts the input vector into the GB over the GDDR6
+//!    interface (`gb_load` cycles; input longer than the GB is split by
+//!    the compiler into multiple VMM instructions + ASIC partial-sums);
+//! 2. all banks MAC their mapped work in parallel, consuming open rows
+//!    at `lanes` values per cycle;
+//! 3. partial outputs are forwarded to the ASIC as they become ready
+//!    (never written back to DRAM — §IV.A(1)); the drain is pipelined
+//!    with the MAC, so only the *tail* that outlives the slowest bank
+//!    adds latency.
+//!
+//! Refresh: the channel issues an all-bank refresh every `tREFI`; a VMM
+//! overlapping a refresh deadline stalls for `tRFC` (modeled per bank).
+
+use crate::config::HwConfig;
+use crate::dram::bank::RowBlock;
+use crate::dram::{Bank, BankStats, CommandCounts, RowSegment, TimingCycles};
+
+/// Work assigned to one bank by a VMM instruction.
+#[derive(Clone, Debug)]
+pub enum UnitWork {
+    /// Nothing mapped to this bank.
+    Idle,
+    /// A weight block: consecutive fully-mapped rows (Fig. 6b layout).
+    Block(RowBlock),
+    /// Explicit segments (irregular shapes; kept for tests/ablations).
+    Segments(Vec<RowSegment>),
+    /// `reps` repetitions of a row-fill `pattern` from `base_row` — the
+    /// KV-cache read fast path (O(1) in context length).
+    Pattern {
+        base_row: u32,
+        reps: u32,
+        pattern: [u32; crate::mapping::kv_reserve::MAX_PATTERN],
+        pattern_len: u8,
+    },
+}
+
+impl UnitWork {
+    pub fn is_idle(&self) -> bool {
+        matches!(self, UnitWork::Idle)
+            || matches!(self, UnitWork::Segments(s) if s.is_empty())
+            || matches!(self, UnitWork::Block(b) if b.total_rows() == 0)
+            || matches!(self, UnitWork::Pattern { reps, pattern_len, .. }
+                        if *reps == 0 || *pattern_len == 0)
+    }
+
+    fn first_row(&self) -> Option<u32> {
+        match self {
+            UnitWork::Idle => None,
+            UnitWork::Block(b) => (b.total_rows() > 0).then_some(b.base_row),
+            UnitWork::Segments(s) => s.first().map(|seg| seg.row),
+            UnitWork::Pattern { base_row, reps, pattern_len, .. } => {
+                (*reps > 0 && *pattern_len > 0).then_some(*base_row)
+            }
+        }
+    }
+}
+
+/// Per-bank work of one channel-level VMM instruction.
+#[derive(Clone, Debug)]
+pub struct VmmPlan {
+    /// Work per bank (index = bank id).
+    pub bank_work: Vec<UnitWork>,
+    /// Input vector elements to broadcast into the GB.
+    pub input_elems: u64,
+    /// Output elements this channel produces (drained to the ASIC).
+    pub output_elems: u64,
+}
+
+/// Result of executing one instruction on a channel.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChannelExec {
+    /// Cycle the channel finished (all banks done + drain tail).
+    pub finish: u64,
+    /// Cycle the first partial result reached the ASIC (drain start) —
+    /// downstream streamable ASIC ops may begin here (paper §IV.A(3)).
+    pub first_ready: u64,
+    /// Interface cycles spent on the GB broadcast.
+    pub gb_load_cycles: u64,
+    /// Interface cycles spent draining results.
+    pub drain_cycles: u64,
+}
+
+/// A PIM channel: banks + refresh bookkeeping.
+#[derive(Clone, Debug)]
+pub struct Channel {
+    pub banks: Vec<Bank>,
+    /// Next refresh deadline (cycle).
+    next_refresh: u64,
+    /// Interface busy-until (GB loads and drains serialize on the bus).
+    bus_busy_until: u64,
+    /// Bytes written into the channel (GB loads + KV write-backs).
+    pub bytes_in: u64,
+    /// Bytes drained out of the channel (VMM results).
+    pub bytes_out: u64,
+}
+
+impl Channel {
+    pub fn new(cfg: &HwConfig) -> Self {
+        let t = TimingCycles::from_config(cfg);
+        Self {
+            banks: (0..cfg.gddr6.banks_per_channel).map(|_| Bank::new()).collect(),
+            next_refresh: t.trefi,
+            bus_busy_until: 0,
+            bytes_in: 0,
+            bytes_out: 0,
+        }
+    }
+
+    /// Apply any refresh deadlines passed by `now`.
+    pub fn catch_up_refresh(&mut self, now: u64, t: &TimingCycles) {
+        while now >= self.next_refresh {
+            let at = self.next_refresh;
+            for b in &mut self.banks {
+                b.refresh(at, t);
+            }
+            self.next_refresh += t.trefi;
+        }
+    }
+
+    /// Interface cycles to move `bytes` over this channel's pins.
+    fn xfer_cycles(cfg: &HwConfig, bytes: u64) -> u64 {
+        let per_cycle = cfg.gddr6.channel_bytes_per_cycle();
+        (bytes as f64 / per_cycle).ceil() as u64
+    }
+
+    /// Execute a VMM instruction starting no earlier than `start`.
+    pub fn execute_vmm(
+        &mut self,
+        cfg: &HwConfig,
+        t: &TimingCycles,
+        start: u64,
+        plan: &VmmPlan,
+    ) -> ChannelExec {
+        assert_eq!(plan.bank_work.len(), self.banks.len(), "plan/bank arity");
+        self.catch_up_refresh(start, t);
+
+        // 1. GB broadcast over the interface (serializes on the bus).
+        let in_bytes = plan.input_elems * 2;
+        let gb_load = Self::xfer_cycles(cfg, in_bytes);
+        let bus_free = self.bus_busy_until.max(start);
+        let macs_start = bus_free + gb_load;
+        self.bytes_in += in_bytes;
+
+        // 2. Banks in parallel.
+        let lanes = cfg.pim.mac_lanes as u64;
+        let fill = cfg.pim.pipeline_fill;
+        let row_elems = cfg.gddr6.row_elems() as u32;
+        let mut slowest = macs_start;
+        let mut first_ready = u64::MAX;
+        for (bank, work) in self.banks.iter_mut().zip(&plan.bank_work) {
+            if work.is_idle() {
+                continue;
+            }
+            if let Some(row) = work.first_row() {
+                first_ready = first_ready.min(bank.first_result_at(macs_start, row, t, fill));
+            }
+            let fin = match work {
+                UnitWork::Idle => macs_start,
+                UnitWork::Block(b) => bank.mac_block(macs_start, b, row_elems, t, lanes, fill),
+                UnitWork::Segments(s) => bank.mac_sweep(macs_start, s, t, lanes, fill),
+                UnitWork::Pattern { base_row, reps, pattern, pattern_len } => bank.mac_pattern(
+                    macs_start,
+                    *base_row,
+                    *reps,
+                    &pattern[..*pattern_len as usize],
+                    t,
+                    lanes,
+                    fill,
+                ),
+            };
+            slowest = slowest.max(fin);
+        }
+        if first_ready == u64::MAX {
+            first_ready = macs_start;
+        }
+
+        // 3. Drain, pipelined: starts when the first partial result is
+        // ready, proceeds at interface rate, cannot finish before the
+        // slowest bank produced its last element.
+        let out_bytes = plan.output_elems * 2;
+        let drain = Self::xfer_cycles(cfg, out_bytes);
+        self.bytes_out += out_bytes;
+        let finish = (first_ready + drain).max(slowest);
+        self.bus_busy_until = finish;
+
+        ChannelExec { finish, first_ready, gb_load_cycles: gb_load, drain_cycles: drain }
+    }
+
+    /// Write-back of a Key vector slice (row-major, Fig. 7a) to one bank.
+    pub fn write_k(&mut self, t: &TimingCycles, start: u64, bank: usize, seg: RowSegment) -> u64 {
+        self.catch_up_refresh(start, t);
+        self.bytes_in += seg.elems as u64 * 2;
+        self.banks[bank].write_row_major(start, seg, t)
+    }
+
+    /// Write-back of Value elements (column-major, Fig. 7b) to one bank:
+    /// `n_elems` elements into rows `base_row + i*row_stride`.
+    pub fn write_v(
+        &mut self,
+        t: &TimingCycles,
+        start: u64,
+        bank: usize,
+        n_elems: u32,
+        base_row: u32,
+        row_stride: u32,
+    ) -> u64 {
+        self.catch_up_refresh(start, t);
+        self.bytes_in += n_elems as u64 * 2;
+        self.banks[bank].write_col_major(start, n_elems, base_row, row_stride, t)
+    }
+
+    /// Merge all bank stats.
+    pub fn stats(&self) -> (BankStats, CommandCounts) {
+        let mut s = BankStats::default();
+        let mut c = CommandCounts::default();
+        for b in &self.banks {
+            s.merge(&b.stats);
+            c.merge(&b.cmds);
+        }
+        (s, c)
+    }
+
+    /// Total bytes moved over the channel interface (Fig. 11b).
+    pub fn bytes_transferred(&self) -> u64 {
+        self.bytes_in + self.bytes_out
+    }
+
+    pub fn busy_until(&self) -> u64 {
+        self.banks.iter().map(|b| b.busy_until()).max().unwrap_or(0).max(self.bus_busy_until)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn setup() -> (HwConfig, TimingCycles) {
+        let cfg = HwConfig::paper_baseline();
+        let t = TimingCycles::from_config(&cfg);
+        (cfg, t)
+    }
+
+    fn uniform_plan(cfg: &HwConfig, rows_per_bank: u32, input: u64, output: u64) -> VmmPlan {
+        VmmPlan {
+            bank_work: (0..cfg.gddr6.banks_per_channel)
+                .map(|_| UnitWork::Block(RowBlock { base_row: 0, full_rows: rows_per_bank, tail_elems: 0 }))
+                .collect(),
+            input_elems: input,
+            output_elems: output,
+        }
+    }
+
+    #[test]
+    fn banks_run_in_parallel() {
+        let (cfg, t) = setup();
+        let mut ch = Channel::new(&cfg);
+        let e16 = ch.execute_vmm(&cfg, &t, 0, &uniform_plan(&cfg, 1, 1024, 16));
+        let mut ch1 = Channel::new(&cfg);
+        let mut plan1 = uniform_plan(&cfg, 1, 1024, 16);
+        for b in 1..16 {
+            plan1.bank_work[b] = UnitWork::Idle;
+        }
+        let e1 = ch1.execute_vmm(&cfg, &t, 0, &plan1);
+        assert!(e16.finish <= e1.finish + 1, "{} vs {}", e16.finish, e1.finish);
+    }
+
+    #[test]
+    fn gb_load_precedes_macs() {
+        let (cfg, t) = setup();
+        let mut ch = Channel::new(&cfg);
+        let e = ch.execute_vmm(&cfg, &t, 0, &uniform_plan(&cfg, 1, 1024, 16));
+        // 2048 bytes at 32 B/cycle = 64 cycles of GB load, then ACT+MAC.
+        assert_eq!(e.gb_load_cycles, 64);
+        assert!(e.finish >= 64 + t.trcd + 64);
+    }
+
+    #[test]
+    fn drain_pipelined_not_additive() {
+        let (cfg, t) = setup();
+        let mut ch = Channel::new(&cfg);
+        let plan = uniform_plan(&cfg, 8, 1024, 1024);
+        let e = ch.execute_vmm(&cfg, &t, 0, &plan);
+        let mac_only = {
+            let mut ch2 = Channel::new(&cfg);
+            let mut p2 = plan.clone();
+            p2.output_elems = 1;
+            ch2.execute_vmm(&cfg, &t, 0, &p2).finish
+        };
+        assert!(e.finish <= mac_only + 64, "drain should overlap: {} vs {mac_only}", e.finish);
+    }
+
+    #[test]
+    fn refresh_interrupts_long_runs() {
+        let (cfg, t) = setup();
+        let mut ch = Channel::new(&cfg);
+        let mut now = 0;
+        for _ in 0..10 {
+            now = ch.execute_vmm(&cfg, &t, now, &uniform_plan(&cfg, 2, 1024, 16)).finish;
+        }
+        ch.catch_up_refresh(3 * t.trefi + 1, &t);
+        let (_, cmds) = ch.stats();
+        assert!(cmds.refresh >= 3 * 16, "refresh count {}", cmds.refresh);
+    }
+
+    #[test]
+    fn bytes_tracked() {
+        let (cfg, t) = setup();
+        let mut ch = Channel::new(&cfg);
+        ch.execute_vmm(&cfg, &t, 0, &uniform_plan(&cfg, 1, 512, 128));
+        assert_eq!(ch.bytes_in, 512 * 2);
+        assert_eq!(ch.bytes_out, 128 * 2);
+    }
+
+    #[test]
+    fn segments_and_blocks_mix() {
+        let (cfg, t) = setup();
+        let mut ch = Channel::new(&cfg);
+        let mut plan = uniform_plan(&cfg, 2, 256, 64);
+        plan.bank_work[3] =
+            UnitWork::Segments(vec![RowSegment { row: 7, elems: 100 }, RowSegment { row: 7, elems: 50 }]);
+        let e = ch.execute_vmm(&cfg, &t, 0, &plan);
+        assert!(e.finish > 0);
+        let (s, _) = ch.stats();
+        assert!(s.row_hits > 0);
+    }
+
+    #[test]
+    fn prop_finish_monotonic_in_work() {
+        check("channel finish grows with rows", 50, |rng| {
+            let (cfg, t) = setup();
+            let r1 = rng.usize_in(1, 8) as u32;
+            let r2 = r1 + rng.usize_in(1, 8) as u32;
+            let f1 = Channel::new(&cfg)
+                .execute_vmm(&cfg, &t, 0, &uniform_plan(&cfg, r1, 1024, 64))
+                .finish;
+            let f2 = Channel::new(&cfg)
+                .execute_vmm(&cfg, &t, 0, &uniform_plan(&cfg, r2, 1024, 64))
+                .finish;
+            if f2 > f1 { Ok(()) } else { Err(format!("{f2} <= {f1}")) }
+        });
+    }
+
+    #[test]
+    fn prop_wider_mac_never_slower() {
+        check("wider MAC units never slower (Fig 15a)", 30, |rng| {
+            let rows = rng.usize_in(1, 16) as u32;
+            let (cfg16, t) = setup();
+            let cfg64 = HwConfig::paper_baseline().with_mac_lanes(64);
+            let f16 = Channel::new(&cfg16)
+                .execute_vmm(&cfg16, &t, 0, &uniform_plan(&cfg16, rows, 1024, 64))
+                .finish;
+            let f64_ = Channel::new(&cfg64)
+                .execute_vmm(&cfg64, &t, 0, &uniform_plan(&cfg64, rows, 1024, 64))
+                .finish;
+            if f64_ <= f16 { Ok(()) } else { Err(format!("{f64_} > {f16}")) }
+        });
+    }
+}

@@ -1,0 +1,6 @@
+//! PIM channel model: global buffer, 16 banks with MAC units, broadcast
+//! and result forwarding (paper §III.B, Fig. 4).
+
+pub mod channel;
+
+pub use channel::{Channel, ChannelExec, UnitWork, VmmPlan};

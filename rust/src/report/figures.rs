@@ -1,0 +1,452 @@
+//! Regenerates every table and figure of the paper's evaluation section.
+//!
+//! Each function runs the simulator (plus baselines where relevant) and
+//! returns a `FigureReport`: a rendered ascii table for the console and
+//! a JSON object for machine consumption. Absolute numbers depend on
+//! the simulated substrate; the *shape* of each result (who wins, by
+//! what factor, where crossovers fall) is what reproduces the paper —
+//! EXPERIMENTS.md records paper-vs-measured per experiment.
+
+use crate::baselines::{cpu_xeon_6154, gpu_t4};
+use crate::config::HwConfig;
+use crate::energy::SystemEnergy;
+use crate::model::gpt::by_name;
+use crate::model::{GptModel, PAPER_MODELS};
+use crate::sim::Simulator;
+use crate::util::json::Json;
+use crate::util::table::{sig3, Table};
+use anyhow::Result;
+
+/// A regenerated figure/table.
+#[derive(Clone, Debug)]
+pub struct FigureReport {
+    pub id: &'static str,
+    pub title: String,
+    pub rendered: String,
+    pub json: Json,
+}
+
+/// Summary of one simulated run.
+#[derive(Clone, Debug)]
+pub struct RunSummary {
+    pub model: String,
+    pub tokens: u64,
+    pub sim_seconds: f64,
+    pub energy_j: f64,
+    pub row_hit_rate: f64,
+    pub bytes_moved: u64,
+    pub vmm_fraction: f64,
+    pub class_seconds: Vec<(String, f64)>,
+}
+
+/// Run `model` for `n_tokens` under `cfg`.
+pub fn run_model(model: &GptModel, cfg: &HwConfig, n_tokens: u64) -> Result<RunSummary> {
+    let mut sim = Simulator::new(model, cfg)?;
+    sim.generate(n_tokens)?;
+    sim.finalize_stats();
+    let freq = cfg.gddr6.freq_ghz;
+    let energy = SystemEnergy::from_sim(&sim);
+    let class_seconds = sim
+        .stats
+        .class_cycles
+        .iter()
+        .map(|(c, cyc)| (c.label(), *cyc as f64 / (freq * 1e9)))
+        .collect();
+    Ok(RunSummary {
+        model: model.name.to_string(),
+        tokens: n_tokens,
+        sim_seconds: sim.stats.seconds(freq),
+        energy_j: energy.total_j(),
+        row_hit_rate: sim.stats.row_hit_rate(),
+        bytes_moved: sim.stats.bytes_moved(),
+        vmm_fraction: sim.stats.vmm_fraction(),
+        class_seconds,
+    })
+}
+
+/// Fig. 1: parameters and ops/parameter of the model zoo (vs ResNet-18).
+pub fn fig1_model_zoo() -> FigureReport {
+    let mut t = Table::new(vec!["model", "params (M)", "GFLOPs/token", "ops/param"]);
+    let mut arr = Vec::new();
+    for m in &PAPER_MODELS {
+        let p = m.n_params() as f64;
+        let f = m.flops_per_token(1024) as f64;
+        t.row(vec![
+            m.name.to_string(),
+            format!("{:.0}", p / 1e6),
+            format!("{:.1}", f / 1e9),
+            format!("{:.2}", f / p),
+        ]);
+        arr.push(Json::obj(vec![
+            ("model", m.name.into()),
+            ("params", p.into()),
+            ("flops_per_token", f.into()),
+            ("ops_per_param", (f / p).into()),
+        ]));
+    }
+    // ResNet-18 reference point (paper Fig. 1): 11.7M params, ~1.8 GFLOPs
+    // per 224x224 image -> ops/param ~ 48.3... wait, x2 for MACs? The
+    // paper quotes 48.3; 1.8e9 * 2 / 11.7e6 = 308?? They use
+    // ops-per-inference / params with their own convention; we record
+    // the published 48.3 directly.
+    t.row(vec!["resnet-18 (ref)".into(), "11.7".to_string(), "-".into(), "48.3".into()]);
+    FigureReport {
+        id: "fig1",
+        title: "Fig. 1: params & ops/param — GPT vs CNN".into(),
+        rendered: t.render(),
+        json: Json::Arr(arr),
+    }
+}
+
+/// Fig. 8 + Fig. 9: speedup and energy efficiency vs GPU/CPU, 8 models.
+pub fn fig8_9_speedup_energy(n_tokens: u64) -> Result<FigureReport> {
+    let cfg = HwConfig::paper_baseline();
+    let gpu = gpu_t4();
+    let cpu = cpu_xeon_6154();
+    let mut t = Table::new(vec![
+        "model", "pim us/tok", "speedup vs GPU", "speedup vs CPU", "energy-eff vs GPU", "energy-eff vs CPU",
+    ]);
+    let mut arr = Vec::new();
+    for m in &PAPER_MODELS {
+        let r = run_model(m, &cfg, n_tokens)?;
+        let g_lat = gpu.run_latency_s(m, n_tokens);
+        let c_lat = cpu.run_latency_s(m, n_tokens);
+        let g_en = gpu.run_energy_j(m, n_tokens);
+        let c_en = cpu.run_energy_j(m, n_tokens);
+        let row = [
+            g_lat / r.sim_seconds,
+            c_lat / r.sim_seconds,
+            g_en / r.energy_j,
+            c_en / r.energy_j,
+        ];
+        t.row(vec![
+            m.name.to_string(),
+            sig3(r.sim_seconds * 1e6 / n_tokens as f64),
+            format!("{:.1}x", row[0]),
+            format!("{:.1}x", row[1]),
+            format!("{:.1}x", row[2]),
+            format!("{:.1}x", row[3]),
+        ]);
+        arr.push(Json::obj(vec![
+            ("model", m.name.into()),
+            ("pim_s", r.sim_seconds.into()),
+            ("speedup_gpu", row[0].into()),
+            ("speedup_cpu", row[1].into()),
+            ("energy_eff_gpu", row[2].into()),
+            ("energy_eff_cpu", row[3].into()),
+        ]));
+    }
+    Ok(FigureReport {
+        id: "fig8-9",
+        title: format!("Fig. 8/9: speedup & energy efficiency ({n_tokens} tokens; paper: GPU 41-137x / CPU 631-1074x; energy GPU 339-1085x / CPU 890-1632x)"),
+        rendered: t.render(),
+        json: Json::Arr(arr),
+    })
+}
+
+/// Fig. 10: layer-wise latency breakdown (GPT3-small and GPT3-XL).
+pub fn fig10_breakdown(n_tokens: u64) -> Result<FigureReport> {
+    let cfg = HwConfig::paper_baseline();
+    let mut t = Table::new(vec!["model", "class", "share %"]);
+    let mut arr = Vec::new();
+    for name in ["gpt3-small", "gpt3-xl"] {
+        let m = by_name(name).unwrap();
+        let r = run_model(&m, &cfg, n_tokens)?;
+        let total: f64 = r.class_seconds.iter().map(|(_, s)| s).sum();
+        // Aggregate VMM classes for the headline split.
+        let vmm: f64 = r.class_seconds.iter().filter(|(c, _)| c.starts_with("vmm")).map(|(_, s)| s).sum();
+        t.row(vec![name.to_string(), "vmm (all)".into(), format!("{:.2}", 100.0 * vmm / total)]);
+        for (c, s) in r.class_seconds.iter().filter(|(c, _)| !c.starts_with("vmm")) {
+            t.row(vec![name.to_string(), c.clone(), format!("{:.2}", 100.0 * s / total)]);
+        }
+        let arith: f64 = r
+            .class_seconds
+            .iter()
+            .filter(|(c, _)| ["softmax", "layernorm", "gelu", "residual", "partialsum", "biasscale"].contains(&c.as_str()))
+            .map(|(_, s)| s)
+            .sum();
+        arr.push(Json::obj(vec![
+            ("model", name.into()),
+            ("vmm_share", (vmm / total).into()),
+            ("arith_share", (arith / total).into()),
+        ]));
+    }
+    Ok(FigureReport {
+        id: "fig10",
+        title: format!("Fig. 10: layer-wise latency breakdown ({n_tokens} tokens; paper: VMM dominates, arithmetic ~1.16% on GPT3-XL)"),
+        rendered: t.render(),
+        json: Json::Arr(arr),
+    })
+}
+
+/// Fig. 11: (a) row hit rate, (b) data movement reduction.
+pub fn fig11_locality(n_tokens: u64) -> Result<FigureReport> {
+    let cfg = HwConfig::paper_baseline();
+    let mut t = Table::new(vec!["model", "row hit %", "moved MB", "baseline MB", "reduction"]);
+    let mut arr = Vec::new();
+    for m in &PAPER_MODELS {
+        let r = run_model(m, &cfg, n_tokens)?;
+        // Processor-centric baseline traffic: all weights per token plus
+        // the KV cache read+write per token.
+        let kv_per_tok = (2 * m.n_layer * m.d_model) as f64 * (n_tokens as f64 / 2.0) * 2.0;
+        let baseline = (m.weight_bytes() as f64 + kv_per_tok) * n_tokens as f64;
+        let reduction = baseline / r.bytes_moved as f64;
+        t.row(vec![
+            m.name.to_string(),
+            format!("{:.2}", 100.0 * r.row_hit_rate),
+            format!("{:.1}", r.bytes_moved as f64 / 1e6),
+            format!("{:.0}", baseline / 1e6),
+            format!("{:.0}x", reduction),
+        ]);
+        arr.push(Json::obj(vec![
+            ("model", m.name.into()),
+            ("row_hit_rate", r.row_hit_rate.into()),
+            ("bytes_moved", (r.bytes_moved as f64).into()),
+            ("reduction", reduction.into()),
+        ]));
+    }
+    Ok(FigureReport {
+        id: "fig11",
+        title: format!("Fig. 11: row hit rate & data movement reduction ({n_tokens} tokens; paper: ~98%, 110-259x)"),
+        rendered: t.render(),
+        json: Json::Arr(arr),
+    })
+}
+
+/// Fig. 12: sensitivity to ASIC clock frequency (1 GHz -> 100 MHz).
+pub fn fig12_asic_freq(n_tokens: u64) -> Result<FigureReport> {
+    let freqs = [1.0, 0.5, 0.2, 0.1];
+    let mut t = Table::new(vec!["model", "1 GHz", "500 MHz", "200 MHz", "100 MHz"]);
+    let mut arr = Vec::new();
+    for m in &PAPER_MODELS {
+        let mut cells = vec![m.name.to_string()];
+        let mut norm = Vec::new();
+        let base = run_model(m, &HwConfig::paper_baseline(), n_tokens)?.sim_seconds;
+        for f in freqs {
+            let cfg = HwConfig::paper_baseline().with_asic_freq_ghz(f);
+            let s = run_model(m, &cfg, n_tokens)?.sim_seconds;
+            norm.push(s / base);
+            cells.push(format!("{:.3}", s / base));
+        }
+        t.row(cells);
+        arr.push(Json::obj(vec![
+            ("model", m.name.into()),
+            ("normalized", Json::Arr(norm.into_iter().map(Json::from).collect())),
+        ]));
+    }
+    Ok(FigureReport {
+        id: "fig12",
+        title: format!("Fig. 12: latency vs ASIC frequency, normalized to 1 GHz ({n_tokens} tokens; paper: worst +20% at 100 MHz, larger models less sensitive)"),
+        rendered: t.render(),
+        json: Json::Arr(arr),
+    })
+}
+
+/// Fig. 13: sensitivity to memory-interface data rate (16 -> 1 Gb/s/pin).
+pub fn fig13_bandwidth(n_tokens: u64) -> Result<FigureReport> {
+    let rates = [16.0, 8.0, 4.0, 2.0, 1.0];
+    let mut t = Table::new(vec!["model", "16 Gb/s", "8 Gb/s", "4 Gb/s", "2 Gb/s", "1 Gb/s"]);
+    let mut arr = Vec::new();
+    for m in &PAPER_MODELS {
+        let base = run_model(m, &HwConfig::paper_baseline(), n_tokens)?.sim_seconds;
+        let mut cells = vec![m.name.to_string()];
+        let mut norm = Vec::new();
+        for r in rates {
+            let cfg = HwConfig::paper_baseline().with_data_rate_gbps(r);
+            let s = run_model(m, &cfg, n_tokens)?.sim_seconds;
+            norm.push(s / base);
+            cells.push(format!("{:.2}", s / base));
+        }
+        t.row(cells);
+        arr.push(Json::obj(vec![
+            ("model", m.name.into()),
+            ("normalized", Json::Arr(norm.into_iter().map(Json::from).collect())),
+        ]));
+    }
+    Ok(FigureReport {
+        id: "fig13",
+        title: format!("Fig. 13: latency vs interface data rate, normalized to 16 Gb/s ({n_tokens} tokens; paper: ~1.5x at 2 Gb/s, ~2x at 1 Gb/s)"),
+        rendered: t.render(),
+        json: Json::Arr(arr),
+    })
+}
+
+/// Fig. 14: latency growth with generated token length (GPT3-XL to 8k).
+pub fn fig14_long_token(lengths: &[u64]) -> Result<FigureReport> {
+    // GPT3-XL with an extended context window (paper: >8k supported).
+    let mut m = by_name("gpt3-xl").unwrap();
+    m.max_seq = *lengths.iter().max().unwrap() as usize;
+    let cfg = HwConfig::paper_baseline();
+    let base = run_model(&m, &cfg, lengths[0])?.sim_seconds;
+    let mut t = Table::new(vec!["tokens", "sim seconds", "normalized vs 1k"]);
+    let mut arr = Vec::new();
+    for &n in lengths {
+        let s = run_model(&m, &cfg, n)?.sim_seconds;
+        t.row(vec![n.to_string(), sig3(s), format!("{:.2}", s / base)]);
+        arr.push(Json::obj(vec![("tokens", n.into()), ("seconds", s.into()), ("normalized", (s / base).into())]));
+    }
+    Ok(FigureReport {
+        id: "fig14",
+        title: "Fig. 14: GPT3-XL latency vs token length (paper: super-linear growth, 8k+ supported)".into(),
+        rendered: t.render(),
+        json: Json::Arr(arr),
+    })
+}
+
+/// Fig. 15: scalability with (a) MAC width 16->64, (b) channel count.
+pub fn fig15_scalability(n_tokens: u64) -> Result<FigureReport> {
+    let mut t = Table::new(vec!["model", "knob", "value", "speedup vs base"]);
+    let mut arr = Vec::new();
+    for name in ["gpt3-small", "gpt3-xl"] {
+        let m = by_name(name).unwrap();
+        let base = run_model(&m, &HwConfig::paper_baseline(), n_tokens)?.sim_seconds;
+        for lanes in [16usize, 32, 64] {
+            let cfg = HwConfig::paper_baseline().with_mac_lanes(lanes);
+            let s = run_model(&m, &cfg, n_tokens)?.sim_seconds;
+            t.row(vec![name.to_string(), "mac-lanes".into(), lanes.to_string(), format!("{:.2}x", base / s)]);
+            arr.push(Json::obj(vec![
+                ("model", name.into()),
+                ("knob", "mac_lanes".into()),
+                ("value", lanes.into()),
+                ("speedup", (base / s).into()),
+            ]));
+        }
+        for ch in [8usize, 16, 32] {
+            let cfg = HwConfig::paper_baseline().with_channels(ch);
+            let s = run_model(&m, &cfg, n_tokens)?.sim_seconds;
+            t.row(vec![name.to_string(), "channels".into(), ch.to_string(), format!("{:.2}x", base / s)]);
+            arr.push(Json::obj(vec![
+                ("model", name.into()),
+                ("knob", "channels".into()),
+                ("value", ch.into()),
+                ("speedup", (base / s).into()),
+            ]));
+        }
+    }
+    Ok(FigureReport {
+        id: "fig15",
+        title: format!("Fig. 15: scalability — MAC width (paper: 1.8-2.0x at 64) and channels (near-linear) ({n_tokens} tokens)"),
+        rendered: t.render(),
+        json: Json::Arr(arr),
+    })
+}
+
+/// Table I: the hardware configuration in force.
+pub fn table1_config(cfg: &HwConfig) -> FigureReport {
+    let mut t = Table::new(vec!["section", "parameter", "value"]);
+    let rows: Vec<(&str, &str, String)> = vec![
+        ("timing", "tRCD/tRP/tCCD/tWR", format!("{}/{}/{}/{} ns", cfg.timing.trcd, cfg.timing.trp, cfg.timing.tccd, cfg.timing.twr)),
+        ("timing", "tRFC/tREFI", format!("{}/{} ns", cfg.timing.trfc, cfg.timing.trefi)),
+        ("idd", "IDD0/2N/3N", format!("{}/{}/{} mA", cfg.idd.idd0, cfg.idd.idd2n, cfg.idd.idd3n)),
+        ("idd", "IDD4R/4W/5B", format!("{}/{}/{} mA", cfg.idd.idd4r, cfg.idd.idd4w, cfg.idd.idd5b)),
+        ("gddr6", "channels x banks", format!("{} x {}", cfg.gddr6.channels, cfg.gddr6.banks_per_channel)),
+        ("gddr6", "capacity/channel", format!("{} Gb", cfg.gddr6.capacity_gbit)),
+        ("gddr6", "row size / rows", format!("{} B / {}", cfg.gddr6.row_bytes, cfg.gddr6.rows_per_bank())),
+        ("gddr6", "interface", format!("{} pins x {} Gb/s", cfg.gddr6.pins_per_channel, cfg.gddr6.gbps_per_pin)),
+        ("pim", "GB / MAC lanes", format!("{} B / {}", cfg.pim.gb_bytes, cfg.pim.mac_lanes)),
+        ("pim", "MAC power", format!("{} mW/channel", cfg.pim.mac_power_mw_per_channel)),
+        ("asic", "freq / SRAM", format!("{} GHz / {} KB", cfg.asic.freq_ghz, cfg.asic.sram_kb)),
+        ("asic", "adders / multipliers", format!("{} / {}", cfg.asic.n_adders, cfg.asic.n_multipliers)),
+        ("asic", "area / power", format!("{} mm2 / {} mW", cfg.asic.area_mm2, cfg.asic.power_mw)),
+    ];
+    for (s, p, v) in rows {
+        t.row(vec![s.to_string(), p.to_string(), v]);
+    }
+    FigureReport {
+        id: "table1",
+        title: "Table I: PIM-GPT hardware configuration".into(),
+        rendered: t.render(),
+        json: Json::Null,
+    }
+}
+
+/// Table II: comparison with prior GPT accelerators.
+pub fn table2_comparison(n_tokens: u64) -> Result<FigureReport> {
+    let cfg = HwConfig::paper_baseline();
+    let gpu = gpu_t4();
+    // The paper's Table II row for PIM-GPT is GPT2-medium at 1024 tokens.
+    let m = by_name("gpt2-medium").unwrap();
+    let r = run_model(&m, &cfg, n_tokens)?;
+    let speedup = gpu.run_latency_s(&m, n_tokens) / r.sim_seconds;
+    let energy = gpu.run_energy_j(&m, n_tokens) / r.energy_j;
+
+    let mut t = Table::new(vec!["accel", "memory", "end-to-end", "pim", "dtype", "largest", "longest tok", "speedup", "energy eff"]);
+    for a in &crate::baselines::PRIOR_ACCELERATORS {
+        t.row(vec![
+            a.name.to_string(),
+            a.memory.to_string(),
+            if a.end_to_end { "yes" } else { "no" }.into(),
+            if a.pim { "yes" } else { "no" }.into(),
+            a.data_type.to_string(),
+            a.largest_model.to_string(),
+            a.longest_token.map(|t| t.to_string()).unwrap_or("-".into()),
+            format!("{}x", a.speedup),
+            a.energy_eff.map(|e| format!("{e}x")).unwrap_or("-".into()),
+        ]);
+    }
+    t.row(vec![
+        "PIM-GPT (ours)".into(),
+        "GDDR6".into(),
+        "yes".into(),
+        "yes".into(),
+        "BF16".into(),
+        "GPT2/3-XL".into(),
+        "8096".into(),
+        format!("{speedup:.0}x"),
+        format!("{energy:.0}x"),
+    ]);
+    Ok(FigureReport {
+        id: "table2",
+        title: format!("Table II: vs prior accelerators (PIM-GPT measured on GPT2-medium, {n_tokens} tokens; paper: 89x / 618x)"),
+        rendered: t.render(),
+        json: Json::obj(vec![("speedup", speedup.into()), ("energy_eff", energy.into())]),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_has_all_models() {
+        let r = fig1_model_zoo();
+        assert_eq!(r.json.as_arr().unwrap().len(), 8);
+        assert!(r.rendered.contains("resnet-18"));
+    }
+
+    #[test]
+    fn fig8_9_bands_hold_small_run() {
+        // Short run (8 tokens) — ratios are looser than at 1024 tokens
+        // but the ordering (GPU < CPU, small > xl speedup) must hold.
+        let r = fig8_9_speedup_energy(8).unwrap();
+        let arr = r.json.as_arr().unwrap();
+        let get = |i: usize, k: &str| arr[i].get(k).unwrap().as_f64().unwrap();
+        for i in 0..arr.len() {
+            assert!(get(i, "speedup_cpu") > get(i, "speedup_gpu"));
+            assert!(get(i, "speedup_gpu") > 10.0);
+        }
+        // speedup decreases with model size within a family
+        assert!(get(0, "speedup_gpu") > get(3, "speedup_gpu"));
+    }
+
+    #[test]
+    fn fig10_vmm_dominates() {
+        let r = fig10_breakdown(4).unwrap();
+        for row in r.json.as_arr().unwrap() {
+            assert!(row.get("vmm_share").unwrap().as_f64().unwrap() > 0.7);
+        }
+    }
+
+    #[test]
+    fn table1_renders() {
+        let r = table1_config(&HwConfig::paper_baseline());
+        assert!(r.rendered.contains("16 pins x 16 Gb/s"));
+    }
+
+    #[test]
+    fn table2_includes_ours() {
+        let r = table2_comparison(8).unwrap();
+        assert!(r.rendered.contains("PIM-GPT (ours)"));
+        assert!(r.json.get("speedup").unwrap().as_f64().unwrap() > 10.0);
+    }
+}

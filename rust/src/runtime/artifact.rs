@@ -1,0 +1,287 @@
+//! Functional GPT artifacts: the L2 decode step AOT-lowered by
+//! `python/compile/aot.py`, loaded and executed through PJRT.
+//!
+//! An artifact is three files produced by `make artifacts`:
+//! `<name>.hlo.txt` (the decode computation), `<name>.weights.bin`
+//! (little-endian f32 parameter blob) and `<name>.meta.json` (input
+//! signature). Weights are uploaded to the device once as PJRT buffers;
+//! each decode call passes (token, pos, k_cache, v_cache) and receives
+//! (logits, k_cache', v_cache') — the caches round-trip as device
+//! buffers, so steady-state decoding copies only the token ids and
+//! logits across the host boundary.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{ElementType, Literal, PjRtBuffer, PjRtLoadedExecutable};
+
+/// A device buffer paired with the host literal it was uploaded from.
+///
+/// `PjRtClient::buffer_from_host_literal` enqueues the host->device copy
+/// *asynchronously*: the source literal must stay alive until an
+/// execution consuming the buffer has been synchronized, or the copy
+/// reads freed memory (observed as a SIGSEGV inside
+/// `AbstractTfrtCpuBuffer::CopyFromLiteral`). Bundling the two enforces
+/// the lifetime.
+pub struct CacheBuf {
+    #[allow(dead_code)]
+    lit: Literal,
+    buf: PjRtBuffer,
+}
+
+use super::PjrtRuntime;
+
+/// One input in the artifact signature.
+#[derive(Clone, Debug)]
+pub struct InputSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+    pub kind: String,
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+/// Parsed `<name>.meta.json`.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub n_layer: usize,
+    pub d_model: usize,
+    pub n_head: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub inputs: Vec<InputSpec>,
+    pub hlo_path: PathBuf,
+    pub weights_path: PathBuf,
+}
+
+impl ArtifactMeta {
+    pub fn load(dir: &Path, name: &str) -> Result<Self> {
+        let meta_path = dir.join(format!("{name}.meta.json"));
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {}", meta_path.display()))?;
+        let j = Json::parse(&text).context("parsing artifact meta")?;
+        let cfg = j.get("config").ok_or_else(|| anyhow!("meta missing config"))?;
+        let num = |k: &str| -> Result<usize> {
+            cfg.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow!("config.{k} missing"))
+        };
+        let mut inputs = Vec::new();
+        for inp in j.get("inputs").and_then(Json::as_arr).ok_or_else(|| anyhow!("inputs"))? {
+            inputs.push(InputSpec {
+                name: inp.get("name").and_then(Json::as_str).unwrap_or_default().to_string(),
+                shape: inp
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                    .unwrap_or_default(),
+                dtype: inp.get("dtype").and_then(Json::as_str).unwrap_or("f32").to_string(),
+                kind: inp.get("kind").and_then(Json::as_str).unwrap_or_default().to_string(),
+                offset: inp.get("offset").and_then(Json::as_usize).unwrap_or(0),
+                nbytes: inp.get("nbytes").and_then(Json::as_usize).unwrap_or(0),
+            });
+        }
+        let hlo = j.get("hlo").and_then(Json::as_str).ok_or_else(|| anyhow!("hlo"))?;
+        let weights = j.get("weights_bin").and_then(Json::as_str).ok_or_else(|| anyhow!("weights_bin"))?;
+        Ok(Self {
+            name: name.to_string(),
+            n_layer: num("n_layer")?,
+            d_model: num("d_model")?,
+            n_head: num("n_head")?,
+            vocab: num("vocab")?,
+            max_seq: num("max_seq")?,
+            inputs,
+            hlo_path: dir.join(hlo),
+            weights_path: dir.join(weights),
+        })
+    }
+}
+
+/// A loaded, executable GPT decode step.
+pub struct GptArtifact {
+    pub meta: ArtifactMeta,
+    exe: PjRtLoadedExecutable,
+    runtime: PjrtRuntime,
+    /// Parameter buffers resident on the device, in signature order.
+    weight_bufs: Vec<PjRtBuffer>,
+    /// Host literals backing `weight_bufs` — kept alive for the
+    /// lifetime of the artifact (see `CacheBuf` docs).
+    #[allow(dead_code)]
+    weight_lits: Vec<Literal>,
+}
+
+impl GptArtifact {
+    /// Load `<dir>/<name>.{hlo.txt,weights.bin,meta.json}`.
+    pub fn load(runtime: PjrtRuntime, dir: &Path, name: &str) -> Result<Self> {
+        let meta = ArtifactMeta::load(dir, name)?;
+        let exe = runtime
+            .load_hlo_text(meta.hlo_path.to_str().unwrap())
+            .with_context(|| format!("compiling {}", meta.hlo_path.display()))?;
+        let blob = std::fs::read(&meta.weights_path)
+            .with_context(|| format!("reading {}", meta.weights_path.display()))?;
+        let mut weight_bufs = Vec::new();
+        let mut weight_lits = Vec::new();
+        for spec in meta.inputs.iter().filter(|i| i.kind == "param") {
+            if spec.offset + spec.nbytes > blob.len() {
+                bail!("weight blob too small for {}", spec.name);
+            }
+            let lit = Literal::create_from_shape_and_untyped_data(
+                ElementType::F32,
+                &spec.shape,
+                &blob[spec.offset..spec.offset + spec.nbytes],
+            )?;
+            weight_bufs.push(runtime.to_device(&lit)?);
+            weight_lits.push(lit);
+        }
+        Ok(Self { meta, exe, runtime, weight_bufs, weight_lits })
+    }
+
+    /// Fresh zeroed KV caches as device buffers.
+    pub fn empty_caches(&self) -> Result<(CacheBuf, CacheBuf)> {
+        let shape = [self.meta.n_layer, self.meta.max_seq, self.meta.d_model];
+        let zeros = vec![0u8; shape.iter().product::<usize>() * 4];
+        let k = Literal::create_from_shape_and_untyped_data(ElementType::F32, &shape, &zeros)?;
+        let v = Literal::create_from_shape_and_untyped_data(ElementType::F32, &shape, &zeros)?;
+        let kb = self.runtime.to_device(&k)?;
+        let vb = self.runtime.to_device(&v)?;
+        Ok((CacheBuf { lit: k, buf: kb }, CacheBuf { lit: v, buf: vb }))
+    }
+
+    /// Run one decode step. Returns (logits, k_cache', v_cache').
+    ///
+    /// The artifact returns one flat f32 vector — `concat(logits, kc,
+    /// vc)` wrapped in a 1-tuple (see `model.aot_decode_fn`): the PJRT
+    /// CPU client cannot convert multi-element tuple buffers to
+    /// literals, a 1-tuple of a single array round-trips fine.
+    pub fn decode(
+        &self,
+        token: i32,
+        pos: i32,
+        k_cache: &CacheBuf,
+        v_cache: &CacheBuf,
+    ) -> Result<(Vec<f32>, CacheBuf, CacheBuf)> {
+        if pos as usize >= self.meta.max_seq {
+            bail!("position {pos} exceeds max_seq {}", self.meta.max_seq);
+        }
+        // Input literals must outlive the synchronized execution below.
+        let tok_lit = Literal::vec1(&[token]);
+        let pos_lit = Literal::vec1(&[pos]);
+        let tok = self.runtime.to_device(&tok_lit)?;
+        let p = self.runtime.to_device(&pos_lit)?;
+        let mut args: Vec<&PjRtBuffer> = vec![&tok, &p, &k_cache.buf, &v_cache.buf];
+        args.extend(self.weight_bufs.iter());
+        let mut outs = self.exe.execute_b(&args)?;
+        let replica = outs
+            .first_mut()
+            .and_then(|v| (!v.is_empty()).then(|| v.remove(0)))
+            .ok_or_else(|| anyhow!("no output buffer"))?;
+        let flat = replica.to_literal_sync()?.to_tuple1()?.to_vec::<f32>()?;
+
+        let cache_elems = self.meta.n_layer * self.meta.max_seq * self.meta.d_model;
+        let want = self.meta.vocab + 2 * cache_elems;
+        if flat.len() != want {
+            bail!("flat output length {} != expected {want}", flat.len());
+        }
+        let logits = flat[..self.meta.vocab].to_vec();
+        let cache_shape = [self.meta.n_layer, self.meta.max_seq, self.meta.d_model];
+        let as_bytes = |xs: &[f32]| -> Vec<u8> {
+            xs.iter().flat_map(|v| v.to_le_bytes()).collect()
+        };
+        let kc = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &cache_shape,
+            &as_bytes(&flat[self.meta.vocab..self.meta.vocab + cache_elems]),
+        )?;
+        let vc = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &cache_shape,
+            &as_bytes(&flat[self.meta.vocab + cache_elems..]),
+        )?;
+        let kb = self.runtime.to_device(&kc)?;
+        let vb = self.runtime.to_device(&vc)?;
+        Ok((logits, CacheBuf { lit: kc, buf: kb }, CacheBuf { lit: vc, buf: vb }))
+    }
+
+    /// Greedy generation: feed `prompt`, then decode `n_new` tokens.
+    pub fn generate(&self, prompt: &[i32], n_new: usize) -> Result<Vec<i32>> {
+        if prompt.is_empty() {
+            bail!("prompt must be non-empty");
+        }
+        let (mut kc, mut vc) = self.empty_caches()?;
+        let mut toks: Vec<i32> = prompt.to_vec();
+        let mut logits = Vec::new();
+        for (i, &t) in prompt.iter().enumerate() {
+            let (lg, k2, v2) = self.decode(t, i as i32, &kc, &vc)?;
+            logits = lg;
+            kc = k2;
+            vc = v2;
+        }
+        for i in prompt.len()..prompt.len() + n_new {
+            let next = argmax(&logits) as i32;
+            toks.push(next);
+            if i + 1 >= self.meta.max_seq {
+                break;
+            }
+            let (lg, k2, v2) = self.decode(next, i as i32, &kc, &vc)?;
+            logits = lg;
+            kc = k2;
+            vc = v2;
+        }
+        Ok(toks)
+    }
+}
+
+/// Index of the largest element.
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > bv {
+            bv = x;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basics() {
+        assert_eq!(argmax(&[1.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[-1.0]), 0);
+        assert_eq!(argmax(&[f32::NEG_INFINITY, 0.0]), 1);
+    }
+
+    #[test]
+    fn meta_parse_roundtrip() {
+        let dir = std::env::temp_dir().join("pimgpt-meta-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("toy.meta.json"),
+            r#"{"name":"toy","config":{"n_layer":2,"d_model":8,"n_head":2,"vocab":16,"max_seq":4},
+                "outputs":["logits","k_cache","v_cache"],
+                "inputs":[{"name":"token","shape":[1],"dtype":"i32","kind":"token"},
+                          {"name":"wte","shape":[16,8],"dtype":"f32","kind":"param","offset":0,"nbytes":512}],
+                "weights_bin":"toy.weights.bin","hlo":"toy.hlo.txt"}"#,
+        )
+        .unwrap();
+        let meta = ArtifactMeta::load(&dir, "toy").unwrap();
+        assert_eq!(meta.n_layer, 2);
+        assert_eq!(meta.vocab, 16);
+        assert_eq!(meta.inputs.len(), 2);
+        assert_eq!(meta.inputs[1].kind, "param");
+        assert_eq!(meta.inputs[1].nbytes, 512);
+    }
+
+    #[test]
+    fn meta_missing_fields_rejected() {
+        let dir = std::env::temp_dir().join("pimgpt-meta-test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("bad.meta.json"), r#"{"name":"bad"}"#).unwrap();
+        assert!(ArtifactMeta::load(&dir, "bad").is_err());
+    }
+}

@@ -1,0 +1,54 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them on
+//! the CPU PJRT client. Python is never on this path — artifacts are built
+//! once by `make artifacts`.
+//!
+//! Interchange is HLO *text* (see `/opt/xla-example/README.md` and
+//! DESIGN.md §2): jax >= 0.5 emits 64-bit instruction ids that the
+//! crate's xla_extension 0.5.1 proto path rejects; the text parser
+//! reassigns ids and round-trips cleanly.
+
+pub mod artifact;
+
+pub use artifact::{argmax, ArtifactMeta, CacheBuf, GptArtifact, InputSpec};
+
+use anyhow::Result;
+
+/// Thin wrapper over the `xla` crate PJRT CPU client.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        Ok(Self { client: xla::PjRtClient::cpu()? })
+    }
+
+    /// Platform name, e.g. "cpu".
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it into an executable.
+    pub fn load_hlo_text(&self, path: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(self.client.compile(&comp)?)
+    }
+
+    /// Upload a literal to the device, *synchronously*.
+    ///
+    /// `buffer_from_host_literal` enqueues the copy on a worker thread and
+    /// captures a reference to the source literal; returning before the
+    /// copy completes is a use-after-free hazard (observed SIGSEGV in
+    /// `AbstractTfrtCpuBuffer::CopyFromLiteral` when the literal or its
+    /// shape is dropped early). Awaiting the buffer's definition event
+    /// via `to_literal_sync` fences the upload (`CopyRawToHost` is not
+    /// implemented by this CPU client, so a cheaper 1-element probe is
+    /// unavailable).
+    pub fn to_device(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        let buf = self.client.buffer_from_host_literal(None, lit)?;
+        let _fence = buf.to_literal_sync()?;
+        Ok(buf)
+    }
+}

@@ -1,0 +1,415 @@
+//! Event-driven clock-cycle simulator (paper §V.A "Simulation
+//! Configuration").
+//!
+//! The hardware is a tree — package -> 8 channels -> 16 banks — plus the
+//! ASIC. Every node carries a `busy_until` ("next_time") and transitions
+//! Idle -> Process when an instruction is issued, exactly as the paper
+//! describes. Because each compiled instruction names its dependencies,
+//! the data-triggered scheduler reduces to: issue each instruction at
+//! `max(dep finish times, resource free time)` and record its finish.
+//! Instruction order is topological, so a single in-order pass over the
+//! program *is* the event-driven execution — there is no speculative
+//! reordering in the hardware to model.
+//!
+//! Timing fidelity lives in the leaf models: bank-level ACT/PRE/MAC/WR
+//! cycle layout (`dram::bank`), channel GB-broadcast + drain pipelining
+//! (`pim::channel`), ASIC engine add/mul streams (`asic::engine`), and
+//! per-channel refresh (tREFI/tRFC).
+
+use super::stats::{LatClass, SimStats};
+use crate::asic::{AsicOp, Engine};
+use crate::compiler::{compile, Instr, Program};
+use crate::config::HwConfig;
+use crate::dram::TimingCycles;
+use crate::mapping::ModelMapping;
+use crate::model::{DecodeGraph, GptModel, MatrixKind};
+use crate::pim::{Channel, UnitWork, VmmPlan};
+use anyhow::Result;
+
+/// Cycles to flush the last streamed chunk through an ASIC engine after
+/// its final input arrives (engine fill + one burst).
+const TAIL_CYCLES: u64 = 12;
+
+/// Per-token result.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepResult {
+    pub start_cycle: u64,
+    pub finish_cycle: u64,
+}
+
+impl StepResult {
+    pub fn cycles(&self) -> u64 {
+        self.finish_cycle - self.start_cycle
+    }
+}
+
+/// The PIM-GPT system simulator.
+pub struct Simulator {
+    pub cfg: HwConfig,
+    pub model: GptModel,
+    pub mapping: ModelMapping,
+    t: TimingCycles,
+    channels: Vec<Channel>,
+    engine: Engine,
+    /// ASIC engine availability (ops serialize on the engines).
+    asic_free: u64,
+    clock: u64,
+    pub stats: SimStats,
+    /// Reusable finish-time scratch (avoids per-step allocation).
+    finish: Vec<u64>,
+    /// First-partial-result time per instruction (== finish for non-VMM);
+    /// streamable ASIC consumers may start here (paper §IV.A(3)).
+    first_ready: Vec<u64>,
+    /// Reusable per-channel VMM plan (bank_work rebuilt in place —
+    /// profiling showed plan allocation churn was ~15% of sim time,
+    /// EXPERIMENTS.md §Perf).
+    plan_scratch: VmmPlan,
+}
+
+impl Simulator {
+    pub fn new(model: &GptModel, cfg: &HwConfig) -> Result<Self> {
+        let mapping = ModelMapping::build(model, cfg)?;
+        let t = TimingCycles::from_config(cfg);
+        let channels = (0..cfg.gddr6.channels).map(|_| Channel::new(cfg)).collect();
+        Ok(Self {
+            cfg: cfg.clone(),
+            model: model.clone(),
+            mapping,
+            t,
+            channels,
+            engine: Engine::new(cfg),
+            asic_free: 0,
+            clock: 0,
+            stats: SimStats::default(),
+            finish: Vec::new(),
+            first_ready: Vec::new(),
+            plan_scratch: VmmPlan {
+                bank_work: (0..cfg.gddr6.banks_per_channel).map(|_| UnitWork::Idle).collect(),
+                input_elems: 0,
+                output_elems: 0,
+            },
+        })
+    }
+
+    pub fn clock(&self) -> u64 {
+        self.clock
+    }
+
+    /// Simulate decoding the token at position `pos`.
+    pub fn decode_step(&mut self, pos: u64) -> Result<StepResult> {
+        let graph = DecodeGraph::build(&self.model, pos);
+        let program = compile(&graph, &self.cfg)?;
+        self.run_program(&program, pos)
+    }
+
+    /// Simulate a full generation of `n_tokens` (positions 0..n).
+    pub fn generate(&mut self, n_tokens: u64) -> Result<StepResult> {
+        let start = self.clock;
+        for pos in 0..n_tokens {
+            self.decode_step(pos)?;
+        }
+        Ok(StepResult { start_cycle: start, finish_cycle: self.clock })
+    }
+
+    /// Execute one compiled program; the token position drives KV
+    /// addressing.
+    pub fn run_program(&mut self, program: &Program, pos: u64) -> Result<StepResult> {
+        let step_start = self.clock;
+        self.finish.clear();
+        self.finish.reserve(program.nodes.len());
+        self.first_ready.clear();
+        self.first_ready.reserve(program.nodes.len());
+
+        for node in &program.nodes {
+            let mut ready = step_start;
+            for &d in &node.deps {
+                ready = ready.max(self.finish[d]);
+            }
+            let mut node_first_ready = None;
+            let (fin, class) = match &node.instr {
+                Instr::PimVmm { matrix, class, in_elems, out_elems, parts } => {
+                    let (fin, fr) = self.exec_vmm(ready, matrix.layer, matrix.kind, *in_elems, *out_elems, *parts, program.ltoken);
+                    node_first_ready = Some(fr.min(fin));
+                    (fin, LatClass::Vmm((*class).into()))
+                }
+                Instr::Asic(op) => {
+                    // Pipelining (paper §IV.A(3)): a streamable op begins
+                    // once every dependency has *started producing* —
+                    // VMM deps gate at first_ready — but cannot finish
+                    // before all inputs have fully arrived (dep finish)
+                    // plus the tail of processing the last chunk.
+                    let start = if op.streamable() {
+                        let mut s = step_start;
+                        for &d in &node.deps {
+                            s = s.max(self.first_ready[d]);
+                        }
+                        s.max(self.asic_free)
+                    } else {
+                        ready.max(self.asic_free)
+                    };
+                    let fin = self.engine.execute(start, op);
+                    let fin = if op.streamable() {
+                        // Last-chunk tail: engine fill + one burst.
+                        fin.max(ready + TAIL_CYCLES)
+                    } else {
+                        fin
+                    };
+                    self.asic_free = fin;
+                    (fin, asic_class(op))
+                }
+                Instr::WriteK { layer } => {
+                    let (unit, segs) = self.mapping.kv.k_write(*layer, pos);
+                    let mut fin = ready;
+                    for seg in segs {
+                        fin = self.channels[unit.channel].write_k(&self.t, fin, unit.bank, seg);
+                    }
+                    (fin, LatClass::KvWrite)
+                }
+                Instr::WriteV { layer } => {
+                    let n_units = self.mapping.kv.n_units;
+                    let banks = self.mapping.kv.banks_per_channel;
+                    let mut fin = ready;
+                    for u in 0..n_units {
+                        let (base, n_cols, stride) = self.mapping.kv.v_write(*layer, pos, u);
+                        if n_cols == 0 {
+                            continue;
+                        }
+                        let f = self.channels[u / banks].write_v(&self.t, ready, u % banks, n_cols, base, stride);
+                        fin = fin.max(f);
+                    }
+                    (fin, LatClass::KvWrite)
+                }
+            };
+            // Streamable ops may *start* before `ready` (pipelined with
+            // their producer) but never finish before it.
+            let attributed = fin.saturating_sub(ready);
+            self.stats.add_class(class, attributed);
+            self.first_ready.push(node_first_ready.unwrap_or(fin));
+            self.finish.push(fin);
+            self.clock = self.clock.max(fin);
+        }
+
+        self.stats.tokens += 1;
+        self.stats.instructions += program.nodes.len() as u64;
+        Ok(StepResult { start_cycle: step_start, finish_cycle: self.clock })
+    }
+
+    /// Dispatch a VMM to all channels; returns (slowest finish, earliest
+    /// first-partial-result time).
+    fn exec_vmm(
+        &mut self,
+        start: u64,
+        layer: usize,
+        kind: MatrixKind,
+        in_elems: u64,
+        _out_elems: u64,
+        _parts: u64,
+        ltoken: u64,
+    ) -> (u64, u64) {
+        let banks = self.cfg.gddr6.banks_per_channel;
+        let n_head = self.model.n_head as u64;
+        let mut slowest = start;
+        let mut first_ready = u64::MAX;
+        let plan = &mut self.plan_scratch;
+        plan.input_elems = in_elems;
+        match kind {
+            MatrixKind::KCache | MatrixKind::VCache => {
+                // KV reads are uniform repetitions of a row-fill pattern
+                // per unit: O(1) work via `Bank::mac_pattern` regardless
+                // of context length (EXPERIMENTS.md §Perf iteration 2).
+                let kv = &self.mapping.kv;
+                let (pattern, pattern_len) = if kind == MatrixKind::KCache {
+                    kv.k_read_pattern()
+                } else {
+                    kv.v_read_pattern(ltoken)
+                };
+                for (ch, channel) in self.channels.iter_mut().enumerate() {
+                    let mut out = 0u64;
+                    for b in 0..banks {
+                        let u = ch * banks + b;
+                        let (base_row, reps) = if kind == MatrixKind::KCache {
+                            out += kv.k_out_elems(u, ltoken, n_head);
+                            (kv.k_base[layer][u], kv.k_owned(u, ltoken))
+                        } else {
+                            let cols = kv.v_cols(u);
+                            out += cols as u64;
+                            (kv.v_base[layer][u], cols)
+                        };
+                        plan.bank_work[b] =
+                            UnitWork::Pattern { base_row, reps, pattern, pattern_len };
+                    }
+                    plan.output_elems = out;
+                    let e = channel.execute_vmm(&self.cfg, &self.t, start, plan);
+                    slowest = slowest.max(e.finish);
+                    first_ready = first_ready.min(e.first_ready);
+                }
+            }
+            _ => {
+                let id = crate::model::MatrixId::new(layer, kind);
+                let placement = &self.mapping.matrices[&id];
+                for (ch, channel) in self.channels.iter_mut().enumerate() {
+                    let mut out = 0u64;
+                    for b in 0..banks {
+                        let u = ch * banks + b;
+                        out += placement.out_cols[u];
+                        plan.bank_work[b] = UnitWork::Block(placement.per_unit[u]);
+                    }
+                    plan.output_elems = out;
+                    let e = channel.execute_vmm(&self.cfg, &self.t, start, plan);
+                    slowest = slowest.max(e.finish);
+                    first_ready = first_ready.min(e.first_ready);
+                }
+            }
+        }
+        if first_ready == u64::MAX {
+            first_ready = slowest;
+        }
+        (slowest, first_ready)
+    }
+
+    /// Fold channel/engine counters into the stats (call once at the end
+    /// of a run; counters accumulate monotonically).
+    pub fn finalize_stats(&mut self) -> &SimStats {
+        self.stats.cycles = self.clock;
+        self.stats.row_hits = 0;
+        self.stats.row_misses = 0;
+        self.stats.bytes_in = 0;
+        self.stats.bytes_out = 0;
+        self.stats.acts = 0;
+        self.stats.pres = 0;
+        self.stats.refreshes = 0;
+        self.stats.mac_read_cycles = 0;
+        self.stats.write_cycles = 0;
+        self.stats.write_recoveries = 0;
+        self.stats.bank_busy_cycles = 0;
+        for ch in &self.channels {
+            let (s, c) = ch.stats();
+            self.stats.row_hits += s.row_hits;
+            self.stats.row_misses += s.row_misses;
+            self.stats.bytes_in += ch.bytes_in;
+            self.stats.bytes_out += ch.bytes_out;
+            self.stats.acts += c.act;
+            self.stats.pres += c.pre;
+            self.stats.refreshes += c.refresh;
+            self.stats.mac_read_cycles += c.mac_read_cycles;
+            self.stats.write_cycles += c.write_cycles;
+            self.stats.write_recoveries += c.write_recoveries;
+            self.stats.bank_busy_cycles += c.busy_cycles;
+        }
+        self.stats.asic_busy_cycles = self.engine.busy_cycles;
+        self.stats.asic_ops = self.engine.ops_executed;
+        &self.stats
+    }
+
+    /// Access to per-bank command counts (energy model).
+    pub fn channels(&self) -> &[Channel] {
+        &self.channels
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+}
+
+fn asic_class(op: &AsicOp) -> LatClass {
+    match op {
+        AsicOp::Softmax { .. } => LatClass::Softmax,
+        AsicOp::LayerNorm { .. } => LatClass::LayerNorm,
+        AsicOp::Gelu { .. } => LatClass::Gelu,
+        AsicOp::ResidualAdd { .. } => LatClass::Residual,
+        AsicOp::PartialSum { .. } => LatClass::PartialSum,
+        AsicOp::BiasAdd { .. } | AsicOp::Scale { .. } => LatClass::BiasScale,
+        AsicOp::Concat { .. } => LatClass::Other,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::gpt::by_name;
+
+    fn sim(model: &str) -> Simulator {
+        Simulator::new(&by_name(model).unwrap(), &HwConfig::paper_baseline()).unwrap()
+    }
+
+    #[test]
+    fn one_token_advances_clock() {
+        let mut s = sim("gpt2-small");
+        let r = s.decode_step(0).unwrap();
+        assert!(r.cycles() > 0);
+        assert_eq!(s.clock(), r.finish_cycle);
+    }
+
+    #[test]
+    fn later_tokens_cost_more() {
+        // Attention grows with context: step at pos 500 must cost more
+        // cycles than step at pos 0.
+        let mut s = sim("gpt2-small");
+        let r0 = s.decode_step(0).unwrap();
+        let r500 = s.decode_step(500).unwrap();
+        assert!(r500.cycles() > r0.cycles(), "{} vs {}", r500.cycles(), r0.cycles());
+    }
+
+    #[test]
+    fn vmm_dominates_latency() {
+        // Fig. 10: VMM operations dominate total execution time.
+        let mut s = sim("gpt2-small");
+        for pos in 0..4 {
+            s.decode_step(pos).unwrap();
+        }
+        s.finalize_stats();
+        assert!(s.stats.vmm_fraction() > 0.8, "vmm fraction {}", s.stats.vmm_fraction());
+    }
+
+    #[test]
+    fn row_hit_rate_high() {
+        // Fig. 11a: ~98% for all tested GPT models.
+        let mut s = sim("gpt2-small");
+        for pos in 0..4 {
+            s.decode_step(pos).unwrap();
+        }
+        s.finalize_stats();
+        let rate = s.stats.row_hit_rate();
+        assert!(rate > 0.95, "row hit rate {rate}");
+    }
+
+    #[test]
+    fn bigger_model_slower() {
+        let mut a = sim("gpt2-small");
+        let mut b = sim("gpt2-medium");
+        let ra = a.decode_step(0).unwrap();
+        let rb = b.decode_step(0).unwrap();
+        assert!(rb.cycles() > ra.cycles());
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut a = sim("gpt3-small");
+        let mut b = sim("gpt3-small");
+        for pos in 0..3 {
+            assert_eq!(a.decode_step(pos).unwrap().cycles(), b.decode_step(pos).unwrap().cycles());
+        }
+    }
+
+    #[test]
+    fn per_token_latency_plausible() {
+        // gpt2-small (124M params): weights alone need P/(128 units * 16
+        // lanes) = ~61k cycles of pure MAC; with ACT/PRE overheads the
+        // step must land within a small factor of that.
+        let mut s = sim("gpt2-small");
+        let r = s.decode_step(0).unwrap();
+        let pure_mac = 124e6 / (128.0 * 16.0);
+        let ratio = r.cycles() as f64 / pure_mac;
+        assert!(ratio > 1.0 && ratio < 3.0, "ratio {ratio} ({} cycles)", r.cycles());
+    }
+
+    #[test]
+    fn stats_bytes_match_channels() {
+        let mut s = sim("gpt-nano");
+        s.decode_step(0).unwrap();
+        s.finalize_stats();
+        let direct: u64 = s.channels().iter().map(|c| c.bytes_transferred()).sum();
+        assert_eq!(s.stats.bytes_moved(), direct);
+        assert!(direct > 0);
+    }
+}

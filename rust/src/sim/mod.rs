@@ -1,0 +1,7 @@
+//! Event-driven clock-cycle-accurate simulator of the PIM-GPT system.
+
+pub mod engine;
+pub mod stats;
+
+pub use engine::{Simulator, StepResult};
+pub use stats::{LatClass, SimStats};

@@ -1,0 +1,161 @@
+//! Simulation statistics: latency breakdown (Fig. 10), row-hit rates
+//! (Fig. 11a), data movement (Fig. 11b) and the raw inputs of the energy
+//! model.
+
+use std::collections::BTreeMap;
+
+use crate::model::VmmClass;
+
+/// Latency classes reported in the Fig. 10 breakdown.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LatClass {
+    Vmm(VmmClassKey),
+    Softmax,
+    LayerNorm,
+    Gelu,
+    Residual,
+    PartialSum,
+    BiasScale,
+    KvWrite,
+    Other,
+}
+
+/// Orderable mirror of `VmmClass`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum VmmClassKey {
+    Qkv,
+    Score,
+    AttnV,
+    Proj,
+    Fc1,
+    Fc2,
+    LmHead,
+}
+
+impl From<VmmClass> for VmmClassKey {
+    fn from(c: VmmClass) -> Self {
+        match c {
+            VmmClass::Qkv => Self::Qkv,
+            VmmClass::Score => Self::Score,
+            VmmClass::AttnV => Self::AttnV,
+            VmmClass::Proj => Self::Proj,
+            VmmClass::Fc1 => Self::Fc1,
+            VmmClass::Fc2 => Self::Fc2,
+            VmmClass::LmHead => Self::LmHead,
+        }
+    }
+}
+
+impl LatClass {
+    pub fn label(&self) -> String {
+        match self {
+            LatClass::Vmm(k) => format!("vmm:{k:?}").to_lowercase(),
+            other => format!("{other:?}").to_lowercase(),
+        }
+    }
+
+    pub fn is_vmm(&self) -> bool {
+        matches!(self, LatClass::Vmm(_))
+    }
+}
+
+/// Aggregated run statistics.
+#[derive(Clone, Debug, Default)]
+pub struct SimStats {
+    /// Total simulated cycles (DRAM clock).
+    pub cycles: u64,
+    /// Tokens generated.
+    pub tokens: u64,
+    /// Per-class *critical-path* cycles: each instruction's wall time is
+    /// attributed to its class. Concurrent instructions (KV writes
+    /// overlapping VMMs) can make the column sum exceed `cycles`; the
+    /// breakdown is reported as proportions, like the paper's Fig. 10.
+    pub class_cycles: BTreeMap<LatClass, u64>,
+    /// DRAM row hits/misses at column-access granularity (Fig. 11a).
+    pub row_hits: u64,
+    pub row_misses: u64,
+    /// Bytes over the PIM<->ASIC interface, by direction (Fig. 11b).
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+    /// DRAM command totals (energy model inputs).
+    pub acts: u64,
+    pub pres: u64,
+    pub refreshes: u64,
+    pub mac_read_cycles: u64,
+    pub write_cycles: u64,
+    pub write_recoveries: u64,
+    pub bank_busy_cycles: u64,
+    /// ASIC engine busy cycles + op count.
+    pub asic_busy_cycles: u64,
+    pub asic_ops: u64,
+    /// Instructions executed.
+    pub instructions: u64,
+}
+
+impl SimStats {
+    pub fn add_class(&mut self, class: LatClass, cycles: u64) {
+        *self.class_cycles.entry(class).or_insert(0) += cycles;
+    }
+
+    pub fn row_hit_rate(&self) -> f64 {
+        let total = self.row_hits + self.row_misses;
+        if total == 0 {
+            return 1.0;
+        }
+        self.row_hits as f64 / total as f64
+    }
+
+    pub fn bytes_moved(&self) -> u64 {
+        self.bytes_in + self.bytes_out
+    }
+
+    /// Seconds at `freq_ghz` DRAM clock.
+    pub fn seconds(&self, freq_ghz: f64) -> f64 {
+        self.cycles as f64 / (freq_ghz * 1e9)
+    }
+
+    /// Fraction of attributed time spent in VMM classes.
+    pub fn vmm_fraction(&self) -> f64 {
+        let total: u64 = self.class_cycles.values().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let vmm: u64 = self.class_cycles.iter().filter(|(c, _)| c.is_vmm()).map(|(_, v)| v).sum();
+        vmm as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_accumulation() {
+        let mut s = SimStats::default();
+        s.add_class(LatClass::Softmax, 10);
+        s.add_class(LatClass::Softmax, 5);
+        s.add_class(LatClass::Vmm(VmmClassKey::Qkv), 85);
+        assert_eq!(s.class_cycles[&LatClass::Softmax], 15);
+        assert!((s.vmm_fraction() - 0.85).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hit_rate_bounds() {
+        let s = SimStats { row_hits: 98, row_misses: 2, ..Default::default() };
+        assert!((s.row_hit_rate() - 0.98).abs() < 1e-12);
+        assert_eq!(SimStats::default().row_hit_rate(), 1.0);
+    }
+
+    #[test]
+    fn seconds_conversion() {
+        let s = SimStats { cycles: 2_000_000_000, ..Default::default() };
+        assert!((s.seconds(1.0) - 2.0).abs() < 1e-12);
+        assert!((s.seconds(2.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn labels_lowercase() {
+        assert_eq!(LatClass::Vmm(VmmClassKey::LmHead).label(), "vmm:lmhead");
+        assert_eq!(LatClass::KvWrite.label(), "kvwrite");
+    }
+}

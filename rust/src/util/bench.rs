@@ -1,0 +1,75 @@
+//! Wall-clock micro-bench harness (offline stand-in for criterion, see
+//! DESIGN.md §5). Used by the `rust/benches/*` targets, which are plain
+//! `harness = false` binaries run by `cargo bench`.
+
+use std::time::Instant;
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub total_s: f64,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10} iters  mean {:>12}  min {:>12}  max {:>12}",
+            self.name,
+            self.iters,
+            super::table::fmt_time_s(self.mean_s),
+            super::table::fmt_time_s(self.min_s),
+            super::table::fmt_time_s(self.max_s),
+        )
+    }
+}
+
+/// Time `f` with `warmup` throwaway runs then `iters` measured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: u64, iters: u64, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters as usize);
+    let start = Instant::now();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let total_s = start.elapsed().as_secs_f64();
+    let mean_s = times.iter().sum::<f64>() / times.len().max(1) as f64;
+    let min_s = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max_s = times.iter().cloned().fold(0.0, f64::max);
+    let r = BenchResult { name: name.to_string(), iters, total_s, mean_s, min_s, max_s };
+    println!("{}", r.report());
+    r
+}
+
+/// Opaque value sink preventing the optimizer from eliding benched work.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let r = bench("spin", 1, 5, || {
+            let mut s = 0u64;
+            for i in 0..1000 {
+                s = s.wrapping_add(black_box(i));
+            }
+            black_box(s);
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.mean_s > 0.0);
+        assert!(r.min_s <= r.mean_s && r.mean_s <= r.max_s + 1e-12);
+    }
+}

@@ -1,0 +1,46 @@
+//! Small self-contained utilities.
+//!
+//! The offline build environment provides no serde/clap/criterion/proptest,
+//! so this module carries minimal replacements (documented in DESIGN.md §5):
+//! a JSON parser/emitter, a seeded xorshift RNG, a tiny property-test
+//! harness, an ascii table formatter and a wall-clock bench harness.
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod table;
+
+/// Integer ceiling division.
+#[inline]
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// Round `n` up to the next multiple of `mult`.
+#[inline]
+pub fn pad_to(n: u64, mult: u64) -> u64 {
+    ceil_div(n, mult) * mult
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+    }
+
+    #[test]
+    fn pad_to_basics() {
+        assert_eq!(pad_to(0, 16), 0);
+        assert_eq!(pad_to(1, 16), 16);
+        assert_eq!(pad_to(16, 16), 16);
+        assert_eq!(pad_to(17, 16), 32);
+    }
+}

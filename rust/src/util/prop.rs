@@ -1,0 +1,61 @@
+//! Miniature property-based testing harness (offline stand-in for
+//! `proptest`, see DESIGN.md §5).
+//!
+//! ```no_run
+//! use pim_gpt::util::prop::check;
+//! check("addition commutes", 200, |rng| {
+//!     let a = rng.gen_range(1000) as i64;
+//!     let b = rng.gen_range(1000) as i64;
+//!     if a + b == b + a { Ok(()) } else { Err(format!("{a} {b}")) }
+//! });
+//! ```
+//!
+//! Each case gets an independently-seeded RNG; on failure the panic message
+//! carries the case seed so the exact input can be replayed.
+
+use super::rng::Rng;
+
+/// Run `iters` random cases of `f`. Panics (test failure) on the first
+/// `Err`, reporting the failing seed.
+pub fn check<F>(name: &str, iters: u64, f: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..iters {
+        let seed = 0xC0FFEE ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assert-style helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("xor involution", 100, |rng| {
+            let x = rng.next_u64();
+            let k = rng.next_u64();
+            if (x ^ k) ^ k == x { Ok(()) } else { Err(format!("{x} {k}")) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics() {
+        check("always fails", 10, |_| Err("nope".into()));
+    }
+}

@@ -1,0 +1,136 @@
+//! Ascii table formatting for the figure/table reports.
+
+/// A simple left-aligned ascii table.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        Self { header: header.into_iter().map(Into::into).collect(), rows: vec![] }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.len();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", c, w = width[i]));
+            }
+            s.push('\n');
+            s
+        };
+        let sep = {
+            let mut s = String::from("+");
+            for w in &width {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s.push('\n');
+            s
+        };
+        let mut out = String::new();
+        out.push_str(&sep);
+        out.push_str(&line(&self.header));
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&line(row));
+        }
+        out.push_str(&sep);
+        out
+    }
+}
+
+/// Format a f64 with engineering-style precision (3 significant digits).
+pub fn sig3(v: f64) -> String {
+    if v == 0.0 {
+        return "0".into();
+    }
+    let a = v.abs();
+    if a >= 100.0 {
+        format!("{v:.0}")
+    } else if a >= 10.0 {
+        format!("{v:.1}")
+    } else if a >= 1.0 {
+        format!("{v:.2}")
+    } else {
+        format!("{v:.3}")
+    }
+}
+
+/// Human latency: picks ns/us/ms/s.
+pub fn fmt_time_s(seconds: f64) -> String {
+    let a = seconds.abs();
+    if a >= 1.0 {
+        format!("{} s", sig3(seconds))
+    } else if a >= 1e-3 {
+        format!("{} ms", sig3(seconds * 1e3))
+    } else if a >= 1e-6 {
+        format!("{} us", sig3(seconds * 1e6))
+    } else {
+        format!("{} ns", sig3(seconds * 1e9))
+    }
+}
+
+/// Human energy: picks pJ/nJ/uJ/mJ/J.
+pub fn fmt_energy_j(joules: f64) -> String {
+    let a = joules.abs();
+    if a >= 1.0 {
+        format!("{} J", sig3(joules))
+    } else if a >= 1e-3 {
+        format!("{} mJ", sig3(joules * 1e3))
+    } else if a >= 1e-6 {
+        format!("{} uJ", sig3(joules * 1e6))
+    } else if a >= 1e-9 {
+        format!("{} nJ", sig3(joules * 1e9))
+    } else {
+        format!("{} pJ", sig3(joules * 1e12))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(vec!["model", "x"]);
+        t.row(vec!["gpt2-small", "1"]);
+        t.row(vec!["a", "1234"]);
+        let s = t.render();
+        assert!(s.contains("| model      | x    |"), "{s}");
+        assert!(s.contains("| gpt2-small | 1    |"), "{s}");
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        Table::new(vec!["a", "b"]).row(vec!["only-one"]);
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(sig3(0.0), "0");
+        assert_eq!(sig3(123.4), "123");
+        assert_eq!(sig3(12.34), "12.3");
+        assert_eq!(fmt_time_s(0.0025), "2.50 ms");
+        assert_eq!(fmt_energy_j(3.3e-7), "330 nJ");
+    }
+}

@@ -1,0 +1,79 @@
+//! Coordinator end-to-end: generation + serving, with the functional
+//! artifact when available.
+
+use std::path::Path;
+
+use pim_gpt::config::HwConfig;
+use pim_gpt::coordinator::{PimGptSystem, Request, Server};
+use pim_gpt::model::gpt::by_name;
+
+fn artifacts_available(name: &str) -> bool {
+    Path::new("artifacts").join(format!("{name}.meta.json")).exists()
+}
+
+#[test]
+fn timing_only_end_to_end() {
+    let m = by_name("gpt2-small").unwrap();
+    let mut sys = PimGptSystem::timing_only(&m, &HwConfig::paper_baseline()).unwrap();
+    let r = sys.generate(&[1, 2, 3, 4], 12).unwrap();
+    assert_eq!(r.tokens.len(), 16);
+    assert!(r.sim_seconds > 0.0);
+    assert!(r.sim_energy_j > 0.0);
+}
+
+#[test]
+fn functional_end_to_end_with_artifact() {
+    if !artifacts_available("gpt-nano") {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let cfg = HwConfig::paper_baseline();
+    let mut sys = PimGptSystem::with_artifact("gpt-nano", Path::new("artifacts"), &cfg).unwrap();
+    assert!(sys.has_artifact());
+    let r = sys.generate(&[1, 2, 3], 5).unwrap();
+    // Functional tokens must match the python golden sequence.
+    assert_eq!(r.tokens, vec![1, 2, 3, 295, 295, 295, 295, 295]);
+    assert!(r.wall_seconds > 0.0);
+    assert!(r.sim_seconds > 0.0);
+    // The simulated accelerator must be far faster than functional CPU.
+    assert!(r.sim_seconds < r.wall_seconds);
+}
+
+#[test]
+fn server_handles_mixed_workload() {
+    let server = Server::start(|| {
+        let m = by_name("gpt-nano").unwrap();
+        PimGptSystem::timing_only(&m, &HwConfig::paper_baseline())
+    });
+    // Mix of valid and invalid requests.
+    server.submit(Request { id: 0, prompt: vec![1], n_new: 4 }).unwrap();
+    server.submit(Request { id: 1, prompt: vec![0; 200], n_new: 10 }).unwrap(); // too long
+    server.submit(Request { id: 2, prompt: vec![2, 3], n_new: 6 }).unwrap();
+    let r0 = server.recv().unwrap();
+    let r1 = server.recv().unwrap();
+    let r2 = server.recv().unwrap();
+    assert!(r0.error.is_none() && r0.tokens.len() == 5);
+    assert!(r1.error.is_some());
+    assert!(r2.error.is_none() && r2.tokens.len() == 8);
+    let m = server.shutdown();
+    assert_eq!(m.requests, 3);
+    assert_eq!(m.failed, 1);
+}
+
+#[test]
+fn server_simulated_latency_accumulates_monotonically() {
+    let server = Server::start(|| {
+        let m = by_name("gpt2-small").unwrap();
+        PimGptSystem::timing_only(&m, &HwConfig::paper_baseline())
+    });
+    for id in 0..5 {
+        server.submit(Request { id, prompt: vec![1, 2], n_new: 3 }).unwrap();
+    }
+    let mut last_queue = -1.0;
+    for _ in 0..5 {
+        let r = server.recv().unwrap();
+        assert!(r.sim_queue_seconds > last_queue);
+        last_queue = r.sim_queue_seconds;
+    }
+    server.shutdown();
+}

@@ -1,0 +1,112 @@
+//! Figure-harness integration: every experiment regenerates and its
+//! paper-shape assertions hold at reduced scale.
+
+use pim_gpt::config::HwConfig;
+use pim_gpt::report;
+
+#[test]
+fn fig8_9_bands_at_reduced_scale() {
+    let r = report::fig8_9_speedup_energy(16).unwrap();
+    let arr = r.json.as_arr().unwrap();
+    assert_eq!(arr.len(), 8);
+    let get = |i: usize, k: &str| arr[i].get(k).unwrap().as_f64().unwrap();
+    for i in 0..8 {
+        // Loose bounds at 16 tokens; full bands checked in benches.
+        assert!(get(i, "speedup_gpu") > 20.0, "row {i}");
+        assert!(get(i, "speedup_cpu") > 200.0, "row {i}");
+        assert!(get(i, "energy_eff_gpu") > 50.0, "row {i}");
+        assert!(get(i, "energy_eff_cpu") > get(i, "energy_eff_gpu"), "row {i}");
+    }
+    // Monotone: small models gain the most vs GPU (paper Fig. 8 shape).
+    assert!(get(0, "speedup_gpu") > get(3, "speedup_gpu"));
+    assert!(get(4, "speedup_gpu") > get(7, "speedup_gpu"));
+}
+
+#[test]
+fn fig10_arithmetic_small_share() {
+    let r = report::fig10_breakdown(8).unwrap();
+    for row in r.json.as_arr().unwrap() {
+        let vmm = row.get("vmm_share").unwrap().as_f64().unwrap();
+        let arith = row.get("arith_share").unwrap().as_f64().unwrap();
+        assert!(vmm > 0.75, "vmm {vmm}");
+        assert!(arith < 0.15, "arith {arith}");
+    }
+    // GPT3-XL (second row) more VMM-dominated than GPT3-small (first).
+    let arr = r.json.as_arr().unwrap();
+    let s = arr[0].get("vmm_share").unwrap().as_f64().unwrap();
+    let xl = arr[1].get("vmm_share").unwrap().as_f64().unwrap();
+    assert!(xl > s, "{xl} vs {s}");
+}
+
+#[test]
+fn fig11_hit_rate_and_reduction() {
+    let r = report::fig11_locality(16).unwrap();
+    for row in r.json.as_arr().unwrap() {
+        let hit = row.get("row_hit_rate").unwrap().as_f64().unwrap();
+        let red = row.get("reduction").unwrap().as_f64().unwrap();
+        assert!(hit > 0.95, "hit {hit}");
+        assert!(red > 50.0, "reduction {red}");
+    }
+}
+
+#[test]
+fn fig12_insensitive_to_asic_freq() {
+    let r = report::fig12_asic_freq(8).unwrap();
+    for row in r.json.as_arr().unwrap() {
+        let norm = row.get("normalized").unwrap().as_arr().unwrap();
+        let worst = norm.last().unwrap().as_f64().unwrap(); // 100 MHz
+        assert!(worst < 1.35, "{}: {worst}", row.get("model").unwrap());
+    }
+}
+
+#[test]
+fn fig13_bandwidth_sensitivity_bounded() {
+    let r = report::fig13_bandwidth(8).unwrap();
+    for row in r.json.as_arr().unwrap() {
+        let norm = row.get("normalized").unwrap().as_arr().unwrap();
+        let at_1gbps = norm.last().unwrap().as_f64().unwrap();
+        assert!(at_1gbps > 1.05 && at_1gbps < 4.5, "{at_1gbps}");
+    }
+}
+
+#[test]
+fn fig14_superlinear_growth() {
+    let r = report::fig14_long_token(&[64, 128, 256]).unwrap();
+    let arr = r.json.as_arr().unwrap();
+    let n0 = arr[0].get("seconds").unwrap().as_f64().unwrap();
+    let n2 = arr[2].get("seconds").unwrap().as_f64().unwrap();
+    // 4x tokens must cost more than 4x time (attention grows).
+    assert!(n2 > 4.0 * n0, "{n0} -> {n2}");
+}
+
+#[test]
+fn fig15_mac_and_channel_scaling() {
+    let r = report::fig15_scalability(8).unwrap();
+    for row in r.json.as_arr().unwrap() {
+        let knob = row.get("knob").unwrap().as_str().unwrap();
+        let v = row.get("value").unwrap().as_usize().unwrap();
+        let s = row.get("speedup").unwrap().as_f64().unwrap();
+        match (knob, v) {
+            ("mac_lanes", 16) | ("channels", 8) => assert!((s - 1.0).abs() < 1e-9),
+            ("mac_lanes", 64) => assert!(s > 1.4 && s < 4.0, "mac64 {s}"),
+            ("channels", 32) => assert!(s > 2.0 && s < 4.2, "ch32 {s}"),
+            _ => assert!(s >= 1.0),
+        }
+    }
+}
+
+#[test]
+fn table1_matches_paper_defaults() {
+    let r = report::table1_config(&HwConfig::paper_baseline());
+    for needle in ["8 x 16", "2048 B / 16384", "16 pins x 16 Gb/s", "256 / 128", "0.64 mm2 / 304.59 mW"] {
+        assert!(r.rendered.contains(needle), "missing {needle}\n{}", r.rendered);
+    }
+}
+
+#[test]
+fn table2_beats_prior_accelerators() {
+    let r = report::table2_comparison(32).unwrap();
+    let speedup = r.json.get("speedup").unwrap().as_f64().unwrap();
+    // All prior speedups are <= 35x; PIM-GPT must clear them.
+    assert!(speedup > 35.0, "{speedup}");
+}

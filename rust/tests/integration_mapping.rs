@@ -1,0 +1,103 @@
+//! Mapping invariants (Algorithm 3) across models and geometries,
+//! property-style (see `util::prop`).
+
+use pim_gpt::config::HwConfig;
+use pim_gpt::mapping::ModelMapping;
+use pim_gpt::model::gpt::by_name;
+use pim_gpt::model::{DecodeGraph, PAPER_MODELS};
+use pim_gpt::util::prop::check;
+use pim_gpt::util::rng::Rng;
+
+#[test]
+fn every_model_maps_and_fills_consistently() {
+    let cfg = HwConfig::paper_baseline();
+    for m in &PAPER_MODELS {
+        let mm = ModelMapping::build(m, &cfg).unwrap();
+        assert!(mm.fill > 0.0 && mm.fill <= 1.0, "{}", m.name);
+        // every weight element placed exactly once
+        for (id, d_in, d_out) in DecodeGraph::weight_matrices(m) {
+            let p = &mm.matrices[&id];
+            assert_eq!(p.total_elems(cfg.gddr6.row_elems() as u32), d_in * d_out, "{:?}", id);
+        }
+    }
+}
+
+#[test]
+fn prop_random_geometries_map_small_model() {
+    check("random channel/bank geometry maps gpt2-small", 40, |rng: &mut Rng| {
+        let m = by_name("gpt2-small").unwrap();
+        let channels = [2usize, 4, 8, 16][rng.usize_in(0, 4)];
+        let banks = [4usize, 8, 16][rng.usize_in(0, 3)];
+        let mut cfg = HwConfig::paper_baseline();
+        cfg.gddr6.channels = channels;
+        cfg.gddr6.banks_per_channel = banks;
+        let mm = ModelMapping::build(&m, &cfg)
+            .map_err(|e| format!("{channels}x{banks}: {e}"))?;
+        // coverage invariant under any geometry
+        for (id, d_in, d_out) in DecodeGraph::weight_matrices(&m) {
+            let p = &mm.matrices[&id];
+            let got = p.total_elems(cfg.gddr6.row_elems() as u32);
+            if got != d_in * d_out {
+                return Err(format!("{id:?}: {got} != {}", d_in * d_out));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn kv_reads_cover_exactly_written_tokens() {
+    // After t tokens, the K read plan must touch exactly t * d elements
+    // and every row it touches must have been written by k_write.
+    let cfg = HwConfig::paper_baseline();
+    let m = by_name("gpt2-small").unwrap();
+    let mm = ModelMapping::build(&m, &cfg).unwrap();
+    let d = m.d_model as u64;
+    let mut written: std::collections::BTreeSet<(usize, u32)> = Default::default();
+    for t in 0..300u64 {
+        let (unit, segs) = mm.kv.k_write(0, t);
+        let u = unit.channel * cfg.gddr6.banks_per_channel + unit.bank;
+        for s in &segs {
+            written.insert((u, s.row));
+        }
+        let plans = mm.kv.k_read_plan(0, t + 1);
+        let total: u64 = plans.iter().flatten().map(|s| s.elems as u64).sum();
+        assert_eq!(total, (t + 1) * d, "t={t}");
+        for (u, plan) in plans.iter().enumerate() {
+            for s in plan {
+                assert!(written.contains(&(u, s.row)), "t={t} unit {u} row {} unwritten", s.row);
+            }
+        }
+    }
+}
+
+#[test]
+fn capacity_error_on_tiny_memory() {
+    let m = by_name("gpt2-xl").unwrap();
+    let mut cfg = HwConfig::paper_baseline();
+    cfg.gddr6.capacity_gbit = 0.5; // 0.5 Gb/channel: 1.5B params cannot fit
+    assert!(ModelMapping::build(&m, &cfg).is_err());
+}
+
+#[test]
+fn prop_v_write_rows_disjoint_from_k_rows() {
+    check("K and V regions never alias", 30, |rng: &mut Rng| {
+        let cfg = HwConfig::paper_baseline();
+        let m = by_name("gpt2-medium").unwrap();
+        let mm = ModelMapping::build(&m, &cfg).unwrap();
+        let layer = rng.usize_in(0, m.n_layer);
+        let t = rng.gen_range(m.max_seq as u64);
+        let (unit, ksegs) = mm.kv.k_write(layer, t);
+        let u = unit.channel * cfg.gddr6.banks_per_channel + unit.bank;
+        let (vbase, vcols, stride) = mm.kv.v_write(layer, t, u);
+        for ks in &ksegs {
+            for c in 0..vcols {
+                let vrow = vbase + c * stride;
+                if ks.row == vrow {
+                    return Err(format!("layer {layer} t {t} unit {u} row {vrow} aliased"));
+                }
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,71 @@
+//! PJRT artifact round-trip: load the AOT-compiled gpt-nano decode step,
+//! generate tokens and check the golden sequence produced by the python
+//! reference (`model.generate` in python/tests). Skipped gracefully when
+//! `make artifacts` has not been run.
+
+use std::path::Path;
+
+use pim_gpt::runtime::{GptArtifact, PjrtRuntime};
+
+fn artifact_dir() -> Option<&'static Path> {
+    let dir = Path::new("artifacts");
+    dir.join("gpt-nano.meta.json").exists().then_some(dir)
+}
+
+#[test]
+fn nano_generation_matches_python_golden() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        return;
+    };
+    let rt = PjrtRuntime::cpu().unwrap();
+    let art = GptArtifact::load(rt, dir, "gpt-nano").unwrap();
+    let toks = art.generate(&[1, 2, 3], 5).unwrap();
+    // Golden from python: model.generate(cfg, params, [1,2,3], 5)
+    assert_eq!(toks, vec![1, 2, 3, 295, 295, 295, 295, 295]);
+}
+
+#[test]
+fn decode_is_deterministic_and_stateful() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    };
+    let rt = PjrtRuntime::cpu().unwrap();
+    let art = GptArtifact::load(rt, dir, "gpt-nano").unwrap();
+    let (kc, vc) = art.empty_caches().unwrap();
+    let (lg1, kc1, vc1) = art.decode(7, 0, &kc, &vc).unwrap();
+    let (lg2, _, _) = art.decode(7, 0, &kc, &vc).unwrap();
+    assert_eq!(lg1, lg2, "same input, same logits");
+    // History must change the next step's output.
+    let (lg_with, _, _) = art.decode(9, 1, &kc1, &vc1).unwrap();
+    let (lg_no_hist, _, _) = art.decode(9, 1, &kc, &vc).unwrap();
+    assert_ne!(lg_with, lg_no_hist, "cache must affect logits");
+}
+
+#[test]
+fn rejects_out_of_range_position() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    };
+    let rt = PjrtRuntime::cpu().unwrap();
+    let art = GptArtifact::load(rt, dir, "gpt-nano").unwrap();
+    let (kc, vc) = art.empty_caches().unwrap();
+    let max = art.meta.max_seq as i32;
+    assert!(art.decode(1, max, &kc, &vc).is_err());
+}
+
+#[test]
+fn logits_are_finite() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    };
+    let rt = PjrtRuntime::cpu().unwrap();
+    let art = GptArtifact::load(rt, dir, "gpt-nano").unwrap();
+    let (kc, vc) = art.empty_caches().unwrap();
+    let (lg, _, _) = art.decode(0, 0, &kc, &vc).unwrap();
+    assert_eq!(lg.len(), art.meta.vocab);
+    assert!(lg.iter().all(|v| v.is_finite()));
+}

@@ -1,0 +1,126 @@
+//! Full-system simulation invariants across models and configurations.
+
+use pim_gpt::config::HwConfig;
+use pim_gpt::energy::SystemEnergy;
+use pim_gpt::model::gpt::by_name;
+use pim_gpt::model::PAPER_MODELS;
+use pim_gpt::sim::Simulator;
+
+#[test]
+fn all_paper_models_simulate() {
+    for m in &PAPER_MODELS {
+        let mut sim = Simulator::new(m, &HwConfig::paper_baseline()).unwrap();
+        let r = sim.generate(4).unwrap();
+        assert!(r.cycles() > 0, "{}", m.name);
+        sim.finalize_stats();
+        assert!(sim.stats.row_hit_rate() > 0.9, "{}", m.name);
+        assert!(sim.stats.vmm_fraction() > 0.6, "{}", m.name);
+    }
+}
+
+#[test]
+fn latency_ordering_matches_model_size() {
+    // Within each family, per-token latency grows with parameter count.
+    let cfg = HwConfig::paper_baseline();
+    let mut last = 0u64;
+    for name in ["gpt2-small", "gpt2-medium", "gpt2-large", "gpt2-xl"] {
+        let m = by_name(name).unwrap();
+        let mut sim = Simulator::new(&m, &cfg).unwrap();
+        let cycles = sim.generate(4).unwrap().cycles();
+        assert!(cycles > last, "{name}: {cycles} <= {last}");
+        last = cycles;
+    }
+}
+
+#[test]
+fn state_persists_across_steps() {
+    // Row buffers stay open across tokens: the second nearly-identical
+    // step is never much slower than the first.
+    let m = by_name("gpt2-small").unwrap();
+    let mut sim = Simulator::new(&m, &HwConfig::paper_baseline()).unwrap();
+    let c1 = sim.decode_step(0).unwrap().cycles();
+    let c2 = sim.decode_step(1).unwrap().cycles();
+    // pos 1 attends over 2 tokens -> slightly more work, but within 5%
+    assert!((c2 as f64) < (c1 as f64) * 1.05, "{c1} -> {c2}");
+}
+
+#[test]
+fn energy_consistent_with_duration() {
+    // Average power must land between idle floor and a loose peak bound.
+    let m = by_name("gpt2-medium").unwrap();
+    let mut sim = Simulator::new(&m, &HwConfig::paper_baseline()).unwrap();
+    sim.generate(8).unwrap();
+    sim.finalize_stats();
+    let secs = sim.stats.seconds(1.0);
+    let e = SystemEnergy::from_sim(&sim);
+    let avg_w = e.total_j() / secs;
+    assert!(avg_w > 0.5 && avg_w < 100.0, "avg power {avg_w} W");
+}
+
+#[test]
+fn sensitivity_shapes_hold() {
+    // Fig. 12/13 qualitative shapes on one model (fast versions).
+    let m = by_name("gpt3-small").unwrap();
+    let base = {
+        let mut s = Simulator::new(&m, &HwConfig::paper_baseline()).unwrap();
+        s.generate(8).unwrap().cycles()
+    };
+    // 10x slower ASIC: <= 30% slowdown (paper: worst 20% at full scale).
+    let slow_asic = {
+        let cfg = HwConfig::paper_baseline().with_asic_freq_ghz(0.1);
+        let mut s = Simulator::new(&m, &cfg).unwrap();
+        s.generate(8).unwrap().cycles()
+    };
+    let asic_ratio = slow_asic as f64 / base as f64;
+    assert!(asic_ratio < 1.3, "asic ratio {asic_ratio}");
+    // 16x slower interface: bounded (paper: ~2x at 1 Gb/s).
+    let slow_bus = {
+        let cfg = HwConfig::paper_baseline().with_data_rate_gbps(1.0);
+        let mut s = Simulator::new(&m, &cfg).unwrap();
+        s.generate(8).unwrap().cycles()
+    };
+    let bus_ratio = slow_bus as f64 / base as f64;
+    assert!(bus_ratio > 1.1 && bus_ratio < 4.0, "bus ratio {bus_ratio}");
+    // MAC lanes 16 -> 64: faster, sub-linear (paper: 1.8-2.0x).
+    let wide = {
+        let cfg = HwConfig::paper_baseline().with_mac_lanes(64);
+        let mut s = Simulator::new(&m, &cfg).unwrap();
+        s.generate(8).unwrap().cycles()
+    };
+    let speedup = base as f64 / wide as f64;
+    assert!(speedup > 1.3 && speedup < 4.0, "mac speedup {speedup}");
+}
+
+#[test]
+fn channel_scaling_near_linear() {
+    let m = by_name("gpt3-small").unwrap();
+    let t8 = {
+        let mut s = Simulator::new(&m, &HwConfig::paper_baseline()).unwrap();
+        s.generate(8).unwrap().cycles()
+    };
+    let t16 = {
+        let cfg = HwConfig::paper_baseline().with_channels(16);
+        let mut s = Simulator::new(&m, &cfg).unwrap();
+        s.generate(8).unwrap().cycles()
+    };
+    let speedup = t8 as f64 / t16 as f64;
+    assert!(speedup > 1.5 && speedup <= 2.05, "channel speedup {speedup}");
+}
+
+#[test]
+fn long_context_grows_attention_cost() {
+    let m = by_name("gpt3-small").unwrap();
+    let mut sim = Simulator::new(&m, &HwConfig::paper_baseline()).unwrap();
+    let early = sim.decode_step(1).unwrap().cycles();
+    let late = sim.decode_step(2000).unwrap().cycles();
+    assert!(late as f64 > 1.2 * early as f64, "{early} -> {late}");
+}
+
+#[test]
+fn functional_configs_simulate_too() {
+    for name in ["gpt-nano", "gpt-mini"] {
+        let m = by_name(name).unwrap();
+        let mut sim = Simulator::new(&m, &HwConfig::paper_baseline()).unwrap();
+        assert!(sim.generate(4).unwrap().cycles() > 0);
+    }
+}
