@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
     println!("== PIM-GPT end-to-end: functional decode + timing co-simulation ==");
     let cfg2 = cfg.clone();
     let m2 = model.clone();
-    let server = Server::start(move || PimGptSystem::with_artifact(&m2, &dir, &cfg2));
+    let mut server = Server::start(move || PimGptSystem::with_artifact(&m2, &dir, &cfg2));
 
     // A small trace of requests: varied prompts and lengths.
     let prompts: Vec<(Vec<i32>, usize)> = (0..12)

@@ -16,7 +16,7 @@ use pim_gpt::model::gpt::by_name;
 
 fn serve_trace(cfg: HwConfig, model: &str, n_req: u64) -> anyhow::Result<(f64, f64)> {
     let name = model.to_string();
-    let server = Server::start(move || {
+    let mut server = Server::start(move || {
         let m = by_name(&name).unwrap();
         PimGptSystem::timing_only(&m, &cfg)
     });

@@ -1,12 +1,13 @@
 //! Microbenchmarks of the simulator hot path (the §Perf targets):
 //! per-token decode cost across model sizes and context lengths, the
-//! mapping stage, and graph compilation.
+//! mapping stage, graph compilation, and the multi-request scheduler
+//! (simulated throughput at K ∈ {1, 2, 4} + program-cache hit rate).
 use pim_gpt::compiler::compile;
 use pim_gpt::config::HwConfig;
 use pim_gpt::mapping::ModelMapping;
 use pim_gpt::model::gpt::by_name;
 use pim_gpt::model::DecodeGraph;
-use pim_gpt::sim::Simulator;
+use pim_gpt::sim::{MultiSim, Simulator, StreamSpec};
 use pim_gpt::util::bench::{bench, black_box};
 
 fn main() {
@@ -23,7 +24,7 @@ fn main() {
         });
         let mut sim = Simulator::new(&m, &cfg).unwrap();
         let mut pos = 0u64;
-        bench(&format!("sim::decode_step {name} (growing ctx)"), 8, 256, || {
+        bench(&format!("sim::decode_step {name} (growing ctx, cached)"), 8, 256, || {
             sim.decode_step(pos % m.max_seq as u64).unwrap();
             pos += 1;
         });
@@ -31,5 +32,54 @@ fn main() {
         bench(&format!("sim::generate {name} 64 tokens"), 0, 3, || {
             black_box(sim2.generate(64).unwrap());
         });
+    }
+
+    // Program-cache amortization: a 256-token generation compiles at
+    // most once per position regime.
+    {
+        let m = by_name("gpt2-small").unwrap();
+        let mut sim = Simulator::new(&m, &cfg).unwrap();
+        sim.generate(256).unwrap();
+        sim.finalize_stats();
+        println!(
+            "program cache      : {:.1}% hit rate over 256 tokens ({} compiles, {} hits)",
+            100.0 * sim.stats.program_cache_hit_rate(),
+            sim.stats.program_cache_misses,
+            sim.stats.program_cache_hits,
+        );
+    }
+
+    // Multi-request scheduler: same mixed gpt2-small request set served
+    // FIFO (K=1) vs interleaved (K=2, K=4). Reports wall time of the
+    // *host* (bench harness) and simulated tokens/s of the *hardware*.
+    let m = by_name("gpt2-small").unwrap();
+    let specs: Vec<StreamSpec> =
+        (0..8).map(|id| StreamSpec { id, n_tokens: 8 + 4 * (id % 3) }).collect();
+    let total_tokens: u64 = specs.iter().map(|s| s.n_tokens).sum();
+    for k in [1usize, 2, 4] {
+        let kcfg = HwConfig::paper_baseline().with_max_streams(k);
+        bench(&format!("sim::multi gpt2-small K={k} (8 mixed reqs)"), 1, 5, || {
+            let mut ms = MultiSim::new(&m, &kcfg).unwrap();
+            for s in &specs {
+                ms.submit(*s).unwrap();
+            }
+            black_box(ms.run_all().unwrap());
+        });
+        let mut ms = MultiSim::new(&m, &kcfg).unwrap();
+        for s in &specs {
+            ms.submit(*s).unwrap();
+        }
+        ms.run_all().unwrap();
+        ms.finalize_stats();
+        let secs = ms.clock() as f64 / (kcfg.gddr6.freq_ghz * 1e9);
+        println!(
+            "  K={k}: simulated {total_tokens} tokens in {:.3} ms -> {:.0} tok/s, \
+             pim util {:.1}%, asic util {:.1}%, cache hit {:.1}%",
+            secs * 1e3,
+            total_tokens as f64 / secs,
+            100.0 * ms.stats.pim_utilization(kcfg.total_mac_units() as u64),
+            100.0 * ms.stats.asic_utilization(),
+            100.0 * ms.stats.program_cache_hit_rate(),
+        );
     }
 }

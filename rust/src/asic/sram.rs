@@ -14,13 +14,24 @@ pub struct Sram {
     pub peak_bytes: usize,
 }
 
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
-#[error("SRAM overflow: need {need} bytes, {used} of {cap} in use")]
+#[derive(Debug, PartialEq, Eq)]
 pub struct SramOverflow {
     pub need: usize,
     pub used: usize,
     pub cap: usize,
 }
+
+impl std::fmt::Display for SramOverflow {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "SRAM overflow: need {} bytes, {} of {} in use",
+            self.need, self.used, self.cap
+        )
+    }
+}
+
+impl std::error::Error for SramOverflow {}
 
 impl Sram {
     pub fn new(cfg: &HwConfig) -> Self {

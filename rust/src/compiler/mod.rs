@@ -1,8 +1,12 @@
 //! Instruction compiler: lowers the per-token `DecodeGraph` into a
-//! dependency-tagged PIM/ASIC instruction stream (paper Fig. 3b).
+//! dependency-tagged PIM/ASIC instruction stream (paper Fig. 3b), plus
+//! the position-parametric program templates and the per-regime cache
+//! that amortize compilation across an autoregressive generation.
 
 pub mod isa;
 pub mod lower;
+pub mod template;
 
 pub use isa::{Instr, InstrNode, Program};
 pub use lower::compile;
+pub use template::{PosRegime, ProgramCache, ProgramTemplate};

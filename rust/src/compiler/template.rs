@@ -1,0 +1,357 @@
+//! Position-parametric compiled programs and the per-regime cache.
+//!
+//! A decode step's instruction stream depends on the token position only
+//! through the context length `ltoken = pos + 1`, and only in a handful
+//! of places: the q@K^T score output, the pre-softmax scale, the softmax
+//! itself, the scores@V input (and its GB chunk count), and the partial
+//! sum that accumulates those chunks. Everything else — node list,
+//! dependency edges, every other operand size — is fixed by the model.
+//!
+//! The *structure* of the program changes exactly once along a
+//! generation: when `n_head * ltoken` first exceeds the 2 KB global
+//! buffer, the scores@V VMM becomes chunked and gains a trailing
+//! `PartialSum` node. We call the two shapes **position regimes**. A
+//! [`ProgramTemplate`] is a program compiled once per regime (at the
+//! regime's largest `ltoken`, which also makes the compile-time SRAM
+//! check conservative for the whole regime) plus a per-node patch table;
+//! [`ProgramTemplate::instr_at`] re-specializes an instruction to any
+//! `ltoken` in O(1) with no allocation. The [`ProgramCache`] in front of
+//! it is what lets `decode_step` stop rebuilding `DecodeGraph` and
+//! re-running `compile()` for every token (≥ 99% hit rate on a 256-token
+//! generation; counted in `SimStats::program_cache_{hits,misses}`).
+//!
+//! Note on the SRAM check: because a template compiles at the regime's
+//! *maximum* `ltoken`, a config whose ASIC SRAM only fits short contexts
+//! is rejected at the first token of the regime rather than at the exact
+//! overflowing position (the per-token seed compiler failed later). All
+//! paper configurations fit at full context, so this only affects
+//! configs that could not serve the model's `max_seq` anyway.
+
+use std::rc::Rc;
+
+use super::isa::{Instr, InstrNode, Program};
+use super::lower::compile;
+use crate::asic::AsicOp;
+use crate::config::HwConfig;
+use crate::model::{DecodeGraph, GptModel, VmmClass};
+use crate::util::ceil_div;
+use anyhow::{bail, Result};
+
+/// Structural shape of the decode program at a given position.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PosRegime {
+    /// scores@V input (`n_head * ltoken`) exceeds the global buffer, so
+    /// the VMM is chunked and followed by a `PartialSum`.
+    pub av_chunked: bool,
+}
+
+impl PosRegime {
+    /// Regime of the decode step at position `pos`.
+    pub fn of(model: &GptModel, cfg: &HwConfig, pos: u64) -> Self {
+        let ltoken = pos + 1;
+        let h = model.n_head as u64;
+        Self { av_chunked: h * ltoken > cfg.pim.gb_elems() as u64 }
+    }
+
+    /// Largest `ltoken` this regime covers for `model` — the compile-time
+    /// representative (worst case for the SRAM feasibility check).
+    pub fn max_ltoken(&self, model: &GptModel, cfg: &HwConfig) -> u64 {
+        let h = model.n_head as u64;
+        let max_seq = model.max_seq as u64;
+        if self.av_chunked {
+            max_seq
+        } else {
+            // Largest ltoken with h * ltoken <= gb_elems.
+            (cfg.pim.gb_elems() as u64 / h).clamp(1, max_seq)
+        }
+    }
+}
+
+/// How a node's instruction is re-specialized for a runtime `ltoken`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum PatchKind {
+    /// q@K^T VMM: `out_elems = n_head * ltoken`.
+    ScoreOut,
+    /// scores@V VMM: `in_elems = n_head * ltoken`,
+    /// `parts = ceil(in_elems / gb_elems)`.
+    AttnVIn,
+    /// Scale / Softmax over the attention scores: `n = n_head * ltoken`.
+    AsicScaled,
+    /// PartialSum accumulating the scores@V chunks:
+    /// `parts = ceil(n_head * ltoken / gb_elems)`.
+    AttnVParts,
+    /// PartialSum accumulating the q@K^T chunks (models with
+    /// `d_model > gb_elems`): `n = n_head * ltoken`, parts constant.
+    ScorePartialN,
+}
+
+/// A compiled decode program with its position-dependence factored out.
+#[derive(Clone, Debug)]
+pub struct ProgramTemplate {
+    program: Program,
+    /// Parallel to `program.nodes`; `None` = position-independent.
+    patch_of: Vec<Option<PatchKind>>,
+    n_head: u64,
+    gb_elems: u64,
+}
+
+impl ProgramTemplate {
+    /// Compile the template for `regime` (graph build + lowering happen
+    /// once here, then never again for positions inside the regime).
+    pub fn build(model: &GptModel, cfg: &HwConfig, regime: PosRegime) -> Result<Self> {
+        let lt_ref = regime.max_ltoken(model, cfg);
+        let graph = DecodeGraph::build(model, lt_ref - 1);
+        let program = compile(&graph, cfg)?;
+
+        let h = model.n_head as u64;
+        let gb = cfg.pim.gb_elems() as u64;
+        let mut patch_of: Vec<Option<PatchKind>> = vec![None; program.nodes.len()];
+        let mut av_nodes: Vec<usize> = Vec::new();
+        let mut score_nodes: Vec<usize> = Vec::new();
+        for (i, node) in program.nodes.iter().enumerate() {
+            let patch = match &node.instr {
+                Instr::PimVmm { class: VmmClass::Score, out_elems, .. } => {
+                    if *out_elems != h * lt_ref {
+                        bail!("score VMM out_elems {out_elems} != n_head*ltoken at node {i}");
+                    }
+                    score_nodes.push(i);
+                    Some(PatchKind::ScoreOut)
+                }
+                Instr::PimVmm { class: VmmClass::AttnV, in_elems, parts, .. } => {
+                    if *in_elems != h * lt_ref || *parts != ceil_div(h * lt_ref, gb) {
+                        bail!("attn@V VMM operands unexpected at node {i}");
+                    }
+                    av_nodes.push(i);
+                    Some(PatchKind::AttnVIn)
+                }
+                Instr::Asic(AsicOp::Scale { n }) | Instr::Asic(AsicOp::Softmax { n, .. }) => {
+                    if *n != h * lt_ref {
+                        bail!("scaled ASIC op n {n} != n_head*ltoken at node {i}");
+                    }
+                    Some(PatchKind::AsicScaled)
+                }
+                Instr::Asic(AsicOp::PartialSum { .. })
+                    if node.deps.len() == 1 && av_nodes.contains(&node.deps[0]) =>
+                {
+                    Some(PatchKind::AttnVParts)
+                }
+                Instr::Asic(AsicOp::PartialSum { n, .. })
+                    if node.deps.len() == 1 && score_nodes.contains(&node.deps[0]) =>
+                {
+                    if *n != h * lt_ref {
+                        bail!("score partial-sum n {n} != n_head*ltoken at node {i}");
+                    }
+                    Some(PatchKind::ScorePartialN)
+                }
+                _ => None,
+            };
+            patch_of[i] = patch;
+        }
+        Ok(Self { program, patch_of, n_head: h, gb_elems: gb })
+    }
+
+    pub fn len(&self) -> usize {
+        self.program.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.program.nodes.is_empty()
+    }
+
+    pub fn nodes(&self) -> &[InstrNode] {
+        &self.program.nodes
+    }
+
+    pub fn deps_of(&self, i: usize) -> &[usize] {
+        &self.program.nodes[i].deps
+    }
+
+    /// Conservative peak SRAM over the whole regime (checked at build).
+    pub fn peak_sram_bytes(&self) -> usize {
+        self.program.peak_sram_bytes
+    }
+
+    /// Instruction `i` specialized to context length `ltoken` — O(1), no
+    /// allocation (`Instr` holds no heap data).
+    pub fn instr_at(&self, i: usize, ltoken: u64) -> Instr {
+        let mut instr = self.program.nodes[i].instr.clone();
+        match self.patch_of[i] {
+            None => {}
+            Some(PatchKind::ScoreOut) => {
+                if let Instr::PimVmm { out_elems, .. } = &mut instr {
+                    *out_elems = self.n_head * ltoken;
+                }
+            }
+            Some(PatchKind::AttnVIn) => {
+                if let Instr::PimVmm { in_elems, parts, .. } = &mut instr {
+                    *in_elems = self.n_head * ltoken;
+                    *parts = ceil_div(self.n_head * ltoken, self.gb_elems);
+                }
+            }
+            Some(PatchKind::AsicScaled) => match &mut instr {
+                Instr::Asic(AsicOp::Scale { n }) | Instr::Asic(AsicOp::Softmax { n, .. }) => {
+                    *n = self.n_head * ltoken;
+                }
+                _ => {}
+            },
+            Some(PatchKind::AttnVParts) => {
+                if let Instr::Asic(AsicOp::PartialSum { parts, .. }) = &mut instr {
+                    *parts = ceil_div(self.n_head * ltoken, self.gb_elems);
+                }
+            }
+            Some(PatchKind::ScorePartialN) => {
+                if let Instr::Asic(AsicOp::PartialSum { n, .. }) = &mut instr {
+                    *n = self.n_head * ltoken;
+                }
+            }
+        }
+        instr
+    }
+
+    /// Fully materialize the program at `ltoken` (tests / tooling; the
+    /// hot path uses `instr_at` and never allocates).
+    pub fn materialize(&self, ltoken: u64) -> Program {
+        let mut p = self.program.clone();
+        for i in 0..p.nodes.len() {
+            p.nodes[i].instr = self.instr_at(i, ltoken);
+        }
+        p.ltoken = ltoken;
+        p
+    }
+}
+
+/// Per-(model, config) cache of compiled program templates, keyed by
+/// position regime. At most one entry per regime ever exists, so a
+/// 256-token generation compiles at most twice.
+#[derive(Clone, Debug, Default)]
+pub struct ProgramCache {
+    entries: Vec<(PosRegime, Rc<ProgramTemplate>)>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl ProgramCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Template for decoding at `pos`, compiling on first miss.
+    pub fn get(
+        &mut self,
+        model: &GptModel,
+        cfg: &HwConfig,
+        pos: u64,
+    ) -> Result<Rc<ProgramTemplate>> {
+        let regime = PosRegime::of(model, cfg, pos);
+        if let Some((_, tpl)) = self.entries.iter().find(|(r, _)| *r == regime) {
+            self.hits += 1;
+            return Ok(Rc::clone(tpl));
+        }
+        self.misses += 1;
+        let tpl = Rc::new(ProgramTemplate::build(model, cfg, regime)?);
+        self.entries.push((regime, Rc::clone(&tpl)));
+        Ok(tpl)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            return 1.0;
+        }
+        self.hits as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::gpt::by_name;
+
+    fn cfg() -> HwConfig {
+        HwConfig::paper_baseline()
+    }
+
+    /// The template specialized to `ltoken` must equal a fresh compile at
+    /// the same position, node for node — the cache is then *exactly* the
+    /// seed compiler, amortized.
+    #[test]
+    fn materialized_matches_fresh_compile() {
+        let cfg = cfg();
+        // gpt2-small straddles the scores@V chunking boundary (h=12,
+        // gb=1024: ltoken 85 is the last unchunked, 86 the first
+        // chunked); gpt3-xl (d=2048 > gb) additionally has chunked q@K^T
+        // with a position-scaled partial sum.
+        for (model, positions) in [
+            ("gpt2-small", &[0u64, 1, 42, 84, 85, 86, 100, 511, 1023][..]),
+            ("gpt3-xl", &[0u64, 5, 42, 43, 100, 2047][..]),
+        ] {
+            let m = by_name(model).unwrap();
+            for &pos in positions {
+                let regime = PosRegime::of(&m, &cfg, pos);
+                let tpl = ProgramTemplate::build(&m, &cfg, regime).unwrap();
+                let got = tpl.materialize(pos + 1);
+                let graph = DecodeGraph::build(&m, pos);
+                let want = compile(&graph, &cfg).unwrap();
+                assert_eq!(got.nodes.len(), want.nodes.len(), "{model} pos {pos}");
+                for (i, (g, w)) in got.nodes.iter().zip(&want.nodes).enumerate() {
+                    assert_eq!(g.instr, w.instr, "{model} pos {pos} node {i}");
+                    assert_eq!(g.deps, w.deps, "{model} pos {pos} node {i}");
+                }
+                assert_eq!(got.ltoken, want.ltoken);
+            }
+        }
+    }
+
+    #[test]
+    fn regime_boundary_where_expected() {
+        let m = by_name("gpt2-small").unwrap(); // h = 12
+        let cfg = cfg(); // gb_elems = 1024
+        assert!(!PosRegime::of(&m, &cfg, 84).av_chunked); // ltoken 85: 1020
+        assert!(PosRegime::of(&m, &cfg, 85).av_chunked); // ltoken 86: 1032
+    }
+
+    #[test]
+    fn cache_compiles_at_most_once_per_regime() {
+        let m = by_name("gpt2-small").unwrap();
+        let cfg = cfg();
+        let mut cache = ProgramCache::new();
+        for pos in 0..256u64 {
+            cache.get(&m, &cfg, pos).unwrap();
+        }
+        assert_eq!(cache.len(), 2); // unchunked + chunked
+        assert_eq!(cache.misses, 2);
+        assert_eq!(cache.hits, 254);
+        assert!(cache.hit_rate() > 0.99, "{}", cache.hit_rate());
+    }
+
+    #[test]
+    fn small_model_single_regime() {
+        // gpt-nano: h * max_seq = 4 * 128 = 512 <= 1024 -> never chunked.
+        let m = by_name("gpt-nano").unwrap();
+        let cfg = cfg();
+        let mut cache = ProgramCache::new();
+        for pos in 0..(m.max_seq as u64) {
+            cache.get(&m, &cfg, pos).unwrap();
+        }
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn instr_at_is_patch_only_for_const_nodes() {
+        let m = by_name("gpt2-small").unwrap();
+        let cfg = cfg();
+        let tpl =
+            ProgramTemplate::build(&m, &cfg, PosRegime { av_chunked: false }).unwrap();
+        // LM head (last node) is position-independent.
+        let last = tpl.len() - 1;
+        assert_eq!(tpl.instr_at(last, 1), tpl.instr_at(last, 50));
+    }
+}

@@ -150,6 +150,20 @@ impl Default for AsicConfig {
     }
 }
 
+/// Request-scheduling configuration (multi-stream serving; not a paper
+/// knob — the paper simulates one sequence at a time, which is K = 1).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SchedulerConfig {
+    /// Maximum decode streams interleaved on the hardware at once.
+    pub max_streams: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        Self { max_streams: 4 }
+    }
+}
+
 /// Full system configuration.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct HwConfig {
@@ -158,6 +172,7 @@ pub struct HwConfig {
     pub gddr6: Gddr6Config,
     pub pim: PimConfig,
     pub asic: AsicConfig,
+    pub sched: SchedulerConfig,
 }
 
 impl HwConfig {
@@ -197,6 +212,14 @@ impl HwConfig {
     pub fn with_channels(mut self, ch: usize) -> Self {
         assert!(ch > 0);
         self.gddr6.channels = ch;
+        self
+    }
+
+    /// Serving knob: concurrent decode streams (K). K = 1 reproduces the
+    /// paper's single-sequence FIFO behavior exactly.
+    pub fn with_max_streams(mut self, k: usize) -> Self {
+        assert!(k > 0);
+        self.sched.max_streams = k;
         self
     }
 
@@ -266,6 +289,7 @@ impl HwConfig {
             ("pim", "mac_lanes") => set!(self.pim.mac_lanes, usize),
             ("pim", "mac_power_mw_per_channel") => set!(self.pim.mac_power_mw_per_channel, f64),
             ("pim", "pipeline_fill") => set!(self.pim.pipeline_fill, u64),
+            ("sched", "max_streams") => set!(self.sched.max_streams, usize),
             ("asic", "freq_ghz") => set!(self.asic.freq_ghz, f64),
             ("asic", "sram_kb") => set!(self.asic.sram_kb, usize),
             ("asic", "n_adders") => set!(self.asic.n_adders, usize),
@@ -315,6 +339,14 @@ mod tests {
         assert_eq!(cfg.asic.freq_ghz, 0.5);
         assert_eq!(cfg.timing.trcd, 14);
         assert_eq!(cfg.timing.trp, 12); // untouched default
+    }
+
+    #[test]
+    fn scheduler_config_defaults_and_overrides() {
+        assert_eq!(HwConfig::paper_baseline().sched.max_streams, 4);
+        assert_eq!(HwConfig::paper_baseline().with_max_streams(1).sched.max_streams, 1);
+        let j = Json::parse(r#"{"sched": {"max_streams": 8}}"#).unwrap();
+        assert_eq!(HwConfig::from_json(&j).unwrap().sched.max_streams, 8);
     }
 
     #[test]

@@ -102,7 +102,7 @@ impl PimGptSystem {
                 for i in 0..total {
                     self.sim.decode_step(i as u64)?;
                 }
-                prompt.iter().copied().chain((0..n_new).map(|i| i as i32)).collect()
+                synthetic_tokens(prompt, n_new)
             }
         };
 
@@ -121,6 +121,14 @@ impl PimGptSystem {
             row_hit_rate: self.sim.stats.row_hit_rate(),
         })
     }
+}
+
+/// Token payload of a timing-only request: the prompt followed by
+/// synthetic generated ids (there are no numerics without an artifact).
+/// Shared by `PimGptSystem::generate` and the serving loop so the FIFO
+/// and interleaved paths return identical payloads.
+pub(crate) fn synthetic_tokens(prompt: &[i32], n_new: usize) -> Vec<i32> {
+    prompt.iter().copied().chain((0..n_new).map(|i| i as i32)).collect()
 }
 
 #[cfg(test)]

@@ -5,7 +5,7 @@
 //! pim-gpt simulate --model NAME [--tokens N] [--config FILE] [--json]
 //! pim-gpt figures [--fig ID] [--tokens N]
 //! pim-gpt generate --model NAME [--artifacts DIR] [--prompt 1,2,3] [--n N]
-//! pim-gpt serve --model NAME [--requests N] [--artifacts DIR]
+//! pim-gpt serve --model NAME [--requests N] [--concurrency K] [--artifacts DIR]
 //! ```
 //!
 //! (Arg parsing is hand-rolled — clap is unavailable offline, DESIGN.md §5.)
@@ -99,7 +99,7 @@ USAGE:
   pim-gpt simulate --model NAME [--tokens N] [--config FILE] [--json]
   pim-gpt figures  [--fig 1|8|10|11|12|13|14|15|t1|t2|all] [--tokens N]
   pim-gpt generate --model gpt-nano|gpt-mini [--artifacts DIR] [--prompt 1,2,3] [--n N]
-  pim-gpt serve    --model NAME [--requests N] [--artifacts DIR]
+  pim-gpt serve    --model NAME [--requests N] [--concurrency K] [--artifacts DIR]
 
 MODELS: gpt2-small|medium|large|xl, gpt3-small|medium|large|xl (timing),
         gpt-nano, gpt-mini (functional artifacts in artifacts/)
@@ -236,7 +236,14 @@ fn cmd_generate(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let name = args.get("model").unwrap_or("gpt-nano");
     let n_requests = args.u64_or("requests", 8)?;
-    let cfg = load_config(args)?;
+    let mut cfg = load_config(args)?;
+    if let Some(k) = args.get("concurrency") {
+        let k: usize = k.parse().map_err(|_| anyhow!("--concurrency must be an integer"))?;
+        if k == 0 {
+            bail!("--concurrency must be >= 1");
+        }
+        cfg.sched.max_streams = k;
+    }
     let dir = Path::new(args.get("artifacts").unwrap_or("artifacts"));
     let use_artifact = by_name(name).map(|m| m.max_seq <= 512).unwrap_or(false)
         && dir.join(format!("{name}.meta.json")).exists();
@@ -244,7 +251,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let name_owned = name.to_string();
     let dir_owned = dir.to_path_buf();
     let cfg_owned = cfg.clone();
-    let server = Server::start(move || {
+    let mut server = Server::start(move || {
         if use_artifact {
             PimGptSystem::with_artifact(&name_owned, &dir_owned, &cfg_owned)
         } else {
@@ -271,10 +278,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
     let m = server.shutdown();
+    // Functional (artifact) serving is FIFO regardless of --concurrency:
+    // the PJRT decode is one-token-at-a-time against a single KV cache.
+    let k_served = if functional { 1 } else { cfg.sched.max_streams };
     println!(
-        "\nserved {} requests ({} tokens), functional={functional}, simulated throughput {:.0} tok/s",
+        "\nserved {} requests ({} tokens), functional={functional}, K={k_served}, \
+         simulated makespan {}, throughput {:.0} tok/s",
         m.requests,
         m.tokens,
+        fmt_time_s(m.sim_makespan_seconds),
         m.sim_tokens_per_s()
     );
     Ok(())

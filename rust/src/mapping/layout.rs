@@ -20,14 +20,25 @@ pub struct BankAllocator {
     banks: usize,
 }
 
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
-#[error("bank capacity exceeded on ch{channel} bank{bank}: need {need} rows, {free} free")]
+#[derive(Debug, PartialEq, Eq)]
 pub struct CapacityError {
     pub channel: usize,
     pub bank: usize,
     pub need: u32,
     pub free: u32,
 }
+
+impl std::fmt::Display for CapacityError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "bank capacity exceeded on ch{} bank{}: need {} rows, {} free",
+            self.channel, self.bank, self.need, self.free
+        )
+    }
+}
+
+impl std::error::Error for CapacityError {}
 
 impl BankAllocator {
     pub fn new(cfg: &HwConfig) -> Self {

@@ -9,28 +9,16 @@
 //! (logits, k_cache', v_cache') — the caches round-trip as device
 //! buffers, so steady-state decoding copies only the token ids and
 //! logits across the host boundary.
+//!
+//! Metadata parsing ([`ArtifactMeta`]) has no xla dependency and is
+//! always compiled; execution ([`GptArtifact`], [`CacheBuf`]) requires
+//! the `pjrt` feature (see `runtime::PjrtRuntime`) and is replaced by a
+//! clean-failing stub without it.
 
 use std::path::{Path, PathBuf};
 
 use crate::util::json::Json;
-use anyhow::{anyhow, bail, Context, Result};
-use xla::{ElementType, Literal, PjRtBuffer, PjRtLoadedExecutable};
-
-/// A device buffer paired with the host literal it was uploaded from.
-///
-/// `PjRtClient::buffer_from_host_literal` enqueues the host->device copy
-/// *asynchronously*: the source literal must stay alive until an
-/// execution consuming the buffer has been synchronized, or the copy
-/// reads freed memory (observed as a SIGSEGV inside
-/// `AbstractTfrtCpuBuffer::CopyFromLiteral`). Bundling the two enforces
-/// the lifetime.
-pub struct CacheBuf {
-    #[allow(dead_code)]
-    lit: Literal,
-    buf: PjRtBuffer,
-}
-
-use super::PjrtRuntime;
+use anyhow::{anyhow, Context, Result};
 
 /// One input in the artifact signature.
 #[derive(Clone, Debug)]
@@ -83,7 +71,8 @@ impl ArtifactMeta {
             });
         }
         let hlo = j.get("hlo").and_then(Json::as_str).ok_or_else(|| anyhow!("hlo"))?;
-        let weights = j.get("weights_bin").and_then(Json::as_str).ok_or_else(|| anyhow!("weights_bin"))?;
+        let weights =
+            j.get("weights_bin").and_then(Json::as_str).ok_or_else(|| anyhow!("weights_bin"))?;
         Ok(Self {
             name: name.to_string(),
             n_layer: num("n_layer")?,
@@ -98,139 +87,214 @@ impl ArtifactMeta {
     }
 }
 
-/// A loaded, executable GPT decode step.
-pub struct GptArtifact {
-    pub meta: ArtifactMeta,
-    exe: PjRtLoadedExecutable,
-    runtime: PjrtRuntime,
-    /// Parameter buffers resident on the device, in signature order.
-    weight_bufs: Vec<PjRtBuffer>,
-    /// Host literals backing `weight_bufs` — kept alive for the
-    /// lifetime of the artifact (see `CacheBuf` docs).
-    #[allow(dead_code)]
-    weight_lits: Vec<Literal>,
-}
+#[cfg(feature = "pjrt")]
+mod exec {
+    use std::path::Path;
 
-impl GptArtifact {
-    /// Load `<dir>/<name>.{hlo.txt,weights.bin,meta.json}`.
-    pub fn load(runtime: PjrtRuntime, dir: &Path, name: &str) -> Result<Self> {
-        let meta = ArtifactMeta::load(dir, name)?;
-        let exe = runtime
-            .load_hlo_text(meta.hlo_path.to_str().unwrap())
-            .with_context(|| format!("compiling {}", meta.hlo_path.display()))?;
-        let blob = std::fs::read(&meta.weights_path)
-            .with_context(|| format!("reading {}", meta.weights_path.display()))?;
-        let mut weight_bufs = Vec::new();
-        let mut weight_lits = Vec::new();
-        for spec in meta.inputs.iter().filter(|i| i.kind == "param") {
-            if spec.offset + spec.nbytes > blob.len() {
-                bail!("weight blob too small for {}", spec.name);
-            }
-            let lit = Literal::create_from_shape_and_untyped_data(
-                ElementType::F32,
-                &spec.shape,
-                &blob[spec.offset..spec.offset + spec.nbytes],
-            )?;
-            weight_bufs.push(runtime.to_device(&lit)?);
-            weight_lits.push(lit);
-        }
-        Ok(Self { meta, exe, runtime, weight_bufs, weight_lits })
-    }
+    use super::{argmax, ArtifactMeta};
+    use crate::runtime::PjrtRuntime;
+    use anyhow::{anyhow, bail, Context, Result};
+    use xla::{ElementType, Literal, PjRtBuffer, PjRtLoadedExecutable};
 
-    /// Fresh zeroed KV caches as device buffers.
-    pub fn empty_caches(&self) -> Result<(CacheBuf, CacheBuf)> {
-        let shape = [self.meta.n_layer, self.meta.max_seq, self.meta.d_model];
-        let zeros = vec![0u8; shape.iter().product::<usize>() * 4];
-        let k = Literal::create_from_shape_and_untyped_data(ElementType::F32, &shape, &zeros)?;
-        let v = Literal::create_from_shape_and_untyped_data(ElementType::F32, &shape, &zeros)?;
-        let kb = self.runtime.to_device(&k)?;
-        let vb = self.runtime.to_device(&v)?;
-        Ok((CacheBuf { lit: k, buf: kb }, CacheBuf { lit: v, buf: vb }))
-    }
-
-    /// Run one decode step. Returns (logits, k_cache', v_cache').
+    /// A device buffer paired with the host literal it was uploaded from.
     ///
-    /// The artifact returns one flat f32 vector — `concat(logits, kc,
-    /// vc)` wrapped in a 1-tuple (see `model.aot_decode_fn`): the PJRT
-    /// CPU client cannot convert multi-element tuple buffers to
-    /// literals, a 1-tuple of a single array round-trips fine.
-    pub fn decode(
-        &self,
-        token: i32,
-        pos: i32,
-        k_cache: &CacheBuf,
-        v_cache: &CacheBuf,
-    ) -> Result<(Vec<f32>, CacheBuf, CacheBuf)> {
-        if pos as usize >= self.meta.max_seq {
-            bail!("position {pos} exceeds max_seq {}", self.meta.max_seq);
-        }
-        // Input literals must outlive the synchronized execution below.
-        let tok_lit = Literal::vec1(&[token]);
-        let pos_lit = Literal::vec1(&[pos]);
-        let tok = self.runtime.to_device(&tok_lit)?;
-        let p = self.runtime.to_device(&pos_lit)?;
-        let mut args: Vec<&PjRtBuffer> = vec![&tok, &p, &k_cache.buf, &v_cache.buf];
-        args.extend(self.weight_bufs.iter());
-        let mut outs = self.exe.execute_b(&args)?;
-        let replica = outs
-            .first_mut()
-            .and_then(|v| (!v.is_empty()).then(|| v.remove(0)))
-            .ok_or_else(|| anyhow!("no output buffer"))?;
-        let flat = replica.to_literal_sync()?.to_tuple1()?.to_vec::<f32>()?;
-
-        let cache_elems = self.meta.n_layer * self.meta.max_seq * self.meta.d_model;
-        let want = self.meta.vocab + 2 * cache_elems;
-        if flat.len() != want {
-            bail!("flat output length {} != expected {want}", flat.len());
-        }
-        let logits = flat[..self.meta.vocab].to_vec();
-        let cache_shape = [self.meta.n_layer, self.meta.max_seq, self.meta.d_model];
-        let as_bytes = |xs: &[f32]| -> Vec<u8> {
-            xs.iter().flat_map(|v| v.to_le_bytes()).collect()
-        };
-        let kc = Literal::create_from_shape_and_untyped_data(
-            ElementType::F32,
-            &cache_shape,
-            &as_bytes(&flat[self.meta.vocab..self.meta.vocab + cache_elems]),
-        )?;
-        let vc = Literal::create_from_shape_and_untyped_data(
-            ElementType::F32,
-            &cache_shape,
-            &as_bytes(&flat[self.meta.vocab + cache_elems..]),
-        )?;
-        let kb = self.runtime.to_device(&kc)?;
-        let vb = self.runtime.to_device(&vc)?;
-        Ok((logits, CacheBuf { lit: kc, buf: kb }, CacheBuf { lit: vc, buf: vb }))
+    /// `PjRtClient::buffer_from_host_literal` enqueues the host->device
+    /// copy *asynchronously*: the source literal must stay alive until an
+    /// execution consuming the buffer has been synchronized, or the copy
+    /// reads freed memory (observed as a SIGSEGV inside
+    /// `AbstractTfrtCpuBuffer::CopyFromLiteral`). Bundling the two
+    /// enforces the lifetime.
+    pub struct CacheBuf {
+        #[allow(dead_code)]
+        lit: Literal,
+        buf: PjRtBuffer,
     }
 
-    /// Greedy generation: feed `prompt`, then decode `n_new` tokens.
-    pub fn generate(&self, prompt: &[i32], n_new: usize) -> Result<Vec<i32>> {
-        if prompt.is_empty() {
-            bail!("prompt must be non-empty");
-        }
-        let (mut kc, mut vc) = self.empty_caches()?;
-        let mut toks: Vec<i32> = prompt.to_vec();
-        let mut logits = Vec::new();
-        for (i, &t) in prompt.iter().enumerate() {
-            let (lg, k2, v2) = self.decode(t, i as i32, &kc, &vc)?;
-            logits = lg;
-            kc = k2;
-            vc = v2;
-        }
-        for i in prompt.len()..prompt.len() + n_new {
-            let next = argmax(&logits) as i32;
-            toks.push(next);
-            if i + 1 >= self.meta.max_seq {
-                break;
+    /// A loaded, executable GPT decode step.
+    pub struct GptArtifact {
+        pub meta: ArtifactMeta,
+        exe: PjRtLoadedExecutable,
+        runtime: PjrtRuntime,
+        /// Parameter buffers resident on the device, in signature order.
+        weight_bufs: Vec<PjRtBuffer>,
+        /// Host literals backing `weight_bufs` — kept alive for the
+        /// lifetime of the artifact (see `CacheBuf` docs).
+        #[allow(dead_code)]
+        weight_lits: Vec<Literal>,
+    }
+
+    impl GptArtifact {
+        /// Load `<dir>/<name>.{hlo.txt,weights.bin,meta.json}`.
+        pub fn load(runtime: PjrtRuntime, dir: &Path, name: &str) -> Result<Self> {
+            let meta = ArtifactMeta::load(dir, name)?;
+            let exe = runtime
+                .load_hlo_text(meta.hlo_path.to_str().unwrap())
+                .with_context(|| format!("compiling {}", meta.hlo_path.display()))?;
+            let blob = std::fs::read(&meta.weights_path)
+                .with_context(|| format!("reading {}", meta.weights_path.display()))?;
+            let mut weight_bufs = Vec::new();
+            let mut weight_lits = Vec::new();
+            for spec in meta.inputs.iter().filter(|i| i.kind == "param") {
+                if spec.offset + spec.nbytes > blob.len() {
+                    bail!("weight blob too small for {}", spec.name);
+                }
+                let lit = Literal::create_from_shape_and_untyped_data(
+                    ElementType::F32,
+                    &spec.shape,
+                    &blob[spec.offset..spec.offset + spec.nbytes],
+                )?;
+                weight_bufs.push(runtime.to_device(&lit)?);
+                weight_lits.push(lit);
             }
-            let (lg, k2, v2) = self.decode(next, i as i32, &kc, &vc)?;
-            logits = lg;
-            kc = k2;
-            vc = v2;
+            Ok(Self { meta, exe, runtime, weight_bufs, weight_lits })
         }
-        Ok(toks)
+
+        /// Fresh zeroed KV caches as device buffers.
+        pub fn empty_caches(&self) -> Result<(CacheBuf, CacheBuf)> {
+            let shape = [self.meta.n_layer, self.meta.max_seq, self.meta.d_model];
+            let zeros = vec![0u8; shape.iter().product::<usize>() * 4];
+            let k = Literal::create_from_shape_and_untyped_data(ElementType::F32, &shape, &zeros)?;
+            let v = Literal::create_from_shape_and_untyped_data(ElementType::F32, &shape, &zeros)?;
+            let kb = self.runtime.to_device(&k)?;
+            let vb = self.runtime.to_device(&v)?;
+            Ok((CacheBuf { lit: k, buf: kb }, CacheBuf { lit: v, buf: vb }))
+        }
+
+        /// Run one decode step. Returns (logits, k_cache', v_cache').
+        ///
+        /// The artifact returns one flat f32 vector — `concat(logits, kc,
+        /// vc)` wrapped in a 1-tuple (see `model.aot_decode_fn`): the PJRT
+        /// CPU client cannot convert multi-element tuple buffers to
+        /// literals, a 1-tuple of a single array round-trips fine.
+        pub fn decode(
+            &self,
+            token: i32,
+            pos: i32,
+            k_cache: &CacheBuf,
+            v_cache: &CacheBuf,
+        ) -> Result<(Vec<f32>, CacheBuf, CacheBuf)> {
+            if pos as usize >= self.meta.max_seq {
+                bail!("position {pos} exceeds max_seq {}", self.meta.max_seq);
+            }
+            // Input literals must outlive the synchronized execution below.
+            let tok_lit = Literal::vec1(&[token]);
+            let pos_lit = Literal::vec1(&[pos]);
+            let tok = self.runtime.to_device(&tok_lit)?;
+            let p = self.runtime.to_device(&pos_lit)?;
+            let mut args: Vec<&PjRtBuffer> = vec![&tok, &p, &k_cache.buf, &v_cache.buf];
+            args.extend(self.weight_bufs.iter());
+            let mut outs = self.exe.execute_b(&args)?;
+            let replica = outs
+                .first_mut()
+                .and_then(|v| (!v.is_empty()).then(|| v.remove(0)))
+                .ok_or_else(|| anyhow!("no output buffer"))?;
+            let flat = replica.to_literal_sync()?.to_tuple1()?.to_vec::<f32>()?;
+
+            let cache_elems = self.meta.n_layer * self.meta.max_seq * self.meta.d_model;
+            let want = self.meta.vocab + 2 * cache_elems;
+            if flat.len() != want {
+                bail!("flat output length {} != expected {want}", flat.len());
+            }
+            let logits = flat[..self.meta.vocab].to_vec();
+            let cache_shape = [self.meta.n_layer, self.meta.max_seq, self.meta.d_model];
+            let as_bytes =
+                |xs: &[f32]| -> Vec<u8> { xs.iter().flat_map(|v| v.to_le_bytes()).collect() };
+            let kc = Literal::create_from_shape_and_untyped_data(
+                ElementType::F32,
+                &cache_shape,
+                &as_bytes(&flat[self.meta.vocab..self.meta.vocab + cache_elems]),
+            )?;
+            let vc = Literal::create_from_shape_and_untyped_data(
+                ElementType::F32,
+                &cache_shape,
+                &as_bytes(&flat[self.meta.vocab + cache_elems..]),
+            )?;
+            let kb = self.runtime.to_device(&kc)?;
+            let vb = self.runtime.to_device(&vc)?;
+            Ok((logits, CacheBuf { lit: kc, buf: kb }, CacheBuf { lit: vc, buf: vb }))
+        }
+
+        /// Greedy generation: feed `prompt`, then decode `n_new` tokens.
+        pub fn generate(&self, prompt: &[i32], n_new: usize) -> Result<Vec<i32>> {
+            if prompt.is_empty() {
+                bail!("prompt must be non-empty");
+            }
+            let (mut kc, mut vc) = self.empty_caches()?;
+            let mut toks: Vec<i32> = prompt.to_vec();
+            let mut logits = Vec::new();
+            for (i, &t) in prompt.iter().enumerate() {
+                let (lg, k2, v2) = self.decode(t, i as i32, &kc, &vc)?;
+                logits = lg;
+                kc = k2;
+                vc = v2;
+            }
+            for i in prompt.len()..prompt.len() + n_new {
+                let next = argmax(&logits) as i32;
+                toks.push(next);
+                if i + 1 >= self.meta.max_seq {
+                    break;
+                }
+                let (lg, k2, v2) = self.decode(next, i as i32, &kc, &vc)?;
+                logits = lg;
+                kc = k2;
+                vc = v2;
+            }
+            Ok(toks)
+        }
     }
 }
+
+/// Stub execution types compiled without the `pjrt` feature: every entry
+/// point fails with the same clear error `PjrtRuntime::cpu` raises, so
+/// nothing downstream can silently "run" a functional model.
+#[cfg(not(feature = "pjrt"))]
+mod exec {
+    use std::path::Path;
+
+    use super::ArtifactMeta;
+    use crate::runtime::PjrtRuntime;
+    use anyhow::{bail, Result};
+
+    const STUB_ERR: &str =
+        "functional artifacts require the 'pjrt' feature (xla crate) — timing-only build";
+
+    /// Placeholder for the PJRT device cache buffer.
+    pub struct CacheBuf {}
+
+    /// Placeholder artifact: metadata only, execution always fails.
+    pub struct GptArtifact {
+        pub meta: ArtifactMeta,
+    }
+
+    impl GptArtifact {
+        pub fn load(_runtime: PjrtRuntime, dir: &Path, name: &str) -> Result<Self> {
+            // Parse the metadata so configuration errors still surface,
+            // then refuse to execute.
+            let _meta = ArtifactMeta::load(dir, name)?;
+            bail!(STUB_ERR)
+        }
+
+        pub fn empty_caches(&self) -> Result<(CacheBuf, CacheBuf)> {
+            bail!(STUB_ERR)
+        }
+
+        pub fn decode(
+            &self,
+            _token: i32,
+            _pos: i32,
+            _k_cache: &CacheBuf,
+            _v_cache: &CacheBuf,
+        ) -> Result<(Vec<f32>, CacheBuf, CacheBuf)> {
+            bail!(STUB_ERR)
+        }
+
+        pub fn generate(&self, _prompt: &[i32], _n_new: usize) -> Result<Vec<i32>> {
+            bail!(STUB_ERR)
+        }
+    }
+}
+
+pub use exec::{CacheBuf, GptArtifact};
 
 /// Index of the largest element.
 pub fn argmax(xs: &[f32]) -> usize {
@@ -283,5 +347,22 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         std::fs::write(dir.join("bad.meta.json"), r#"{"name":"bad"}"#).unwrap();
         assert!(ArtifactMeta::load(&dir, "bad").is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_artifact_load_fails_cleanly() {
+        let dir = std::env::temp_dir().join("pimgpt-meta-test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("toy2.meta.json"),
+            r#"{"name":"toy2","config":{"n_layer":1,"d_model":8,"n_head":2,"vocab":16,"max_seq":4},
+                "inputs":[],"weights_bin":"toy2.weights.bin","hlo":"toy2.hlo.txt"}"#,
+        )
+        .unwrap();
+        let rt = crate::runtime::PjrtRuntime::cpu();
+        assert!(rt.is_err(), "stub runtime must refuse construction");
+        let err = rt.err().unwrap().to_string();
+        assert!(err.contains("timing-only"), "{err}");
     }
 }

@@ -6,6 +6,14 @@
 //! DESIGN.md §2): jax >= 0.5 emits 64-bit instruction ids that the
 //! crate's xla_extension 0.5.1 proto path rejects; the text parser
 //! reassigns ids and round-trips cleanly.
+//!
+//! **Offline builds:** the `xla` crate cannot be fetched in this
+//! environment, so the real client is gated behind the `pjrt` cargo
+//! feature (to enable it, add `xla` to `[dependencies]` where crates.io
+//! is reachable). Without the feature this module compiles a stub whose
+//! constructors fail with a clear error, and the system runs timing-only
+//! (`PimGptSystem::timing_only`); artifact *metadata* parsing stays
+//! available either way.
 
 pub mod artifact;
 
@@ -14,10 +22,12 @@ pub use artifact::{argmax, ArtifactMeta, CacheBuf, GptArtifact, InputSpec};
 use anyhow::Result;
 
 /// Thin wrapper over the `xla` crate PJRT CPU client.
+#[cfg(feature = "pjrt")]
 pub struct PjrtRuntime {
     client: xla::PjRtClient,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtRuntime {
     /// Create a CPU PJRT client.
     pub fn cpu() -> Result<Self> {
@@ -50,5 +60,24 @@ impl PjrtRuntime {
         let buf = self.client.buffer_from_host_literal(None, lit)?;
         let _fence = buf.to_literal_sync()?;
         Ok(buf)
+    }
+}
+
+/// Stub runtime compiled when the `pjrt` feature is off: construction
+/// fails cleanly, so callers fall back to timing-only simulation.
+#[cfg(not(feature = "pjrt"))]
+pub struct PjrtRuntime {}
+
+#[cfg(not(feature = "pjrt"))]
+impl PjrtRuntime {
+    pub fn cpu() -> Result<Self> {
+        anyhow::bail!(
+            "PJRT runtime unavailable: built without the 'pjrt' feature \
+             (the xla crate cannot be vendored offline) — timing-only mode"
+        )
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
     }
 }

@@ -1,5 +1,5 @@
 //! Event-driven clock-cycle simulator (paper §V.A "Simulation
-//! Configuration").
+//! Configuration") — single-stream front end.
 //!
 //! The hardware is a tree — package -> 8 channels -> 16 banks — plus the
 //! ASIC. Every node carries a `busy_until` ("next_time") and transitions
@@ -11,24 +11,28 @@
 //! program *is* the event-driven execution — there is no speculative
 //! reordering in the hardware to model.
 //!
-//! Timing fidelity lives in the leaf models: bank-level ACT/PRE/MAC/WR
-//! cycle layout (`dram::bank`), channel GB-broadcast + drain pipelining
+//! The reservable hardware itself lives in [`super::resources::Resources`]
+//! (shared with the multi-stream scheduler `sim::sched`); timing fidelity
+//! lives in the leaf models: bank-level ACT/PRE/MAC/WR cycle layout
+//! (`dram::bank`), channel GB-broadcast + drain pipelining
 //! (`pim::channel`), ASIC engine add/mul streams (`asic::engine`), and
 //! per-channel refresh (tREFI/tRFC).
+//!
+//! `decode_step` no longer rebuilds and re-lowers the decode graph per
+//! token: programs are served from a [`ProgramCache`] keyed by position
+//! regime, and the context length is applied as a runtime parameter
+//! (`compiler::template`).
 
-use super::stats::{LatClass, SimStats};
-use crate::asic::{AsicOp, Engine};
-use crate::compiler::{compile, Instr, Program};
+use super::resources::{empty_plan, IssueCtx, Resources};
+use super::stats::SimStats;
+use crate::asic::Engine;
+use crate::compiler::{ProgramCache, ProgramTemplate};
 use crate::config::HwConfig;
 use crate::dram::TimingCycles;
 use crate::mapping::ModelMapping;
-use crate::model::{DecodeGraph, GptModel, MatrixKind};
-use crate::pim::{Channel, UnitWork, VmmPlan};
+use crate::model::GptModel;
+use crate::pim::{Channel, VmmPlan};
 use anyhow::Result;
-
-/// Cycles to flush the last streamed chunk through an ASIC engine after
-/// its final input arrives (engine fill + one burst).
-const TAIL_CYCLES: u64 = 12;
 
 /// Per-token result.
 #[derive(Clone, Copy, Debug, Default)]
@@ -43,16 +47,13 @@ impl StepResult {
     }
 }
 
-/// The PIM-GPT system simulator.
+/// The PIM-GPT system simulator (one decode stream).
 pub struct Simulator {
     pub cfg: HwConfig,
     pub model: GptModel,
     pub mapping: ModelMapping,
     t: TimingCycles,
-    channels: Vec<Channel>,
-    engine: Engine,
-    /// ASIC engine availability (ops serialize on the engines).
-    asic_free: u64,
+    res: Resources,
     clock: u64,
     pub stats: SimStats,
     /// Reusable finish-time scratch (avoids per-step allocation).
@@ -64,30 +65,26 @@ pub struct Simulator {
     /// profiling showed plan allocation churn was ~15% of sim time,
     /// EXPERIMENTS.md §Perf).
     plan_scratch: VmmPlan,
+    /// Compiled-program cache (one template per position regime).
+    cache: ProgramCache,
 }
 
 impl Simulator {
     pub fn new(model: &GptModel, cfg: &HwConfig) -> Result<Self> {
         let mapping = ModelMapping::build(model, cfg)?;
         let t = TimingCycles::from_config(cfg);
-        let channels = (0..cfg.gddr6.channels).map(|_| Channel::new(cfg)).collect();
         Ok(Self {
             cfg: cfg.clone(),
             model: model.clone(),
             mapping,
             t,
-            channels,
-            engine: Engine::new(cfg),
-            asic_free: 0,
+            res: Resources::new(cfg),
             clock: 0,
             stats: SimStats::default(),
             finish: Vec::new(),
             first_ready: Vec::new(),
-            plan_scratch: VmmPlan {
-                bank_work: (0..cfg.gddr6.banks_per_channel).map(|_| UnitWork::Idle).collect(),
-                input_elems: 0,
-                output_elems: 0,
-            },
+            plan_scratch: empty_plan(cfg),
+            cache: ProgramCache::new(),
         })
     }
 
@@ -97,9 +94,8 @@ impl Simulator {
 
     /// Simulate decoding the token at position `pos`.
     pub fn decode_step(&mut self, pos: u64) -> Result<StepResult> {
-        let graph = DecodeGraph::build(&self.model, pos);
-        let program = compile(&graph, &self.cfg)?;
-        self.run_program(&program, pos)
+        let tpl = self.cache.get(&self.model, &self.cfg, pos)?;
+        self.run_template(&tpl, pos)
     }
 
     /// Simulate a full generation of `n_tokens` (positions 0..n).
@@ -111,215 +107,71 @@ impl Simulator {
         Ok(StepResult { start_cycle: start, finish_cycle: self.clock })
     }
 
-    /// Execute one compiled program; the token position drives KV
-    /// addressing.
-    pub fn run_program(&mut self, program: &Program, pos: u64) -> Result<StepResult> {
+    /// Execute one compiled program template at token position `pos`
+    /// (the context length `ltoken = pos + 1` specializes the
+    /// position-scaled instructions at issue time).
+    pub fn run_template(&mut self, tpl: &ProgramTemplate, pos: u64) -> Result<StepResult> {
+        let ltoken = pos + 1;
         let step_start = self.clock;
         self.finish.clear();
-        self.finish.reserve(program.nodes.len());
+        self.finish.reserve(tpl.len());
         self.first_ready.clear();
-        self.first_ready.reserve(program.nodes.len());
+        self.first_ready.reserve(tpl.len());
 
-        for node in &program.nodes {
-            let mut ready = step_start;
-            for &d in &node.deps {
-                ready = ready.max(self.finish[d]);
-            }
-            let mut node_first_ready = None;
-            let (fin, class) = match &node.instr {
-                Instr::PimVmm { matrix, class, in_elems, out_elems, parts } => {
-                    let (fin, fr) = self.exec_vmm(ready, matrix.layer, matrix.kind, *in_elems, *out_elems, *parts, program.ltoken);
-                    node_first_ready = Some(fr.min(fin));
-                    (fin, LatClass::Vmm((*class).into()))
-                }
-                Instr::Asic(op) => {
-                    // Pipelining (paper §IV.A(3)): a streamable op begins
-                    // once every dependency has *started producing* —
-                    // VMM deps gate at first_ready — but cannot finish
-                    // before all inputs have fully arrived (dep finish)
-                    // plus the tail of processing the last chunk.
-                    let start = if op.streamable() {
-                        let mut s = step_start;
-                        for &d in &node.deps {
-                            s = s.max(self.first_ready[d]);
-                        }
-                        s.max(self.asic_free)
-                    } else {
-                        ready.max(self.asic_free)
-                    };
-                    let fin = self.engine.execute(start, op);
-                    let fin = if op.streamable() {
-                        // Last-chunk tail: engine fill + one burst.
-                        fin.max(ready + TAIL_CYCLES)
-                    } else {
-                        fin
-                    };
-                    self.asic_free = fin;
-                    (fin, asic_class(op))
-                }
-                Instr::WriteK { layer } => {
-                    let (unit, segs) = self.mapping.kv.k_write(*layer, pos);
-                    let mut fin = ready;
-                    for seg in segs {
-                        fin = self.channels[unit.channel].write_k(&self.t, fin, unit.bank, seg);
-                    }
-                    (fin, LatClass::KvWrite)
-                }
-                Instr::WriteV { layer } => {
-                    let n_units = self.mapping.kv.n_units;
-                    let banks = self.mapping.kv.banks_per_channel;
-                    let mut fin = ready;
-                    for u in 0..n_units {
-                        let (base, n_cols, stride) = self.mapping.kv.v_write(*layer, pos, u);
-                        if n_cols == 0 {
-                            continue;
-                        }
-                        let f = self.channels[u / banks].write_v(&self.t, ready, u % banks, n_cols, base, stride);
-                        fin = fin.max(f);
-                    }
-                    (fin, LatClass::KvWrite)
-                }
-            };
+        let ctx = IssueCtx {
+            cfg: &self.cfg,
+            t: &self.t,
+            model: &self.model,
+            mapping: &self.mapping,
+        };
+        for i in 0..tpl.len() {
+            let instr = tpl.instr_at(i, ltoken);
+            let out = self.res.issue(
+                &ctx,
+                &mut self.plan_scratch,
+                &instr,
+                tpl.deps_of(i),
+                step_start,
+                &self.finish,
+                &self.first_ready,
+                pos,
+                ltoken,
+            );
             // Streamable ops may *start* before `ready` (pipelined with
             // their producer) but never finish before it.
-            let attributed = fin.saturating_sub(ready);
-            self.stats.add_class(class, attributed);
-            self.first_ready.push(node_first_ready.unwrap_or(fin));
-            self.finish.push(fin);
-            self.clock = self.clock.max(fin);
+            self.stats.add_class(out.class, out.finish.saturating_sub(out.ready));
+            self.first_ready.push(out.first_ready);
+            self.finish.push(out.finish);
+            self.clock = self.clock.max(out.finish);
         }
 
         self.stats.tokens += 1;
-        self.stats.instructions += program.nodes.len() as u64;
+        self.stats.instructions += tpl.len() as u64;
         Ok(StepResult { start_cycle: step_start, finish_cycle: self.clock })
-    }
-
-    /// Dispatch a VMM to all channels; returns (slowest finish, earliest
-    /// first-partial-result time).
-    fn exec_vmm(
-        &mut self,
-        start: u64,
-        layer: usize,
-        kind: MatrixKind,
-        in_elems: u64,
-        _out_elems: u64,
-        _parts: u64,
-        ltoken: u64,
-    ) -> (u64, u64) {
-        let banks = self.cfg.gddr6.banks_per_channel;
-        let n_head = self.model.n_head as u64;
-        let mut slowest = start;
-        let mut first_ready = u64::MAX;
-        let plan = &mut self.plan_scratch;
-        plan.input_elems = in_elems;
-        match kind {
-            MatrixKind::KCache | MatrixKind::VCache => {
-                // KV reads are uniform repetitions of a row-fill pattern
-                // per unit: O(1) work via `Bank::mac_pattern` regardless
-                // of context length (EXPERIMENTS.md §Perf iteration 2).
-                let kv = &self.mapping.kv;
-                let (pattern, pattern_len) = if kind == MatrixKind::KCache {
-                    kv.k_read_pattern()
-                } else {
-                    kv.v_read_pattern(ltoken)
-                };
-                for (ch, channel) in self.channels.iter_mut().enumerate() {
-                    let mut out = 0u64;
-                    for b in 0..banks {
-                        let u = ch * banks + b;
-                        let (base_row, reps) = if kind == MatrixKind::KCache {
-                            out += kv.k_out_elems(u, ltoken, n_head);
-                            (kv.k_base[layer][u], kv.k_owned(u, ltoken))
-                        } else {
-                            let cols = kv.v_cols(u);
-                            out += cols as u64;
-                            (kv.v_base[layer][u], cols)
-                        };
-                        plan.bank_work[b] =
-                            UnitWork::Pattern { base_row, reps, pattern, pattern_len };
-                    }
-                    plan.output_elems = out;
-                    let e = channel.execute_vmm(&self.cfg, &self.t, start, plan);
-                    slowest = slowest.max(e.finish);
-                    first_ready = first_ready.min(e.first_ready);
-                }
-            }
-            _ => {
-                let id = crate::model::MatrixId::new(layer, kind);
-                let placement = &self.mapping.matrices[&id];
-                for (ch, channel) in self.channels.iter_mut().enumerate() {
-                    let mut out = 0u64;
-                    for b in 0..banks {
-                        let u = ch * banks + b;
-                        out += placement.out_cols[u];
-                        plan.bank_work[b] = UnitWork::Block(placement.per_unit[u]);
-                    }
-                    plan.output_elems = out;
-                    let e = channel.execute_vmm(&self.cfg, &self.t, start, plan);
-                    slowest = slowest.max(e.finish);
-                    first_ready = first_ready.min(e.first_ready);
-                }
-            }
-        }
-        if first_ready == u64::MAX {
-            first_ready = slowest;
-        }
-        (slowest, first_ready)
     }
 
     /// Fold channel/engine counters into the stats (call once at the end
     /// of a run; counters accumulate monotonically).
     pub fn finalize_stats(&mut self) -> &SimStats {
         self.stats.cycles = self.clock;
-        self.stats.row_hits = 0;
-        self.stats.row_misses = 0;
-        self.stats.bytes_in = 0;
-        self.stats.bytes_out = 0;
-        self.stats.acts = 0;
-        self.stats.pres = 0;
-        self.stats.refreshes = 0;
-        self.stats.mac_read_cycles = 0;
-        self.stats.write_cycles = 0;
-        self.stats.write_recoveries = 0;
-        self.stats.bank_busy_cycles = 0;
-        for ch in &self.channels {
-            let (s, c) = ch.stats();
-            self.stats.row_hits += s.row_hits;
-            self.stats.row_misses += s.row_misses;
-            self.stats.bytes_in += ch.bytes_in;
-            self.stats.bytes_out += ch.bytes_out;
-            self.stats.acts += c.act;
-            self.stats.pres += c.pre;
-            self.stats.refreshes += c.refresh;
-            self.stats.mac_read_cycles += c.mac_read_cycles;
-            self.stats.write_cycles += c.write_cycles;
-            self.stats.write_recoveries += c.write_recoveries;
-            self.stats.bank_busy_cycles += c.busy_cycles;
-        }
-        self.stats.asic_busy_cycles = self.engine.busy_cycles;
-        self.stats.asic_ops = self.engine.ops_executed;
+        self.res.fold_stats(&mut self.stats);
+        self.stats.program_cache_hits = self.cache.hits;
+        self.stats.program_cache_misses = self.cache.misses;
         &self.stats
     }
 
     /// Access to per-bank command counts (energy model).
     pub fn channels(&self) -> &[Channel] {
-        &self.channels
+        &self.res.channels
     }
 
     pub fn engine(&self) -> &Engine {
-        &self.engine
+        &self.res.engine
     }
-}
 
-fn asic_class(op: &AsicOp) -> LatClass {
-    match op {
-        AsicOp::Softmax { .. } => LatClass::Softmax,
-        AsicOp::LayerNorm { .. } => LatClass::LayerNorm,
-        AsicOp::Gelu { .. } => LatClass::Gelu,
-        AsicOp::ResidualAdd { .. } => LatClass::Residual,
-        AsicOp::PartialSum { .. } => LatClass::PartialSum,
-        AsicOp::BiasAdd { .. } | AsicOp::Scale { .. } => LatClass::BiasScale,
-        AsicOp::Concat { .. } => LatClass::Other,
+    /// The compiled-program cache (hit/miss counters, entry count).
+    pub fn program_cache(&self) -> &ProgramCache {
+        &self.cache
     }
 }
 
@@ -411,5 +263,29 @@ mod tests {
         let direct: u64 = s.channels().iter().map(|c| c.bytes_transferred()).sum();
         assert_eq!(s.stats.bytes_moved(), direct);
         assert!(direct > 0);
+    }
+
+    #[test]
+    fn program_cache_amortizes_compilation() {
+        // Acceptance: > 90% hit rate on a 256-token generation.
+        let mut s = sim("gpt2-small");
+        s.generate(256).unwrap();
+        s.finalize_stats();
+        assert_eq!(s.stats.program_cache_misses, 2); // one per regime
+        assert_eq!(s.stats.program_cache_hits, 254);
+        assert!(s.stats.program_cache_hit_rate() > 0.9);
+        assert_eq!(s.program_cache().len(), 2);
+    }
+
+    #[test]
+    fn utilization_counters_sane() {
+        let mut s = sim("gpt2-small");
+        s.generate(4).unwrap();
+        s.finalize_stats();
+        let units = s.cfg.total_mac_units() as u64;
+        let pim = s.stats.pim_utilization(units);
+        let asic = s.stats.asic_utilization();
+        assert!(pim > 0.0 && pim <= 1.0, "pim util {pim}");
+        assert!(asic > 0.0 && asic <= 1.0, "asic util {asic}");
     }
 }

@@ -1,7 +1,18 @@
 //! Event-driven clock-cycle-accurate simulator of the PIM-GPT system.
+//!
+//! Layered as: explicit hardware resources with `busy_until`
+//! reservations ([`resources`]), a single-stream front end ([`engine`],
+//! the paper's simulator) and a multi-request interleaving scheduler
+//! ([`sched`]) — both front ends execute instructions through the same
+//! `Resources::issue` path, so K = 1 interleaved scheduling reproduces
+//! the single-stream simulator exactly. See `sim/README.md`.
 
 pub mod engine;
+pub mod resources;
+pub mod sched;
 pub mod stats;
 
 pub use engine::{Simulator, StepResult};
-pub use stats::{LatClass, SimStats};
+pub use resources::Resources;
+pub use sched::{MultiSim, StreamResult, StreamSpec};
+pub use stats::{LatClass, SimStats, StreamStats};

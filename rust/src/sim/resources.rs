@@ -1,0 +1,282 @@
+//! Explicit hardware resource pool with `busy_until` reservations.
+//!
+//! The simulator's schedulable resources are: 8 PIM channels (each a
+//! shared GB/drain bus plus 16 per-bank MAC units and write ports, all
+//! carrying their own `busy_until` inside `pim::Channel` / `dram::Bank`)
+//! and the ASIC computation engines (`asic_free`). An instruction is
+//! *issued* at the max of its dependency finish times and the relevant
+//! resource free times; every leaf model clamps its start to its own
+//! `busy_until`, so issues from different request streams may arrive in
+//! any time order — the resources serialize them, which is exactly what
+//! lets the multi-stream scheduler (`sim::sched`) interleave programs
+//! without a global event queue.
+//!
+//! [`Resources::issue`] is the *only* path that executes an instruction;
+//! the single-stream `Simulator` and the multi-stream `MultiSim` both go
+//! through it, which is what makes K=1 interleaved scheduling reproduce
+//! the single-stream simulator cycle-for-cycle (see
+//! `tests/integration_sched.rs`).
+
+use super::stats::{LatClass, SimStats};
+use crate::asic::{AsicOp, Engine};
+use crate::compiler::Instr;
+use crate::config::HwConfig;
+use crate::dram::TimingCycles;
+use crate::mapping::ModelMapping;
+use crate::model::{GptModel, MatrixKind};
+use crate::pim::{Channel, UnitWork, VmmPlan};
+
+/// Cycles to flush the last streamed chunk through an ASIC engine after
+/// its final input arrives (engine fill + one burst).
+pub const TAIL_CYCLES: u64 = 12;
+
+/// The reservable hardware: PIM channels + ASIC engines.
+pub struct Resources {
+    pub channels: Vec<Channel>,
+    pub engine: Engine,
+    /// ASIC engine availability (ops serialize on the engines).
+    pub asic_free: u64,
+}
+
+/// Immutable per-issue context (model/mapping are shared by all streams).
+pub(crate) struct IssueCtx<'a> {
+    pub cfg: &'a HwConfig,
+    pub t: &'a TimingCycles,
+    pub model: &'a GptModel,
+    pub mapping: &'a ModelMapping,
+}
+
+/// Timing outcome of one issued instruction.
+pub(crate) struct Issued {
+    /// When every dependency had fully finished (attribution baseline).
+    pub ready: u64,
+    /// When the instruction finished.
+    pub finish: u64,
+    /// When its first partial result was available (== finish for
+    /// non-VMM instructions).
+    pub first_ready: u64,
+    /// Latency class for the Fig. 10 breakdown.
+    pub class: LatClass,
+}
+
+/// A `VmmPlan` sized for this config's channels (reused across issues —
+/// plan allocation churn was ~15% of sim time, EXPERIMENTS.md §Perf).
+pub fn empty_plan(cfg: &HwConfig) -> VmmPlan {
+    VmmPlan {
+        bank_work: (0..cfg.gddr6.banks_per_channel).map(|_| UnitWork::Idle).collect(),
+        input_elems: 0,
+        output_elems: 0,
+    }
+}
+
+impl Resources {
+    pub fn new(cfg: &HwConfig) -> Self {
+        Self {
+            channels: (0..cfg.gddr6.channels).map(|_| Channel::new(cfg)).collect(),
+            engine: Engine::new(cfg),
+            asic_free: 0,
+        }
+    }
+
+    /// Execute one instruction of a stream's program.
+    ///
+    /// `finish` / `first_ready` are the issuing stream's per-node times
+    /// for already-issued nodes of the *current* token; `step_start` is
+    /// when that token began; `pos` / `ltoken` drive KV addressing.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn issue(
+        &mut self,
+        ctx: &IssueCtx,
+        plan: &mut VmmPlan,
+        instr: &Instr,
+        deps: &[usize],
+        step_start: u64,
+        finish: &[u64],
+        first_ready: &[u64],
+        pos: u64,
+        ltoken: u64,
+    ) -> Issued {
+        let mut ready = step_start;
+        for &d in deps {
+            ready = ready.max(finish[d]);
+        }
+        match instr {
+            Instr::PimVmm { matrix, class, in_elems, .. } => {
+                let (fin, fr) =
+                    self.exec_vmm(ctx, plan, ready, matrix.layer, matrix.kind, *in_elems, ltoken);
+                Issued {
+                    ready,
+                    finish: fin,
+                    first_ready: fr.min(fin),
+                    class: LatClass::Vmm((*class).into()),
+                }
+            }
+            Instr::Asic(op) => {
+                // Pipelining (paper §IV.A(3)): a streamable op begins
+                // once every dependency has *started producing* —
+                // VMM deps gate at first_ready — but cannot finish
+                // before all inputs have fully arrived (dep finish)
+                // plus the tail of processing the last chunk.
+                let start = if op.streamable() {
+                    let mut s = step_start;
+                    for &d in deps {
+                        s = s.max(first_ready[d]);
+                    }
+                    s.max(self.asic_free)
+                } else {
+                    ready.max(self.asic_free)
+                };
+                let fin = self.engine.execute(start, op);
+                let fin = if op.streamable() {
+                    // Last-chunk tail: engine fill + one burst.
+                    fin.max(ready + TAIL_CYCLES)
+                } else {
+                    fin
+                };
+                self.asic_free = fin;
+                Issued { ready, finish: fin, first_ready: fin, class: asic_class(op) }
+            }
+            Instr::WriteK { layer } => {
+                let (unit, segs) = ctx.mapping.kv.k_write(*layer, pos);
+                let mut fin = ready;
+                for seg in segs {
+                    fin = self.channels[unit.channel].write_k(ctx.t, fin, unit.bank, seg);
+                }
+                Issued { ready, finish: fin, first_ready: fin, class: LatClass::KvWrite }
+            }
+            Instr::WriteV { layer } => {
+                let n_units = ctx.mapping.kv.n_units;
+                let banks = ctx.mapping.kv.banks_per_channel;
+                let mut fin = ready;
+                for u in 0..n_units {
+                    let (base, n_cols, stride) = ctx.mapping.kv.v_write(*layer, pos, u);
+                    if n_cols == 0 {
+                        continue;
+                    }
+                    let f = self.channels[u / banks]
+                        .write_v(ctx.t, ready, u % banks, n_cols, base, stride);
+                    fin = fin.max(f);
+                }
+                Issued { ready, finish: fin, first_ready: fin, class: LatClass::KvWrite }
+            }
+        }
+    }
+
+    /// Dispatch a VMM to all channels; returns (slowest finish, earliest
+    /// first-partial-result time).
+    #[allow(clippy::too_many_arguments)]
+    fn exec_vmm(
+        &mut self,
+        ctx: &IssueCtx,
+        plan: &mut VmmPlan,
+        start: u64,
+        layer: usize,
+        kind: MatrixKind,
+        in_elems: u64,
+        ltoken: u64,
+    ) -> (u64, u64) {
+        let banks = ctx.cfg.gddr6.banks_per_channel;
+        let n_head = ctx.model.n_head as u64;
+        let mut slowest = start;
+        let mut first_ready = u64::MAX;
+        plan.input_elems = in_elems;
+        match kind {
+            MatrixKind::KCache | MatrixKind::VCache => {
+                // KV reads are uniform repetitions of a row-fill pattern
+                // per unit: O(1) work via `Bank::mac_pattern` regardless
+                // of context length (EXPERIMENTS.md §Perf iteration 2).
+                let kv = &ctx.mapping.kv;
+                let (pattern, pattern_len) = if kind == MatrixKind::KCache {
+                    kv.k_read_pattern()
+                } else {
+                    kv.v_read_pattern(ltoken)
+                };
+                for (ch, channel) in self.channels.iter_mut().enumerate() {
+                    let mut out = 0u64;
+                    for b in 0..banks {
+                        let u = ch * banks + b;
+                        let (base_row, reps) = if kind == MatrixKind::KCache {
+                            out += kv.k_out_elems(u, ltoken, n_head);
+                            (kv.k_base[layer][u], kv.k_owned(u, ltoken))
+                        } else {
+                            let cols = kv.v_cols(u);
+                            out += cols as u64;
+                            (kv.v_base[layer][u], cols)
+                        };
+                        plan.bank_work[b] =
+                            UnitWork::Pattern { base_row, reps, pattern, pattern_len };
+                    }
+                    plan.output_elems = out;
+                    let e = channel.execute_vmm(ctx.cfg, ctx.t, start, plan);
+                    slowest = slowest.max(e.finish);
+                    first_ready = first_ready.min(e.first_ready);
+                }
+            }
+            _ => {
+                let id = crate::model::MatrixId::new(layer, kind);
+                let placement = &ctx.mapping.matrices[&id];
+                for (ch, channel) in self.channels.iter_mut().enumerate() {
+                    let mut out = 0u64;
+                    for b in 0..banks {
+                        let u = ch * banks + b;
+                        out += placement.out_cols[u];
+                        plan.bank_work[b] = UnitWork::Block(placement.per_unit[u]);
+                    }
+                    plan.output_elems = out;
+                    let e = channel.execute_vmm(ctx.cfg, ctx.t, start, plan);
+                    slowest = slowest.max(e.finish);
+                    first_ready = first_ready.min(e.first_ready);
+                }
+            }
+        }
+        if first_ready == u64::MAX {
+            first_ready = slowest;
+        }
+        (slowest, first_ready)
+    }
+
+    /// Fold channel/engine counters into `stats` (call once at the end
+    /// of a run; counters accumulate monotonically, so the fields are
+    /// reset before summing).
+    pub fn fold_stats(&self, stats: &mut SimStats) {
+        stats.row_hits = 0;
+        stats.row_misses = 0;
+        stats.bytes_in = 0;
+        stats.bytes_out = 0;
+        stats.acts = 0;
+        stats.pres = 0;
+        stats.refreshes = 0;
+        stats.mac_read_cycles = 0;
+        stats.write_cycles = 0;
+        stats.write_recoveries = 0;
+        stats.bank_busy_cycles = 0;
+        for ch in &self.channels {
+            let (s, c) = ch.stats();
+            stats.row_hits += s.row_hits;
+            stats.row_misses += s.row_misses;
+            stats.bytes_in += ch.bytes_in;
+            stats.bytes_out += ch.bytes_out;
+            stats.acts += c.act;
+            stats.pres += c.pre;
+            stats.refreshes += c.refresh;
+            stats.mac_read_cycles += c.mac_read_cycles;
+            stats.write_cycles += c.write_cycles;
+            stats.write_recoveries += c.write_recoveries;
+            stats.bank_busy_cycles += c.busy_cycles;
+        }
+        stats.asic_busy_cycles = self.engine.busy_cycles;
+        stats.asic_ops = self.engine.ops_executed;
+    }
+}
+
+pub(crate) fn asic_class(op: &AsicOp) -> LatClass {
+    match op {
+        AsicOp::Softmax { .. } => LatClass::Softmax,
+        AsicOp::LayerNorm { .. } => LatClass::LayerNorm,
+        AsicOp::Gelu { .. } => LatClass::Gelu,
+        AsicOp::ResidualAdd { .. } => LatClass::Residual,
+        AsicOp::PartialSum { .. } => LatClass::PartialSum,
+        AsicOp::BiasAdd { .. } | AsicOp::Scale { .. } => LatClass::BiasScale,
+        AsicOp::Concat { .. } => LatClass::Other,
+    }
+}

@@ -1,0 +1,447 @@
+//! Multi-stream resource-reservation scheduler: interleaves the
+//! instruction streams of up to K concurrent decode requests on the
+//! shared PIM + ASIC hardware.
+//!
+//! The paper's simulator (and the seed's `Simulator`) executes one
+//! program at a time, so the whole package idles whenever a single
+//! request's ASIC op blocks its own critical path. Here each in-flight
+//! request keeps its own dependency-tracking cursor over its compiled
+//! program (served from the shared `ProgramCache`), and the scheduler
+//! issues greedily across streams: at every step it picks the stream
+//! whose next instruction has the earliest dependency-ready time (ties
+//! break by admission order, keeping runs fully deterministic) and
+//! issues it through the same `Resources::issue` path the single-stream
+//! simulator uses. Resource contention needs no global event queue —
+//! every channel bus, bank and the ASIC engine carries its own
+//! `busy_until` and serializes whatever lands on it — so one request's
+//! ASIC softmax naturally overlaps another's bank-level VMM.
+//!
+//! With `max_streams = 1` the scheduler degenerates to exactly the
+//! in-order single-stream pass and reproduces `Simulator` cycle counts
+//! token-for-token (`tests/integration_sched.rs`).
+//!
+//! Modeling note: concurrent streams time-share the *same* KV-cache
+//! region (the mapping reserves one `max_seq` context per layer). The
+//! cycle cost of KV reads/writes is per-stream correct; cross-stream
+//! row-buffer interference on those shared rows is second-order and not
+//! separated. Partitioned per-stream KV reservations are a ROADMAP item.
+
+use std::collections::VecDeque;
+use std::rc::Rc;
+
+use super::resources::{empty_plan, IssueCtx, Resources};
+use super::stats::{SimStats, StreamStats};
+use crate::compiler::{ProgramCache, ProgramTemplate};
+use crate::config::HwConfig;
+use crate::dram::TimingCycles;
+use crate::mapping::ModelMapping;
+use crate::model::GptModel;
+use crate::pim::VmmPlan;
+use anyhow::{bail, Result};
+
+/// One generation request, in simulator terms: decode positions
+/// `0..n_tokens` (prompt prefill + new tokens both cost a decode step,
+/// matching `PimGptSystem::generate`).
+#[derive(Clone, Copy, Debug)]
+pub struct StreamSpec {
+    pub id: u64,
+    pub n_tokens: u64,
+}
+
+/// Completion record of one stream.
+#[derive(Clone, Debug)]
+pub struct StreamResult {
+    pub id: u64,
+    /// Cycle the request entered the queue (`submit` time).
+    pub submitted_cycle: u64,
+    /// Cycle the scheduler admitted it to an execution slot.
+    pub admitted_cycle: u64,
+    /// Cycle its last token finished.
+    pub finish_cycle: u64,
+    pub tokens: u64,
+    /// Finish cycle of each token (monotone; first entry >= admitted).
+    pub token_finishes: Vec<u64>,
+}
+
+impl StreamResult {
+    pub fn queue_cycles(&self) -> u64 {
+        self.admitted_cycle - self.submitted_cycle
+    }
+
+    pub fn service_cycles(&self) -> u64 {
+        self.finish_cycle - self.admitted_cycle
+    }
+}
+
+/// An in-flight stream: program cursor + per-node timing state.
+struct Stream {
+    id: u64,
+    tpl: Rc<ProgramTemplate>,
+    /// Current decode position; `ltoken = pos + 1`.
+    pos: u64,
+    end_pos: u64,
+    /// Next instruction index in the current token's program.
+    next: usize,
+    finish: Vec<u64>,
+    first_ready: Vec<u64>,
+    step_start: u64,
+    /// Max finish among this token's issued nodes so far.
+    step_finish: u64,
+    submitted: u64,
+    admitted: u64,
+    token_finishes: Vec<u64>,
+    instructions: u64,
+    attributed: u64,
+}
+
+/// The interleaved multi-request engine.
+pub struct MultiSim {
+    pub cfg: HwConfig,
+    pub model: GptModel,
+    pub mapping: ModelMapping,
+    t: TimingCycles,
+    res: Resources,
+    plan_scratch: VmmPlan,
+    cache: ProgramCache,
+    active: Vec<Stream>,
+    queue: VecDeque<(StreamSpec, u64)>,
+    clock: u64,
+    pub stats: SimStats,
+    max_streams: usize,
+}
+
+impl MultiSim {
+    pub fn new(model: &GptModel, cfg: &HwConfig) -> Result<Self> {
+        let mapping = ModelMapping::build(model, cfg)?;
+        Ok(Self::from_mapping(model, cfg, mapping))
+    }
+
+    /// Build from an existing mapping (avoids re-running the Algorithm-3
+    /// placement when the caller already holds one, e.g. the server's
+    /// `PimGptSystem`).
+    pub fn from_mapping(model: &GptModel, cfg: &HwConfig, mapping: ModelMapping) -> Self {
+        Self {
+            cfg: cfg.clone(),
+            model: model.clone(),
+            mapping,
+            t: TimingCycles::from_config(cfg),
+            res: Resources::new(cfg),
+            plan_scratch: empty_plan(cfg),
+            cache: ProgramCache::new(),
+            active: Vec::new(),
+            queue: VecDeque::new(),
+            clock: 0,
+            stats: SimStats::default(),
+            max_streams: cfg.sched.max_streams.max(1),
+        }
+    }
+
+    pub fn max_streams(&self) -> usize {
+        self.max_streams
+    }
+
+    /// Current simulated time (max finish cycle issued so far).
+    pub fn clock(&self) -> u64 {
+        self.clock
+    }
+
+    pub fn active_streams(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn queued_streams(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Enqueue a request (admitted when a slot frees up).
+    pub fn submit(&mut self, spec: StreamSpec) -> Result<()> {
+        if spec.n_tokens == 0 {
+            bail!("request {} has zero tokens", spec.id);
+        }
+        if spec.n_tokens > self.model.max_seq as u64 {
+            bail!(
+                "request {} length {} exceeds max_seq {}",
+                spec.id,
+                spec.n_tokens,
+                self.model.max_seq
+            );
+        }
+        self.queue.push_back((spec, self.clock));
+        Ok(())
+    }
+
+    fn admit(&mut self) -> Result<()> {
+        while self.active.len() < self.max_streams {
+            let Some((spec, submitted)) = self.queue.pop_front() else {
+                break;
+            };
+            let tpl = self.cache.get(&self.model, &self.cfg, 0)?;
+            let admitted = self.clock;
+            self.active.push(Stream {
+                id: spec.id,
+                tpl,
+                pos: 0,
+                end_pos: spec.n_tokens,
+                next: 0,
+                finish: Vec::new(),
+                first_ready: Vec::new(),
+                step_start: admitted,
+                step_finish: admitted,
+                submitted,
+                admitted,
+                token_finishes: Vec::new(),
+                instructions: 0,
+                attributed: 0,
+            });
+        }
+        Ok(())
+    }
+
+    /// Advance the simulation until the next stream completes; returns
+    /// its result, or `None` when nothing is in flight or queued.
+    pub fn step(&mut self) -> Result<Option<StreamResult>> {
+        self.admit()?;
+        if self.active.is_empty() {
+            return Ok(None);
+        }
+        loop {
+            // Greedy pick: the stream whose next instruction has the
+            // earliest dependency-ready time (FCFS per resource); ties
+            // break toward the earliest-admitted stream.
+            let mut si = 0;
+            let mut best_ready = u64::MAX;
+            for (i, s) in self.active.iter().enumerate() {
+                let mut ready = s.step_start;
+                for &d in s.tpl.deps_of(s.next) {
+                    ready = ready.max(s.finish[d]);
+                }
+                if ready < best_ready {
+                    best_ready = ready;
+                    si = i;
+                }
+            }
+
+            // Issue it on the shared resources.
+            let tpl = Rc::clone(&self.active[si].tpl);
+            let (pos, step_start, next) = {
+                let s = &self.active[si];
+                (s.pos, s.step_start, s.next)
+            };
+            let instr = tpl.instr_at(next, pos + 1);
+            let ctx = IssueCtx {
+                cfg: &self.cfg,
+                t: &self.t,
+                model: &self.model,
+                mapping: &self.mapping,
+            };
+            let out = {
+                let s = &self.active[si];
+                self.res.issue(
+                    &ctx,
+                    &mut self.plan_scratch,
+                    &instr,
+                    tpl.deps_of(next),
+                    step_start,
+                    &s.finish,
+                    &s.first_ready,
+                    pos,
+                    pos + 1,
+                )
+            };
+
+            self.stats.add_class(out.class, out.finish.saturating_sub(out.ready));
+            self.stats.instructions += 1;
+            self.clock = self.clock.max(out.finish);
+
+            let token_done = {
+                let s = &mut self.active[si];
+                s.instructions += 1;
+                s.attributed += out.finish.saturating_sub(out.ready);
+                s.first_ready.push(out.first_ready);
+                s.finish.push(out.finish);
+                s.step_finish = s.step_finish.max(out.finish);
+                s.next += 1;
+                s.next == s.tpl.len()
+            };
+            if !token_done {
+                continue;
+            }
+
+            self.stats.tokens += 1;
+            let stream_done = {
+                let s = &mut self.active[si];
+                let fin = s.step_finish;
+                s.token_finishes.push(fin);
+                s.pos += 1;
+                s.pos >= s.end_pos
+            };
+            if !stream_done {
+                let tpl = self.cache.get(&self.model, &self.cfg, self.active[si].pos)?;
+                let s = &mut self.active[si];
+                s.tpl = tpl;
+                s.step_start = s.step_finish;
+                s.next = 0;
+                s.finish.clear();
+                s.first_ready.clear();
+                continue;
+            }
+
+            // Retire the stream and backfill its slot from the queue.
+            let s = self.active.remove(si);
+            self.stats.streams.push(StreamStats {
+                id: s.id,
+                tokens: s.token_finishes.len() as u64,
+                instructions: s.instructions,
+                attributed_cycles: s.attributed,
+                queue_cycles: s.admitted - s.submitted,
+                service_cycles: s.step_finish - s.admitted,
+            });
+            let result = StreamResult {
+                id: s.id,
+                submitted_cycle: s.submitted,
+                admitted_cycle: s.admitted,
+                finish_cycle: s.step_finish,
+                tokens: s.token_finishes.len() as u64,
+                token_finishes: s.token_finishes,
+            };
+            self.admit()?;
+            return Ok(Some(result));
+        }
+    }
+
+    /// Drain everything: run until all submitted streams complete.
+    /// Results are in completion order.
+    pub fn run_all(&mut self) -> Result<Vec<StreamResult>> {
+        let mut out = Vec::new();
+        while let Some(r) = self.step()? {
+            out.push(r);
+        }
+        Ok(out)
+    }
+
+    /// Fold resource counters into the stats (end of run).
+    pub fn finalize_stats(&mut self) -> &SimStats {
+        self.stats.cycles = self.clock;
+        self.res.fold_stats(&mut self.stats);
+        self.stats.program_cache_hits = self.cache.hits;
+        self.stats.program_cache_misses = self.cache.misses;
+        &self.stats
+    }
+
+    /// The compiled-program cache (hit/miss counters, entry count).
+    pub fn program_cache(&self) -> &ProgramCache {
+        &self.cache
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::gpt::by_name;
+
+    fn msim(model: &str, k: usize) -> MultiSim {
+        let m = by_name(model).unwrap();
+        let cfg = HwConfig::paper_baseline().with_max_streams(k);
+        MultiSim::new(&m, &cfg).unwrap()
+    }
+
+    #[test]
+    fn empty_engine_steps_to_none() {
+        let mut ms = msim("gpt-nano", 2);
+        assert!(ms.step().unwrap().is_none());
+    }
+
+    #[test]
+    fn single_request_completes() {
+        let mut ms = msim("gpt-nano", 2);
+        ms.submit(StreamSpec { id: 7, n_tokens: 5 }).unwrap();
+        let r = ms.step().unwrap().unwrap();
+        assert_eq!(r.id, 7);
+        assert_eq!(r.tokens, 5);
+        assert_eq!(r.token_finishes.len(), 5);
+        assert!(r.token_finishes.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(r.queue_cycles(), 0);
+        assert!(r.service_cycles() > 0);
+        assert!(ms.step().unwrap().is_none());
+    }
+
+    #[test]
+    fn submit_rejects_invalid_lengths() {
+        let mut ms = msim("gpt-nano", 2); // max_seq 128
+        assert!(ms.submit(StreamSpec { id: 0, n_tokens: 0 }).is_err());
+        assert!(ms.submit(StreamSpec { id: 1, n_tokens: 129 }).is_err());
+        assert!(ms.submit(StreamSpec { id: 2, n_tokens: 128 }).is_ok());
+    }
+
+    #[test]
+    fn excess_requests_queue_and_report_waiting() {
+        let mut ms = msim("gpt-nano", 2);
+        for id in 0..4 {
+            ms.submit(StreamSpec { id, n_tokens: 4 }).unwrap();
+        }
+        assert_eq!(ms.queued_streams(), 4);
+        let results = ms.run_all().unwrap();
+        assert_eq!(results.len(), 4);
+        // First two admitted immediately; the last two waited.
+        let by_id = |id: u64| results.iter().find(|r| r.id == id).unwrap();
+        assert_eq!(by_id(0).queue_cycles(), 0);
+        assert_eq!(by_id(1).queue_cycles(), 0);
+        assert!(by_id(2).queue_cycles() > 0);
+        assert!(by_id(3).queue_cycles() > 0);
+    }
+
+    #[test]
+    fn interleaving_beats_fifo_on_makespan() {
+        // Same request set, K=1 (FIFO) vs K=4: the interleaved schedule
+        // must finish strictly earlier (it fills channel idle gaps with
+        // the other streams' VMMs).
+        let specs: Vec<StreamSpec> =
+            (0..4).map(|id| StreamSpec { id, n_tokens: 4 + 2 * id }).collect();
+        let mut fifo = msim("gpt2-small", 1);
+        let mut inter = msim("gpt2-small", 4);
+        for s in &specs {
+            fifo.submit(*s).unwrap();
+            inter.submit(*s).unwrap();
+        }
+        fifo.run_all().unwrap();
+        inter.run_all().unwrap();
+        assert!(
+            inter.clock() < fifo.clock(),
+            "interleaved {} !< fifo {}",
+            inter.clock(),
+            fifo.clock()
+        );
+    }
+
+    #[test]
+    fn deterministic_interleaving() {
+        let run = || {
+            let mut ms = msim("gpt2-small", 3);
+            for id in 0..5 {
+                ms.submit(StreamSpec { id, n_tokens: 3 + id }).unwrap();
+            }
+            let results = ms.run_all().unwrap();
+            (ms.clock(), results.iter().map(|r| r.finish_cycle).collect::<Vec<_>>())
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn per_stream_stats_recorded() {
+        let mut ms = msim("gpt-nano", 2);
+        for id in 0..3 {
+            ms.submit(StreamSpec { id, n_tokens: 4 }).unwrap();
+        }
+        ms.run_all().unwrap();
+        ms.finalize_stats();
+        assert_eq!(ms.stats.streams.len(), 3);
+        let total_tokens: u64 = ms.stats.streams.iter().map(|s| s.tokens).sum();
+        assert_eq!(total_tokens, 12);
+        assert_eq!(ms.stats.tokens, 12);
+        for s in &ms.stats.streams {
+            assert!(s.instructions > 0);
+            assert!(s.attributed_cycles > 0);
+            assert!(s.service_cycles > 0);
+        }
+    }
+}

@@ -90,6 +90,28 @@ pub struct SimStats {
     pub asic_ops: u64,
     /// Instructions executed.
     pub instructions: u64,
+    /// Compiled-program cache: lookups served from cache vs compiles.
+    pub program_cache_hits: u64,
+    pub program_cache_misses: u64,
+    /// Per-request-stream attribution (one entry per retired stream;
+    /// empty for plain single-program runs).
+    pub streams: Vec<StreamStats>,
+}
+
+/// Per-stream share of a multi-request run (`sim::sched::MultiSim`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StreamStats {
+    pub id: u64,
+    pub tokens: u64,
+    pub instructions: u64,
+    /// Sum of per-instruction critical-path cycles attributed to this
+    /// stream (same semantics as `class_cycles`: concurrency can make
+    /// the sum across streams exceed wall cycles).
+    pub attributed_cycles: u64,
+    /// Simulated cycles spent queued before admission.
+    pub queue_cycles: u64,
+    /// Simulated cycles from admission to last token.
+    pub service_cycles: u64,
 }
 
 impl SimStats {
@@ -122,6 +144,32 @@ impl SimStats {
         }
         let vmm: u64 = self.class_cycles.iter().filter(|(c, _)| c.is_vmm()).map(|(_, v)| v).sum();
         vmm as f64 / total as f64
+    }
+
+    /// Compiled-program cache hit rate (1.0 when never consulted).
+    pub fn program_cache_hit_rate(&self) -> f64 {
+        let total = self.program_cache_hits + self.program_cache_misses;
+        if total == 0 {
+            return 1.0;
+        }
+        self.program_cache_hits as f64 / total as f64
+    }
+
+    /// Mean busy fraction of the PIM bank units over the run
+    /// (`total_units` = channels x banks_per_channel).
+    pub fn pim_utilization(&self, total_units: u64) -> f64 {
+        if self.cycles == 0 || total_units == 0 {
+            return 0.0;
+        }
+        self.bank_busy_cycles as f64 / (self.cycles * total_units) as f64
+    }
+
+    /// Busy fraction of the ASIC computation engines over the run.
+    pub fn asic_utilization(&self) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.asic_busy_cycles.min(self.cycles) as f64 / self.cycles as f64
     }
 }
 
@@ -157,5 +205,22 @@ mod tests {
     fn labels_lowercase() {
         assert_eq!(LatClass::Vmm(VmmClassKey::LmHead).label(), "vmm:lmhead");
         assert_eq!(LatClass::KvWrite.label(), "kvwrite");
+    }
+
+    #[test]
+    fn cache_hit_rate_and_utilization() {
+        let s = SimStats {
+            program_cache_hits: 98,
+            program_cache_misses: 2,
+            cycles: 1000,
+            bank_busy_cycles: 64_000,
+            asic_busy_cycles: 250,
+            ..Default::default()
+        };
+        assert!((s.program_cache_hit_rate() - 0.98).abs() < 1e-12);
+        assert!((s.pim_utilization(128) - 0.5).abs() < 1e-12);
+        assert!((s.asic_utilization() - 0.25).abs() < 1e-12);
+        assert_eq!(SimStats::default().program_cache_hit_rate(), 1.0);
+        assert_eq!(SimStats::default().asic_utilization(), 0.0);
     }
 }

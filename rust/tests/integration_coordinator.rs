@@ -41,7 +41,10 @@ fn functional_end_to_end_with_artifact() {
 
 #[test]
 fn server_handles_mixed_workload() {
-    let server = Server::start(|| {
+    // Responses are matched by id: with the interleaved scheduler an
+    // invalid request is rejected at ingestion, so its error response
+    // can arrive before earlier requests complete.
+    let mut server = Server::start(|| {
         let m = by_name("gpt-nano").unwrap();
         PimGptSystem::timing_only(&m, &HwConfig::paper_baseline())
     });
@@ -49,12 +52,14 @@ fn server_handles_mixed_workload() {
     server.submit(Request { id: 0, prompt: vec![1], n_new: 4 }).unwrap();
     server.submit(Request { id: 1, prompt: vec![0; 200], n_new: 10 }).unwrap(); // too long
     server.submit(Request { id: 2, prompt: vec![2, 3], n_new: 6 }).unwrap();
-    let r0 = server.recv().unwrap();
-    let r1 = server.recv().unwrap();
-    let r2 = server.recv().unwrap();
-    assert!(r0.error.is_none() && r0.tokens.len() == 5);
-    assert!(r1.error.is_some());
-    assert!(r2.error.is_none() && r2.tokens.len() == 8);
+    let mut by_id = std::collections::BTreeMap::new();
+    for _ in 0..3 {
+        let r = server.recv().unwrap();
+        by_id.insert(r.id, r);
+    }
+    assert!(by_id[&0].error.is_none() && by_id[&0].tokens.len() == 5);
+    assert!(by_id[&1].error.is_some());
+    assert!(by_id[&2].error.is_none() && by_id[&2].tokens.len() == 8);
     let m = server.shutdown();
     assert_eq!(m.requests, 3);
     assert_eq!(m.failed, 1);
@@ -62,9 +67,11 @@ fn server_handles_mixed_workload() {
 
 #[test]
 fn server_simulated_latency_accumulates_monotonically() {
-    let server = Server::start(|| {
+    // K = 1 pins the scheduler to strict FIFO, where queueing delays
+    // accumulate request over request exactly like the seed server.
+    let mut server = Server::start(|| {
         let m = by_name("gpt2-small").unwrap();
-        PimGptSystem::timing_only(&m, &HwConfig::paper_baseline())
+        PimGptSystem::timing_only(&m, &HwConfig::paper_baseline().with_max_streams(1))
     });
     for id in 0..5 {
         server.submit(Request { id, prompt: vec![1, 2], n_new: 3 }).unwrap();
