@@ -81,5 +81,35 @@ fn main() {
             100.0 * ms.stats.asic_utilization(),
             100.0 * ms.stats.program_cache_hit_rate(),
         );
+        println!(
+            "       kv slots {} (peak in use {}), admission blocked {} times",
+            ms.stats.kv_slots, ms.stats.peak_slots_in_use, ms.stats.admission_blocked,
+        );
+    }
+
+    // KV-capacity admission: the same 8-request set on a memory that
+    // only fits ~2 of the 4 requested contexts — admission degrades and
+    // blocks on slot availability instead of oversubscribing the cache.
+    {
+        let mut tight = HwConfig::paper_baseline().with_max_streams(4);
+        tight.gddr6.capacity_gbit = 0.34;
+        let mut ms = MultiSim::new(&m, &tight).unwrap();
+        let shortfall = ms
+            .mapping
+            .kv_shortfall
+            .as_ref()
+            .map(|r| r.to_string())
+            .unwrap_or_else(|| "none".into());
+        for s in &specs {
+            ms.submit(*s).unwrap();
+        }
+        ms.run_all().unwrap();
+        ms.finalize_stats();
+        let queued = ms.stats.streams.iter().filter(|s| s.queue_cycles > 0).count();
+        println!(
+            "sim::multi capacity-limited (0.34 Gb/ch): {} of 4 requested slots, \
+             {queued}/8 requests queued, blocked {} times\n  shortfall: {shortfall}",
+            ms.stats.kv_slots, ms.stats.admission_blocked,
+        );
     }
 }

@@ -9,24 +9,35 @@ use crate::asic::AsicOp;
 use crate::model::{MatrixId, VmmClass};
 
 /// One instruction.
+///
+/// KV-touching instructions carry the *stream slot* whose reserved KV
+/// region they address (`mapping::KvReservation` partitions the cache
+/// per concurrent stream). Programs compile slot-agnostic (slot 0); the
+/// slot is a runtime parameter patched in by
+/// `ProgramTemplate::instr_at`, exactly like `ltoken`.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Instr {
     /// Broadcast `in_elems` to all channels' GBs, MAC `matrix`, drain
     /// `out_elems`. `parts > 1` means the input exceeded the 2 KB GB and
-    /// is streamed in chunks (a PartialSum ASIC op follows).
+    /// is streamed in chunks (a PartialSum ASIC op follows). `slot`
+    /// selects the KV region for `KCache`/`VCache` reads (0, and
+    /// ignored, for weight matrices).
     PimVmm {
         matrix: MatrixId,
         class: VmmClass,
         in_elems: u64,
         out_elems: u64,
         parts: u64,
+        slot: usize,
     },
+    /// Write token `pos`'s Key vector (row-major) to slot `slot`'s
+    /// reserved rows.
+    WriteK { layer: usize, slot: usize },
+    /// Write token `pos`'s Value elements (column-major) to all units of
+    /// slot `slot`'s reserved region.
+    WriteV { layer: usize, slot: usize },
     /// Arithmetic on the ASIC computation engines.
     Asic(AsicOp),
-    /// Write token `pos`'s Key vector (row-major) to its reserved rows.
-    WriteK { layer: usize },
-    /// Write token `pos`'s Value elements (column-major) to all units.
-    WriteV { layer: usize },
 }
 
 /// Instruction + dependencies (indices into the program).

@@ -56,6 +56,8 @@ pub fn compile(graph: &DecodeGraph, cfg: &HwConfig) -> Result<Program> {
                     );
                 }
                 let parts = ceil_div(*in_elems, gb_elems);
+                // Programs compile slot-agnostic: slot 0 here, patched
+                // to the issuing stream's slot by `instr_at`.
                 let vmm = InstrNode {
                     instr: Instr::PimVmm {
                         matrix: *matrix,
@@ -63,6 +65,7 @@ pub fn compile(graph: &DecodeGraph, cfg: &HwConfig) -> Result<Program> {
                         in_elems: *in_elems,
                         out_elems: *out_elems,
                         parts,
+                        slot: 0,
                     },
                     deps,
                 };
@@ -93,11 +96,11 @@ pub fn compile(graph: &DecodeGraph, cfg: &HwConfig) -> Result<Program> {
                 nodes.len() - 1
             }
             GraphOp::WriteK { layer, .. } => {
-                nodes.push(InstrNode { instr: Instr::WriteK { layer: *layer }, deps });
+                nodes.push(InstrNode { instr: Instr::WriteK { layer: *layer, slot: 0 }, deps });
                 nodes.len() - 1
             }
             GraphOp::WriteV { layer, .. } => {
-                nodes.push(InstrNode { instr: Instr::WriteV { layer: *layer }, deps });
+                nodes.push(InstrNode { instr: Instr::WriteV { layer: *layer, slot: 0 }, deps });
                 nodes.len() - 1
             }
         };

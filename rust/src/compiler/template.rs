@@ -15,7 +15,9 @@
 //! regime's largest `ltoken`, which also makes the compile-time SRAM
 //! check conservative for the whole regime) plus a per-node patch table;
 //! [`ProgramTemplate::instr_at`] re-specializes an instruction to any
-//! `ltoken` in O(1) with no allocation. The [`ProgramCache`] in front of
+//! `ltoken` — and to the issuing stream's KV `slot`, since the
+//! partitioned KV cache makes every KV read/write slot-addressed — in
+//! O(1) with no allocation. The [`ProgramCache`] in front of
 //! it is what lets `decode_step` stop rebuilding `DecodeGraph` and
 //! re-running `compile()` for every token (≥ 99% hit rate on a 256-token
 //! generation; counted in `SimStats::program_cache_{hits,misses}`).
@@ -171,10 +173,18 @@ impl ProgramTemplate {
         self.program.peak_sram_bytes
     }
 
-    /// Instruction `i` specialized to context length `ltoken` — O(1), no
-    /// allocation (`Instr` holds no heap data).
-    pub fn instr_at(&self, i: usize, ltoken: u64) -> Instr {
+    /// Instruction `i` specialized to context length `ltoken` and KV
+    /// stream slot `slot` — O(1), no allocation (`Instr` holds no heap
+    /// data). The slot patch applies to every KV-touching instruction
+    /// (KCache/VCache reads, K/V writes): templates are shared across
+    /// streams, so the slot — like `ltoken` — is a runtime parameter.
+    pub fn instr_at(&self, i: usize, ltoken: u64, slot: usize) -> Instr {
         let mut instr = self.program.nodes[i].instr.clone();
+        match &mut instr {
+            Instr::PimVmm { matrix, slot: s, .. } if matrix.kind.is_kv_cache() => *s = slot,
+            Instr::WriteK { slot: s, .. } | Instr::WriteV { slot: s, .. } => *s = slot,
+            _ => {}
+        }
         match self.patch_of[i] {
             None => {}
             Some(PatchKind::ScoreOut) => {
@@ -208,12 +218,12 @@ impl ProgramTemplate {
         instr
     }
 
-    /// Fully materialize the program at `ltoken` (tests / tooling; the
-    /// hot path uses `instr_at` and never allocates).
+    /// Fully materialize the program at `ltoken`, slot 0 (tests /
+    /// tooling; the hot path uses `instr_at` and never allocates).
     pub fn materialize(&self, ltoken: u64) -> Program {
         let mut p = self.program.clone();
         for i in 0..p.nodes.len() {
-            p.nodes[i].instr = self.instr_at(i, ltoken);
+            p.nodes[i].instr = self.instr_at(i, ltoken, 0);
         }
         p.ltoken = ltoken;
         p
@@ -350,8 +360,46 @@ mod tests {
         let cfg = cfg();
         let tpl =
             ProgramTemplate::build(&m, &cfg, PosRegime { av_chunked: false }).unwrap();
-        // LM head (last node) is position-independent.
+        // LM head (last node) is position- and slot-independent.
         let last = tpl.len() - 1;
-        assert_eq!(tpl.instr_at(last, 1), tpl.instr_at(last, 50));
+        assert_eq!(tpl.instr_at(last, 1, 0), tpl.instr_at(last, 50, 0));
+        assert_eq!(tpl.instr_at(last, 1, 0), tpl.instr_at(last, 1, 3));
+    }
+
+    #[test]
+    fn slot_patched_into_every_kv_instruction() {
+        use crate::model::MatrixKind;
+        let m = by_name("gpt2-small").unwrap();
+        let cfg = cfg();
+        let tpl =
+            ProgramTemplate::build(&m, &cfg, PosRegime { av_chunked: false }).unwrap();
+        let mut kv_instrs = 0;
+        for i in 0..tpl.len() {
+            match tpl.instr_at(i, 10, 2) {
+                Instr::WriteK { slot, .. } | Instr::WriteV { slot, .. } => {
+                    assert_eq!(slot, 2, "node {i}");
+                    kv_instrs += 1;
+                }
+                Instr::PimVmm { matrix, slot, .. } => {
+                    if matrix.kind.is_kv_cache() {
+                        assert_eq!(slot, 2, "node {i}");
+                        kv_instrs += 1;
+                    } else {
+                        assert_eq!(slot, 0, "weight VMM node {i} must stay slot 0");
+                    }
+                }
+                Instr::Asic(_) => {}
+            }
+        }
+        // 2 writes + 2 cache reads per layer.
+        assert_eq!(kv_instrs, 4 * m.n_layer);
+        // And there are weight VMMs in the mix that stayed slot 0.
+        let weight_vmms = (0..tpl.len())
+            .filter(|&i| matches!(
+                tpl.instr_at(i, 10, 2),
+                Instr::PimVmm { matrix, .. } if matrix.kind == MatrixKind::Wqkv
+            ))
+            .count();
+        assert_eq!(weight_vmms, m.n_layer);
     }
 }

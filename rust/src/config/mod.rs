@@ -154,7 +154,11 @@ impl Default for AsicConfig {
 /// knob — the paper simulates one sequence at a time, which is K = 1).
 #[derive(Clone, Debug, PartialEq)]
 pub struct SchedulerConfig {
-    /// Maximum decode streams interleaved on the hardware at once.
+    /// Maximum decode streams interleaved on the hardware at once. The
+    /// mapping reserves one disjoint `max_seq` KV context per stream
+    /// (`mapping::KvReservation`); if DRAM rows cannot hold that many
+    /// next to the weights, the effective concurrency degrades to the
+    /// largest count that fits (`ModelMapping::kv_shortfall`).
     pub max_streams: usize,
 }
 

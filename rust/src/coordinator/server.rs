@@ -68,6 +68,15 @@ pub struct ServerMetrics {
     /// Simulated wall time of the whole run (last completion cycle).
     /// For interleaved serving this is < `sim_seconds`: streams overlap.
     pub sim_makespan_seconds: f64,
+    /// Disjoint per-stream KV contexts the mapping reserved (the real
+    /// admission capacity; may be below the configured `max_streams`
+    /// when DRAM rows ran out). 1 for FIFO/functional serving.
+    pub kv_slots: u64,
+    /// Most KV slots ever occupied at once during the run.
+    pub peak_slots_in_use: u64,
+    /// Scheduling points where requests queued because every KV slot
+    /// was occupied (KV-capacity admission blocking).
+    pub admission_blocked: u64,
 }
 
 impl ServerMetrics {
@@ -210,7 +219,11 @@ fn fifo_loop(
     metrics: &mut ServerMetrics,
 ) {
     let mut sim_busy_until = 0.0f64;
+    // One request at a time against a single KV cache: one slot, always
+    // fully occupied while serving.
+    metrics.kv_slots = 1;
     while let Ok(req) = rx.recv() {
+        metrics.peak_slots_in_use = 1;
         let wall0 = Instant::now();
         metrics.requests += 1;
         match system.generate(&req.prompt, req.n_new) {
@@ -300,6 +313,11 @@ fn interleaved_loop(
     let cfg = &system.sim.cfg;
     let freq_hz = cfg.gddr6.freq_ghz * 1e9;
     // Reuse the system's Algorithm-3 placement instead of re-mapping.
+    if let Some(report) = &system.sim.mapping.kv_shortfall {
+        // Degraded-capacity serving: fewer concurrent streams than
+        // configured. Not an error — admission simply blocks earlier.
+        eprintln!("pim-gpt server: {report}");
+    }
     let mut msim = MultiSim::from_mapping(&system.model, cfg, system.sim.mapping.clone());
     let mut inflight: Vec<InFlight> = Vec::new();
     let mut open = true;
@@ -359,6 +377,11 @@ fn interleaved_loop(
             });
         }
     }
+    // Queue/occupancy stats of the whole run (KV-capacity admission).
+    msim.finalize_stats();
+    metrics.kv_slots = msim.stats.kv_slots;
+    metrics.peak_slots_in_use = msim.stats.peak_slots_in_use;
+    metrics.admission_blocked = msim.stats.admission_blocked;
     Ok(())
 }
 
@@ -398,6 +421,51 @@ mod tests {
         assert_eq!(m.tokens, 20);
         assert!(m.sim_tokens_per_s() > 0.0);
         assert!(m.sim_makespan_seconds > 0.0);
+        // KV-capacity queue stats are part of the aggregate metrics.
+        assert_eq!(m.kv_slots, 4);
+        assert!(m.peak_slots_in_use >= 1 && m.peak_slots_in_use <= 4);
+    }
+
+    #[test]
+    fn degraded_kv_capacity_limits_serving_concurrency() {
+        // A memory too small for 4 contexts serves with fewer slots:
+        // the metrics expose the real admission capacity and requests
+        // queue on KV availability.
+        // (Stable for the same reason as `fifo_mode_preserves_order_and_
+        // queueing`: the factory's mapping build takes far longer than
+        // the submit loop, so all four requests are queued before the
+        // worker starts simulating.)
+        let mut s = Server::start(move || {
+            let m = by_name("gpt2-small").unwrap();
+            let mut cfg = HwConfig::paper_baseline().with_max_streams(4);
+            cfg.gddr6.capacity_gbit = 0.34; // fits weights + ~2 contexts
+            PimGptSystem::timing_only(&m, &cfg)
+        });
+        for id in 0..4 {
+            s.submit(Request { id, prompt: vec![1], n_new: 1 }).unwrap();
+        }
+        let mut queued = 0;
+        for _ in 0..4 {
+            let r = s.recv().unwrap();
+            assert!(r.error.is_none());
+            if r.sim_queue_seconds > 0.0 {
+                queued += 1;
+            }
+        }
+        let m = s.shutdown();
+        assert_eq!(m.requests, 4);
+        assert!(m.kv_slots < 4, "expected degraded capacity, got {} slots", m.kv_slots);
+        assert!(m.kv_slots >= 1);
+        assert!(m.peak_slots_in_use >= 1 && m.peak_slots_in_use <= m.kv_slots);
+        // The queueing observations depend on all four requests being
+        // ingested together (true whenever the submit loop outpaces the
+        // slow factory, i.e. always in practice); guard on it so an
+        // extreme scheduler preemption can't fail the test spuriously.
+        // The deterministic variants live in tests/integration_sched.rs.
+        if m.peak_slots_in_use == m.kv_slots {
+            assert!(m.admission_blocked > 0);
+            assert!(queued >= 1, "capacity-blocked requests must report queueing");
+        }
     }
 
     #[test]

@@ -289,5 +289,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         fmt_time_s(m.sim_makespan_seconds),
         m.sim_tokens_per_s()
     );
+    // KV-capacity admission stats: fewer slots than K means the mapping
+    // degraded (DRAM rows could not hold K disjoint contexts).
+    println!(
+        "kv slots {} (peak in use {}), admission blocked {} times",
+        m.kv_slots, m.peak_slots_in_use, m.admission_blocked
+    );
     Ok(())
 }

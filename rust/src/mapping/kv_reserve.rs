@@ -1,5 +1,5 @@
 //! KV-cache region reservation + runtime address computation
-//! (paper Algorithm 3 lines 8-14, Fig. 7).
+//! (paper Algorithm 3 lines 8-14, Fig. 7), partitioned per stream slot.
 //!
 //! * **Key cache** (row-major, Fig. 7a): token `t`'s head-concatenated
 //!   Key vector (d elements) occupies `ceil(d / row_elems)` consecutive
@@ -13,6 +13,17 @@
 //!   touches one row per owned column (ACT + 1 write + PRE each — no
 //!   locality, as the paper notes); the scores@V VMM reads each owned
 //!   column as `ceil(ltoken / row_elems)` row segments.
+//!
+//! **Slots**: serving K concurrent decode streams honestly requires K
+//! *disjoint* `max_seq` contexts, so the reservation carries a slot
+//! dimension — `k_base[layer][slot][unit]` / `v_base[layer][slot][unit]`
+//! — and every address computation takes the stream's slot id. Slot 0 is
+//! the single-stream layout; the multi-stream scheduler
+//! (`sim::sched::MultiSim`) admits a stream only when a free slot
+//! exists and recycles slot ids on retirement. When DRAM rows run out
+//! before `max_streams` slots fit, `ModelMapping::build` degrades to
+//! fewer slots and reports the shortfall (`mapping::KvSlotReport`)
+//! instead of failing.
 
 use super::layout::{BankAllocator, CapacityError, UnitId};
 use crate::config::HwConfig;
@@ -24,11 +35,27 @@ use crate::util::ceil_div;
 /// covers d_model and context lengths up to 16 * row_elems = 16k.
 pub const MAX_PATTERN: usize = 16;
 
-/// Split `elems` into full `row_elems`-sized rows plus a tail.
-fn fill_pattern(elems: u64, row_elems: u64) -> ([u32; MAX_PATTERN], u8) {
+/// Split `elems` into full `row_elems`-sized rows plus a tail. Patterns
+/// longer than [`MAX_PATTERN`] are a mapping-time capacity error (the
+/// hardware pattern buffer cannot express them); `KvReservation::build`
+/// validates both KV patterns up front so the simulator's hot path
+/// never hits the overflow at runtime.
+fn fill_pattern(elems: u64, row_elems: u64) -> Result<([u32; MAX_PATTERN], u8), CapacityError> {
+    if elems > MAX_PATTERN as u64 * row_elems {
+        return Err(CapacityError::Pattern { elems, max_elems: MAX_PATTERN as u64 * row_elems });
+    }
+    Ok(fill_pattern_trusted(elems, row_elems))
+}
+
+/// Infallible variant for the simulator hot path: callers rely on the
+/// build-time validation above (`debug_assert` documents the contract).
+fn fill_pattern_trusted(elems: u64, row_elems: u64) -> ([u32; MAX_PATTERN], u8) {
     let full = (elems / row_elems) as usize;
     let tail = (elems % row_elems) as u32;
-    assert!(full + (tail > 0) as usize <= MAX_PATTERN, "pattern too long ({elems} elems)");
+    debug_assert!(
+        full + (tail > 0) as usize <= MAX_PATTERN,
+        "pattern too long ({elems} elems) — must be rejected at mapping build"
+    );
     let mut pat = [0u32; MAX_PATTERN];
     for slot in pat.iter_mut().take(full) {
         *slot = row_elems as u32;
@@ -41,13 +68,31 @@ fn fill_pattern(elems: u64, row_elems: u64) -> ([u32; MAX_PATTERN], u8) {
     (pat, len)
 }
 
-/// Reserved KV regions for every layer.
+/// Rows one stream slot reserves per unit over *all* layers (each
+/// layer's K region plus V region). The footprint is uniform across
+/// units, which is what lets `ModelMapping::build` size the slot count
+/// in closed form against the fullest bank's leftover rows instead of
+/// retrying the whole placement per candidate count.
+pub fn slot_rows_per_unit(model: &GptModel, cfg: &HwConfig, n_units: usize) -> u32 {
+    let row_elems = cfg.gddr6.row_elems();
+    let d = model.d_model as u64;
+    let max_seq = model.max_seq as u64;
+    let rows_per_k = ceil_div(d, row_elems) as u32;
+    let toks_per_unit = ceil_div(max_seq, n_units as u64) as u32;
+    let rows_per_vcol = ceil_div(max_seq, row_elems) as u32;
+    let v_cols = super::weight_map::columns_per_unit(d, n_units as u64) as u32;
+    model.n_layer as u32 * (toks_per_unit * rows_per_k + v_cols * rows_per_vcol)
+}
+
+/// Reserved KV regions for every (layer, stream slot).
 #[derive(Clone, Debug)]
 pub struct KvReservation {
-    /// K region base row per (layer, unit): `k_base[layer][unit]`.
-    pub k_base: Vec<Vec<u32>>,
-    /// V region base row per (layer, unit).
-    pub v_base: Vec<Vec<u32>>,
+    /// K region base row per (layer, slot, unit): `k_base[layer][slot][unit]`.
+    pub k_base: Vec<Vec<Vec<u32>>>,
+    /// V region base row per (layer, slot, unit).
+    pub v_base: Vec<Vec<Vec<u32>>>,
+    /// Disjoint `max_seq` contexts reserved (= concurrent streams servable).
+    pub n_slots: usize,
     pub d_model: u64,
     pub max_seq: u64,
     pub n_units: usize,
@@ -62,15 +107,28 @@ pub struct KvReservation {
 }
 
 impl KvReservation {
+    /// Reserve `n_slots` disjoint per-layer KV contexts. Fails with a
+    /// [`CapacityError`] when the rows don't fit (callers may retry with
+    /// fewer slots — see `ModelMapping::build`) or when a stored vector
+    /// cannot be expressed as a row-fill pattern at all.
     pub fn build(
         model: &GptModel,
         cfg: &HwConfig,
         alloc: &mut BankAllocator,
+        n_slots: usize,
     ) -> Result<Self, CapacityError> {
+        assert!(n_slots >= 1, "at least one KV slot is required");
         let n_units = alloc.n_units();
         let row_elems = cfg.gddr6.row_elems();
         let d = model.d_model as u64;
         let max_seq = model.max_seq as u64;
+
+        // Validate both runtime row-fill patterns now: the K read pattern
+        // (d elements per vector) and the widest V read pattern (max_seq
+        // elements per column). Rejecting here turns what used to be a
+        // runtime abort into a mapping-build error.
+        fill_pattern(d, row_elems)?;
+        fill_pattern(max_seq.max(1), row_elems)?;
 
         let rows_per_k = ceil_div(d, row_elems) as u32;
         let toks_per_unit = ceil_div(max_seq, n_units as u64) as u32;
@@ -80,20 +138,27 @@ impl KvReservation {
         let mut k_base = Vec::with_capacity(model.n_layer);
         let mut v_base = Vec::with_capacity(model.n_layer);
         for _layer in 0..model.n_layer {
-            let mut kb = Vec::with_capacity(n_units);
-            let mut vb = Vec::with_capacity(n_units);
-            for u in 0..n_units {
-                let unit = alloc.unit(u);
-                kb.push(alloc.alloc(unit, toks_per_unit * rows_per_k)?);
-                vb.push(alloc.alloc(unit, v_cols_per_unit as u32 * rows_per_vcol)?);
+            let mut k_slots = Vec::with_capacity(n_slots);
+            let mut v_slots = Vec::with_capacity(n_slots);
+            for _slot in 0..n_slots {
+                let mut kb = Vec::with_capacity(n_units);
+                let mut vb = Vec::with_capacity(n_units);
+                for u in 0..n_units {
+                    let unit = alloc.unit(u);
+                    kb.push(alloc.alloc(unit, toks_per_unit * rows_per_k)?);
+                    vb.push(alloc.alloc(unit, v_cols_per_unit as u32 * rows_per_vcol)?);
+                }
+                k_slots.push(kb);
+                v_slots.push(vb);
             }
-            k_base.push(kb);
-            v_base.push(vb);
+            k_base.push(k_slots);
+            v_base.push(v_slots);
         }
 
         Ok(Self {
             k_base,
             v_base,
+            n_slots,
             d_model: d,
             max_seq,
             n_units,
@@ -110,11 +175,12 @@ impl KvReservation {
         (t % self.n_units as u64) as usize
     }
 
-    /// (unit, row segment list) for writing token `t`'s Key vector.
-    pub fn k_write(&self, layer: usize, t: u64) -> (UnitId, Vec<RowSegment>) {
+    /// (unit, row segment list) for writing token `t`'s Key vector into
+    /// stream slot `slot`.
+    pub fn k_write(&self, layer: usize, slot: usize, t: u64) -> (UnitId, Vec<RowSegment>) {
         let u = self.k_unit(t);
-        let slot = (t / self.n_units as u64) as u32;
-        let base = self.k_base[layer][u] + slot * self.rows_per_k;
+        let tok_slot = (t / self.n_units as u64) as u32;
+        let base = self.k_base[layer][slot][u] + tok_slot * self.rows_per_k;
         let mut segs = Vec::with_capacity(self.rows_per_k as usize);
         let mut rem = self.d_model;
         for r in 0..self.rows_per_k {
@@ -125,16 +191,23 @@ impl KvReservation {
         (self.unit_id(u), segs)
     }
 
-    /// Per-unit segment lists for the q@K^T read at context `ltoken`.
-    pub fn k_read_plan(&self, layer: usize, ltoken: u64) -> Vec<Vec<RowSegment>> {
+    /// Per-unit segment lists for the q@K^T read of slot `slot` at
+    /// context `ltoken`.
+    pub fn k_read_plan(&self, layer: usize, slot: usize, ltoken: u64) -> Vec<Vec<RowSegment>> {
         let mut plans = vec![Vec::new(); self.n_units];
-        self.fill_k_read_plan(layer, ltoken, &mut plans);
+        self.fill_k_read_plan(layer, slot, ltoken, &mut plans);
         plans
     }
 
     /// Allocation-free variant: refills `plans` (one entry per unit,
     /// capacities retained) — the simulator hot path.
-    pub fn fill_k_read_plan(&self, layer: usize, ltoken: u64, plans: &mut [Vec<RowSegment>]) {
+    pub fn fill_k_read_plan(
+        &self,
+        layer: usize,
+        slot: usize,
+        ltoken: u64,
+        plans: &mut [Vec<RowSegment>],
+    ) {
         assert_eq!(plans.len(), self.n_units);
         for (u, plan) in plans.iter_mut().enumerate() {
             plan.clear();
@@ -144,9 +217,9 @@ impl KvReservation {
             } else {
                 0
             };
-            let base = self.k_base[layer][u];
-            for slot in 0..owned {
-                let row0 = base + slot as u32 * self.rows_per_k;
+            let base = self.k_base[layer][slot][u];
+            for tok_slot in 0..owned {
+                let row0 = base + tok_slot as u32 * self.rows_per_k;
                 let mut rem = self.d_model;
                 for r in 0..self.rows_per_k {
                     let elems = rem.min(self.row_elems) as u32;
@@ -169,7 +242,7 @@ impl KvReservation {
     /// Row-fill pattern of one stored Key vector (e.g. d=1536 ->
     /// [1024, 512]): `full` rows of `row_elems` plus an optional tail.
     pub fn k_read_pattern(&self) -> ([u32; MAX_PATTERN], u8) {
-        fill_pattern(self.d_model, self.row_elems)
+        fill_pattern_trusted(self.d_model, self.row_elems)
     }
 
     /// Row-fill pattern of one V column read at context `ltoken`.
@@ -177,7 +250,7 @@ impl KvReservation {
     /// (ltoken <= row_elems but max_seq > row_elems) the physical rows
     /// are strided; the cycle cost is identical (all distinct misses).
     pub fn v_read_pattern(&self, ltoken: u64) -> ([u32; MAX_PATTERN], u8) {
-        fill_pattern(ltoken.max(1), self.row_elems)
+        fill_pattern_trusted(ltoken.max(1), self.row_elems)
     }
 
     /// Scores owned by unit `u` at context `ltoken` (one per stored
@@ -190,11 +263,12 @@ impl KvReservation {
         }
     }
 
-    /// (base_row, n_rows) for writing token `t`'s Value elements into
-    /// unit `u`: one element per owned column, consecutive rows when the
-    /// column's row stride is 1 (max_seq <= row_elems), else strided.
-    pub fn v_write(&self, layer: usize, t: u64, u: usize) -> (u32, u32, u32) {
-        let base = self.v_base[layer][u] + (t / self.row_elems) as u32;
+    /// (base_row, n_cols, row_stride) for writing token `t`'s Value
+    /// elements into unit `u` of stream slot `slot`: one element per
+    /// owned column, consecutive rows when the column's row stride is 1
+    /// (max_seq <= row_elems), else strided.
+    pub fn v_write(&self, layer: usize, slot: usize, t: u64, u: usize) -> (u32, u32, u32) {
+        let base = self.v_base[layer][slot][u] + (t / self.row_elems) as u32;
         let n_cols = self.v_cols(u);
         (base, n_cols, self.rows_per_vcol)
     }
@@ -206,20 +280,27 @@ impl KvReservation {
         (hi - lo) as u32
     }
 
-    /// Per-unit segment lists for the scores@V read at context `ltoken`.
-    pub fn v_read_plan(&self, layer: usize, ltoken: u64) -> Vec<Vec<RowSegment>> {
+    /// Per-unit segment lists for the scores@V read of slot `slot` at
+    /// context `ltoken`.
+    pub fn v_read_plan(&self, layer: usize, slot: usize, ltoken: u64) -> Vec<Vec<RowSegment>> {
         let mut plans = vec![Vec::new(); self.n_units];
-        self.fill_v_read_plan(layer, ltoken, &mut plans);
+        self.fill_v_read_plan(layer, slot, ltoken, &mut plans);
         plans
     }
 
     /// Allocation-free variant of `v_read_plan` (see `fill_k_read_plan`).
-    pub fn fill_v_read_plan(&self, layer: usize, ltoken: u64, plans: &mut [Vec<RowSegment>]) {
+    pub fn fill_v_read_plan(
+        &self,
+        layer: usize,
+        slot: usize,
+        ltoken: u64,
+        plans: &mut [Vec<RowSegment>],
+    ) {
         assert_eq!(plans.len(), self.n_units);
         let rows_touched = ceil_div(ltoken, self.row_elems) as u32;
         for (u, plan) in plans.iter_mut().enumerate() {
             plan.clear();
-            let base = self.v_base[layer][u];
+            let base = self.v_base[layer][slot][u];
             for c in 0..self.v_cols(u) {
                 let col_base = base + c * self.rows_per_vcol;
                 let mut rem = ltoken;
@@ -243,30 +324,34 @@ mod tests {
     use crate::model::gpt::by_name;
     use crate::util::prop::check;
 
-    fn kv(model: &str) -> KvReservation {
+    fn kv_slots(model: &str, n_slots: usize) -> KvReservation {
         let m = by_name(model).unwrap();
         let cfg = HwConfig::paper_baseline();
         let mut alloc = BankAllocator::new(&cfg);
-        KvReservation::build(&m, &cfg, &mut alloc).unwrap()
+        KvReservation::build(&m, &cfg, &mut alloc, n_slots).unwrap()
+    }
+
+    fn kv(model: &str) -> KvReservation {
+        kv_slots(model, 1)
     }
 
     #[test]
     fn k_write_spreads_round_robin() {
         let kv = kv("gpt2-small");
-        let (u0, _) = kv.k_write(0, 0);
-        let (u1, _) = kv.k_write(0, 1);
-        let (u128, s128) = kv.k_write(0, 128);
+        let (u0, _) = kv.k_write(0, 0, 0);
+        let (u1, _) = kv.k_write(0, 0, 1);
+        let (u128, s128) = kv.k_write(0, 0, 128);
         assert_ne!(u0, u1);
         assert_eq!(u0, u128); // wraps around 128 units
         // second slot on the same unit is the next reserved row
-        let (_, s0) = kv.k_write(0, 0);
+        let (_, s0) = kv.k_write(0, 0, 0);
         assert_eq!(s128[0].row, s0[0].row + kv.rows_per_k);
     }
 
     #[test]
     fn k_write_one_row_when_d_fits() {
         let kv = kv("gpt2-small"); // d=768 <= 1024
-        let (_, segs) = kv.k_write(0, 5);
+        let (_, segs) = kv.k_write(0, 0, 5);
         assert_eq!(segs.len(), 1);
         assert_eq!(segs[0].elems, 768);
     }
@@ -274,7 +359,7 @@ mod tests {
     #[test]
     fn k_write_two_rows_for_wide_model() {
         let kv = kv("gpt3-xl"); // d=2048 -> 2 rows
-        let (_, segs) = kv.k_write(3, 5);
+        let (_, segs) = kv.k_write(3, 0, 5);
         assert_eq!(segs.len(), 2);
         assert_eq!(segs[0].elems + segs[1].elems, 2048);
     }
@@ -283,7 +368,7 @@ mod tests {
     fn k_read_covers_all_tokens() {
         let kv = kv("gpt2-small");
         for ltoken in [1u64, 7, 128, 129, 1000] {
-            let plans = kv.k_read_plan(0, ltoken);
+            let plans = kv.k_read_plan(0, 0, ltoken);
             let total: u64 = plans.iter().flatten().map(|s| s.elems as u64).sum();
             assert_eq!(total, ltoken * 768, "ltoken={ltoken}");
         }
@@ -308,7 +393,7 @@ mod tests {
     #[test]
     fn v_read_covers_ltoken_per_column() {
         let kv = kv("gpt3-small");
-        let plans = kv.v_read_plan(0, 300);
+        let plans = kv.v_read_plan(0, 0, 300);
         let total: u64 = plans.iter().flatten().map(|s| s.elems as u64).sum();
         assert_eq!(total, 300 * 768);
     }
@@ -317,7 +402,7 @@ mod tests {
     fn v_read_multi_row_columns_long_context() {
         let kv = kv("gpt3-xl"); // max_seq=2048 -> 2 rows per column
         assert_eq!(kv.rows_per_vcol, 2);
-        let plans = kv.v_read_plan(0, 2000);
+        let plans = kv.v_read_plan(0, 0, 2000);
         // each owned column contributes 2 segments (1024 + 976)
         let u0 = &plans[0];
         assert_eq!(u0.len() as u64, kv.v_cols(0) as u64 * 2);
@@ -328,25 +413,123 @@ mod tests {
         let kv = kv("gpt2-small");
         // layer 1's K base must start after layer 0's K+V regions
         for u in 0..kv.n_units {
-            assert!(kv.k_base[1][u] > kv.k_base[0][u]);
-            assert!(kv.v_base[0][u] > kv.k_base[0][u]);
+            assert!(kv.k_base[1][0][u] > kv.k_base[0][0][u]);
+            assert!(kv.v_base[0][0][u] > kv.k_base[0][0][u]);
+        }
+    }
+
+    #[test]
+    fn slots_are_disjoint_same_layer() {
+        let kv = kv_slots("gpt2-small", 3);
+        assert_eq!(kv.n_slots, 3);
+        for u in 0..kv.n_units {
+            // Later slots live strictly after earlier slots' regions.
+            assert!(kv.k_base[0][1][u] > kv.v_base[0][0][u]);
+            assert!(kv.k_base[0][2][u] > kv.v_base[0][1][u]);
+        }
+    }
+
+    #[test]
+    fn slot_addressing_shifts_base_only() {
+        // The same (token, layer) write in two slots differs only by the
+        // slot region offset — identical shape, disjoint rows.
+        let kv = kv_slots("gpt2-small", 2);
+        let (u_a, segs_a) = kv.k_write(2, 0, 17);
+        let (u_b, segs_b) = kv.k_write(2, 1, 17);
+        assert_eq!(u_a, u_b);
+        assert_eq!(segs_a.len(), segs_b.len());
+        for (a, b) in segs_a.iter().zip(&segs_b) {
+            assert_eq!(a.elems, b.elems);
+            assert_ne!(a.row, b.row);
+        }
+    }
+
+    #[test]
+    fn pattern_overflow_is_capacity_error_not_panic() {
+        // A context longer than MAX_PATTERN rows per V column must fail
+        // at mapping build with a Pattern capacity error.
+        let mut m = by_name("gpt2-small").unwrap();
+        m.max_seq = MAX_PATTERN * 1024 + 1; // 16k rows of 1024 + 1
+        let cfg = HwConfig::paper_baseline();
+        let mut alloc = BankAllocator::new(&cfg);
+        let err = KvReservation::build(&m, &cfg, &mut alloc, 1).unwrap_err();
+        match err {
+            CapacityError::Pattern { elems, max_elems } => {
+                assert_eq!(elems, MAX_PATTERN as u64 * 1024 + 1);
+                assert_eq!(max_elems, MAX_PATTERN as u64 * 1024);
+            }
+            other => panic!("expected Pattern error, got {other:?}"),
         }
     }
 
     #[test]
     fn prop_k_read_rows_within_reservation() {
         check("k reads stay inside reserved region", 50, |rng| {
-            let kv = kv("gpt2-medium");
+            let kv = kv_slots("gpt2-medium", 2);
+            let slot = rng.usize_in(0, 2);
             let ltoken = rng.gen_range(1024) + 1;
-            let plans = kv.k_read_plan(2, ltoken);
+            let plans = kv.k_read_plan(2, slot, ltoken);
             let toks_per_unit = ceil_div(kv.max_seq, kv.n_units as u64) as u32;
             for (u, plan) in plans.iter().enumerate() {
-                let base = kv.k_base[2][u];
+                let base = kv.k_base[2][slot][u];
                 let end = base + toks_per_unit * kv.rows_per_k;
                 for s in plan {
                     if s.row < base || s.row >= end {
                         return Err(format!("unit {u} row {} outside [{base},{end})", s.row));
                     }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn slot_footprint_matches_actual_allocation() {
+        // The closed-form per-slot footprint must equal what one slot
+        // actually consumes on a unit (ModelMapping::build relies on
+        // this to size the slot count without retrying placements).
+        let m = by_name("gpt2-small").unwrap();
+        let cfg = HwConfig::paper_baseline();
+        let mut alloc = BankAllocator::new(&cfg);
+        let kv = KvReservation::build(&m, &cfg, &mut alloc, 1).unwrap();
+        let per_slot = slot_rows_per_unit(&m, &cfg, kv.n_units);
+        assert_eq!(per_slot, 12 * (8 + 6)); // 12 layers x (K 8 rows + V 6 rows)
+        for u in 0..kv.n_units {
+            assert_eq!(alloc.used(alloc.unit(u)), per_slot, "unit {u}");
+        }
+        // Two slots cost exactly twice as much.
+        let mut alloc2 = BankAllocator::new(&cfg);
+        KvReservation::build(&m, &cfg, &mut alloc2, 2).unwrap();
+        assert_eq!(alloc2.used(alloc2.unit(0)), 2 * per_slot);
+    }
+
+    #[test]
+    fn prop_slot_regions_never_overlap() {
+        // Satellite acceptance: across every (layer, slot) pair, the K
+        // and V regions of one unit are pairwise disjoint row ranges.
+        check("per-slot KV regions disjoint", 20, |rng| {
+            let n_slots = rng.usize_in(1, 5);
+            let kv = kv_slots("gpt2-small", n_slots);
+            let toks_per_unit = ceil_div(kv.max_seq, kv.n_units as u64) as u32;
+            let k_rows = toks_per_unit * kv.rows_per_k;
+            let v_rows = kv.v_cols_per_unit as u32 * kv.rows_per_vcol;
+            let u = rng.usize_in(0, kv.n_units);
+            let mut regions: Vec<(u32, u32, String)> = Vec::new();
+            for layer in 0..kv.k_base.len() {
+                for slot in 0..n_slots {
+                    let kb = kv.k_base[layer][slot][u];
+                    regions.push((kb, kb + k_rows, format!("K l{layer} s{slot}")));
+                    let vb = kv.v_base[layer][slot][u];
+                    regions.push((vb, vb + v_rows, format!("V l{layer} s{slot}")));
+                }
+            }
+            regions.sort_by_key(|r| r.0);
+            for w in regions.windows(2) {
+                if w[1].0 < w[0].1 {
+                    return Err(format!(
+                        "unit {u}: {} [{}, {}) overlaps {} [{}, {})",
+                        w[0].2, w[0].0, w[0].1, w[1].2, w[1].0, w[1].1
+                    ));
                 }
             }
             Ok(())

@@ -20,21 +20,30 @@ pub struct BankAllocator {
     banks: usize,
 }
 
-#[derive(Debug, PartialEq, Eq)]
-pub struct CapacityError {
-    pub channel: usize,
-    pub bank: usize,
-    pub need: u32,
-    pub free: u32,
+/// Why a static placement cannot be realized on the configured DRAM.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CapacityError {
+    /// A bank ran out of free rows.
+    Rows { channel: usize, bank: usize, need: u32, free: u32 },
+    /// A stored vector/column needs more rows than the hardware row-fill
+    /// pattern supports (`elems > MAX_PATTERN * row_elems`) — the model's
+    /// `d_model` or `max_seq` is too large for this row geometry.
+    Pattern { elems: u64, max_elems: u64 },
 }
 
 impl std::fmt::Display for CapacityError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(
-            f,
-            "bank capacity exceeded on ch{} bank{}: need {} rows, {} free",
-            self.channel, self.bank, self.need, self.free
-        )
+        match self {
+            CapacityError::Rows { channel, bank, need, free } => write!(
+                f,
+                "bank capacity exceeded on ch{channel} bank{bank}: need {need} rows, {free} free"
+            ),
+            CapacityError::Pattern { elems, max_elems } => write!(
+                f,
+                "row-fill pattern overflow: {elems} elements per stored vector \
+                 exceeds the {max_elems}-element pattern limit"
+            ),
+        }
     }
 }
 
@@ -73,7 +82,7 @@ impl BankAllocator {
         let base = self.next_row[slot];
         let free = self.rows_per_bank - base;
         if rows > free {
-            return Err(CapacityError { channel: u.channel, bank: u.bank, need: rows, free });
+            return Err(CapacityError::Rows { channel: u.channel, bank: u.bank, need: rows, free });
         }
         self.next_row[slot] += rows;
         Ok(base)
@@ -88,6 +97,13 @@ impl BankAllocator {
     pub fn max_fill(&self) -> f64 {
         let max = self.next_row.iter().copied().max().unwrap_or(0);
         max as f64 / self.rows_per_bank as f64
+    }
+
+    /// Free rows remaining on the fullest unit — the binding constraint
+    /// for any further uniform per-unit reservation (KV slot sizing).
+    pub fn min_free_rows(&self) -> u32 {
+        let max = self.next_row.iter().copied().max().unwrap_or(0);
+        self.rows_per_bank - max
     }
 
     /// Difference between the most- and least-filled unit, in rows —
@@ -133,7 +149,13 @@ mod tests {
         let u = UnitId { channel: 0, bank: 0 };
         a.alloc(u, 16384).unwrap();
         let err = a.alloc(u, 1).unwrap_err();
-        assert_eq!(err.free, 0);
+        match err {
+            CapacityError::Rows { free, need, .. } => {
+                assert_eq!(free, 0);
+                assert_eq!(need, 1);
+            }
+            other => panic!("expected Rows error, got {other:?}"),
+        }
     }
 
     #[test]

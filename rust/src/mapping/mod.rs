@@ -7,5 +7,5 @@ pub mod layout;
 pub mod weight_map;
 
 pub use kv_reserve::KvReservation;
-pub use layout::BankAllocator;
-pub use weight_map::{MatrixPlacement, ModelMapping};
+pub use layout::{BankAllocator, CapacityError};
+pub use weight_map::{KvSlotReport, MatrixPlacement, ModelMapping};

@@ -45,6 +45,29 @@ impl MatrixPlacement {
     }
 }
 
+/// Report emitted when DRAM rows could not hold the requested number of
+/// per-stream KV slots and the mapping degraded to fewer (the model and
+/// at least one full context still fit).
+#[derive(Clone, Debug)]
+pub struct KvSlotReport {
+    /// Slots requested (`cfg.sched.max_streams`).
+    pub requested: usize,
+    /// Slots actually reserved (>= 1).
+    pub granted: usize,
+    /// The capacity error the originally requested slot count hit.
+    pub cause: CapacityError,
+}
+
+impl std::fmt::Display for KvSlotReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "KV capacity: {} of {} requested stream slots fit ({})",
+            self.granted, self.requested, self.cause
+        )
+    }
+}
+
 /// Full model mapping: every weight matrix placed, KV regions reserved.
 #[derive(Clone, Debug)]
 pub struct ModelMapping {
@@ -56,20 +79,79 @@ pub struct ModelMapping {
     pub fill: f64,
     /// Row imbalance across units after mapping (rows).
     pub imbalance_rows: u32,
+    /// Present when fewer KV slots than `cfg.sched.max_streams` fit.
+    pub kv_shortfall: Option<KvSlotReport>,
 }
 
 impl ModelMapping {
-    /// Map `model` onto the PIM system (Algorithm 3).
+    /// Map `model` onto the PIM system (Algorithm 3), reserving one KV
+    /// slot per requested stream (`cfg.sched.max_streams`). If weights +
+    /// K slots exceed DRAM capacity, the build degrades to the largest
+    /// slot count that fits — computed in closed form from a weights-only
+    /// scratch placement and the uniform per-slot KV footprint
+    /// (`kv_reserve::slot_rows_per_unit`), not by retrying the whole
+    /// placement per candidate count — and records a `KvSlotReport`.
+    /// Only a model that cannot fit even a single context fails.
     pub fn build(model: &GptModel, cfg: &HwConfig) -> Result<Self, CapacityError> {
+        let requested = cfg.sched.max_streams.max(1);
+        match Self::build_with_slots(model, cfg, requested) {
+            Ok(mm) => Ok(mm),
+            // A pattern overflow is independent of the slot count —
+            // fewer slots cannot help.
+            Err(e @ CapacityError::Pattern { .. }) => Err(e),
+            Err(cause) => {
+                let mut scratch = BankAllocator::new(cfg);
+                Self::place_weights(model, cfg, &mut scratch)?;
+                let per_slot =
+                    super::kv_reserve::slot_rows_per_unit(model, cfg, scratch.n_units()).max(1);
+                let granted = (scratch.min_free_rows() / per_slot) as usize;
+                // The requested count just failed, so the fit is
+                // strictly below it whatever the arithmetic says.
+                let granted = granted.min(requested - 1);
+                if granted == 0 {
+                    return Err(cause);
+                }
+                let mut mm = Self::build_with_slots(model, cfg, granted)?;
+                mm.kv_shortfall = Some(KvSlotReport { requested, granted, cause });
+                Ok(mm)
+            }
+        }
+    }
+
+    /// One mapping attempt at a fixed KV slot count.
+    fn build_with_slots(
+        model: &GptModel,
+        cfg: &HwConfig,
+        n_slots: usize,
+    ) -> Result<Self, CapacityError> {
         let mut alloc = BankAllocator::new(cfg);
-        let row_elems = cfg.gddr6.row_elems();
-        let n_units = alloc.n_units() as u64;
 
         // Reserve KV regions first (Algorithm 3 lines 8-14): their layout
         // is position-indexed, so a stable base address is required.
-        let kv = super::KvReservation::build(model, cfg, &mut alloc)?;
+        let kv = super::KvReservation::build(model, cfg, &mut alloc, n_slots)?;
 
         // Map weights (lines 1-7).
+        let matrices = Self::place_weights(model, cfg, &mut alloc)?;
+
+        Ok(Self {
+            matrices,
+            kv,
+            n_channels: cfg.gddr6.channels,
+            banks_per_channel: cfg.gddr6.banks_per_channel,
+            fill: alloc.max_fill(),
+            imbalance_rows: alloc.imbalance_rows(),
+            kv_shortfall: None,
+        })
+    }
+
+    /// Place every weight matrix (Algorithm 3 lines 1-7) into `alloc`.
+    fn place_weights(
+        model: &GptModel,
+        cfg: &HwConfig,
+        alloc: &mut BankAllocator,
+    ) -> Result<BTreeMap<MatrixId, MatrixPlacement>, CapacityError> {
+        let row_elems = cfg.gddr6.row_elems();
+        let n_units = alloc.n_units() as u64;
         let mut matrices = BTreeMap::new();
         for (id, d_in, d_out) in DecodeGraph::weight_matrices(model) {
             let cols_pu = columns_per_unit(d_out, n_units);
@@ -89,15 +171,7 @@ impl ModelMapping {
             }
             matrices.insert(id, MatrixPlacement { per_unit, out_cols, d_in, d_out });
         }
-
-        Ok(Self {
-            matrices,
-            kv,
-            n_channels: cfg.gddr6.channels,
-            banks_per_channel: cfg.gddr6.banks_per_channel,
-            fill: alloc.max_fill(),
-            imbalance_rows: alloc.imbalance_rows(),
-        })
+        Ok(matrices)
     }
 
     /// Linear unit index range of one channel.
@@ -176,7 +250,37 @@ mod tests {
         for m in &crate::model::PAPER_MODELS {
             let mm = ModelMapping::build(m, &HwConfig::paper_baseline()).unwrap();
             assert!(mm.fill <= 1.0, "{}: fill {}", m.name, mm.fill);
+            assert!(mm.kv.n_slots >= 1, "{}", m.name);
         }
+    }
+
+    #[test]
+    fn small_model_gets_all_requested_slots() {
+        let m = by_name("gpt2-small").unwrap();
+        let cfg = HwConfig::paper_baseline().with_max_streams(4);
+        let mm = ModelMapping::build(&m, &cfg).unwrap();
+        assert_eq!(mm.kv.n_slots, 4);
+        assert!(mm.kv_shortfall.is_none());
+    }
+
+    #[test]
+    fn capacity_pressure_degrades_slot_count_with_report() {
+        // Shrink per-channel DRAM until only ~2 of 4 requested contexts
+        // fit next to the weights: the build must degrade (not fail) and
+        // say why.
+        let m = by_name("gpt2-small").unwrap();
+        let mut cfg = HwConfig::paper_baseline().with_max_streams(4);
+        cfg.gddr6.capacity_gbit = 0.34; // ~1392 rows/bank
+        let mm = ModelMapping::build(&m, &cfg).unwrap();
+        assert!(mm.kv.n_slots < 4, "expected degradation, got {} slots", mm.kv.n_slots);
+        assert!(mm.kv.n_slots >= 1);
+        let report = mm.kv_shortfall.as_ref().expect("shortfall report");
+        assert_eq!(report.requested, 4);
+        assert_eq!(report.granted, mm.kv.n_slots);
+        assert!(matches!(report.cause, CapacityError::Rows { .. }));
+        // Display is the operator-facing message; it must name the counts.
+        let msg = report.to_string();
+        assert!(msg.contains("of 4 requested"), "{msg}");
     }
 
     #[test]

@@ -36,6 +36,14 @@ pub enum MatrixKind {
     VCache,
 }
 
+impl MatrixKind {
+    /// KV-cache regions are reserved per stream slot (unlike weights,
+    /// which are shared by all streams) — reads of them are slot-addressed.
+    pub fn is_kv_cache(&self) -> bool {
+        matches!(self, MatrixKind::KCache | MatrixKind::VCache)
+    }
+}
+
 /// Identifies one stored matrix (layer-local except Wte).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct MatrixId {

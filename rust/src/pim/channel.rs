@@ -91,7 +91,8 @@ pub struct Channel {
     pub banks: Vec<Bank>,
     /// Next refresh deadline (cycle).
     next_refresh: u64,
-    /// Interface busy-until (GB loads and drains serialize on the bus).
+    /// Interface busy-until (GB loads, result drains and KV write-backs
+    /// all serialize on the bus).
     bus_busy_until: u64,
     /// Bytes written into the channel (GB loads + KV write-backs).
     pub bytes_in: u64,
@@ -192,14 +193,21 @@ impl Channel {
     }
 
     /// Write-back of a Key vector slice (row-major, Fig. 7a) to one bank.
+    /// Like a VMM, the write occupies the channel's shared bus for its
+    /// duration (the data arrives over the same GB port), so concurrent
+    /// traffic on the channel serializes behind it.
     pub fn write_k(&mut self, t: &TimingCycles, start: u64, bank: usize, seg: RowSegment) -> u64 {
         self.catch_up_refresh(start, t);
+        let start = start.max(self.bus_busy_until);
         self.bytes_in += seg.elems as u64 * 2;
-        self.banks[bank].write_row_major(start, seg, t)
+        let fin = self.banks[bank].write_row_major(start, seg, t);
+        self.bus_busy_until = fin;
+        fin
     }
 
     /// Write-back of Value elements (column-major, Fig. 7b) to one bank:
-    /// `n_elems` elements into rows `base_row + i*row_stride`.
+    /// `n_elems` elements into rows `base_row + i*row_stride`. Holds the
+    /// channel bus like `write_k`.
     pub fn write_v(
         &mut self,
         t: &TimingCycles,
@@ -210,8 +218,11 @@ impl Channel {
         row_stride: u32,
     ) -> u64 {
         self.catch_up_refresh(start, t);
+        let start = start.max(self.bus_busy_until);
         self.bytes_in += n_elems as u64 * 2;
-        self.banks[bank].write_col_major(start, n_elems, base_row, row_stride, t)
+        let fin = self.banks[bank].write_col_major(start, n_elems, base_row, row_stride, t);
+        self.bus_busy_until = fin;
+        fin
     }
 
     /// Merge all bank stats.

@@ -165,10 +165,20 @@ pub fn fig10_breakdown(n_tokens: u64) -> Result<FigureReport> {
             .filter(|(c, _)| ["softmax", "layernorm", "gelu", "residual", "partialsum", "biasscale"].contains(&c.as_str()))
             .map(|(_, s)| s)
             .sum();
+        // KV write-back is attributed separately: the column-major V
+        // write serializes ACT + WR + PRE per element over the channel
+        // bus (paper §IV.B), a real share at short contexts.
+        let kvwrite: f64 = r
+            .class_seconds
+            .iter()
+            .filter(|(c, _)| c.as_str() == "kvwrite")
+            .map(|(_, s)| s)
+            .sum();
         arr.push(Json::obj(vec![
             ("model", name.into()),
             ("vmm_share", (vmm / total).into()),
             ("arith_share", (arith / total).into()),
+            ("kvwrite_share", (kvwrite / total).into()),
         ]));
     }
     Ok(FigureReport {

@@ -125,7 +125,8 @@ impl Simulator {
             mapping: &self.mapping,
         };
         for i in 0..tpl.len() {
-            let instr = tpl.instr_at(i, ltoken);
+            // Single-stream decoding always occupies KV slot 0.
+            let instr = tpl.instr_at(i, ltoken, 0);
             let out = self.res.issue(
                 &ctx,
                 &mut self.plan_scratch,
@@ -204,13 +205,29 @@ mod tests {
 
     #[test]
     fn vmm_dominates_latency() {
-        // Fig. 10: VMM operations dominate total execution time.
+        // Fig. 10: VMM operations dominate total execution time. The V
+        // write-back serializes element writes over each channel's bus
+        // (ACT + WR + PRE per element, no locality — paper §IV.B), so
+        // KvWrite carries a real attributed share at short contexts;
+        // VMM must still be the largest class by a wide margin and
+        // dwarf every ASIC compute class.
+        use crate::sim::LatClass;
         let mut s = sim("gpt2-small");
         for pos in 0..4 {
             s.decode_step(pos).unwrap();
         }
         s.finalize_stats();
-        assert!(s.stats.vmm_fraction() > 0.8, "vmm fraction {}", s.stats.vmm_fraction());
+        assert!(s.stats.vmm_fraction() > 0.6, "vmm fraction {}", s.stats.vmm_fraction());
+        let total: u64 = s.stats.class_cycles.values().sum();
+        let kv = s.stats.class_cycles.get(&LatClass::KvWrite).copied().unwrap_or(0);
+        let vmm: u64 =
+            s.stats.class_cycles.iter().filter(|(c, _)| c.is_vmm()).map(|(_, v)| v).sum();
+        assert!(vmm > kv, "vmm {vmm} vs kv write {kv}");
+        assert!(
+            vmm as f64 / (total - kv) as f64 > 0.9,
+            "vmm {vmm} of non-KV {}",
+            total - kv
+        );
     }
 
     #[test]

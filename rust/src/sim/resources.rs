@@ -101,9 +101,10 @@ impl Resources {
             ready = ready.max(finish[d]);
         }
         match instr {
-            Instr::PimVmm { matrix, class, in_elems, .. } => {
-                let (fin, fr) =
-                    self.exec_vmm(ctx, plan, ready, matrix.layer, matrix.kind, *in_elems, ltoken);
+            Instr::PimVmm { matrix, class, in_elems, slot, .. } => {
+                let (fin, fr) = self.exec_vmm(
+                    ctx, plan, ready, matrix.layer, matrix.kind, *slot, *in_elems, ltoken,
+                );
                 Issued {
                     ready,
                     finish: fin,
@@ -136,26 +137,38 @@ impl Resources {
                 self.asic_free = fin;
                 Issued { ready, finish: fin, first_ready: fin, class: asic_class(op) }
             }
-            Instr::WriteK { layer } => {
-                let (unit, segs) = ctx.mapping.kv.k_write(*layer, pos);
+            Instr::WriteK { layer, slot } => {
+                let (unit, segs) = ctx.mapping.kv.k_write(*layer, *slot, pos);
                 let mut fin = ready;
                 for seg in segs {
                     fin = self.channels[unit.channel].write_k(ctx.t, fin, unit.bank, seg);
                 }
                 Issued { ready, finish: fin, first_ready: fin, class: LatClass::KvWrite }
             }
-            Instr::WriteV { layer } => {
-                let n_units = ctx.mapping.kv.n_units;
-                let banks = ctx.mapping.kv.banks_per_channel;
+            Instr::WriteV { layer, slot } => {
+                // The write data for every bank of a channel arrives over
+                // that channel's shared GB bus, so successive units on
+                // one channel serialize in issue order (`chan_fin`
+                // threads through); channels proceed in parallel. The
+                // issue-order chain — not just the leaf `busy_until`
+                // clamp — is what the K=1 equivalence guarantee depends
+                // on (pinned by `writev_serializes_per_channel_pinned`).
+                let kv = &ctx.mapping.kv;
+                let banks = kv.banks_per_channel;
+                let n_channels = kv.n_units / banks;
                 let mut fin = ready;
-                for u in 0..n_units {
-                    let (base, n_cols, stride) = ctx.mapping.kv.v_write(*layer, pos, u);
-                    if n_cols == 0 {
-                        continue;
+                for ch in 0..n_channels {
+                    let mut chan_fin = ready;
+                    for b in 0..banks {
+                        let u = ch * banks + b;
+                        let (base, n_cols, stride) = kv.v_write(*layer, *slot, pos, u);
+                        if n_cols == 0 {
+                            continue;
+                        }
+                        chan_fin =
+                            self.channels[ch].write_v(ctx.t, chan_fin, b, n_cols, base, stride);
                     }
-                    let f = self.channels[u / banks]
-                        .write_v(ctx.t, ready, u % banks, n_cols, base, stride);
-                    fin = fin.max(f);
+                    fin = fin.max(chan_fin);
                 }
                 Issued { ready, finish: fin, first_ready: fin, class: LatClass::KvWrite }
             }
@@ -172,6 +185,7 @@ impl Resources {
         start: u64,
         layer: usize,
         kind: MatrixKind,
+        slot: usize,
         in_elems: u64,
         ltoken: u64,
     ) -> (u64, u64) {
@@ -197,11 +211,11 @@ impl Resources {
                         let u = ch * banks + b;
                         let (base_row, reps) = if kind == MatrixKind::KCache {
                             out += kv.k_out_elems(u, ltoken, n_head);
-                            (kv.k_base[layer][u], kv.k_owned(u, ltoken))
+                            (kv.k_base[layer][slot][u], kv.k_owned(u, ltoken))
                         } else {
                             let cols = kv.v_cols(u);
                             out += cols as u64;
-                            (kv.v_base[layer][u], cols)
+                            (kv.v_base[layer][slot][u], cols)
                         };
                         plan.bank_work[b] =
                             UnitWork::Pattern { base_row, reps, pattern, pattern_len };
@@ -278,5 +292,76 @@ pub(crate) fn asic_class(op: &AsicOp) -> LatClass {
         AsicOp::PartialSum { .. } => LatClass::PartialSum,
         AsicOp::BiasAdd { .. } | AsicOp::Scale { .. } => LatClass::BiasScale,
         AsicOp::Concat { .. } => LatClass::Other,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::gpt::by_name;
+
+    fn setup(model: &str, streams: usize) -> (HwConfig, TimingCycles, GptModel, ModelMapping) {
+        let cfg = HwConfig::paper_baseline().with_max_streams(streams);
+        let t = TimingCycles::from_config(&cfg);
+        let m = by_name(model).unwrap();
+        let mapping = ModelMapping::build(&m, &cfg).unwrap();
+        (cfg, t, m, mapping)
+    }
+
+    fn issue_one(
+        cfg: &HwConfig,
+        t: &TimingCycles,
+        model: &GptModel,
+        mapping: &ModelMapping,
+        instr: &Instr,
+        ltoken: u64,
+    ) -> Issued {
+        let mut res = Resources::new(cfg);
+        let mut plan = empty_plan(cfg);
+        let ctx = IssueCtx { cfg, t, model, mapping };
+        res.issue(&ctx, &mut plan, instr, &[], 0, &[], &[], ltoken - 1, ltoken)
+    }
+
+    /// Regression pin (satellite): a WriteV's units serialize over each
+    /// channel's shared bus in issue order, so its finish equals
+    /// `banks_per_channel * n_cols * per_element_write_cost` — not the
+    /// per-unit cost the old `ready`-start code produced whenever bank
+    /// `busy_until`s were all clear.
+    #[test]
+    fn writev_serializes_per_channel_pinned() {
+        let (cfg, t, m, mapping) = setup("gpt2-small", 1);
+        // gpt2-small: 768 cols / 128 units = 6 V columns per unit, every
+        // unit identical. Each column write is ACT + 1 write + tWR (+
+        // tRAS residency) + PRE; see `Bank::write_col_major`.
+        let n_cols = 6u64;
+        let per_elem = (t.trcd + t.tccd + t.twr).max(t.tras) + t.trp;
+        let per_unit = n_cols * per_elem;
+        let per_channel = cfg.gddr6.banks_per_channel as u64 * per_unit;
+        let out = issue_one(&cfg, &t, &m, &mapping, &Instr::WriteV { layer: 0, slot: 0 }, 1);
+        assert_eq!(out.finish, per_channel, "expected full per-channel serialization");
+        // Sanity: strictly more than one unit's worth (the old bug).
+        assert!(out.finish > per_unit);
+    }
+
+    /// Slot choice shifts KV base rows but never cycle costs: the same
+    /// instruction issued against slot 0 and slot 1 of a 2-slot mapping
+    /// must finish at the same cycle on fresh hardware.
+    #[test]
+    fn kv_slots_are_timing_equivalent() {
+        let (cfg, t, m, mapping) = setup("gpt2-small", 2);
+        assert_eq!(mapping.kv.n_slots, 2);
+        for instr in [
+            Instr::WriteV { layer: 1, slot: 0 },
+            Instr::WriteK { layer: 1, slot: 0 },
+        ] {
+            let base = issue_one(&cfg, &t, &m, &mapping, &instr, 8);
+            let mut other = instr.clone();
+            match &mut other {
+                Instr::WriteV { slot, .. } | Instr::WriteK { slot, .. } => *slot = 1,
+                _ => unreachable!(),
+            }
+            let shifted = issue_one(&cfg, &t, &m, &mapping, &other, 8);
+            assert_eq!(base.finish, shifted.finish, "{instr:?}");
+        }
     }
 }

@@ -20,11 +20,17 @@
 //! in-order single-stream pass and reproduces `Simulator` cycle counts
 //! token-for-token (`tests/integration_sched.rs`).
 //!
-//! Modeling note: concurrent streams time-share the *same* KV-cache
-//! region (the mapping reserves one `max_seq` context per layer). The
-//! cycle cost of KV reads/writes is per-stream correct; cross-stream
-//! row-buffer interference on those shared rows is second-order and not
-//! separated. Partitioned per-stream KV reservations are a ROADMAP item.
+//! **KV-capacity admission**: the mapping reserves one disjoint
+//! `max_seq` KV context per stream *slot* (`mapping::KvReservation`,
+//! up to `max_streams` slots, fewer when DRAM rows run out — see
+//! `ModelMapping::kv_shortfall`). A queued request is admitted only
+//! when a free slot exists; it occupies that slot's reserved KV rows
+//! for its whole lifetime and the slot id is recycled at retirement.
+//! Admission is stamped at `max(submit cycle, slot free cycle)` — the
+//! cycle the hardware could actually have started it — so
+//! `queue_cycles` measures real KV-capacity queueing, not scheduler
+//! bookkeeping. Blocked admissions and peak slot occupancy are counted
+//! in `SimStats` (`admission_blocked`, `peak_slots_in_use`).
 
 use std::collections::VecDeque;
 use std::rc::Rc;
@@ -54,11 +60,13 @@ pub struct StreamResult {
     pub id: u64,
     /// Cycle the request entered the queue (`submit` time).
     pub submitted_cycle: u64,
-    /// Cycle the scheduler admitted it to an execution slot.
+    /// Cycle a KV slot was available for it (`max(submitted, slot free)`).
     pub admitted_cycle: u64,
     /// Cycle its last token finished.
     pub finish_cycle: u64,
     pub tokens: u64,
+    /// KV slot the stream occupied while in flight.
+    pub kv_slot: usize,
     /// Finish cycle of each token (monotone; first entry >= admitted).
     pub token_finishes: Vec<u64>,
 }
@@ -77,6 +85,8 @@ impl StreamResult {
 struct Stream {
     id: u64,
     tpl: Rc<ProgramTemplate>,
+    /// KV slot whose reserved regions this stream's KV traffic addresses.
+    slot: usize,
     /// Current decode position; `ltoken = pos + 1`.
     pos: u64,
     end_pos: u64,
@@ -107,7 +117,13 @@ pub struct MultiSim {
     queue: VecDeque<(StreamSpec, u64)>,
     clock: u64,
     pub stats: SimStats,
-    max_streams: usize,
+    /// Free KV slot ids (admission pops the earliest-free one).
+    free_slots: Vec<usize>,
+    /// Cycle each slot was last vacated (0 for never-used slots).
+    slot_free_at: Vec<u64>,
+    /// Concurrency cap = KV slots actually reserved by the mapping
+    /// (<= `cfg.sched.max_streams`; fewer when capacity degraded).
+    n_slots: usize,
 }
 
 impl MultiSim {
@@ -120,6 +136,9 @@ impl MultiSim {
     /// placement when the caller already holds one, e.g. the server's
     /// `PimGptSystem`).
     pub fn from_mapping(model: &GptModel, cfg: &HwConfig, mapping: ModelMapping) -> Self {
+        // The mapping is the source of truth for how many disjoint KV
+        // contexts exist; the config can only lower it further.
+        let n_slots = mapping.kv.n_slots.min(cfg.sched.max_streams.max(1)).max(1);
         Self {
             cfg: cfg.clone(),
             model: model.clone(),
@@ -132,12 +151,26 @@ impl MultiSim {
             queue: VecDeque::new(),
             clock: 0,
             stats: SimStats::default(),
-            max_streams: cfg.sched.max_streams.max(1),
+            free_slots: (0..n_slots).collect(),
+            slot_free_at: vec![0; n_slots],
+            n_slots,
         }
     }
 
+    /// Effective concurrency cap: the number of disjoint KV slots the
+    /// mapping reserved (<= the configured `max_streams`).
     pub fn max_streams(&self) -> usize {
-        self.max_streams
+        self.n_slots
+    }
+
+    /// Total KV slots (same as `max_streams`; named for stats readers).
+    pub fn kv_slots(&self) -> usize {
+        self.n_slots
+    }
+
+    /// KV slots currently unoccupied.
+    pub fn free_kv_slots(&self) -> usize {
+        self.free_slots.len()
     }
 
     /// Current simulated time (max finish cycle issued so far).
@@ -170,16 +203,35 @@ impl MultiSim {
         Ok(())
     }
 
+    /// Admit queued requests while free KV slots exist. Admission is a
+    /// *capacity* decision: a request needs a disjoint reserved context,
+    /// and is stamped admitted at `max(submit cycle, slot free cycle)` —
+    /// the freed slot's actual free time, not the global clock (which
+    /// can lie far past the retiring stream's last cycle and would
+    /// inflate `queue_cycles`).
     fn admit(&mut self) -> Result<()> {
-        while self.active.len() < self.max_streams {
-            let Some((spec, submitted)) = self.queue.pop_front() else {
+        while !self.queue.is_empty() {
+            // Earliest-free slot first (ties -> lowest id): deterministic
+            // and admits as early as the KV capacity allows.
+            let best = self
+                .free_slots
+                .iter()
+                .enumerate()
+                .min_by_key(|&(_, &s)| (self.slot_free_at[s], s))
+                .map(|(i, _)| i);
+            let Some(i) = best else {
+                // Requests are waiting but every KV slot is occupied.
+                self.stats.admission_blocked += 1;
                 break;
             };
             let tpl = self.cache.get(&self.model, &self.cfg, 0)?;
-            let admitted = self.clock;
+            let slot = self.free_slots.swap_remove(i);
+            let (spec, submitted) = self.queue.pop_front().expect("queue checked non-empty");
+            let admitted = submitted.max(self.slot_free_at[slot]);
             self.active.push(Stream {
                 id: spec.id,
                 tpl,
+                slot,
                 pos: 0,
                 end_pos: spec.n_tokens,
                 next: 0,
@@ -193,6 +245,8 @@ impl MultiSim {
                 instructions: 0,
                 attributed: 0,
             });
+            let in_use = (self.n_slots - self.free_slots.len()) as u64;
+            self.stats.peak_slots_in_use = self.stats.peak_slots_in_use.max(in_use);
         }
         Ok(())
     }
@@ -221,13 +275,14 @@ impl MultiSim {
                 }
             }
 
-            // Issue it on the shared resources.
+            // Issue it on the shared resources, addressed to the
+            // stream's own KV slot.
             let tpl = Rc::clone(&self.active[si].tpl);
-            let (pos, step_start, next) = {
+            let (pos, step_start, next, slot) = {
                 let s = &self.active[si];
-                (s.pos, s.step_start, s.next)
+                (s.pos, s.step_start, s.next, s.slot)
             };
-            let instr = tpl.instr_at(next, pos + 1);
+            let instr = tpl.instr_at(next, pos + 1, slot);
             let ctx = IssueCtx {
                 cfg: &self.cfg,
                 t: &self.t,
@@ -286,10 +341,15 @@ impl MultiSim {
                 continue;
             }
 
-            // Retire the stream and backfill its slot from the queue.
+            // Retire the stream: recycle its KV slot (free as of the
+            // stream's own last cycle, not the global clock) and
+            // backfill from the queue.
             let s = self.active.remove(si);
+            self.slot_free_at[s.slot] = s.step_finish;
+            self.free_slots.push(s.slot);
             self.stats.streams.push(StreamStats {
                 id: s.id,
+                kv_slot: s.slot as u64,
                 tokens: s.token_finishes.len() as u64,
                 instructions: s.instructions,
                 attributed_cycles: s.attributed,
@@ -302,6 +362,7 @@ impl MultiSim {
                 admitted_cycle: s.admitted,
                 finish_cycle: s.step_finish,
                 tokens: s.token_finishes.len() as u64,
+                kv_slot: s.slot,
                 token_finishes: s.token_finishes,
             };
             self.admit()?;
@@ -322,6 +383,7 @@ impl MultiSim {
     /// Fold resource counters into the stats (end of run).
     pub fn finalize_stats(&mut self) -> &SimStats {
         self.stats.cycles = self.clock;
+        self.stats.kv_slots = self.n_slots as u64;
         self.res.fold_stats(&mut self.stats);
         self.stats.program_cache_hits = self.cache.hits;
         self.stats.program_cache_misses = self.cache.misses;
@@ -442,6 +504,73 @@ mod tests {
             assert!(s.instructions > 0);
             assert!(s.attributed_cycles > 0);
             assert!(s.service_cycles > 0);
+            assert!(s.kv_slot < 2, "slot {} out of range", s.kv_slot);
         }
+    }
+
+    #[test]
+    fn slots_recycled_with_occupancy_and_blocked_counters() {
+        let mut ms = msim("gpt-nano", 2);
+        assert_eq!(ms.kv_slots(), 2);
+        assert_eq!(ms.free_kv_slots(), 2);
+        for id in 0..5 {
+            ms.submit(StreamSpec { id, n_tokens: 3 }).unwrap();
+        }
+        let results = ms.run_all().unwrap();
+        ms.finalize_stats();
+        assert_eq!(ms.free_kv_slots(), 2, "all slots recycled after drain");
+        assert_eq!(ms.stats.kv_slots, 2);
+        assert_eq!(ms.stats.peak_slots_in_use, 2);
+        assert!(ms.stats.admission_blocked > 0, "5 requests on 2 slots must block");
+        // Every stream ran in a valid slot, both slots were used, and 5
+        // streams over 2 slots implies at least one id was recycled.
+        assert!(results.iter().all(|r| r.kv_slot < 2));
+        let s0 = results.iter().filter(|r| r.kv_slot == 0).count();
+        assert!((1..=4).contains(&s0), "slot 0 used {s0} of 5 times");
+    }
+
+    /// Satellite regression: a backfilled stream is admitted at the
+    /// *retiring stream's* last cycle (its slot's actual free time), not
+    /// at the global clock — the global max finish can lie far past a
+    /// short stream's retirement and would inflate `queue_cycles`.
+    #[test]
+    fn backfill_admits_at_freed_slot_cycle() {
+        let mut ms = msim("gpt-nano", 2);
+        ms.submit(StreamSpec { id: 0, n_tokens: 12 }).unwrap(); // long
+        ms.submit(StreamSpec { id: 1, n_tokens: 2 }).unwrap(); // short
+        ms.submit(StreamSpec { id: 2, n_tokens: 2 }).unwrap(); // backfill
+        let results = ms.run_all().unwrap();
+        let by_id = |id: u64| results.iter().find(|r| r.id == id).unwrap();
+        let short = by_id(1);
+        let backfill = by_id(2);
+        // Stream 1 retires first (both admitted at 0, fewer tokens);
+        // stream 2 takes its slot at exactly that finish cycle.
+        assert!(short.finish_cycle < by_id(0).finish_cycle);
+        assert_eq!(backfill.admitted_cycle, short.finish_cycle);
+        assert_eq!(backfill.queue_cycles(), short.finish_cycle);
+        assert_eq!(backfill.kv_slot, short.kv_slot);
+    }
+
+    /// Acceptance: when the mapping degrades the slot count below
+    /// `max_streams`, admission blocks on KV capacity — fewer concurrent
+    /// streams, positive queueing, and the shortfall is reported.
+    #[test]
+    fn kv_capacity_limits_admission_below_max_streams() {
+        let m = by_name("gpt2-small").unwrap();
+        let mut cfg = HwConfig::paper_baseline().with_max_streams(4);
+        cfg.gddr6.capacity_gbit = 0.34; // weights + ~2 contexts per bank
+        let mut ms = MultiSim::new(&m, &cfg).unwrap();
+        assert!(ms.kv_slots() < 4, "expected degraded slots, got {}", ms.kv_slots());
+        assert!(ms.mapping.kv_shortfall.is_some());
+        for id in 0..4 {
+            ms.submit(StreamSpec { id, n_tokens: 2 }).unwrap();
+        }
+        let results = ms.run_all().unwrap();
+        ms.finalize_stats();
+        assert_eq!(results.len(), 4);
+        assert_eq!(ms.stats.peak_slots_in_use, ms.kv_slots() as u64);
+        assert!(ms.stats.admission_blocked > 0);
+        let queued = results.iter().filter(|r| r.queue_cycles() > 0).count();
+        assert!(queued >= 1, "capacity-blocked requests must report queueing");
     }
 }

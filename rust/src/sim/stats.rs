@@ -93,6 +93,16 @@ pub struct SimStats {
     /// Compiled-program cache: lookups served from cache vs compiles.
     pub program_cache_hits: u64,
     pub program_cache_misses: u64,
+    /// Disjoint per-stream KV contexts the mapping reserved (admission
+    /// capacity of the multi-stream scheduler; 0 for single-stream runs
+    /// that never finalize through `MultiSim`).
+    pub kv_slots: u64,
+    /// Most KV slots ever occupied at once.
+    pub peak_slots_in_use: u64,
+    /// Admission attempts that found requests queued but every KV slot
+    /// occupied — each count is a scheduling point where KV capacity
+    /// (not policy) was the binding constraint.
+    pub admission_blocked: u64,
     /// Per-request-stream attribution (one entry per retired stream;
     /// empty for plain single-program runs).
     pub streams: Vec<StreamStats>,
@@ -102,6 +112,8 @@ pub struct SimStats {
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct StreamStats {
     pub id: u64,
+    /// KV slot the stream occupied while in flight.
+    pub kv_slot: u64,
     pub tokens: u64,
     pub instructions: u64,
     /// Sum of per-instruction critical-path cycles attributed to this
@@ -165,11 +177,24 @@ impl SimStats {
     }
 
     /// Busy fraction of the ASIC computation engines over the run.
+    ///
+    /// Deliberately *unclamped*: the engines serialize on `asic_free`,
+    /// so busy cycles can never legitimately exceed wall cycles — a
+    /// ratio above 1.0 means an attribution bug (double-counted busy
+    /// time or a missing `cycles` update), and clamping it would mask
+    /// exactly that. The `debug_assert` makes over-attribution loud in
+    /// test builds while release reports the raw (diagnosable) ratio.
     pub fn asic_utilization(&self) -> f64 {
         if self.cycles == 0 {
             return 0.0;
         }
-        self.asic_busy_cycles.min(self.cycles) as f64 / self.cycles as f64
+        debug_assert!(
+            self.asic_busy_cycles <= self.cycles,
+            "asic_busy_cycles {} exceeds wall cycles {} — attribution over-counting",
+            self.asic_busy_cycles,
+            self.cycles
+        );
+        self.asic_busy_cycles as f64 / self.cycles as f64
     }
 }
 
@@ -222,5 +247,25 @@ mod tests {
         assert!((s.asic_utilization() - 0.25).abs() < 1e-12);
         assert_eq!(SimStats::default().program_cache_hit_rate(), 1.0);
         assert_eq!(SimStats::default().asic_utilization(), 0.0);
+    }
+
+    /// Satellite acceptance: attribution over-counting is *detectable* —
+    /// busy cycles beyond the wall clock trip the debug assertion
+    /// instead of being silently clamped to a plausible 100%.
+    #[test]
+    #[cfg_attr(not(debug_assertions), ignore = "debug_assert only fires in debug builds")]
+    #[should_panic(expected = "attribution over-counting")]
+    fn asic_over_attribution_detectable() {
+        let s = SimStats { cycles: 100, asic_busy_cycles: 150, ..Default::default() };
+        let _ = s.asic_utilization();
+    }
+
+    /// In release builds the same over-attribution shows up as a ratio
+    /// above 1.0 (the clamp used to hide it at exactly 1.0).
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "covered by the should_panic variant in debug")]
+    fn asic_over_attribution_visible_in_release() {
+        let s = SimStats { cycles: 100, asic_busy_cycles: 150, ..Default::default() };
+        assert!(s.asic_utilization() > 1.0);
     }
 }

@@ -48,24 +48,32 @@ fn prop_random_geometries_map_small_model() {
 #[test]
 fn kv_reads_cover_exactly_written_tokens() {
     // After t tokens, the K read plan must touch exactly t * d elements
-    // and every row it touches must have been written by k_write.
+    // and every row it touches must have been written by k_write — in
+    // every stream slot independently.
     let cfg = HwConfig::paper_baseline();
     let m = by_name("gpt2-small").unwrap();
     let mm = ModelMapping::build(&m, &cfg).unwrap();
+    assert!(mm.kv.n_slots >= 2, "paper baseline requests 4 slots");
     let d = m.d_model as u64;
-    let mut written: std::collections::BTreeSet<(usize, u32)> = Default::default();
-    for t in 0..300u64 {
-        let (unit, segs) = mm.kv.k_write(0, t);
-        let u = unit.channel * cfg.gddr6.banks_per_channel + unit.bank;
-        for s in &segs {
-            written.insert((u, s.row));
-        }
-        let plans = mm.kv.k_read_plan(0, t + 1);
-        let total: u64 = plans.iter().flatten().map(|s| s.elems as u64).sum();
-        assert_eq!(total, (t + 1) * d, "t={t}");
-        for (u, plan) in plans.iter().enumerate() {
-            for s in plan {
-                assert!(written.contains(&(u, s.row)), "t={t} unit {u} row {} unwritten", s.row);
+    for slot in [0, mm.kv.n_slots - 1] {
+        let mut written: std::collections::BTreeSet<(usize, u32)> = Default::default();
+        for t in 0..300u64 {
+            let (unit, segs) = mm.kv.k_write(0, slot, t);
+            let u = unit.channel * cfg.gddr6.banks_per_channel + unit.bank;
+            for s in &segs {
+                written.insert((u, s.row));
+            }
+            let plans = mm.kv.k_read_plan(0, slot, t + 1);
+            let total: u64 = plans.iter().flatten().map(|s| s.elems as u64).sum();
+            assert_eq!(total, (t + 1) * d, "slot={slot} t={t}");
+            for (u, plan) in plans.iter().enumerate() {
+                for s in plan {
+                    assert!(
+                        written.contains(&(u, s.row)),
+                        "slot={slot} t={t} unit {u} row {} unwritten",
+                        s.row
+                    );
+                }
             }
         }
     }
@@ -86,17 +94,56 @@ fn prop_v_write_rows_disjoint_from_k_rows() {
         let m = by_name("gpt2-medium").unwrap();
         let mm = ModelMapping::build(&m, &cfg).unwrap();
         let layer = rng.usize_in(0, m.n_layer);
+        let slot = rng.usize_in(0, mm.kv.n_slots);
         let t = rng.gen_range(m.max_seq as u64);
-        let (unit, ksegs) = mm.kv.k_write(layer, t);
+        let (unit, ksegs) = mm.kv.k_write(layer, slot, t);
         let u = unit.channel * cfg.gddr6.banks_per_channel + unit.bank;
-        let (vbase, vcols, stride) = mm.kv.v_write(layer, t, u);
+        let (vbase, vcols, stride) = mm.kv.v_write(layer, slot, t, u);
         for ks in &ksegs {
             for c in 0..vcols {
                 let vrow = vbase + c * stride;
                 if ks.row == vrow {
-                    return Err(format!("layer {layer} t {t} unit {u} row {vrow} aliased"));
+                    return Err(format!(
+                        "layer {layer} slot {slot} t {t} unit {u} row {vrow} aliased"
+                    ));
                 }
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kv_writes_disjoint_across_slots() {
+    // Cross-slot isolation: the same (layer, token) write in different
+    // slots must never touch a shared row of the same unit.
+    check("slots never alias", 30, |rng: &mut Rng| {
+        let cfg = HwConfig::paper_baseline();
+        let m = by_name("gpt2-small").unwrap();
+        let mm = ModelMapping::build(&m, &cfg).unwrap();
+        let layer = rng.usize_in(0, m.n_layer);
+        let t = rng.gen_range(m.max_seq as u64);
+        let a = rng.usize_in(0, mm.kv.n_slots);
+        let b = rng.usize_in(0, mm.kv.n_slots);
+        if a == b {
+            return Ok(());
+        }
+        let (_, ksegs_a) = mm.kv.k_write(layer, a, t);
+        let (_, ksegs_b) = mm.kv.k_write(layer, b, t);
+        for (sa, sb) in ksegs_a.iter().zip(&ksegs_b) {
+            if sa.row == sb.row {
+                return Err(format!("layer {layer} t {t}: slots {a}/{b} share K row {}", sa.row));
+            }
+        }
+        let u = rng.usize_in(0, mm.kv.n_units);
+        let (va, cols_a, stride) = mm.kv.v_write(layer, a, t, u);
+        let (vb, cols_b, _) = mm.kv.v_write(layer, b, t, u);
+        assert_eq!(cols_a, cols_b);
+        // Column rows are `base + c * stride`: the whole ranges must be
+        // disjoint, not just the bases.
+        let (end_a, end_b) = (va + cols_a * stride, vb + cols_b * stride);
+        if va < end_b && vb < end_a {
+            return Err(format!("slots {a}/{b} V ranges overlap: [{va},{end_a}) vs [{vb},{end_b})"));
         }
         Ok(())
     });

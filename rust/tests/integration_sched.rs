@@ -112,6 +112,59 @@ fn k4_throughput_strictly_beats_fifo() {
     );
 }
 
+/// Acceptance: a model whose KV reservation cannot fit `max_streams`
+/// disjoint contexts degrades to fewer slots (reported, not a panic),
+/// and admission then blocks on KV capacity — fewer concurrent streams,
+/// `queue_cycles > 0` for the overflow requests, and blocked-admission
+/// counters in the stats.
+#[test]
+fn capacity_limited_model_admits_fewer_streams() {
+    let m = by_name("gpt2-small").unwrap();
+    let mut cfg = HwConfig::paper_baseline().with_max_streams(4);
+    cfg.gddr6.capacity_gbit = 0.34; // ~1392 rows/bank: weights + ~2 contexts
+    let mut ms = MultiSim::new(&m, &cfg).unwrap();
+    let slots = ms.kv_slots();
+    assert!(slots >= 1 && slots < 4, "expected degradation, got {slots} slots");
+    let report = ms.mapping.kv_shortfall.as_ref().expect("shortfall must be reported");
+    assert_eq!(report.requested, 4);
+    assert_eq!(report.granted, slots);
+
+    for id in 0..6 {
+        ms.submit(StreamSpec { id, n_tokens: 2 }).unwrap();
+    }
+    let results = ms.run_all().unwrap();
+    ms.finalize_stats();
+    assert_eq!(results.len(), 6);
+    assert_eq!(ms.stats.kv_slots, slots as u64);
+    assert_eq!(ms.stats.peak_slots_in_use, slots as u64);
+    assert!(ms.stats.admission_blocked > 0);
+    let queued = results.iter().filter(|r| r.queue_cycles() > 0).count();
+    assert!(queued >= 6 - slots, "only {queued} of {} overflow requests queued", 6 - slots);
+    assert!(results.iter().all(|r| r.kv_slot < slots));
+}
+
+/// The degraded-capacity config must not disturb the K=1 equivalence:
+/// one slot-partitioned stream still reproduces the single-stream
+/// simulator cycle-for-cycle.
+#[test]
+fn k1_equivalence_holds_under_degraded_capacity() {
+    let m = by_name("gpt2-small").unwrap();
+    let mut cfg = HwConfig::paper_baseline().with_max_streams(1);
+    cfg.gddr6.capacity_gbit = 0.34;
+    let n_tokens = 6u64;
+
+    let mut sim = Simulator::new(&m, &cfg).unwrap();
+    let mut want = Vec::new();
+    for pos in 0..n_tokens {
+        want.push(sim.decode_step(pos).unwrap().finish_cycle);
+    }
+
+    let mut ms = MultiSim::new(&m, &cfg).unwrap();
+    ms.submit(StreamSpec { id: 0, n_tokens }).unwrap();
+    let r = ms.run_all().unwrap().remove(0);
+    assert_eq!(r.token_finishes, want);
+}
+
 /// Multi-stream stats: per-stream attribution sums to the totals, and
 /// resource-utilization counters are sane and improve with K.
 #[test]
