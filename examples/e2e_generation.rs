@@ -42,7 +42,7 @@ fn main() -> anyhow::Result<()> {
 
     let wall0 = std::time::Instant::now();
     for (id, (prompt, n_new)) in prompts.into_iter().enumerate() {
-        server.submit(Request { id: id as u64, prompt, n_new })?;
+        server.submit(Request { id: id as u64, prompt, n_new, arrival_cycle: 0 })?;
     }
     let mut sim_total = 0.0;
     let mut tok_total = 0usize;

@@ -25,6 +25,7 @@ fn serve_trace(cfg: HwConfig, model: &str, n_req: u64) -> anyhow::Result<(f64, f
             id,
             prompt: (1..=4 + (id % 4) as i32).collect(),
             n_new: 24,
+            arrival_cycle: 0,
         })?;
     }
     let mut sim_s = 0.0;

@@ -1,12 +1,14 @@
 //! Microbenchmarks of the simulator hot path (the §Perf targets):
 //! per-token decode cost across model sizes and context lengths, the
-//! mapping stage, graph compilation, and the multi-request scheduler
-//! (simulated throughput at K ∈ {1, 2, 4} + program-cache hit rate).
+//! mapping stage, graph compilation, the multi-request scheduler
+//! (simulated throughput at K ∈ {1, 2, 4} + program-cache hit rate),
+//! and the open-loop Poisson arrival sweep (tail latency vs load).
 use pim_gpt::compiler::compile;
 use pim_gpt::config::HwConfig;
 use pim_gpt::mapping::ModelMapping;
 use pim_gpt::model::gpt::by_name;
 use pim_gpt::model::DecodeGraph;
+use pim_gpt::sim::arrivals::{self, ArrivalSpec};
 use pim_gpt::sim::{MultiSim, Simulator, StreamSpec};
 use pim_gpt::util::bench::{bench, black_box};
 
@@ -53,8 +55,7 @@ fn main() {
     // FIFO (K=1) vs interleaved (K=2, K=4). Reports wall time of the
     // *host* (bench harness) and simulated tokens/s of the *hardware*.
     let m = by_name("gpt2-small").unwrap();
-    let specs: Vec<StreamSpec> =
-        (0..8).map(|id| StreamSpec { id, n_tokens: 8 + 4 * (id % 3) }).collect();
+    let specs: Vec<StreamSpec> = (0..8).map(|id| StreamSpec::new(id, 8 + 4 * (id % 3))).collect();
     let total_tokens: u64 = specs.iter().map(|s| s.n_tokens).sum();
     for k in [1usize, 2, 4] {
         let kcfg = HwConfig::paper_baseline().with_max_streams(k);
@@ -111,5 +112,44 @@ fn main() {
              {queued}/8 requests queued, blocked {} times\n  shortfall: {shortfall}",
             ms.stats.kv_slots, ms.stats.admission_blocked,
         );
+    }
+
+    // Open-loop arrival sweep: Poisson arrivals at 0.5x / 1x / 2x of the
+    // batch capacity (capacity = n_requests / batch makespan), reporting
+    // queue/TTFT/e2e tail percentiles. Past load 1.0 the tail blows up —
+    // the curve SLO-aware admission policies would act on.
+    {
+        let kcfg = HwConfig::paper_baseline().with_max_streams(4);
+        let freq_hz = kcfg.gddr6.freq_ghz * 1e9;
+        let mapping = ModelMapping::build(&m, &kcfg).unwrap();
+        let n_req = 8usize;
+        let run = |at: &[u64]| {
+            let mut ms = MultiSim::from_mapping(&m, &kcfg, mapping.clone());
+            for (id, &a) in at.iter().enumerate() {
+                let spec = StreamSpec { id: id as u64, n_tokens: 8, arrival_cycle: a };
+                ms.submit(spec).unwrap();
+            }
+            ms.run_all().unwrap();
+            ms.finalize_stats();
+            (ms.clock(), ms.stats.latency_report().unwrap())
+        };
+        let (makespan, _) = run(&vec![0u64; n_req]);
+        println!("sim::multi open-loop gpt2-small K=4 ({n_req} reqs x 8 tokens), us per stage:");
+        for load in [0.5, 1.0, 2.0] {
+            let rate_per_s = load * n_req as f64 * freq_hz / makespan as f64;
+            let spec = ArrivalSpec::Poisson { rate_per_s };
+            let at = arrivals::generate(&spec, n_req, kcfg.gddr6.freq_ghz, 7).unwrap();
+            let (_, lat) = run(&at);
+            let us = |c: u64| c as f64 / (freq_hz / 1e6);
+            println!(
+                "  load {load:.1} ({rate_per_s:.0} req/s): queue p50/p99 {:.1}/{:.1}, \
+                 ttft p50/p99 {:.1}/{:.1}, e2e p99 {:.1}",
+                us(lat.queue.p50),
+                us(lat.queue.p99),
+                us(lat.ttft.p50),
+                us(lat.ttft.p99),
+                us(lat.e2e.p99),
+            );
+        }
     }
 }

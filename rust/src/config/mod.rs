@@ -6,6 +6,7 @@
 //! overridden from a JSON file (`HwConfig::from_json`), giving the
 //! "real config system" of the launcher.
 
+use crate::sim::arrivals::ArrivalSpec;
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 
@@ -160,11 +161,20 @@ pub struct SchedulerConfig {
     /// next to the weights, the effective concurrency degrades to the
     /// largest count that fits (`ModelMapping::kv_shortfall`).
     pub max_streams: usize,
+    /// Open-loop arrival process for serving experiments (JSON string
+    /// key `sched.arrival`: `batch`, `fixed:<cycles>`,
+    /// `poisson:<req/s>` or `trace:<file>`). `batch` reproduces the
+    /// paper's closed-loop behavior.
+    pub arrival: ArrivalSpec,
+    /// Seed for stochastic arrival generators (Poisson). Identical
+    /// seeds replay identical traces — the simulator never consults a
+    /// wall clock or OS RNG.
+    pub seed: u64,
 }
 
 impl Default for SchedulerConfig {
     fn default() -> Self {
-        Self { max_streams: 4 }
+        Self { max_streams: 4, arrival: ArrivalSpec::Batch, seed: 0x5EED }
     }
 }
 
@@ -227,6 +237,18 @@ impl HwConfig {
         self
     }
 
+    /// Serving knob: open-loop arrival process.
+    pub fn with_arrival(mut self, spec: ArrivalSpec) -> Self {
+        self.sched.arrival = spec;
+        self
+    }
+
+    /// Serving knob: arrival-generator seed.
+    pub fn with_arrival_seed(mut self, seed: u64) -> Self {
+        self.sched.seed = seed;
+        self
+    }
+
     /// Apply overrides from a JSON object, e.g.
     /// `{"asic": {"freq_ghz": 0.5}, "gddr6": {"channels": 16}}`.
     pub fn from_json(json: &Json) -> Result<Self> {
@@ -252,6 +274,10 @@ impl HwConfig {
                 .as_obj()
                 .with_context(|| format!("section '{section}' must be an object"))?;
             for (key, v) in fields {
+                if let Some(s) = v.as_str() {
+                    self.set_str_field(section, key, s)?;
+                    continue;
+                }
                 let n = v
                     .as_f64()
                     .with_context(|| format!("{section}.{key} must be a number"))?;
@@ -259,6 +285,28 @@ impl HwConfig {
             }
         }
         Ok(())
+    }
+
+    /// String-valued fields. Unknown keys are rejected (never ignored):
+    /// a typo'd `sched.arrival`/`sched.seed` must fail loudly, not
+    /// silently run the default experiment.
+    fn set_str_field(&mut self, section: &str, key: &str, s: &str) -> Result<()> {
+        match (section, key) {
+            ("sched", "arrival") => {
+                self.sched.arrival =
+                    ArrivalSpec::parse(s).with_context(|| format!("sched.arrival = '{s}'"))?;
+                Ok(())
+            }
+            _ => {
+                // Tell a type error on a known numeric field apart from
+                // a genuinely unknown key (probe a scratch copy).
+                let mut probe = self.clone();
+                if probe.set_field(section, key, 0.0).is_ok() {
+                    bail!("{section}.{key} must be a number, got string '{s}'");
+                }
+                bail!("unknown config field {section}.{key}")
+            }
+        }
     }
 
     fn set_field(&mut self, section: &str, key: &str, n: f64) -> Result<()> {
@@ -294,6 +342,20 @@ impl HwConfig {
             ("pim", "mac_power_mw_per_channel") => set!(self.pim.mac_power_mw_per_channel, f64),
             ("pim", "pipeline_fill") => set!(self.pim.pipeline_fill, u64),
             ("sched", "max_streams") => set!(self.sched.max_streams, usize),
+            ("sched", "seed") => {
+                // JSON numbers are f64: accept only values a f64 holds
+                // exactly, so a config-file seed replays the same trace
+                // as the identical `--seed` on the CLI. The bound is
+                // inclusive because 2^53 + 1 already rounded to 2^53 at
+                // parse time — any seed landing on it is suspect.
+                if n < 0.0 || n.fract() != 0.0 || n >= 9_007_199_254_740_992.0 {
+                    bail!("sched.seed must be a non-negative integer < 2^53, got {n}");
+                }
+                self.sched.seed = n as u64;
+            }
+            ("sched", "arrival") => {
+                bail!("sched.arrival must be a string like \"poisson:250000\"")
+            }
             ("asic", "freq_ghz") => set!(self.asic.freq_ghz, f64),
             ("asic", "sram_kb") => set!(self.asic.sram_kb, usize),
             ("asic", "n_adders") => set!(self.asic.n_adders, usize),
@@ -349,6 +411,7 @@ mod tests {
     fn scheduler_config_defaults_and_overrides() {
         assert_eq!(HwConfig::paper_baseline().sched.max_streams, 4);
         assert_eq!(HwConfig::paper_baseline().with_max_streams(1).sched.max_streams, 1);
+        assert_eq!(HwConfig::paper_baseline().sched.arrival, ArrivalSpec::Batch);
         let j = Json::parse(r#"{"sched": {"max_streams": 8}}"#).unwrap();
         assert_eq!(HwConfig::from_json(&j).unwrap().sched.max_streams, 8);
     }
@@ -357,5 +420,59 @@ mod tests {
     fn json_unknown_field_rejected() {
         let j = Json::parse(r#"{"asic": {"nope": 1}}"#).unwrap();
         assert!(HwConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn sched_arrival_and_seed_overrides() {
+        let src = r#"{"sched": {"arrival": "poisson:250000", "seed": 42, "max_streams": 2}}"#;
+        let cfg = HwConfig::from_json(&Json::parse(src).unwrap()).unwrap();
+        assert_eq!(cfg.sched.arrival, ArrivalSpec::Poisson { rate_per_s: 250000.0 });
+        assert_eq!(cfg.sched.seed, 42);
+        assert_eq!(cfg.sched.max_streams, 2);
+        let j = Json::parse(r#"{"sched": {"arrival": "fixed:5000"}}"#).unwrap();
+        let cfg = HwConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.sched.arrival, ArrivalSpec::Fixed { interval_cycles: 5000 });
+        assert_eq!(cfg.sched.seed, 0x5EED, "seed untouched by arrival override");
+        let cfg = HwConfig::paper_baseline()
+            .with_arrival(ArrivalSpec::parse("trace:t.json").unwrap())
+            .with_arrival_seed(9);
+        assert_eq!(cfg.sched.arrival, ArrivalSpec::Trace { path: "t.json".into() });
+        assert_eq!(cfg.sched.seed, 9);
+    }
+
+    /// Satellite: typo'd or mistyped `sched` keys must be rejected with
+    /// a clear error, never silently ignored.
+    #[test]
+    fn sched_unknown_or_mistyped_keys_rejected() {
+        for bad in [
+            r#"{"sched": {"arival": "poisson:1000"}}"#,
+            r#"{"sched": {"sead": 42}}"#,
+            r#"{"sched": {"max_streems": 2}}"#,
+            r#"{"sched": {"arrival": "poison:1000"}}"#,
+            r#"{"sched": {"seed": "42"}}"#,
+            r#"{"shced": {"max_streams": 2}}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(HwConfig::from_json(&j).is_err(), "accepted {bad}");
+        }
+        // A number where a string is required names the expectation.
+        let j = Json::parse(r#"{"sched": {"arrival": 5}}"#).unwrap();
+        let err = HwConfig::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("must be a string"), "{err}");
+        // ...and a string on a known numeric field names it too (not
+        // "unknown field").
+        let j = Json::parse(r#"{"asic": {"freq_ghz": "0.5"}}"#).unwrap();
+        let err = HwConfig::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("must be a number"), "{err}");
+        // Seeds a f64 cannot hold exactly are rejected, not rounded —
+        // a config-file seed must replay the same trace as --seed.
+        for bad in [
+            r#"{"sched": {"seed": -1}}"#,
+            r#"{"sched": {"seed": 1.5}}"#,
+            r#"{"sched": {"seed": 9007199254740993}}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(HwConfig::from_json(&j).is_err(), "accepted {bad}");
+        }
     }
 }

@@ -11,6 +11,20 @@
 //! completion boundary. Setting `max_streams = 1` reproduces the seed's
 //! FIFO behavior exactly.
 //!
+//! Requests carry a simulated `arrival_cycle` (open-loop serving): the
+//! scheduler holds each request pending until simulated time reaches
+//! its arrival, and the shutdown metrics report p50/p95/p99 of queue,
+//! TTFT and end-to-end latency measured from those arrivals
+//! (`ServerMetrics::latency`). Arrival traces come from
+//! `sim::arrivals` (batch / fixed / Poisson / JSON replay). Note that
+//! ingestion itself is wall-clock: a request ingested after simulated
+//! time has already passed its `arrival_cycle` is admitted as soon as
+//! possible but keeps its (now past) arrival stamp, so its queue time
+//! includes the ingestion lag. For deterministic percentiles submit
+//! the whole trace before serving starts, as `pim-gpt serve` does (it
+//! gates the worker's factory on a barrier until every request is in
+//! the channel), so every stamp derives from simulated time alone.
+//!
 //! Systems with a functional PJRT artifact still serve FIFO: the
 //! functional decode is inherently one-token-at-a-time against a single
 //! KV cache, so it co-simulates sequentially as before.
@@ -29,7 +43,7 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use super::generation::PimGptSystem;
-use crate::sim::{MultiSim, StreamSpec};
+use crate::sim::{LatencyReport, MultiSim, StreamSpec};
 use anyhow::{anyhow, Result};
 
 /// A generation request.
@@ -38,6 +52,15 @@ pub struct Request {
     pub id: u64,
     pub prompt: Vec<i32>,
     pub n_new: usize,
+    /// Simulated cycle the request arrives (open-loop replay; 0 =
+    /// present at start). Queue/TTFT/end-to-end latencies are measured
+    /// from this stamp, and the scheduler holds the request pending
+    /// until simulated time reaches it. A request ingested after the
+    /// sim has already passed this cycle keeps the stamp (its queue
+    /// time then includes the ingestion lag) — submit whole traces up
+    /// front for deterministic replays. Ignored by FIFO (functional
+    /// artifact) serving, which runs on wall-clock ingestion order.
+    pub arrival_cycle: u64,
 }
 
 /// A served response.
@@ -74,9 +97,14 @@ pub struct ServerMetrics {
     pub kv_slots: u64,
     /// Most KV slots ever occupied at once during the run.
     pub peak_slots_in_use: u64,
-    /// Scheduling points where requests queued because every KV slot
-    /// was occupied (KV-capacity admission blocking).
+    /// Arrived requests found waiting with every KV slot occupied,
+    /// summed over admission attempts (queue-depth-weighted KV-capacity
+    /// pressure — see `SimStats::admission_blocked`).
     pub admission_blocked: u64,
+    /// Tail-latency percentiles (queue/TTFT/end-to-end, in simulated
+    /// cycles, measured from each request's arrival). `None` for
+    /// FIFO/functional serving and runs that completed no stream.
+    pub latency: Option<LatencyReport>,
 }
 
 impl ServerMetrics {
@@ -290,7 +318,8 @@ fn ingest(
         });
         return;
     }
-    match msim.submit(StreamSpec { id: req.id, n_tokens: total }) {
+    let spec = StreamSpec { id: req.id, n_tokens: total, arrival_cycle: req.arrival_cycle };
+    match msim.submit(spec) {
         Ok(()) => {
             // Timing-only: tokens are synthetic, as in the seed.
             let tokens = super::generation::synthetic_tokens(&req.prompt, req.n_new);
@@ -377,11 +406,12 @@ fn interleaved_loop(
             });
         }
     }
-    // Queue/occupancy stats of the whole run (KV-capacity admission).
+    // Queue/occupancy/latency stats of the whole run.
     msim.finalize_stats();
     metrics.kv_slots = msim.stats.kv_slots;
     metrics.peak_slots_in_use = msim.stats.peak_slots_in_use;
     metrics.admission_blocked = msim.stats.admission_blocked;
+    metrics.latency = msim.stats.latency_report();
     Ok(())
 }
 
@@ -403,7 +433,7 @@ mod tests {
     fn serves_all_requests_with_correct_payloads() {
         let mut s = server_k("gpt-nano", 4);
         for id in 0..4 {
-            s.submit(Request { id, prompt: vec![1, 2], n_new: 3 }).unwrap();
+            s.submit(Request { id, prompt: vec![1, 2], n_new: 3, arrival_cycle: 0 }).unwrap();
         }
         let mut seen = Vec::new();
         for _ in 0..4 {
@@ -442,7 +472,7 @@ mod tests {
             PimGptSystem::timing_only(&m, &cfg)
         });
         for id in 0..4 {
-            s.submit(Request { id, prompt: vec![1], n_new: 1 }).unwrap();
+            s.submit(Request { id, prompt: vec![1], n_new: 1, arrival_cycle: 0 }).unwrap();
         }
         let mut queued = 0;
         for _ in 0..4 {
@@ -476,7 +506,7 @@ mod tests {
         // starts simulating — the queueing assertions are stable.)
         let mut s = server_k("gpt2-small", 1);
         for id in 0..3 {
-            s.submit(Request { id, prompt: vec![1], n_new: 2 }).unwrap();
+            s.submit(Request { id, prompt: vec![1], n_new: 2, arrival_cycle: 0 }).unwrap();
         }
         let r0 = s.recv().unwrap();
         let r1 = s.recv().unwrap();
@@ -492,7 +522,7 @@ mod tests {
     fn concurrent_slots_admit_without_queueing() {
         let mut s = server_k("gpt-nano", 4);
         for id in 0..3 {
-            s.submit(Request { id, prompt: vec![1], n_new: 2 }).unwrap();
+            s.submit(Request { id, prompt: vec![1], n_new: 2, arrival_cycle: 0 }).unwrap();
         }
         for _ in 0..3 {
             let r = s.recv().unwrap();
@@ -504,7 +534,7 @@ mod tests {
     #[test]
     fn oversized_request_reports_error() {
         let mut s = server_k("gpt-nano", 4); // max_seq = 128
-        s.submit(Request { id: 9, prompt: vec![0; 120], n_new: 100 }).unwrap();
+        s.submit(Request { id: 9, prompt: vec![0; 120], n_new: 100, arrival_cycle: 0 }).unwrap();
         let r = s.recv().unwrap();
         assert_eq!(r.id, 9);
         assert!(r.error.is_some());
@@ -516,7 +546,7 @@ mod tests {
     fn empty_request_served_with_no_tokens() {
         // Seed contract: prompt=[] with n_new=0 is served successfully.
         let mut s = server_k("gpt-nano", 2);
-        s.submit(Request { id: 3, prompt: vec![], n_new: 0 }).unwrap();
+        s.submit(Request { id: 3, prompt: vec![], n_new: 0, arrival_cycle: 0 }).unwrap();
         let r = s.recv().unwrap();
         assert_eq!(r.id, 3);
         assert!(r.error.is_none());
@@ -530,10 +560,11 @@ mod tests {
     #[test]
     fn submit_after_shutdown_errors() {
         let mut s = server_k("gpt-nano", 2);
-        s.submit(Request { id: 0, prompt: vec![1], n_new: 1 }).unwrap();
+        s.submit(Request { id: 0, prompt: vec![1], n_new: 1, arrival_cycle: 0 }).unwrap();
         let m = s.shutdown();
         assert_eq!(m.requests, 1);
-        let err = s.submit(Request { id: 1, prompt: vec![1], n_new: 1 }).unwrap_err();
+        let late = Request { id: 1, prompt: vec![1], n_new: 1, arrival_cycle: 0 };
+        let err = s.submit(late).unwrap_err();
         assert!(err.to_string().contains("shut down"), "{err}");
     }
 
@@ -541,7 +572,7 @@ mod tests {
     fn shutdown_drains_then_recv_errors_cleanly() {
         let mut s = server_k("gpt-nano", 2);
         for id in 0..2 {
-            s.submit(Request { id, prompt: vec![1, 2], n_new: 2 }).unwrap();
+            s.submit(Request { id, prompt: vec![1, 2], n_new: 2, arrival_cycle: 0 }).unwrap();
         }
         // Shut down *before* receiving: both responses must still be
         // deliverable, then recv must fail instead of hanging.
@@ -560,8 +591,13 @@ mod tests {
         let run = |k: usize| {
             let mut s = server_k("gpt2-small", k);
             for id in 0..4 {
-                s.submit(Request { id, prompt: vec![1, 2, 3], n_new: 3 + 2 * id as usize })
-                    .unwrap();
+                s.submit(Request {
+                    id,
+                    prompt: vec![1, 2, 3],
+                    n_new: 3 + 2 * id as usize,
+                    arrival_cycle: 0,
+                })
+                .unwrap();
             }
             for _ in 0..4 {
                 s.recv().unwrap();
@@ -577,5 +613,35 @@ mod tests {
             inter.sim_tokens_per_s(),
             fifo.sim_tokens_per_s()
         );
+    }
+
+    #[test]
+    fn open_loop_arrivals_yield_latency_percentiles() {
+        // Requests arrive on the *simulated* clock; the metrics carry
+        // the queue/TTFT/end-to-end percentile report.
+        let mut s = server_k("gpt-nano", 2);
+        for id in 0..4 {
+            let arrival_cycle = id * 1_000;
+            s.submit(Request { id, prompt: vec![1], n_new: 2, arrival_cycle }).unwrap();
+        }
+        for _ in 0..4 {
+            assert!(s.recv().unwrap().error.is_none());
+        }
+        let m = s.shutdown();
+        assert_eq!(m.requests, 4);
+        let lat = m.latency.expect("interleaved serving reports latency percentiles");
+        assert!(lat.ttft.p50 > 0, "a first token always costs cycles");
+        assert!(lat.ttft.p50 <= lat.ttft.p99);
+        assert!(lat.e2e.p99 >= lat.ttft.p99, "e2e dominates ttft per stream");
+        assert!(lat.queue.p50 <= lat.queue.max);
+    }
+
+    #[test]
+    fn empty_run_reports_no_latency_percentiles() {
+        // The percentile report needs retired streams; an empty run
+        // stays `None` rather than fabricating zeros.
+        let mut s = server_k("gpt-nano", 2);
+        let m = s.shutdown();
+        assert!(m.latency.is_none());
     }
 }

@@ -5,7 +5,8 @@
 //! pim-gpt simulate --model NAME [--tokens N] [--config FILE] [--json]
 //! pim-gpt figures [--fig ID] [--tokens N]
 //! pim-gpt generate --model NAME [--artifacts DIR] [--prompt 1,2,3] [--n N]
-//! pim-gpt serve --model NAME [--requests N] [--concurrency K] [--artifacts DIR]
+//! pim-gpt serve --model NAME [--requests N] [--concurrency K] [--arrivals SPEC]
+//!               [--seed N] [--artifacts DIR]
 //! ```
 //!
 //! (Arg parsing is hand-rolled — clap is unavailable offline, DESIGN.md §5.)
@@ -18,6 +19,7 @@ use pim_gpt::coordinator::{PimGptSystem, Request, Server};
 use pim_gpt::energy::SystemEnergy;
 use pim_gpt::model::gpt::by_name;
 use pim_gpt::report;
+use pim_gpt::sim::arrivals::{self, ArrivalSpec};
 use pim_gpt::sim::Simulator;
 use pim_gpt::util::table::fmt_time_s;
 
@@ -97,9 +99,15 @@ pim-gpt — hybrid process-in-memory accelerator for autoregressive transformers
 USAGE:
   pim-gpt info     [--config FILE]
   pim-gpt simulate --model NAME [--tokens N] [--config FILE] [--json]
-  pim-gpt figures  [--fig 1|8|10|11|12|13|14|15|t1|t2|all] [--tokens N]
+  pim-gpt figures  [--fig 1|8|10|11|12|13|14|15|t1|t2|serving|all] [--tokens N]
   pim-gpt generate --model gpt-nano|gpt-mini [--artifacts DIR] [--prompt 1,2,3] [--n N]
-  pim-gpt serve    --model NAME [--requests N] [--concurrency K] [--artifacts DIR]
+  pim-gpt serve    --model NAME [--requests N] [--concurrency K] [--arrivals SPEC]
+                   [--seed N] [--artifacts DIR]
+
+ARRIVALS (open-loop serving; latencies report p50/p95/p99 from arrival):
+  batch (default) | fixed:<cycles> | poisson:<req/s> | trace:<file.json>
+  trace schema: {\"requests\": [{\"arrival_cycle\": 0, \"n_tokens\": 16}, ...]}
+  (functional-artifact serving is FIFO and ignores arrival stamps)
 
 MODELS: gpt2-small|medium|large|xl, gpt3-small|medium|large|xl (timing),
         gpt-nano, gpt-mini (functional artifacts in artifacts/)
@@ -198,6 +206,9 @@ fn cmd_figures(args: &Args) -> Result<()> {
     if all || which == "t2" {
         reports.push(report::table2_comparison(tokens)?);
     }
+    if all || which == "serving" {
+        reports.push(report::fig_serving_tail_latency(6, 4, &[0.5, 1.0, 2.0], 7)?);
+    }
     if reports.is_empty() {
         bail!("unknown figure '{which}'");
     }
@@ -235,7 +246,6 @@ fn cmd_generate(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let name = args.get("model").unwrap_or("gpt-nano");
-    let n_requests = args.u64_or("requests", 8)?;
     let mut cfg = load_config(args)?;
     if let Some(k) = args.get("concurrency") {
         let k: usize = k.parse().map_err(|_| anyhow!("--concurrency must be an integer"))?;
@@ -244,14 +254,70 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         cfg.sched.max_streams = k;
     }
+    if let Some(spec) = args.get("arrivals") {
+        cfg.sched.arrival = ArrivalSpec::parse(spec)?;
+    }
+    if let Some(seed) = args.get("seed") {
+        cfg.sched.seed = seed.parse().map_err(|_| anyhow!("--seed must be an integer"))?;
+    }
+    // Build the whole request trace up front: arrivals are *simulated*
+    // cycles, so the set is known before serving starts. The worker is
+    // gated on a barrier until every request is submitted, so the
+    // replay never races ingestion against simulated time — identical
+    // seeds give identical percentiles.
+    let requests: Vec<Request> = match cfg.sched.arrival.clone() {
+        ArrivalSpec::Trace { path } => {
+            if args.get("requests").is_some() {
+                bail!("--requests conflicts with trace arrivals: the trace defines the requests");
+            }
+            arrivals::load_trace(&path)?
+                .iter()
+                .enumerate()
+                .map(|(id, t)| Request {
+                    id: id as u64,
+                    prompt: vec![1],
+                    n_new: (t.n_tokens - 1) as usize,
+                    arrival_cycle: t.arrival_cycle,
+                })
+                .collect()
+        }
+        spec => {
+            let n = args.u64_or("requests", 8)? as usize;
+            let cycles = arrivals::generate(&spec, n, cfg.gddr6.freq_ghz, cfg.sched.seed)?;
+            cycles
+                .iter()
+                .enumerate()
+                .map(|(id, &arrival_cycle)| Request {
+                    id: id as u64,
+                    prompt: vec![1, 2, 3, (id % 17) as i32],
+                    n_new: 12,
+                    arrival_cycle,
+                })
+                .collect()
+        }
+    };
+    let n_requests = requests.len() as u64;
     let dir = Path::new(args.get("artifacts").unwrap_or("artifacts"));
     let use_artifact = by_name(name).map(|m| m.max_seq <= 512).unwrap_or(false)
         && dir.join(format!("{name}.meta.json")).exists();
     let functional = use_artifact;
+    if functional && cfg.sched.arrival != ArrivalSpec::Batch {
+        eprintln!(
+            "pim-gpt serve: functional artifact serving is FIFO and ignores --arrivals \
+             {} (no latency percentiles will be reported)",
+            cfg.sched.arrival
+        );
+    }
     let name_owned = name.to_string();
     let dir_owned = dir.to_path_buf();
     let cfg_owned = cfg.clone();
+    // Determinism barrier: the worker must not ingest (or step) until
+    // the whole trace sits in the channel — otherwise a fast mapping
+    // build could let simulated time warp past not-yet-submitted
+    // arrivals and the percentiles would depend on thread timing.
+    let (ready_tx, ready_rx) = std::sync::mpsc::channel::<()>();
     let mut server = Server::start(move || {
+        let _ = ready_rx.recv();
         if use_artifact {
             PimGptSystem::with_artifact(&name_owned, &dir_owned, &cfg_owned)
         } else {
@@ -260,9 +326,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
             PimGptSystem::timing_only(&m, &cfg_owned)
         }
     });
-    for id in 0..n_requests {
-        server.submit(Request { id, prompt: vec![1, 2, 3, (id % 17) as i32], n_new: 12 })?;
+    for req in requests {
+        server.submit(req)?;
     }
+    let _ = ready_tx.send(());
     for _ in 0..n_requests {
         let r = server.recv()?;
         match r.error {
@@ -291,9 +358,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     // KV-capacity admission stats: fewer slots than K means the mapping
     // degraded (DRAM rows could not hold K disjoint contexts).
+    // admission_blocked sums queued requests over admission attempts
+    // (queue-depth-weighted pressure), not distinct blocked requests.
     println!(
-        "kv slots {} (peak in use {}), admission blocked {} times",
+        "kv slots {} (peak in use {}), admission-blocked pressure {} request-attempts",
         m.kv_slots, m.peak_slots_in_use, m.admission_blocked
     );
+    // Open-loop tail latency, measured from each request's arrival.
+    if let Some(lat) = m.latency {
+        let t = |cycles: u64| fmt_time_s(cycles as f64 / (cfg.gddr6.freq_ghz * 1e9));
+        println!("arrivals {} (seed {})", cfg.sched.arrival, cfg.sched.seed);
+        println!("latency (simulated)   p50 / p95 / p99");
+        println!("  queue     {} / {} / {}", t(lat.queue.p50), t(lat.queue.p95), t(lat.queue.p99));
+        println!("  ttft      {} / {} / {}", t(lat.ttft.p50), t(lat.ttft.p95), t(lat.ttft.p99));
+        println!("  e2e       {} / {} / {}", t(lat.e2e.p50), t(lat.e2e.p95), t(lat.e2e.p99));
+    }
     Ok(())
 }

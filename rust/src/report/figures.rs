@@ -10,12 +10,14 @@
 use crate::baselines::{cpu_xeon_6154, gpu_t4};
 use crate::config::HwConfig;
 use crate::energy::SystemEnergy;
+use crate::mapping::ModelMapping;
 use crate::model::gpt::by_name;
 use crate::model::{GptModel, PAPER_MODELS};
-use crate::sim::Simulator;
+use crate::sim::arrivals::{self, ArrivalSpec};
+use crate::sim::{LatencyReport, MultiSim, Simulator, StreamSpec};
 use crate::util::json::Json;
-use crate::util::table::{sig3, Table};
-use anyhow::Result;
+use crate::util::table::{fmt_time_s, sig3, Table};
+use anyhow::{anyhow, Result};
 
 /// A regenerated figure/table.
 #[derive(Clone, Debug)]
@@ -410,6 +412,79 @@ pub fn table2_comparison(n_tokens: u64) -> Result<FigureReport> {
         title: format!("Table II: vs prior accelerators (PIM-GPT measured on GPT2-medium, {n_tokens} tokens; paper: 89x / 618x)"),
         rendered: t.render(),
         json: Json::obj(vec![("speedup", speedup.into()), ("energy_eff", energy.into())]),
+    })
+}
+
+/// Serving experiment (beyond the paper): tail latency vs offered load,
+/// open-loop. For each paper model the capacity is measured first — the
+/// batch-at-zero makespan of `n_requests` decode requests of `n_tokens`
+/// at the baseline K = 4 — then Poisson arrivals are replayed at each
+/// load factor in `loads` (offered rate = load x n_requests / makespan)
+/// and the per-stream latency percentiles reported. Queue and TTFT are
+/// measured from each request's own arrival; past load 1.0 the tail
+/// should blow up, which is exactly what an SLO-aware admission policy
+/// would act on. Fully deterministic for a given `seed`.
+pub fn fig_serving_tail_latency(
+    n_requests: usize,
+    n_tokens: u64,
+    loads: &[f64],
+    seed: u64,
+) -> Result<FigureReport> {
+    let cfg = HwConfig::paper_baseline();
+    let freq_hz = cfg.gddr6.freq_ghz * 1e9;
+    let fmt = |cycles: u64| fmt_time_s(cycles as f64 / freq_hz);
+    let mut t =
+        Table::new(vec!["model", "load", "req/s", "queue p99", "ttft p50", "ttft p99", "e2e p99"]);
+    let mut arr = Vec::new();
+    for m in &PAPER_MODELS {
+        // One Algorithm-3 placement per model, shared by every run.
+        let mapping = ModelMapping::build(m, &cfg)?;
+        let run = |arrival_cycles: &[u64]| -> Result<(u64, LatencyReport)> {
+            let mut ms = MultiSim::from_mapping(m, &cfg, mapping.clone());
+            for (id, &at) in arrival_cycles.iter().enumerate() {
+                let id = id as u64;
+                ms.submit(StreamSpec { id, n_tokens, arrival_cycle: at })?;
+            }
+            ms.run_all()?;
+            ms.finalize_stats();
+            let lat = ms.stats.latency_report().ok_or_else(|| anyhow!("no streams retired"))?;
+            Ok((ms.clock(), lat))
+        };
+        let (makespan, _) = run(&vec![0u64; n_requests])?;
+        for &load in loads {
+            let rate_per_s = load * n_requests as f64 * freq_hz / makespan as f64;
+            let spec = ArrivalSpec::Poisson { rate_per_s };
+            let at = arrivals::generate(&spec, n_requests, cfg.gddr6.freq_ghz, seed)?;
+            let (_, lat) = run(&at)?;
+            t.row(vec![
+                m.name.to_string(),
+                format!("{load:.2}"),
+                format!("{rate_per_s:.0}"),
+                fmt(lat.queue.p99),
+                fmt(lat.ttft.p50),
+                fmt(lat.ttft.p99),
+                fmt(lat.e2e.p99),
+            ]);
+            arr.push(Json::obj(vec![
+                ("model", m.name.into()),
+                ("load", load.into()),
+                ("rate_per_s", rate_per_s.into()),
+                ("queue_p99_cycles", lat.queue.p99.into()),
+                ("ttft_p50_cycles", lat.ttft.p50.into()),
+                ("ttft_p95_cycles", lat.ttft.p95.into()),
+                ("ttft_p99_cycles", lat.ttft.p99.into()),
+                ("e2e_p99_cycles", lat.e2e.p99.into()),
+            ]));
+        }
+    }
+    Ok(FigureReport {
+        id: "serving",
+        title: format!(
+            "Serving: tail latency vs offered load (open-loop Poisson, K=4, \
+             {n_requests} reqs x {n_tokens} tokens, seed {seed})"
+        ),
+        rendered: t.render(),
+        json: Json::Arr(arr),
     })
 }
 

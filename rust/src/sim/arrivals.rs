@@ -1,0 +1,317 @@
+//! Open-loop arrival engines: deterministic request-arrival traces for
+//! serving experiments (tail-latency percentiles vs offered load).
+//!
+//! The paper's evaluation is closed-loop (fixed batches, makespan); a
+//! serving system is measured open-loop: requests arrive on their own
+//! clock and the numbers that matter are the queue/TTFT/end-to-end
+//! percentiles under a given offered load. This module produces the
+//! arrival side of those experiments:
+//!
+//! * **batch** — every request present at cycle 0 (the closed-loop
+//!   behavior every pinned K=1 equivalence test runs under);
+//! * **fixed:`<cycles>`** — one request every `interval` cycles;
+//! * **poisson:`<rate>`** — exponential inter-arrivals at `rate`
+//!   requests per simulated second, sampled by a splitmix64-seeded
+//!   xorshift64* stream ([`crate::util::rng::Rng`]; the repo is offline,
+//!   so there is no `rand` — and no OS entropy: identical seeds replay
+//!   identical traces);
+//! * **trace:`<file>`** — a JSON file replayed through [`crate::util::json`].
+//!
+//! Trace-file schema (`n_tokens >= 1`; unknown keys are rejected so a
+//! typo cannot silently change an experiment):
+//!
+//! ```json
+//! {"requests": [
+//!   {"arrival_cycle": 0,    "n_tokens": 16},
+//!   {"arrival_cycle": 4096, "n_tokens": 8}
+//! ]}
+//! ```
+
+use std::fmt;
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::{bail, ensure, Context, Result};
+
+/// An arrival process, parseable from `--arrivals` / `sched.arrival`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub enum ArrivalSpec {
+    /// All requests arrive at cycle 0 (closed-loop batch).
+    #[default]
+    Batch,
+    /// One request every `interval_cycles` DRAM cycles.
+    Fixed { interval_cycles: u64 },
+    /// Poisson process at `rate_per_s` requests per simulated second.
+    Poisson { rate_per_s: f64 },
+    /// Replay a JSON trace file (carries its own token counts).
+    Trace { path: String },
+}
+
+impl ArrivalSpec {
+    /// Parse `batch`, `fixed:<cycles>`, `poisson:<req/s>` or
+    /// `trace:<file>`.
+    pub fn parse(s: &str) -> Result<Self> {
+        if s == "batch" {
+            return Ok(Self::Batch);
+        }
+        if let Some(v) = s.strip_prefix("fixed:") {
+            let Ok(interval_cycles) = v.parse::<u64>() else {
+                bail!("fixed:<cycles> needs an integer, got '{v}'");
+            };
+            ensure!(interval_cycles > 0, "fixed arrival interval must be >= 1 cycle");
+            return Ok(Self::Fixed { interval_cycles });
+        }
+        if let Some(v) = s.strip_prefix("poisson:") {
+            let Ok(rate_per_s) = v.parse::<f64>() else {
+                bail!("poisson:<rate> needs a number, got '{v}'");
+            };
+            ensure!(
+                rate_per_s.is_finite() && rate_per_s > 0.0,
+                "poisson rate must be a positive finite req/s, got {rate_per_s}"
+            );
+            return Ok(Self::Poisson { rate_per_s });
+        }
+        if let Some(path) = s.strip_prefix("trace:") {
+            ensure!(!path.is_empty(), "trace:<file> needs a path");
+            return Ok(Self::Trace { path: path.to_string() });
+        }
+        bail!("unknown arrival spec '{s}' (batch | fixed:<cycles> | poisson:<req/s> | trace:<file>)")
+    }
+}
+
+impl fmt::Display for ArrivalSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::Batch => write!(f, "batch"),
+            Self::Fixed { interval_cycles } => write!(f, "fixed:{interval_cycles}"),
+            Self::Poisson { rate_per_s } => write!(f, "poisson:{rate_per_s}"),
+            Self::Trace { path } => write!(f, "trace:{path}"),
+        }
+    }
+}
+
+/// splitmix64 finalizer: decorrelates nearby seeds (1, 2, 3...) before
+/// they feed the xorshift64* stream.
+fn splitmix64(seed: u64) -> u64 {
+    let mut z = seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Arrival cycles (nondecreasing, length `n`) for a non-trace spec at
+/// `freq_ghz` DRAM clock. Deterministic: same `(spec, n, freq, seed)`
+/// always yields the same trace. Trace specs carry their own request
+/// list — use [`load_trace`] instead.
+pub fn generate(spec: &ArrivalSpec, n: usize, freq_ghz: f64, seed: u64) -> Result<Vec<u64>> {
+    ensure!(freq_ghz > 0.0, "freq_ghz must be positive");
+    Ok(match spec {
+        ArrivalSpec::Batch => vec![0; n],
+        ArrivalSpec::Fixed { interval_cycles } => {
+            let mut out = Vec::with_capacity(n);
+            let mut t = 0u64;
+            for i in 0..n {
+                if i > 0 {
+                    t = match t.checked_add(*interval_cycles) {
+                        Some(next) => next,
+                        None => bail!("fixed:{interval_cycles} overflows u64 at request {i}"),
+                    };
+                }
+                out.push(t);
+            }
+            out
+        }
+        ArrivalSpec::Poisson { rate_per_s } => {
+            let mean_cycles = freq_ghz * 1e9 / rate_per_s;
+            let mut rng = Rng::new(splitmix64(seed));
+            let mut t = 0.0f64;
+            (0..n)
+                .map(|_| {
+                    // Inverse-CDF exponential; u in [0, 1) keeps ln finite.
+                    t += -mean_cycles * (1.0 - rng.f64()).ln();
+                    t as u64
+                })
+                .collect()
+        }
+        ArrivalSpec::Trace { path } => {
+            bail!("trace '{path}' carries its own request list; use arrivals::load_trace")
+        }
+    })
+}
+
+/// One request of a replayed trace file.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceRequest {
+    pub arrival_cycle: u64,
+    /// Total decode positions (prompt + new tokens), >= 1.
+    pub n_tokens: u64,
+}
+
+/// Parse the trace-file schema (see the module docs). Rejects empty
+/// traces, zero-token requests and unknown keys.
+pub fn parse_trace(json: &Json) -> Result<Vec<TraceRequest>> {
+    let reqs = match json.get("requests").and_then(Json::as_arr) {
+        Some(r) => r,
+        None => bail!("trace must be an object with a \"requests\" array"),
+    };
+    ensure!(!reqs.is_empty(), "trace has no requests");
+    let mut out = Vec::with_capacity(reqs.len());
+    for (i, e) in reqs.iter().enumerate() {
+        let obj = match e.as_obj() {
+            Some(o) => o,
+            None => bail!("trace request {i} must be an object"),
+        };
+        for key in obj.keys() {
+            if key != "arrival_cycle" && key != "n_tokens" {
+                bail!("trace request {i}: unknown key '{key}' (schema: arrival_cycle, n_tokens)");
+            }
+        }
+        // JSON numbers are f64: demand exactly-representable integers
+        // (< 2^53), mirroring the `sched.seed` guard — a rounded cycle
+        // would silently replay the trace at the wrong time.
+        let int = |key: &str| -> Result<u64> {
+            let v = obj
+                .get(key)
+                .and_then(Json::as_f64)
+                .with_context(|| format!("trace request {i}: '{key}' must be a number"))?;
+            if v < 0.0 || v.fract() != 0.0 || v >= 9_007_199_254_740_992.0 {
+                bail!("trace request {i}: '{key}' must be an exact integer < 2^53, got {v}");
+            }
+            Ok(v as u64)
+        };
+        let arrival_cycle = int("arrival_cycle")?;
+        let n_tokens = int("n_tokens")?;
+        ensure!(n_tokens >= 1, "trace request {i}: n_tokens must be >= 1");
+        out.push(TraceRequest { arrival_cycle, n_tokens });
+    }
+    Ok(out)
+}
+
+/// Read + parse a trace file.
+pub fn load_trace(path: &str) -> Result<Vec<TraceRequest>> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading trace {path}"))?;
+    let json = Json::parse(&text).with_context(|| format!("parsing trace {path}"))?;
+    parse_trace(&json).with_context(|| format!("validating trace {path}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in ["batch", "fixed:4096", "poisson:250000", "trace:reqs.json"] {
+            let spec = ArrivalSpec::parse(s).unwrap();
+            assert_eq!(spec.to_string(), s);
+            assert_eq!(ArrivalSpec::parse(&spec.to_string()).unwrap(), spec);
+        }
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "poison:100",
+            "poisson:",
+            "poisson:-5",
+            "poisson:0",
+            "poisson:inf",
+            "fixed:",
+            "fixed:0",
+            "fixed:1.5",
+            "trace:",
+            "uniform:10",
+            "",
+        ] {
+            assert!(ArrivalSpec::parse(bad).is_err(), "accepted '{bad}'");
+        }
+    }
+
+    #[test]
+    fn batch_and_fixed_shapes() {
+        assert_eq!(generate(&ArrivalSpec::Batch, 3, 1.0, 0).unwrap(), vec![0, 0, 0]);
+        let fixed = ArrivalSpec::Fixed { interval_cycles: 500 };
+        assert_eq!(generate(&fixed, 4, 1.0, 0).unwrap(), vec![0, 500, 1000, 1500]);
+    }
+
+    #[test]
+    fn fixed_interval_overflow_fails_loudly() {
+        // A wrap would yield a *decreasing* trace and corrupt every
+        // percentile downstream; it must be an error instead.
+        let huge = ArrivalSpec::Fixed { interval_cycles: u64::MAX };
+        assert!(generate(&huge, 3, 1.0, 0).is_err());
+        // One request never multiplies the interval; still fine.
+        assert_eq!(generate(&huge, 1, 1.0, 0).unwrap(), vec![0]);
+    }
+
+    #[test]
+    fn poisson_deterministic_per_seed() {
+        let spec = ArrivalSpec::Poisson { rate_per_s: 1_000_000.0 };
+        let a = generate(&spec, 64, 1.0, 7).unwrap();
+        let b = generate(&spec, 64, 1.0, 7).unwrap();
+        assert_eq!(a, b, "same seed must replay the same trace");
+        let c = generate(&spec, 64, 1.0, 8).unwrap();
+        assert_ne!(a, c, "different seeds must differ");
+        assert!(a.windows(2).all(|w| w[0] <= w[1]), "arrivals must be nondecreasing");
+    }
+
+    #[test]
+    fn poisson_mean_interarrival_tracks_rate() {
+        // 1 GHz, 1e6 req/s -> mean inter-arrival 1000 cycles; the mean
+        // of 4000 exponential draws sits within ~2% (10% bound is slack).
+        let spec = ArrivalSpec::Poisson { rate_per_s: 1_000_000.0 };
+        let a = generate(&spec, 4000, 1.0, 42).unwrap();
+        let mean = *a.last().unwrap() as f64 / a.len() as f64;
+        assert!((mean - 1000.0).abs() < 100.0, "mean inter-arrival {mean}");
+    }
+
+    #[test]
+    fn trace_generate_is_rejected() {
+        let spec = ArrivalSpec::Trace { path: "x.json".into() };
+        assert!(generate(&spec, 4, 1.0, 0).is_err());
+    }
+
+    #[test]
+    fn trace_schema_parses() {
+        let j = Json::parse(
+            r#"{"requests": [{"arrival_cycle": 0, "n_tokens": 16},
+                             {"arrival_cycle": 4096, "n_tokens": 8}]}"#,
+        )
+        .unwrap();
+        let t = parse_trace(&j).unwrap();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t[0], TraceRequest { arrival_cycle: 0, n_tokens: 16 });
+        assert_eq!(t[1], TraceRequest { arrival_cycle: 4096, n_tokens: 8 });
+    }
+
+    #[test]
+    fn trace_schema_rejects_bad_inputs() {
+        for bad in [
+            r#"{"requests": []}"#,
+            r#"{"reqs": [{"arrival_cycle": 0, "n_tokens": 1}]}"#,
+            r#"{"requests": [{"arrival_cycle": 0}]}"#,
+            r#"{"requests": [{"arrival_cycle": 0, "n_tokens": 0}]}"#,
+            r#"{"requests": [{"arrival_cycle": -5, "n_tokens": 1}]}"#,
+            r#"{"requests": [{"arival_cycle": 0, "n_tokens": 1}]}"#,
+            r#"{"requests": [{"arrival_cycle": 0, "n_tokens": 1, "prio": 3}]}"#,
+            r#"{"requests": [7]}"#,
+            r#"[1, 2]"#,
+            // f64 cannot hold these exactly; silent rounding would
+            // replay the trace at the wrong cycle (see sched.seed).
+            r#"{"requests": [{"arrival_cycle": 1.5, "n_tokens": 1}]}"#,
+            r#"{"requests": [{"arrival_cycle": 9007199254740993, "n_tokens": 1}]}"#,
+            r#"{"requests": [{"arrival_cycle": 0, "n_tokens": 1e300}]}"#,
+        ] {
+            assert!(parse_trace(&Json::parse(bad).unwrap()).is_err(), "accepted {bad}");
+        }
+    }
+
+    #[test]
+    fn load_trace_roundtrips_through_a_file() {
+        let path = std::env::temp_dir().join(format!("pim_trace_{}.json", std::process::id()));
+        std::fs::write(&path, r#"{"requests": [{"arrival_cycle": 12, "n_tokens": 3}]}"#).unwrap();
+        let t = load_trace(path.to_str().unwrap()).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(t, vec![TraceRequest { arrival_cycle: 12, n_tokens: 3 }]);
+        assert!(load_trace("/nonexistent/trace.json").is_err());
+    }
+}

@@ -5,14 +5,18 @@
 //! the paper's simulator) and a multi-request interleaving scheduler
 //! ([`sched`]) — both front ends execute instructions through the same
 //! `Resources::issue` path, so K = 1 interleaved scheduling reproduces
-//! the single-stream simulator exactly. See `sim/README.md`.
+//! the single-stream simulator exactly. Open-loop request arrivals
+//! (batch / fixed / Poisson / trace replay) come from [`arrivals`] and
+//! feed the tail-latency percentiles in [`stats`]. See `sim/README.md`.
 
+pub mod arrivals;
 pub mod engine;
 pub mod resources;
 pub mod sched;
 pub mod stats;
 
+pub use arrivals::{ArrivalSpec, TraceRequest};
 pub use engine::{Simulator, StepResult};
 pub use resources::Resources;
 pub use sched::{MultiSim, StreamResult, StreamSpec};
-pub use stats::{LatClass, SimStats, StreamStats};
+pub use stats::{LatClass, LatencyReport, Percentiles, SimStats, StreamStats};

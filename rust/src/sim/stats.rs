@@ -4,6 +4,7 @@
 
 use std::collections::BTreeMap;
 
+use super::sched::StreamResult;
 use crate::model::VmmClass;
 
 /// Latency classes reported in the Fig. 10 breakdown.
@@ -99,9 +100,14 @@ pub struct SimStats {
     pub kv_slots: u64,
     /// Most KV slots ever occupied at once.
     pub peak_slots_in_use: u64,
-    /// Admission attempts that found requests queued but every KV slot
-    /// occupied — each count is a scheduling point where KV capacity
-    /// (not policy) was the binding constraint.
+    /// Arrived requests found waiting with every KV slot occupied,
+    /// summed over admission attempts (one attempt per `step()` entry
+    /// plus one per stream retirement). The unit is *blocked requests*,
+    /// not attempts: ten stuck requests weigh ten times one stuck
+    /// request at every scheduling point, so the counter reads as
+    /// queue-depth-weighted KV-capacity pressure. Not-yet-arrived
+    /// (pending) requests never count — they are waiting on their own
+    /// arrival, not on capacity.
     pub admission_blocked: u64,
     /// Per-request-stream attribution (one entry per retired stream;
     /// empty for plain single-program runs).
@@ -120,10 +126,77 @@ pub struct StreamStats {
     /// stream (same semantics as `class_cycles`: concurrency can make
     /// the sum across streams exceed wall cycles).
     pub attributed_cycles: u64,
-    /// Simulated cycles spent queued before admission.
+    /// Simulated cycle the request arrived (open-loop traces; 0 for
+    /// batch-at-zero runs).
+    pub arrival_cycle: u64,
+    /// Simulated cycles spent queued between arrival and admission.
     pub queue_cycles: u64,
     /// Simulated cycles from admission to last token.
     pub service_cycles: u64,
+    /// Time to first token: first decode-step completion minus arrival,
+    /// queueing included. Prompt prefill positions are decode steps in
+    /// this engine (no prompt/generated split), so for prompted
+    /// requests this lower-bounds the client-visible first output
+    /// token — see `StreamResult::ttft_cycles`.
+    pub ttft_cycles: u64,
+}
+
+impl StreamStats {
+    /// Derive the stats row from the stream's completion record — the
+    /// single source of truth for queue/service/TTFT accounting, so the
+    /// two views cannot drift apart.
+    pub fn from_result(r: &StreamResult, instructions: u64, attributed_cycles: u64) -> Self {
+        Self {
+            id: r.id,
+            kv_slot: r.kv_slot as u64,
+            tokens: r.tokens,
+            instructions,
+            attributed_cycles,
+            arrival_cycle: r.arrival_cycle,
+            queue_cycles: r.queue_cycles(),
+            service_cycles: r.service_cycles(),
+            ttft_cycles: r.ttft_cycles(),
+        }
+    }
+
+    /// End-to-end latency: arrival to last token.
+    pub fn e2e_cycles(&self) -> u64 {
+        self.queue_cycles + self.service_cycles
+    }
+}
+
+/// Nearest-rank percentiles of a latency sample, in simulated cycles.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Percentiles {
+    pub p50: u64,
+    pub p95: u64,
+    pub p99: u64,
+    pub max: u64,
+}
+
+impl Percentiles {
+    /// Nearest-rank percentiles (`sorted[ceil(q*n) - 1]`); `None` for an
+    /// empty sample. Deterministic — no interpolation, no float compare.
+    pub fn of(values: &[u64]) -> Option<Self> {
+        if values.is_empty() {
+            return None;
+        }
+        let mut v = values.to_vec();
+        v.sort_unstable();
+        let n = v.len();
+        let pick = |q: f64| v[((q * n as f64).ceil() as usize).clamp(1, n) - 1];
+        Some(Self { p50: pick(0.50), p95: pick(0.95), p99: pick(0.99), max: v[n - 1] })
+    }
+}
+
+/// Tail-latency report of an open-loop run: percentiles of per-stream
+/// queueing, time-to-first-token and end-to-end latency (all measured
+/// from each request's *arrival* cycle).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LatencyReport {
+    pub queue: Percentiles,
+    pub ttft: Percentiles,
+    pub e2e: Percentiles,
 }
 
 impl SimStats {
@@ -156,6 +229,19 @@ impl SimStats {
         }
         let vmm: u64 = self.class_cycles.iter().filter(|(c, _)| c.is_vmm()).map(|(_, v)| v).sum();
         vmm as f64 / total as f64
+    }
+
+    /// Tail-latency percentiles over the retired streams (`None` until a
+    /// stream has retired, e.g. single-program runs).
+    pub fn latency_report(&self) -> Option<LatencyReport> {
+        let queue: Vec<u64> = self.streams.iter().map(|s| s.queue_cycles).collect();
+        let ttft: Vec<u64> = self.streams.iter().map(|s| s.ttft_cycles).collect();
+        let e2e: Vec<u64> = self.streams.iter().map(|s| s.e2e_cycles()).collect();
+        Some(LatencyReport {
+            queue: Percentiles::of(&queue)?,
+            ttft: Percentiles::of(&ttft)?,
+            e2e: Percentiles::of(&e2e)?,
+        })
     }
 
     /// Compiled-program cache hit rate (1.0 when never consulted).
@@ -247,6 +333,43 @@ mod tests {
         assert!((s.asic_utilization() - 0.25).abs() < 1e-12);
         assert_eq!(SimStats::default().program_cache_hit_rate(), 1.0);
         assert_eq!(SimStats::default().asic_utilization(), 0.0);
+    }
+
+    #[test]
+    fn nearest_rank_percentiles() {
+        assert_eq!(Percentiles::of(&[]), None);
+        assert_eq!(Percentiles::of(&[7]), Some(Percentiles { p50: 7, p95: 7, p99: 7, max: 7 }));
+        // 1..=100 sorted: rank ceil(q*100) picks exactly q as a value.
+        let v: Vec<u64> = (1..=100).rev().collect(); // unsorted input is fine
+        let p = Percentiles::of(&v).unwrap();
+        assert_eq!(p, Percentiles { p50: 50, p95: 95, p99: 99, max: 100 });
+        // Small samples round up to the nearest rank.
+        let p = Percentiles::of(&[10, 20, 30, 40]).unwrap();
+        assert_eq!((p.p50, p.p95, p.p99, p.max), (20, 40, 40, 40));
+    }
+
+    #[test]
+    fn latency_report_from_streams() {
+        let mut s = SimStats::default();
+        assert!(s.latency_report().is_none(), "no retired streams -> no report");
+        let cases = [(0u64, 100u64, 30u64), (50, 100, 80), (200, 100, 230)];
+        for (i, &(queue, service, ttft)) in cases.iter().enumerate() {
+            s.streams.push(StreamStats {
+                id: i as u64,
+                queue_cycles: queue,
+                service_cycles: service,
+                ttft_cycles: ttft,
+                ..Default::default()
+            });
+        }
+        let r = s.latency_report().unwrap();
+        assert_eq!(r.queue.p50, 50);
+        assert_eq!(r.queue.p99, 200);
+        assert_eq!(r.ttft.p50, 80);
+        assert_eq!(r.e2e.p50, 150);
+        assert_eq!(r.e2e.max, 300);
+        // TTFT never exceeds end-to-end; e2e = queue + service.
+        assert!(r.ttft.p99 <= r.e2e.p99);
     }
 
     /// Satellite acceptance: attribution over-counting is *detectable* —

@@ -49,9 +49,10 @@ fn server_handles_mixed_workload() {
         PimGptSystem::timing_only(&m, &HwConfig::paper_baseline())
     });
     // Mix of valid and invalid requests.
-    server.submit(Request { id: 0, prompt: vec![1], n_new: 4 }).unwrap();
-    server.submit(Request { id: 1, prompt: vec![0; 200], n_new: 10 }).unwrap(); // too long
-    server.submit(Request { id: 2, prompt: vec![2, 3], n_new: 6 }).unwrap();
+    server.submit(Request { id: 0, prompt: vec![1], n_new: 4, arrival_cycle: 0 }).unwrap();
+    // id 1 is too long for gpt-nano's max_seq.
+    server.submit(Request { id: 1, prompt: vec![0; 200], n_new: 10, arrival_cycle: 0 }).unwrap();
+    server.submit(Request { id: 2, prompt: vec![2, 3], n_new: 6, arrival_cycle: 0 }).unwrap();
     let mut by_id = std::collections::BTreeMap::new();
     for _ in 0..3 {
         let r = server.recv().unwrap();
@@ -74,7 +75,7 @@ fn server_simulated_latency_accumulates_monotonically() {
         PimGptSystem::timing_only(&m, &HwConfig::paper_baseline().with_max_streams(1))
     });
     for id in 0..5 {
-        server.submit(Request { id, prompt: vec![1, 2], n_new: 3 }).unwrap();
+        server.submit(Request { id, prompt: vec![1, 2], n_new: 3, arrival_cycle: 0 }).unwrap();
     }
     let mut last_queue = -1.0;
     for _ in 0..5 {

@@ -121,3 +121,21 @@ fn table2_beats_prior_accelerators() {
     // All prior speedups are <= 35x; PIM-GPT must clear them.
     assert!(speedup > 35.0, "{speedup}");
 }
+
+#[test]
+fn serving_tail_latency_deterministic_and_ordered() {
+    let r = report::fig_serving_tail_latency(5, 2, &[0.5, 2.0], 7).unwrap();
+    let rows = r.json.as_arr().unwrap();
+    // 8 paper models x 2 load points.
+    assert_eq!(rows.len(), 16);
+    for row in rows {
+        let f = |k: &str| row.get(k).unwrap().as_f64().unwrap();
+        assert!(f("ttft_p50_cycles") > 0.0);
+        assert!(f("ttft_p50_cycles") <= f("ttft_p99_cycles"));
+        assert!(f("ttft_p99_cycles") <= f("e2e_p99_cycles"));
+        assert!(f("rate_per_s") > 0.0);
+    }
+    // Identical seed -> identical percentiles (no wall clock / OS RNG).
+    let again = report::fig_serving_tail_latency(5, 2, &[0.5, 2.0], 7).unwrap();
+    assert_eq!(r.json, again.json);
+}

@@ -1,9 +1,11 @@
 //! Multi-stream scheduler acceptance invariants: K=1 equivalence with
-//! the single-stream simulator, deterministic interleaving, and the
-//! interleaving throughput win over FIFO.
+//! the single-stream simulator, deterministic interleaving, the
+//! interleaving throughput win over FIFO, and open-loop arrival
+//! replays (tail-latency percentiles, degraded-capacity interaction).
 
 use pim_gpt::config::HwConfig;
 use pim_gpt::model::gpt::by_name;
+use pim_gpt::sim::arrivals::{self, ArrivalSpec};
 use pim_gpt::sim::{MultiSim, Simulator, StreamSpec};
 
 /// K=1 scheduling must reproduce the seed simulator's per-token cycle
@@ -23,7 +25,7 @@ fn k1_reproduces_single_stream_cycles_exactly() {
         }
 
         let mut ms = MultiSim::new(&m, &cfg).unwrap();
-        ms.submit(StreamSpec { id: 0, n_tokens }).unwrap();
+        ms.submit(StreamSpec::new(0, n_tokens)).unwrap();
         let results = ms.run_all().unwrap();
         assert_eq!(results.len(), 1);
         let r = &results[0];
@@ -57,7 +59,7 @@ fn k1_equivalence_across_regime_boundary() {
     }
 
     let mut ms = MultiSim::new(&m, &cfg).unwrap();
-    ms.submit(StreamSpec { id: 0, n_tokens }).unwrap();
+    ms.submit(StreamSpec::new(0, n_tokens)).unwrap();
     let r = ms.run_all().unwrap().remove(0);
     assert_eq!(r.token_finishes, want);
 }
@@ -70,7 +72,7 @@ fn interleaving_is_deterministic() {
         let cfg = HwConfig::paper_baseline().with_max_streams(4);
         let mut ms = MultiSim::new(&m, &cfg).unwrap();
         for id in 0..6 {
-            ms.submit(StreamSpec { id, n_tokens: 2 + id }).unwrap();
+            ms.submit(StreamSpec::new(id, 2 + id)).unwrap();
         }
         let results = ms.run_all().unwrap();
         ms.finalize_stats();
@@ -87,8 +89,7 @@ fn interleaving_is_deterministic() {
 /// simulated tokens/s than FIFO (K=1) on the same request set.
 #[test]
 fn k4_throughput_strictly_beats_fifo() {
-    let specs: Vec<StreamSpec> =
-        (0..4).map(|id| StreamSpec { id, n_tokens: 4 + 3 * id }).collect();
+    let specs: Vec<StreamSpec> = (0..4).map(|id| StreamSpec::new(id, 4 + 3 * id)).collect();
     let total_tokens: u64 = specs.iter().map(|s| s.n_tokens).sum();
     let run = |k: usize| {
         let m = by_name("gpt2-small").unwrap();
@@ -130,7 +131,7 @@ fn capacity_limited_model_admits_fewer_streams() {
     assert_eq!(report.granted, slots);
 
     for id in 0..6 {
-        ms.submit(StreamSpec { id, n_tokens: 2 }).unwrap();
+        ms.submit(StreamSpec::new(id, 2)).unwrap();
     }
     let results = ms.run_all().unwrap();
     ms.finalize_stats();
@@ -160,7 +161,7 @@ fn k1_equivalence_holds_under_degraded_capacity() {
     }
 
     let mut ms = MultiSim::new(&m, &cfg).unwrap();
-    ms.submit(StreamSpec { id: 0, n_tokens }).unwrap();
+    ms.submit(StreamSpec::new(0, n_tokens)).unwrap();
     let r = ms.run_all().unwrap().remove(0);
     assert_eq!(r.token_finishes, want);
 }
@@ -174,7 +175,7 @@ fn utilization_improves_with_interleaving() {
         let cfg = HwConfig::paper_baseline().with_max_streams(k);
         let mut ms = MultiSim::new(&m, &cfg).unwrap();
         for id in 0..4 {
-            ms.submit(StreamSpec { id, n_tokens: 6 }).unwrap();
+            ms.submit(StreamSpec::new(id, 6)).unwrap();
         }
         ms.run_all().unwrap();
         ms.finalize_stats();
@@ -192,4 +193,106 @@ fn utilization_improves_with_interleaving() {
     assert!(attr1 > 0);
     assert_eq!(stats1.streams.len(), 4);
     assert_eq!(stats4.streams.len(), 4);
+}
+
+/// Tentpole acceptance pin: two requests with arrivals {0, A}, where A
+/// is far below the first request's finish, must report `queue_cycles`
+/// measured from A — not from the global clock high-water mark (the old
+/// `submit` stamped `self.clock`, which zeroed the wait). The
+/// batch-at-zero path stays cycle-identical to the pinned K=1
+/// equivalence above.
+#[test]
+fn arrival_stamping_measured_from_arrival_not_clock() {
+    let m = by_name("gpt-nano").unwrap();
+    let cfg = HwConfig::paper_baseline().with_max_streams(1);
+    let mut ms = MultiSim::new(&m, &cfg).unwrap();
+    let a = 2_000u64;
+    ms.submit(StreamSpec::new(0, 12)).unwrap();
+    ms.submit(StreamSpec { id: 1, n_tokens: 2, arrival_cycle: a }).unwrap();
+    let results = ms.run_all().unwrap();
+    let r0 = results.iter().find(|r| r.id == 0).unwrap();
+    let r1 = results.iter().find(|r| r.id == 1).unwrap();
+    assert!(a < r0.finish_cycle, "A must land mid-batch for the pin to bite");
+    assert_eq!(r0.queue_cycles(), 0);
+    // The only slot frees at r0's finish; r1 waited from its own arrival.
+    assert_eq!(r1.arrival_cycle, a);
+    assert_eq!(r1.admitted_cycle, r0.finish_cycle);
+    assert_eq!(r1.queue_cycles(), r0.finish_cycle - a);
+    assert!(r1.ttft_cycles() > r1.queue_cycles());
+}
+
+/// Satellite acceptance: degraded KV capacity x open loop. On the
+/// 0.34 Gbit/channel config (2 of 4 requested slots), an overloaded
+/// Poisson replay must show positive p99 queueing with every granted
+/// slot in use — and identical seeds must reproduce identical
+/// percentiles (no wall clock or OS RNG anywhere in the sim).
+#[test]
+fn degraded_capacity_open_loop_poisson_tail() {
+    let m = by_name("gpt2-small").unwrap();
+    let mut cfg = HwConfig::paper_baseline().with_max_streams(4);
+    cfg.gddr6.capacity_gbit = 0.34;
+    // ~1e6 req/s at 1 GHz = one arrival per ~1000 cycles, far faster
+    // than a 2-token gpt2-small service: a guaranteed overload.
+    let spec = ArrivalSpec::Poisson { rate_per_s: 1_000_000.0 };
+    let run = |seed: u64| {
+        let at = arrivals::generate(&spec, 8, cfg.gddr6.freq_ghz, seed).unwrap();
+        let mut ms = MultiSim::new(&m, &cfg).unwrap();
+        for (id, &arrival_cycle) in at.iter().enumerate() {
+            let id = id as u64;
+            ms.submit(StreamSpec { id, n_tokens: 2, arrival_cycle }).unwrap();
+        }
+        let n = ms.run_all().unwrap().len();
+        ms.finalize_stats();
+        assert_eq!(n, 8);
+        (ms.kv_slots(), ms.stats.clone())
+    };
+    let (slots, stats) = run(7);
+    assert!(slots < 4, "expected degraded capacity, got {slots} slots");
+    assert_eq!(stats.peak_slots_in_use, slots as u64);
+    assert!(stats.admission_blocked > 0);
+    let lat = stats.latency_report().unwrap();
+    assert!(lat.queue.p99 > 0, "overloaded run must show tail queueing");
+    assert!(lat.ttft.p99 >= lat.queue.p99, "ttft includes the queue wait");
+    assert!(lat.e2e.p99 >= lat.ttft.p99);
+    // Determinism: same seed, same percentiles; the arrival trace
+    // itself shifts with the seed.
+    let (_, stats_again) = run(7);
+    assert_eq!(stats_again.latency_report().unwrap(), lat);
+    let a7 = arrivals::generate(&spec, 8, 1.0, 7).unwrap();
+    let a8 = arrivals::generate(&spec, 8, 1.0, 8).unwrap();
+    assert_ne!(a7, a8);
+}
+
+/// Open loop on the healthy config: a fixed-interval replay paced
+/// slower than the service rate shows zero queueing (every request
+/// admitted at its own arrival), while the same set compressed to
+/// batch-at-zero queues on slot capacity — the generators and the
+/// admission path agree end-to-end.
+#[test]
+fn fixed_interval_pacing_vs_batch_compression() {
+    let m = by_name("gpt-nano").unwrap();
+    let cfg = HwConfig::paper_baseline().with_max_streams(2);
+    // Measure one request's service time to pace the open-loop run.
+    let mut probe = MultiSim::new(&m, &cfg).unwrap();
+    probe.submit(StreamSpec::new(0, 2)).unwrap();
+    let service = probe.run_all().unwrap()[0].service_cycles();
+
+    let interval = 2 * service; // slower than service on 2 slots
+    let spec = ArrivalSpec::Fixed { interval_cycles: interval };
+    let at = arrivals::generate(&spec, 6, cfg.gddr6.freq_ghz, 0).unwrap();
+    let mut paced = MultiSim::new(&m, &cfg).unwrap();
+    let mut batch = MultiSim::new(&m, &cfg).unwrap();
+    for (id, &arrival_cycle) in at.iter().enumerate() {
+        let id = id as u64;
+        paced.submit(StreamSpec { id, n_tokens: 2, arrival_cycle }).unwrap();
+        batch.submit(StreamSpec::new(id, 2)).unwrap();
+    }
+    let paced_results = paced.run_all().unwrap();
+    let batch_results = batch.run_all().unwrap();
+    for r in &paced_results {
+        assert_eq!(r.queue_cycles(), 0, "request {} queued under slack pacing", r.id);
+        assert_eq!(r.admitted_cycle, r.arrival_cycle);
+    }
+    let queued = batch_results.iter().filter(|r| r.queue_cycles() > 0).count();
+    assert!(queued >= 4, "6 batch requests on 2 slots: {queued} queued");
 }
