@@ -2,7 +2,8 @@
 //! per-token decode cost across model sizes and context lengths, the
 //! mapping stage, graph compilation, the multi-request scheduler
 //! (simulated throughput at K ∈ {1, 2, 4} + program-cache hit rate),
-//! and the open-loop Poisson arrival sweep (tail latency vs load).
+//! the open-loop Poisson arrival sweep (tail latency vs load), and the
+//! scheduling-policy sweep at K=4 (fcfs / srf / fair / slo).
 use pim_gpt::compiler::compile;
 use pim_gpt::config::HwConfig;
 use pim_gpt::mapping::ModelMapping;
@@ -150,6 +151,64 @@ fn main() {
                 us(lat.ttft.p99),
                 us(lat.e2e.p99),
             );
+        }
+    }
+
+    // Scheduling-policy sweep (K=4): one mixed Poisson request set
+    // served under every pick/admission policy — host cost of the
+    // policy layer plus the simulated makespan / tail-latency / shed
+    // trade-off each policy buys.
+    {
+        let kcfg = HwConfig::paper_baseline().with_max_streams(4);
+        let freq_hz = kcfg.gddr6.freq_ghz * 1e9;
+        let mapping = ModelMapping::build(&m, &kcfg).unwrap();
+        let lens: Vec<u64> = (0..8u64).map(|i| 4 + 4 * (i % 3)).collect();
+        let submit_all = |ms: &mut MultiSim, at: &[u64]| {
+            for (id, (&n, &a)) in lens.iter().zip(at.iter()).enumerate() {
+                ms.submit(StreamSpec { id: id as u64, n_tokens: n, arrival_cycle: a }).unwrap();
+            }
+        };
+        // Batch makespan calibrates the offered rate and the SLO budget.
+        let mut batch = MultiSim::from_mapping(&m, &kcfg, mapping.clone());
+        submit_all(&mut batch, &[0u64; 8]);
+        batch.run_all().unwrap();
+        let makespan = batch.clock();
+        let rate_per_s = 1.5 * 8.0 * freq_hz / makespan as f64;
+        let at =
+            arrivals::generate(&ArrivalSpec::Poisson { rate_per_s }, 8, kcfg.gddr6.freq_ghz, 7)
+                .unwrap();
+        let budget = (makespan / 8).max(1) * 4;
+        let slo = format!("slo:{budget}");
+        println!(
+            "sim::multi policy sweep gpt2-small K=4 (8 mixed reqs, Poisson 1.5x, \
+             slo budget {budget} cycles):"
+        );
+        for policy in ["fcfs", "srf", "fair", slo.as_str()] {
+            let mut cfg = kcfg.clone();
+            cfg.sched.set_policy_str(policy).unwrap();
+            bench(&format!("sim::multi policy={policy} gpt2-small K=4"), 1, 5, || {
+                let mut ms = MultiSim::from_mapping(&m, &cfg, mapping.clone());
+                submit_all(&mut ms, &at);
+                black_box(ms.run_all().unwrap());
+            });
+            let mut ms = MultiSim::from_mapping(&m, &cfg, mapping.clone());
+            submit_all(&mut ms, &at);
+            ms.run_all().unwrap();
+            ms.finalize_stats();
+            let us = |c: u64| c as f64 / (freq_hz / 1e6);
+            match ms.stats.latency_report() {
+                Some(lat) => println!(
+                    "  {:>9}: makespan {:.1} us, ttft p50/p99 {:.1}/{:.1} us, \
+                     e2e p99 {:.1} us, rejected {}",
+                    policy,
+                    us(ms.clock()),
+                    us(lat.ttft.p50),
+                    us(lat.ttft.p99),
+                    us(lat.e2e.p99),
+                    ms.stats.rejected,
+                ),
+                None => println!("  {policy:>9}: every request rejected"),
+            }
         }
     }
 }

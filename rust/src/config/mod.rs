@@ -7,6 +7,7 @@
 //! "real config system" of the launcher.
 
 use crate::sim::arrivals::ArrivalSpec;
+use crate::sim::policy::PolicySpec;
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 
@@ -170,11 +171,41 @@ pub struct SchedulerConfig {
     /// seeds replay identical traces — the simulator never consults a
     /// wall clock or OS RNG.
     pub seed: u64,
+    /// Scheduling policy (JSON string key `sched.policy`: `fcfs`,
+    /// `srf`, `fair`, `slo` or `slo:<ttft-cycles>`; CLI `--policy`).
+    /// `fcfs` reproduces the pre-policy scheduler cycle-for-cycle —
+    /// see `sim::policy`.
+    pub policy: PolicySpec,
+    /// TTFT budget (DRAM cycles) the SLO admission policy judges
+    /// against; only consulted when `policy` is `slo`. `slo:<cycles>`
+    /// and JSON `sched.slo_ttft_cycles` both override it. The default
+    /// is 2 ms at the 1 GHz Table I clock.
+    pub slo_ttft_cycles: u64,
 }
 
 impl Default for SchedulerConfig {
     fn default() -> Self {
-        Self { max_streams: 4, arrival: ArrivalSpec::Batch, seed: 0x5EED }
+        Self {
+            max_streams: 4,
+            arrival: ArrivalSpec::Batch,
+            seed: 0x5EED,
+            policy: PolicySpec::Fcfs,
+            slo_ttft_cycles: 2_000_000,
+        }
+    }
+}
+
+impl SchedulerConfig {
+    /// Apply a policy string (`fcfs | srf | fair | slo[:<ttft-cycles>]`,
+    /// the shared CLI/JSON spelling); `slo:<cycles>` also overrides
+    /// `slo_ttft_cycles`.
+    pub fn set_policy_str(&mut self, s: &str) -> Result<()> {
+        let (policy, budget) = PolicySpec::parse(s)?;
+        self.policy = policy;
+        if let Some(cycles) = budget {
+            self.slo_ttft_cycles = cycles;
+        }
+        Ok(())
     }
 }
 
@@ -297,11 +328,18 @@ impl HwConfig {
                     ArrivalSpec::parse(s).with_context(|| format!("sched.arrival = '{s}'"))?;
                 Ok(())
             }
+            ("sched", "policy") => {
+                self.sched
+                    .set_policy_str(s)
+                    .with_context(|| format!("sched.policy = '{s}'"))?;
+                Ok(())
+            }
             _ => {
                 // Tell a type error on a known numeric field apart from
-                // a genuinely unknown key (probe a scratch copy).
+                // a genuinely unknown key (probe a scratch copy; 1.0 is
+                // in-range for every validated numeric field, unlike 0).
                 let mut probe = self.clone();
-                if probe.set_field(section, key, 0.0).is_ok() {
+                if probe.set_field(section, key, 1.0).is_ok() {
                     bail!("{section}.{key} must be a number, got string '{s}'");
                 }
                 bail!("unknown config field {section}.{key}")
@@ -355,6 +393,18 @@ impl HwConfig {
             }
             ("sched", "arrival") => {
                 bail!("sched.arrival must be a string like \"poisson:250000\"")
+            }
+            ("sched", "policy") => {
+                bail!("sched.policy must be a string like \"srf\" or \"slo:2000000\"")
+            }
+            ("sched", "slo_ttft_cycles") => {
+                // Same exactness contract as `sched.seed`: a JSON f64
+                // must hold the budget exactly, and a 0-cycle budget
+                // (which would reject everything) is a config mistake.
+                if n < 1.0 || n.fract() != 0.0 || n >= 9_007_199_254_740_992.0 {
+                    bail!("sched.slo_ttft_cycles must be an integer in [1, 2^53), got {n}");
+                }
+                self.sched.slo_ttft_cycles = n as u64;
             }
             ("asic", "freq_ghz") => set!(self.asic.freq_ghz, f64),
             ("asic", "sram_kb") => set!(self.asic.sram_kb, usize),
@@ -438,6 +488,59 @@ mod tests {
             .with_arrival_seed(9);
         assert_eq!(cfg.sched.arrival, ArrivalSpec::Trace { path: "t.json".into() });
         assert_eq!(cfg.sched.seed, 9);
+    }
+
+    #[test]
+    fn sched_policy_and_slo_overrides() {
+        use crate::sim::policy::PolicySpec;
+        let cfg = HwConfig::paper_baseline();
+        assert_eq!(cfg.sched.policy, PolicySpec::Fcfs, "fcfs is the default");
+        assert_eq!(cfg.sched.slo_ttft_cycles, 2_000_000);
+        let src = r#"{"sched": {"policy": "srf"}}"#;
+        let cfg = HwConfig::from_json(&Json::parse(src).unwrap()).unwrap();
+        assert_eq!(cfg.sched.policy, PolicySpec::Srf);
+        let src = r#"{"sched": {"policy": "slo:123456"}}"#;
+        let cfg = HwConfig::from_json(&Json::parse(src).unwrap()).unwrap();
+        assert_eq!(cfg.sched.policy, PolicySpec::Slo);
+        assert_eq!(cfg.sched.slo_ttft_cycles, 123_456, "slo:<n> carries the budget");
+        let src = r#"{"sched": {"policy": "slo", "slo_ttft_cycles": 777}}"#;
+        let cfg = HwConfig::from_json(&Json::parse(src).unwrap()).unwrap();
+        assert_eq!(cfg.sched.policy, PolicySpec::Slo);
+        assert_eq!(cfg.sched.slo_ttft_cycles, 777);
+        // The budget key alone leaves the policy untouched.
+        let src = r#"{"sched": {"slo_ttft_cycles": 99, "policy": "fair"}}"#;
+        let cfg = HwConfig::from_json(&Json::parse(src).unwrap()).unwrap();
+        assert_eq!(cfg.sched.policy, PolicySpec::Fair);
+        assert_eq!(cfg.sched.slo_ttft_cycles, 99);
+        // Builder-style mutation used by the CLI.
+        let mut sched = SchedulerConfig::default();
+        sched.set_policy_str("slo:42").unwrap();
+        assert_eq!((sched.policy, sched.slo_ttft_cycles), (PolicySpec::Slo, 42));
+        sched.set_policy_str("fcfs").unwrap();
+        assert_eq!(sched.slo_ttft_cycles, 42, "budget survives a policy switch");
+    }
+
+    #[test]
+    fn sched_policy_bad_values_rejected() {
+        for bad in [
+            r#"{"sched": {"policy": "fifo"}}"#,
+            r#"{"sched": {"policy": "slo:"}}"#,
+            r#"{"sched": {"policy": "slo:0"}}"#,
+            r#"{"sched": {"polcy": "srf"}}"#,
+            r#"{"sched": {"slo_ttft_cycles": 0}}"#,
+            r#"{"sched": {"slo_ttft_cycles": -8}}"#,
+            r#"{"sched": {"slo_ttft_cycles": 1.5}}"#,
+            r#"{"sched": {"slo_ttft_cycles": 9007199254740993}}"#,
+            r#"{"sched": {"slo_ttft_cycles": "777"}}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(HwConfig::from_json(&j).is_err(), "accepted {bad}");
+        }
+        // A number where the policy string is required names the
+        // expectation.
+        let j = Json::parse(r#"{"sched": {"policy": 3}}"#).unwrap();
+        let err = HwConfig::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("must be a string"), "{err}");
     }
 
     /// Satellite: typo'd or mistyped `sched` keys must be rejected with

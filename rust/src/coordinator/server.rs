@@ -11,6 +11,12 @@
 //! completion boundary. Setting `max_streams = 1` reproduces the seed's
 //! FIFO behavior exactly.
 //!
+//! Scheduling is policy-driven (`sim::policy`, `cfg.sched.policy`):
+//! `fcfs` (default), `srf`, `fair` or `slo` — the latter sheds requests
+//! whose predicted TTFT busts `cfg.sched.slo_ttft_cycles`. A shed
+//! request is served a first-class response with `rejected = true` (no
+//! tokens, no error) and counts in `ServerMetrics::rejected`.
+//!
 //! Requests carry a simulated `arrival_cycle` (open-loop serving): the
 //! scheduler holds each request pending until simulated time reaches
 //! its arrival, and the shutdown metrics report p50/p95/p99 of queue,
@@ -43,7 +49,7 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use super::generation::PimGptSystem;
-use crate::sim::{LatencyReport, MultiSim, StreamSpec};
+use crate::sim::{LatencyReport, MultiSim, StreamOutcome, StreamSpec};
 use anyhow::{anyhow, Result};
 
 /// A generation request.
@@ -74,8 +80,13 @@ pub struct Response {
     /// Wall-clock time from ingestion to completion, seconds.
     pub wall_seconds: f64,
     /// Queueing delay in *simulated* seconds (time the request waited
-    /// for a free stream slot behind earlier requests).
+    /// for a free stream slot behind earlier requests). For a rejected
+    /// request: the wait up to the rejection decision.
     pub sim_queue_seconds: f64,
+    /// The admission policy shed this request (`sim::policy`,
+    /// `StreamOutcome::Rejected`) — a first-class serving outcome, not
+    /// an error: `error` stays `None` and no tokens are produced.
+    pub rejected: bool,
     pub error: Option<String>,
 }
 
@@ -101,6 +112,11 @@ pub struct ServerMetrics {
     /// summed over admission attempts (queue-depth-weighted KV-capacity
     /// pressure — see `SimStats::admission_blocked`).
     pub admission_blocked: u64,
+    /// Requests shed by the configured admission policy
+    /// (`sched.policy = slo`; always 0 under admit-always policies).
+    /// Rejected requests count in `requests` but not in `failed`,
+    /// `tokens` or the latency percentiles.
+    pub rejected: u64,
     /// Tail-latency percentiles (queue/TTFT/end-to-end, in simulated
     /// cycles, measured from each request's arrival). `None` for
     /// FIFO/functional serving and runs that completed no stream.
@@ -200,6 +216,7 @@ fn error_response(id: u64, err: String) -> Response {
         sim_seconds: 0.0,
         wall_seconds: 0.0,
         sim_queue_seconds: 0.0,
+        rejected: false,
         error: Some(err),
     }
 }
@@ -266,6 +283,7 @@ fn fifo_loop(
                     sim_seconds: r.sim_seconds,
                     wall_seconds: wall,
                     sim_queue_seconds: sim_busy_until,
+                    rejected: false,
                     error: None,
                 };
                 sim_busy_until += r.sim_seconds;
@@ -280,6 +298,7 @@ fn fifo_loop(
                     sim_seconds: 0.0,
                     wall_seconds: wall0.elapsed().as_secs_f64(),
                     sim_queue_seconds: sim_busy_until,
+                    rejected: false,
                     error: Some(e.to_string()),
                 });
             }
@@ -314,6 +333,7 @@ fn ingest(
             sim_seconds: 0.0,
             wall_seconds: 0.0,
             sim_queue_seconds: 0.0,
+            rejected: false,
             error: None,
         });
         return;
@@ -351,9 +371,20 @@ fn interleaved_loop(
     let mut inflight: Vec<InFlight> = Vec::new();
     let mut open = true;
 
-    while open || msim.active_streams() > 0 || msim.queued_streams() > 0 {
-        // Idle with an open queue: block for the next request.
-        if open && msim.active_streams() == 0 && msim.queued_streams() == 0 {
+    while open
+        || msim.active_streams() > 0
+        || msim.queued_streams() > 0
+        || msim.undelivered_rejections() > 0
+    {
+        // Idle with an open queue and no undelivered outcomes: block
+        // for the next request. (Undelivered rejections must drain
+        // first — blocking here would deadlock a client that waits for
+        // every response before shutting down.)
+        if open
+            && msim.active_streams() == 0
+            && msim.queued_streams() == 0
+            && msim.undelivered_rejections() == 0
+        {
             match rx.recv() {
                 Ok(req) => ingest(req, &mut msim, &mut inflight, metrics, tx_resp),
                 Err(_) => {
@@ -383,27 +414,47 @@ fn interleaved_loop(
                 return Err(e);
             }
         };
-        if let Some(done) = stepped {
+        if let Some(outcome) = stepped {
             let idx = inflight
                 .iter()
-                .position(|m| m.id == done.id)
-                .ok_or_else(|| anyhow!("completed stream {} has no request record", done.id))?;
+                .position(|m| m.id == outcome.id())
+                .ok_or_else(|| anyhow!("stream {} has no request record", outcome.id()))?;
             let m = inflight.remove(idx);
             let wall = m.wall0.elapsed().as_secs_f64();
-            let service_s = done.service_cycles() as f64 / freq_hz;
-            let queue_s = done.queue_cycles() as f64 / freq_hz;
-            metrics.tokens += done.tokens;
-            metrics.sim_seconds += service_s;
-            metrics.wall_seconds += wall;
-            metrics.sim_makespan_seconds = msim.clock() as f64 / freq_hz;
-            let _ = tx_resp.send(Response {
-                id: m.id,
-                tokens: m.tokens,
-                sim_seconds: service_s,
-                wall_seconds: wall,
-                sim_queue_seconds: queue_s,
-                error: None,
-            });
+            match outcome {
+                StreamOutcome::Completed(done) => {
+                    let service_s = done.service_cycles() as f64 / freq_hz;
+                    let queue_s = done.queue_cycles() as f64 / freq_hz;
+                    metrics.tokens += done.tokens;
+                    metrics.sim_seconds += service_s;
+                    metrics.wall_seconds += wall;
+                    metrics.sim_makespan_seconds = msim.clock() as f64 / freq_hz;
+                    let _ = tx_resp.send(Response {
+                        id: m.id,
+                        tokens: m.tokens,
+                        sim_seconds: service_s,
+                        wall_seconds: wall,
+                        sim_queue_seconds: queue_s,
+                        rejected: false,
+                        error: None,
+                    });
+                }
+                // An admission-policy shed: a first-class response (no
+                // tokens, no error) so the client learns its fate
+                // promptly.
+                StreamOutcome::Rejected(rej) => {
+                    metrics.rejected += 1;
+                    let _ = tx_resp.send(Response {
+                        id: m.id,
+                        tokens: vec![],
+                        sim_seconds: 0.0,
+                        wall_seconds: wall,
+                        sim_queue_seconds: rej.waited_cycles() as f64 / freq_hz,
+                        rejected: true,
+                        error: None,
+                    });
+                }
+            }
         }
     }
     // Queue/occupancy/latency stats of the whole run.
@@ -643,5 +694,84 @@ mod tests {
         let mut s = server_k("gpt-nano", 2);
         let m = s.shutdown();
         assert!(m.latency.is_none());
+    }
+
+    fn server_policy(model: &str, k: usize, policy: &'static str) -> Server {
+        let name = model.to_string();
+        Server::start(move || {
+            let m = by_name(&name).unwrap();
+            let mut cfg = HwConfig::paper_baseline().with_max_streams(k);
+            cfg.sched.set_policy_str(policy).unwrap();
+            PimGptSystem::timing_only(&m, &cfg)
+        })
+    }
+
+    #[test]
+    fn slo_rejections_are_first_class_responses() {
+        // A 1-cycle TTFT budget is unmeetable: every request is shed.
+        // Rejections are responses (no error), counted separately from
+        // failures, and leave no latency percentiles behind.
+        let mut s = server_policy("gpt-nano", 2, "slo:1");
+        for id in 0..3 {
+            s.submit(Request { id, prompt: vec![1], n_new: 2, arrival_cycle: 0 }).unwrap();
+        }
+        for _ in 0..3 {
+            let r = s.recv().unwrap();
+            assert!(r.rejected, "req {} should be shed", r.id);
+            assert!(r.error.is_none(), "a rejection is not an error");
+            assert!(r.tokens.is_empty());
+            assert_eq!(r.sim_seconds, 0.0);
+        }
+        let m = s.shutdown();
+        assert_eq!(m.requests, 3);
+        assert_eq!(m.rejected, 3);
+        assert_eq!(m.failed, 0);
+        assert_eq!(m.tokens, 0);
+        assert!(m.latency.is_none(), "no admitted streams -> no percentiles");
+    }
+
+    #[test]
+    fn slo_with_slack_budget_serves_everything() {
+        // A 10-second budget never binds at this scale: the SLO path
+        // degenerates to normal serving with rejected == 0.
+        let mut s = server_policy("gpt-nano", 2, "slo:10000000000");
+        for id in 0..3 {
+            s.submit(Request { id, prompt: vec![1], n_new: 2, arrival_cycle: 0 }).unwrap();
+        }
+        for _ in 0..3 {
+            let r = s.recv().unwrap();
+            assert!(!r.rejected);
+            assert!(r.error.is_none());
+            assert_eq!(r.tokens.len(), 3);
+        }
+        let m = s.shutdown();
+        assert_eq!((m.requests, m.rejected, m.failed), (3, 0, 0));
+        assert!(m.latency.is_some());
+    }
+
+    #[test]
+    fn srf_serving_matches_fcfs_token_totals() {
+        // Policies reorder service, never change the work: the same
+        // request set yields identical token totals under srf.
+        let run = |policy: &'static str| {
+            let mut s = server_policy("gpt-nano", 1, policy);
+            for id in 0..3 {
+                s.submit(Request {
+                    id,
+                    prompt: vec![1],
+                    n_new: 1 + 2 * id as usize,
+                    arrival_cycle: 0,
+                })
+                .unwrap();
+            }
+            for _ in 0..3 {
+                assert!(s.recv().unwrap().error.is_none());
+            }
+            s.shutdown()
+        };
+        let fcfs = run("fcfs");
+        let srf = run("srf");
+        assert_eq!(fcfs.tokens, srf.tokens);
+        assert_eq!(srf.rejected, 0);
     }
 }

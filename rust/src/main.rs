@@ -6,10 +6,14 @@
 //! pim-gpt figures [--fig ID] [--tokens N]
 //! pim-gpt generate --model NAME [--artifacts DIR] [--prompt 1,2,3] [--n N]
 //! pim-gpt serve --model NAME [--requests N] [--concurrency K] [--arrivals SPEC]
-//!               [--seed N] [--artifacts DIR]
+//!               [--policy SPEC] [--seed N] [--artifacts DIR]
 //! ```
 //!
-//! (Arg parsing is hand-rolled — clap is unavailable offline, DESIGN.md §5.)
+//! (Arg parsing is hand-rolled — clap is unavailable offline, DESIGN.md
+//! §5. Flags take `--key value` or `--key=value`; the `=` form is the
+//! escape hatch for values that themselves start with `--`, and a
+//! valued flag left bare fails loudly instead of being silently
+//! swallowed as a boolean.)
 
 use std::path::Path;
 
@@ -23,9 +27,20 @@ use pim_gpt::sim::arrivals::{self, ArrivalSpec};
 use pim_gpt::sim::Simulator;
 use pim_gpt::util::table::fmt_time_s;
 
-/// Minimal flag parser: `--key value` pairs after the subcommand.
+/// A parsed flag: bare (`--json`) or valued (`--tokens 64`,
+/// `--tokens=64`). Keeping the two shapes distinct is what lets `get`
+/// reject the classic silent-swallow bug (`--arrivals --seed 5` turning
+/// `--arrivals` into a boolean) with a clear error instead.
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum ArgVal {
+    Bare,
+    Value(String),
+}
+
+/// Minimal flag parser: `--key value` / `--key=value` pairs (plus bare
+/// `--key` switches) after the subcommand.
 struct Args {
-    flags: std::collections::BTreeMap<String, String>,
+    flags: std::collections::BTreeMap<String, ArgVal>,
 }
 
 impl Args {
@@ -34,27 +49,82 @@ impl Args {
         let mut i = 0;
         while i < argv.len() {
             let a = &argv[i];
-            if let Some(key) = a.strip_prefix("--") {
-                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
-                    flags.insert(key.to_string(), argv[i + 1].clone());
-                    i += 2;
-                } else {
-                    flags.insert(key.to_string(), "true".to_string());
-                    i += 1;
-                }
-            } else {
-                bail!("unexpected argument '{a}'");
+            let Some(body) = a.strip_prefix("--") else {
+                bail!("unexpected argument '{a}' (flags are --key value, --key=value or --key)");
+            };
+            if body.is_empty() {
+                bail!("bare '--' is not a flag");
             }
+            // `--key=value` binds unambiguously, so it is the escape
+            // hatch for values that themselves start with '--'.
+            let (key, val) = match body.split_once('=') {
+                Some((k, v)) => {
+                    if k.is_empty() {
+                        bail!("missing flag name in '{a}'");
+                    }
+                    if v.is_empty() {
+                        bail!("empty value in '{a}' (drop the '=' for a bare switch)");
+                    }
+                    (k, ArgVal::Value(v.to_string()))
+                }
+                None => {
+                    // Space-separated form: the next token is this
+                    // flag's value unless it is itself a flag. A value
+                    // that legitimately starts with '--' must use
+                    // --key=value; a negative number ('-5') is fine
+                    // here.
+                    if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                        i += 1;
+                        (body, ArgVal::Value(argv[i].clone()))
+                    } else {
+                        (body, ArgVal::Bare)
+                    }
+                }
+            };
+            if flags.insert(key.to_string(), val).is_some() {
+                bail!("duplicate flag --{key}");
+            }
+            i += 1;
         }
         Ok(Self { flags })
     }
 
-    fn get(&self, key: &str) -> Option<&str> {
-        self.flags.get(key).map(|s| s.as_str())
+    /// The value of `--key`. A bare `--key` (including the ambiguous
+    /// `--key --next ...` form that used to be silently swallowed as a
+    /// boolean) is a loud error, because the caller expects a value.
+    fn get(&self, key: &str) -> Result<Option<&str>> {
+        match self.flags.get(key) {
+            None => Ok(None),
+            Some(ArgVal::Value(v)) => Ok(Some(v.as_str())),
+            Some(ArgVal::Bare) => bail!(
+                "--{key} needs a value (write --{key}=<value> if the value starts with '--')"
+            ),
+        }
+    }
+
+    /// Whether `--key` appeared at all (bare switches like `--json`).
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    /// Reject flags the command does not know. Without this a typo'd
+    /// flag (`--polcy srf`) would be parsed, stored, never read — and
+    /// the run would silently proceed with defaults, corrupting the
+    /// experiment the same way a typo'd JSON config key used to.
+    fn expect_only(&self, cmd: &str, allowed: &[&str]) -> Result<()> {
+        for key in self.flags.keys() {
+            if !allowed.contains(&key.as_str()) {
+                bail!(
+                    "unknown flag --{key} for '{cmd}' (accepted: {})",
+                    allowed.iter().map(|a| format!("--{a}")).collect::<Vec<_>>().join(", ")
+                );
+            }
+        }
+        Ok(())
     }
 
     fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
-        match self.get(key) {
+        match self.get(key)? {
             Some(v) => v.parse().map_err(|_| anyhow!("--{key} must be an integer")),
             None => Ok(default),
         }
@@ -62,7 +132,7 @@ impl Args {
 }
 
 fn load_config(args: &Args) -> Result<HwConfig> {
-    match args.get("config") {
+    match args.get("config")? {
         Some(path) => HwConfig::load(path),
         None => Ok(HwConfig::paper_baseline()),
     }
@@ -99,21 +169,27 @@ pim-gpt — hybrid process-in-memory accelerator for autoregressive transformers
 USAGE:
   pim-gpt info     [--config FILE]
   pim-gpt simulate --model NAME [--tokens N] [--config FILE] [--json]
-  pim-gpt figures  [--fig 1|8|10|11|12|13|14|15|t1|t2|serving|all] [--tokens N]
+  pim-gpt figures  [--fig 1|8|10|11|12|13|14|15|t1|t2|serving|policies|all] [--tokens N]
   pim-gpt generate --model gpt-nano|gpt-mini [--artifacts DIR] [--prompt 1,2,3] [--n N]
   pim-gpt serve    --model NAME [--requests N] [--concurrency K] [--arrivals SPEC]
-                   [--seed N] [--artifacts DIR]
+                   [--policy SPEC] [--seed N] [--artifacts DIR]
 
 ARRIVALS (open-loop serving; latencies report p50/p95/p99 from arrival):
   batch (default) | fixed:<cycles> | poisson:<req/s> | trace:<file.json>
   trace schema: {\"requests\": [{\"arrival_cycle\": 0, \"n_tokens\": 16}, ...]}
   (functional-artifact serving is FIFO and ignores arrival stamps)
 
+POLICY (scheduling; sched.policy / sched.slo_ttft_cycles in --config):
+  fcfs (default) | srf | fair | slo[:<ttft-cycles>]
+  slo sheds requests whose predicted TTFT busts the budget; they come
+  back as first-class REJECTED responses, not errors
+
 MODELS: gpt2-small|medium|large|xl, gpt3-small|medium|large|xl (timing),
         gpt-nano, gpt-mini (functional artifacts in artifacts/)
 ";
 
 fn cmd_info(args: &Args) -> Result<()> {
+    args.expect_only("info", &["config"])?;
     let cfg = load_config(args)?;
     println!("pim-gpt {}", pim_gpt::VERSION);
     let t1 = report::table1_config(&cfg);
@@ -124,7 +200,8 @@ fn cmd_info(args: &Args) -> Result<()> {
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
-    let name = args.get("model").ok_or_else(|| anyhow!("--model required"))?;
+    args.expect_only("simulate", &["model", "tokens", "config", "json"])?;
+    let name = args.get("model")?.ok_or_else(|| anyhow!("--model required"))?;
     let model = by_name(name).ok_or_else(|| anyhow!("unknown model '{name}'"))?;
     let tokens = args.u64_or("tokens", 64)?;
     let cfg = load_config(args)?;
@@ -135,7 +212,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let energy = SystemEnergy::from_sim(&sim);
     let s = &sim.stats;
     let secs = s.seconds(cfg.gddr6.freq_ghz);
-    if args.get("json").is_some() {
+    if args.has("json") {
         use pim_gpt::util::json::Json;
         let j = Json::obj(vec![
             ("model", name.into()),
@@ -172,7 +249,8 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 }
 
 fn cmd_figures(args: &Args) -> Result<()> {
-    let which = args.get("fig").unwrap_or("all");
+    args.expect_only("figures", &["fig", "tokens"])?;
+    let which = args.get("fig")?.unwrap_or("all");
     let tokens = args.u64_or("tokens", 64)?;
     let mut reports = Vec::new();
     let all = which == "all";
@@ -209,6 +287,9 @@ fn cmd_figures(args: &Args) -> Result<()> {
     if all || which == "serving" {
         reports.push(report::fig_serving_tail_latency(6, 4, &[0.5, 1.0, 2.0], 7)?);
     }
+    if all || which == "policies" {
+        reports.push(report::fig_policy_comparison(6, 4, 1.5, 7)?);
+    }
     if reports.is_empty() {
         bail!("unknown figure '{which}'");
     }
@@ -225,9 +306,10 @@ fn parse_prompt(s: &str) -> Result<Vec<i32>> {
 }
 
 fn cmd_generate(args: &Args) -> Result<()> {
-    let name = args.get("model").unwrap_or("gpt-nano");
-    let dir = args.get("artifacts").unwrap_or("artifacts");
-    let prompt = parse_prompt(args.get("prompt").unwrap_or("1,2,3"))?;
+    args.expect_only("generate", &["model", "artifacts", "prompt", "n", "config"])?;
+    let name = args.get("model")?.unwrap_or("gpt-nano");
+    let dir = args.get("artifacts")?.unwrap_or("artifacts");
+    let prompt = parse_prompt(args.get("prompt")?.unwrap_or("1,2,3"))?;
     let n = args.u64_or("n", 16)? as usize;
     let cfg = load_config(args)?;
     let mut sys = PimGptSystem::with_artifact(name, Path::new(dir), &cfg)?;
@@ -245,20 +327,27 @@ fn cmd_generate(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let name = args.get("model").unwrap_or("gpt-nano");
+    args.expect_only(
+        "serve",
+        &["model", "requests", "concurrency", "arrivals", "seed", "policy", "artifacts", "config"],
+    )?;
+    let name = args.get("model")?.unwrap_or("gpt-nano");
     let mut cfg = load_config(args)?;
-    if let Some(k) = args.get("concurrency") {
+    if let Some(k) = args.get("concurrency")? {
         let k: usize = k.parse().map_err(|_| anyhow!("--concurrency must be an integer"))?;
         if k == 0 {
             bail!("--concurrency must be >= 1");
         }
         cfg.sched.max_streams = k;
     }
-    if let Some(spec) = args.get("arrivals") {
+    if let Some(spec) = args.get("arrivals")? {
         cfg.sched.arrival = ArrivalSpec::parse(spec)?;
     }
-    if let Some(seed) = args.get("seed") {
+    if let Some(seed) = args.get("seed")? {
         cfg.sched.seed = seed.parse().map_err(|_| anyhow!("--seed must be an integer"))?;
+    }
+    if let Some(policy) = args.get("policy")? {
+        cfg.sched.set_policy_str(policy)?;
     }
     // Build the whole request trace up front: arrivals are *simulated*
     // cycles, so the set is known before serving starts. The worker is
@@ -267,7 +356,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // seeds give identical percentiles.
     let requests: Vec<Request> = match cfg.sched.arrival.clone() {
         ArrivalSpec::Trace { path } => {
-            if args.get("requests").is_some() {
+            if args.has("requests") {
                 bail!("--requests conflicts with trace arrivals: the trace defines the requests");
             }
             arrivals::load_trace(&path)?
@@ -297,7 +386,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     };
     let n_requests = requests.len() as u64;
-    let dir = Path::new(args.get("artifacts").unwrap_or("artifacts"));
+    let dir = Path::new(args.get("artifacts")?.unwrap_or("artifacts"));
     let use_artifact = by_name(name).map(|m| m.max_seq <= 512).unwrap_or(false)
         && dir.join(format!("{name}.meta.json")).exists();
     let functional = use_artifact;
@@ -306,6 +395,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "pim-gpt serve: functional artifact serving is FIFO and ignores --arrivals \
              {} (no latency percentiles will be reported)",
             cfg.sched.arrival
+        );
+    }
+    if functional && cfg.sched.policy != pim_gpt::sim::PolicySpec::Fcfs {
+        eprintln!(
+            "pim-gpt serve: functional artifact serving is FIFO and ignores --policy {}",
+            cfg.sched.policy
         );
     }
     let name_owned = name.to_string();
@@ -332,8 +427,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let _ = ready_tx.send(());
     for _ in 0..n_requests {
         let r = server.recv()?;
-        match r.error {
-            None => println!(
+        match (&r.error, r.rejected) {
+            (None, true) => println!(
+                "req {:>3}: REJECTED by {} admission after {} queued",
+                r.id,
+                cfg.sched.policy,
+                fmt_time_s(r.sim_queue_seconds),
+            ),
+            (None, false) => println!(
                 "req {:>3}: {} tokens, sim {} (+{} queue), wall {}",
                 r.id,
                 r.tokens.len(),
@@ -341,7 +442,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 fmt_time_s(r.sim_queue_seconds),
                 fmt_time_s(r.wall_seconds),
             ),
-            Some(e) => println!("req {:>3}: ERROR {e}", r.id),
+            (Some(e), _) => println!("req {:>3}: ERROR {e}", r.id),
         }
     }
     let m = server.shutdown();
@@ -364,6 +465,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "kv slots {} (peak in use {}), admission-blocked pressure {} request-attempts",
         m.kv_slots, m.peak_slots_in_use, m.admission_blocked
     );
+    // Scheduling policy + per-policy reject count (SLO sheds requests
+    // whose predicted TTFT busts the budget; other policies never do).
+    if cfg.sched.policy == pim_gpt::sim::PolicySpec::Slo {
+        println!(
+            "policy {} (ttft budget {} cycles): rejected {} of {} requests",
+            cfg.sched.policy, cfg.sched.slo_ttft_cycles, m.rejected, m.requests
+        );
+    } else {
+        println!("policy {}: rejected {}", cfg.sched.policy, m.rejected);
+    }
     // Open-loop tail latency, measured from each request's arrival.
     if let Some(lat) = m.latency {
         let t = |cycles: u64| fmt_time_s(cycles as f64 / (cfg.gddr6.freq_ghz * 1e9));
@@ -374,4 +485,99 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!("  e2e       {} / {} / {}", t(lat.e2e.p50), t(lat.e2e.p95), t(lat.e2e.p99));
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(argv: &[&str]) -> Result<Args> {
+        let owned: Vec<String> = argv.iter().map(|s| s.to_string()).collect();
+        Args::parse(&owned)
+    }
+
+    #[test]
+    fn parses_pairs_switches_and_equals_form() {
+        let a = parse(&["--model", "gpt2-small", "--json", "--tokens=64"]).unwrap();
+        assert_eq!(a.get("model").unwrap(), Some("gpt2-small"));
+        assert_eq!(a.u64_or("tokens", 8).unwrap(), 64);
+        assert!(a.has("json"));
+        assert!(!a.has("absent"));
+        assert_eq!(a.get("absent").unwrap(), None);
+        // Trailing bare switch.
+        let a = parse(&["--seed", "7", "--json"]).unwrap();
+        assert_eq!(a.u64_or("seed", 0).unwrap(), 7);
+        assert!(a.has("json"));
+    }
+
+    /// Satellite: values that start with '--' bind via the '=' escape
+    /// hatch, and negative numbers work in both forms — neither is
+    /// swallowed as a bare boolean.
+    #[test]
+    fn awkward_values_bind_unambiguously() {
+        let a = parse(&["--prompt=--5,3", "--offset", "-5"]).unwrap();
+        assert_eq!(a.get("prompt").unwrap(), Some("--5,3"));
+        assert_eq!(a.get("offset").unwrap(), Some("-5"));
+        let a = parse(&["--offset=-5"]).unwrap();
+        assert_eq!(a.get("offset").unwrap(), Some("-5"));
+    }
+
+    /// Satellite: the old parser silently turned `--arrivals --seed 5`
+    /// into `arrivals=true` and ran the wrong experiment. Reading a
+    /// value out of a bare flag is now a loud, self-explanatory error.
+    #[test]
+    fn bare_flag_read_as_value_errors_clearly() {
+        let a = parse(&["--arrivals", "--seed", "5"]).unwrap();
+        assert_eq!(a.u64_or("seed", 0).unwrap(), 5, "the trailing pair still binds");
+        let err = a.get("arrivals").unwrap_err().to_string();
+        assert!(err.contains("--arrivals needs a value"), "{err}");
+        assert!(err.contains("--arrivals=<value>"), "names the escape hatch: {err}");
+        // u64_or goes through the same gate.
+        assert!(a.u64_or("arrivals", 1).is_err());
+        // And `has` still treats it as a present switch.
+        assert!(a.has("arrivals"));
+    }
+
+    #[test]
+    fn malformed_flags_rejected() {
+        for bad in [
+            &["stray"][..],
+            &["-x"][..],
+            &["--"][..],
+            &["--=v"][..],
+            &["--key="][..],
+            &["--model", "a", "--model", "b"][..],
+            &["--model=a", "--model", "b"][..],
+        ] {
+            assert!(parse(bad).is_err(), "accepted {bad:?}");
+        }
+        let err = parse(&["--model", "a", "--model", "b"]).unwrap_err().to_string();
+        assert!(err.contains("duplicate flag --model"), "{err}");
+    }
+
+    #[test]
+    fn unknown_command_and_bad_integers_error() {
+        assert!(run(&["frobnicate".to_string()]).is_err());
+        let a = parse(&["--tokens", "many"]).unwrap();
+        let err = a.u64_or("tokens", 1).unwrap_err().to_string();
+        assert!(err.contains("--tokens must be an integer"), "{err}");
+    }
+
+    /// A typo'd flag *name* is rejected by the command's allowlist
+    /// (validated before any work starts) instead of being stored,
+    /// never read, and silently running the default experiment.
+    #[test]
+    fn unknown_flags_rejected_per_command() {
+        let run_strs = |argv: &[&str]| {
+            let owned: Vec<String> = argv.iter().map(|s| s.to_string()).collect();
+            run(&owned).unwrap_err().to_string()
+        };
+        let err = run_strs(&["serve", "--polcy", "srf"]);
+        assert!(err.contains("unknown flag --polcy"), "{err}");
+        assert!(err.contains("--policy"), "names the accepted set: {err}");
+        let err = run_strs(&["info", "--model", "gpt2-small"]);
+        assert!(err.contains("unknown flag --model"), "{err}");
+        let err = run_strs(&["figures", "--tokn", "3"]);
+        assert!(err.contains("unknown flag --tokn"), "{err}");
+    }
 }

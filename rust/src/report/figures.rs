@@ -488,6 +488,96 @@ pub fn fig_serving_tail_latency(
     })
 }
 
+/// Scheduling-policy comparison (beyond the paper): p99 TTFT, makespan
+/// and shed requests across the pluggable policies (`fcfs`, `srf`,
+/// `fair`, `slo`) at a fixed Poisson load, over the paper models. The
+/// request set mixes short/medium/long lengths (`n_tokens` x {1, 2, 3}
+/// cycling by id) so the reordering policies have something to reorder;
+/// capacity is calibrated like the serving figure (batch-at-zero
+/// makespan of the same mix at the baseline K = 4, offered rate = load
+/// x n_requests / makespan). The SLO TTFT budget is four mean batch
+/// service shares (`4 * makespan / n_requests`) — tight enough to shed
+/// load past saturation, loose enough to admit wait-free requests.
+/// Fully deterministic for a given `seed`.
+pub fn fig_policy_comparison(
+    n_requests: usize,
+    n_tokens: u64,
+    load: f64,
+    seed: u64,
+) -> Result<FigureReport> {
+    anyhow::ensure!(n_requests >= 1, "need at least one request");
+    anyhow::ensure!(n_tokens >= 1, "need at least one token per request");
+    let base = HwConfig::paper_baseline();
+    let freq_hz = base.gddr6.freq_ghz * 1e9;
+    let fmt = |cycles: u64| fmt_time_s(cycles as f64 / freq_hz);
+    let lens: Vec<u64> = (0..n_requests).map(|i| n_tokens * (1 + (i % 3) as u64)).collect();
+    let mut t = Table::new(vec![
+        "model", "policy", "rejected", "ttft p50", "ttft p99", "e2e p99", "makespan",
+    ]);
+    let mut arr = Vec::new();
+    for m in &PAPER_MODELS {
+        // One Algorithm-3 placement per model, shared by every run.
+        let mapping = ModelMapping::build(m, &base)?;
+        let run = |cfg: &HwConfig, at: &[u64]| -> Result<(u64, Option<LatencyReport>, u64)> {
+            let mut ms = MultiSim::from_mapping(m, cfg, mapping.clone());
+            for (id, (&n, &a)) in lens.iter().zip(at.iter()).enumerate() {
+                ms.submit(StreamSpec { id: id as u64, n_tokens: n, arrival_cycle: a })?;
+            }
+            ms.run_all()?;
+            ms.finalize_stats();
+            Ok((ms.clock(), ms.stats.latency_report(), ms.stats.rejected))
+        };
+        let (makespan, _, _) = run(&base, &vec![0u64; n_requests])?;
+        let rate_per_s = load * n_requests as f64 * freq_hz / makespan as f64;
+        let at = arrivals::generate(
+            &ArrivalSpec::Poisson { rate_per_s },
+            n_requests,
+            base.gddr6.freq_ghz,
+            seed,
+        )?;
+        let budget = (makespan / n_requests as u64).saturating_mul(4).max(1);
+        let slo = format!("slo:{budget}");
+        for policy in ["fcfs", "srf", "fair", slo.as_str()] {
+            let mut cfg = base.clone();
+            cfg.sched.set_policy_str(policy)?;
+            let (mk, lat, rejected) = run(&cfg, &at)?;
+            let lat = lat.ok_or_else(|| {
+                anyhow!("{}/{policy}: every request rejected — budget {budget} too tight", m.name)
+            })?;
+            let label = cfg.sched.policy.to_string();
+            t.row(vec![
+                m.name.to_string(),
+                label.clone(),
+                rejected.to_string(),
+                fmt(lat.ttft.p50),
+                fmt(lat.ttft.p99),
+                fmt(lat.e2e.p99),
+                fmt(mk),
+            ]);
+            arr.push(Json::obj(vec![
+                ("model", m.name.into()),
+                ("policy", label.as_str().into()),
+                ("load", load.into()),
+                ("slo_ttft_budget_cycles", budget.into()),
+                ("rejected", rejected.into()),
+                ("ttft_p50_cycles", lat.ttft.p50.into()),
+                ("ttft_p99_cycles", lat.ttft.p99.into()),
+                ("e2e_p99_cycles", lat.e2e.p99.into()),
+                ("makespan_cycles", mk.into()),
+            ]));
+        }
+    }
+    Ok(FigureReport {
+        id: "policies",
+        title: format!(
+            "Serving: scheduling policies at Poisson load {load:.2} (K=4, {n_requests} reqs x \
+             {n_tokens}-token mix, seed {seed})"
+        ),
+        rendered: t.render(),
+        json: Json::Arr(arr),
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

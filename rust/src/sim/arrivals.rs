@@ -17,8 +17,10 @@
 //!   identical traces);
 //! * **trace:`<file>`** — a JSON file replayed through [`crate::util::json`].
 //!
-//! Trace-file schema (`n_tokens >= 1`; unknown keys are rejected so a
-//! typo cannot silently change an experiment):
+//! Trace-file schema (`n_tokens >= 1`; requests sorted by
+//! `arrival_cycle`; empty traces, out-of-order arrivals and unknown
+//! keys are rejected so a typo or corrupted file cannot silently change
+//! an experiment):
 //!
 //! ```json
 //! {"requests": [
@@ -148,13 +150,18 @@ pub struct TraceRequest {
 }
 
 /// Parse the trace-file schema (see the module docs). Rejects empty
-/// traces, zero-token requests and unknown keys.
+/// traces, zero-token requests, unknown keys and out-of-order
+/// `arrival_cycle` values (a trace is a recording of an arrival
+/// process, so it must be sorted by arrival; an unsorted file is far
+/// more likely a corrupted or hand-mangled trace than intent, and
+/// silently reordering it would change which request gets each id —
+/// and therefore every per-request stat downstream).
 pub fn parse_trace(json: &Json) -> Result<Vec<TraceRequest>> {
     let reqs = match json.get("requests").and_then(Json::as_arr) {
         Some(r) => r,
         None => bail!("trace must be an object with a \"requests\" array"),
     };
-    ensure!(!reqs.is_empty(), "trace has no requests");
+    ensure!(!reqs.is_empty(), "trace has no requests — an empty replay would serve nothing");
     let mut out = Vec::with_capacity(reqs.len());
     for (i, e) in reqs.iter().enumerate() {
         let obj = match e.as_obj() {
@@ -182,6 +189,15 @@ pub fn parse_trace(json: &Json) -> Result<Vec<TraceRequest>> {
         let arrival_cycle = int("arrival_cycle")?;
         let n_tokens = int("n_tokens")?;
         ensure!(n_tokens >= 1, "trace request {i}: n_tokens must be >= 1");
+        if let Some(prev) = out.last() {
+            ensure!(
+                arrival_cycle >= prev.arrival_cycle,
+                "trace request {i}: arrival_cycle {arrival_cycle} precedes request {}'s {} — \
+                 traces must be sorted by arrival",
+                i - 1,
+                prev.arrival_cycle
+            );
+        }
         out.push(TraceRequest { arrival_cycle, n_tokens });
     }
     Ok(out)
@@ -281,6 +297,33 @@ mod tests {
         assert_eq!(t.len(), 2);
         assert_eq!(t[0], TraceRequest { arrival_cycle: 0, n_tokens: 16 });
         assert_eq!(t[1], TraceRequest { arrival_cycle: 4096, n_tokens: 8 });
+    }
+
+    /// Satellite: equal arrivals are fine (a burst), strictly decreasing
+    /// ones are a corrupted trace and must fail loudly with the
+    /// offending indices — not silently produce nonsense queue stats.
+    #[test]
+    fn trace_schema_rejects_out_of_order_arrivals() {
+        let ok = Json::parse(
+            r#"{"requests": [{"arrival_cycle": 5, "n_tokens": 1},
+                             {"arrival_cycle": 5, "n_tokens": 2},
+                             {"arrival_cycle": 9, "n_tokens": 1}]}"#,
+        )
+        .unwrap();
+        assert_eq!(parse_trace(&ok).unwrap().len(), 3);
+        let bad = Json::parse(
+            r#"{"requests": [{"arrival_cycle": 100, "n_tokens": 1},
+                             {"arrival_cycle": 40, "n_tokens": 1}]}"#,
+        )
+        .unwrap();
+        let err = parse_trace(&bad).unwrap_err().to_string();
+        assert!(err.contains("sorted by arrival"), "{err}");
+        assert!(err.contains("request 1") && err.contains("40"), "{err}");
+        // The empty-trace rejection stays loud too.
+        let err = parse_trace(&Json::parse(r#"{"requests": []}"#).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("no requests"), "{err}");
     }
 
     #[test]

@@ -7,16 +7,20 @@
 //! `Resources::issue` path, so K = 1 interleaved scheduling reproduces
 //! the single-stream simulator exactly. Open-loop request arrivals
 //! (batch / fixed / Poisson / trace replay) come from [`arrivals`] and
-//! feed the tail-latency percentiles in [`stats`]. See `sim/README.md`.
+//! feed the tail-latency percentiles in [`stats`]; *which* request runs
+//! next — and whether it is admitted at all under a latency SLO — is
+//! the pluggable policy subsystem in [`policy`]. See `sim/README.md`.
 
 pub mod arrivals;
 pub mod engine;
+pub mod policy;
 pub mod resources;
 pub mod sched;
 pub mod stats;
 
 pub use arrivals::{ArrivalSpec, TraceRequest};
 pub use engine::{Simulator, StepResult};
+pub use policy::{AdmissionPolicy, PickPolicy, PolicySpec};
 pub use resources::Resources;
-pub use sched::{MultiSim, StreamResult, StreamSpec};
+pub use sched::{MultiSim, RejectedStream, StreamOutcome, StreamResult, StreamSpec};
 pub use stats::{LatClass, LatencyReport, Percentiles, SimStats, StreamStats};

@@ -1,0 +1,103 @@
+//! Admission policies: whether a picked request is admitted at all.
+
+use super::{AdmissionDecision, AdmissionPolicy};
+use crate::sim::sched::StreamSpec;
+
+/// Admit every request the moment a KV slot is free — the engine's
+/// historical behavior (pure capacity-based admission).
+pub struct AdmitAlways;
+
+impl AdmissionPolicy for AdmitAlways {
+    fn name(&self) -> &'static str {
+        "admit-always"
+    }
+
+    fn decide(
+        &mut self,
+        _spec: &StreamSpec,
+        _wait_cycles: u64,
+        _first_token_est_cycles: u64,
+    ) -> AdmissionDecision {
+        AdmissionDecision::Admit
+    }
+}
+
+/// SLO-aware admission: shed a request whose predicted TTFT — queue
+/// wait so far plus the engine's conservative uncontended first-token
+/// cost (derived from the compiled regime-0 program template, see
+/// `MultiSim::first_token_estimate`) — already exceeds the configured
+/// budget.
+///
+/// The predictor is monotone in waiting time, so there is no point
+/// deferring a busted request in the hope it improves: the reject
+/// happens the first time a slot would have been available for it.
+/// The first-token estimate is an *uncontended* (single active stream)
+/// upper bound; with several concurrent streams the realized TTFT of an
+/// admitted request can still exceed the budget through cross-stream
+/// resource contention — the SLO is exact at effective K = 1 and
+/// best-effort above it.
+pub struct SloAdmission {
+    /// TTFT budget in DRAM cycles (`sched.slo_ttft_cycles`,
+    /// `--policy slo:<cycles>`).
+    pub ttft_budget_cycles: u64,
+}
+
+impl AdmissionPolicy for SloAdmission {
+    fn name(&self) -> &'static str {
+        "slo"
+    }
+
+    fn needs_estimate(&self) -> bool {
+        true
+    }
+
+    fn decide(
+        &mut self,
+        _spec: &StreamSpec,
+        wait_cycles: u64,
+        first_token_est_cycles: u64,
+    ) -> AdmissionDecision {
+        let predicted = wait_cycles.saturating_add(first_token_est_cycles);
+        if predicted > self.ttft_budget_cycles {
+            AdmissionDecision::Reject {
+                predicted_ttft_cycles: predicted,
+                ttft_budget_cycles: self.ttft_budget_cycles,
+            }
+        } else {
+            AdmissionDecision::Admit
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> StreamSpec {
+        StreamSpec { id: 0, n_tokens: 4, arrival_cycle: 0 }
+    }
+
+    #[test]
+    fn admit_always_admits() {
+        let mut p = AdmitAlways;
+        assert!(!p.needs_estimate());
+        assert_eq!(p.decide(&spec(), u64::MAX, 0), AdmissionDecision::Admit);
+    }
+
+    #[test]
+    fn slo_rejects_exactly_past_the_budget() {
+        let mut p = SloAdmission { ttft_budget_cycles: 1_000 };
+        assert!(p.needs_estimate());
+        // On-budget (wait + est == budget) still admits.
+        assert_eq!(p.decide(&spec(), 400, 600), AdmissionDecision::Admit);
+        assert_eq!(
+            p.decide(&spec(), 401, 600),
+            AdmissionDecision::Reject { predicted_ttft_cycles: 1_001, ttft_budget_cycles: 1_000 }
+        );
+        // Saturating prediction: an absurd wait cannot wrap around.
+        assert_eq!(
+            p.decide(&spec(), u64::MAX, 600),
+            AdmissionDecision::Reject { predicted_ttft_cycles: u64::MAX, ttft_budget_cycles: 1_000 }
+        );
+    }
+}

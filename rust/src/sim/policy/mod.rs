@@ -1,0 +1,235 @@
+//! Pluggable scheduling policies for the multi-stream engine.
+//!
+//! `MultiSim` makes exactly two kinds of scheduling decisions, and this
+//! subsystem owns both:
+//!
+//! * **Picking** (`PickPolicy`) — *which* request runs next. The trait
+//!   covers the two pick points of the engine: which *queued* (arrived,
+//!   KV-blocked) request gets the next free KV slot
+//!   (`pick_admission`), and which *active* stream issues its next
+//!   instruction on the shared hardware (`pick_issue`). Implementations:
+//!   `Fcfs` (the engine's historical behavior, extracted verbatim),
+//!   `ShortestRemainingFirst` (fewest remaining tokens first) and
+//!   `FairShare` (deficit round-robin: every issue goes to the stream
+//!   that has received the least attributed service so far).
+//! * **Admission control** (`AdmissionPolicy`) — *whether* a picked
+//!   request runs at all. `AdmitAlways` reproduces the historical
+//!   behavior; `SloAdmission` sheds load by rejecting a request whose
+//!   predicted TTFT (queue wait so far + a conservative uncontended
+//!   first-token cost derived from the compiled regime-0 program
+//!   template) would exceed a configured budget. Rejected requests are
+//!   first-class `StreamOutcome::Rejected` results, not errors.
+//!
+//! **Determinism rules.** The engine is seed-deterministic and policies
+//! must keep it that way: a policy may hold internal state, but every
+//! decision must be a pure function of the inputs it is handed plus
+//! that state — no wall clock, no OS randomness, no hashing with
+//! nondeterministic iteration order. Every built-in policy breaks ties
+//! by explicit `(key, index)` ordering so equal keys can never produce
+//! run-to-run divergence.
+//!
+//! **Equivalence contract.** With `sched.policy = fcfs` (the default)
+//! the engine must stay cycle-identical to the pre-policy scheduler:
+//! `Fcfs::pick_admission` returns the queue head and `Fcfs::pick_issue`
+//! returns the earliest-dependency-ready stream (ties toward the
+//! earliest-admitted), which is exactly the inline logic this subsystem
+//! replaced. The pinned K=1 / batch-at-zero equivalence tests in
+//! `tests/integration_sched.rs` enforce it.
+
+mod admission;
+mod pick;
+
+pub use admission::{AdmitAlways, SloAdmission};
+pub use pick::{FairShare, Fcfs, ShortestRemainingFirst};
+
+use std::fmt;
+
+use super::sched::StreamSpec;
+use crate::config::SchedulerConfig;
+use anyhow::{bail, ensure, Result};
+
+/// Config-level policy selector (`sched.policy`, `--policy`).
+///
+/// `Slo` keeps FCFS picking and adds SLO admission control; its TTFT
+/// budget lives in `SchedulerConfig::slo_ttft_cycles`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PolicySpec {
+    /// First-come-first-served picking, admit always (the default — the
+    /// engine's historical behavior).
+    #[default]
+    Fcfs,
+    /// Shortest-remaining-first picking, admit always.
+    Srf,
+    /// Fair-share (deficit round-robin) picking, admit always.
+    Fair,
+    /// FCFS picking with SLO-aware admission control.
+    Slo,
+}
+
+impl PolicySpec {
+    /// Parse `fcfs | srf | fair | slo[:<ttft-cycles>]`. For
+    /// `slo:<cycles>` the second return value carries the explicit TTFT
+    /// budget override (in DRAM cycles); bare `slo` keeps the
+    /// configured `sched.slo_ttft_cycles`.
+    pub fn parse(s: &str) -> Result<(Self, Option<u64>)> {
+        match s {
+            "fcfs" => return Ok((Self::Fcfs, None)),
+            "srf" => return Ok((Self::Srf, None)),
+            "fair" => return Ok((Self::Fair, None)),
+            "slo" => return Ok((Self::Slo, None)),
+            _ => {}
+        }
+        if let Some(v) = s.strip_prefix("slo:") {
+            let Ok(cycles) = v.parse::<u64>() else {
+                bail!("slo:<ttft-cycles> needs an integer cycle budget, got '{v}'");
+            };
+            ensure!(cycles > 0, "slo TTFT budget must be >= 1 cycle");
+            return Ok((Self::Slo, Some(cycles)));
+        }
+        bail!("unknown policy '{s}' (fcfs | srf | fair | slo[:<ttft-cycles>])")
+    }
+}
+
+impl fmt::Display for PolicySpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::Fcfs => write!(f, "fcfs"),
+            Self::Srf => write!(f, "srf"),
+            Self::Fair => write!(f, "fair"),
+            Self::Slo => write!(f, "slo"),
+        }
+    }
+}
+
+/// One active stream as the issue pick sees it. The engine rebuilds the
+/// candidate list before every issue; indices into it are positions in
+/// the engine's admission-ordered active list.
+#[derive(Clone, Copy, Debug)]
+pub struct IssueCandidate {
+    /// Request id (diagnostics; not a tie-breaker — ids are
+    /// caller-chosen and need not be unique-ordered).
+    pub id: u64,
+    /// KV slot the stream occupies.
+    pub slot: usize,
+    /// Dependency-ready cycle of the stream's next instruction.
+    pub ready: u64,
+    /// Tokens the stream still has to produce (>= 1 while active).
+    pub remaining_tokens: u64,
+    /// Attributed service cycles the stream has received so far (the
+    /// fair-share deficit key).
+    pub served_cycles: u64,
+}
+
+/// Which queued/active stream gets the next free engine or KV slot.
+///
+/// Both methods are only called with non-empty inputs and must return
+/// an in-range index (the engine asserts it). See the module docs for
+/// the determinism rules implementations must follow.
+pub trait PickPolicy {
+    /// Short name for reports and metrics.
+    fn name(&self) -> &'static str;
+
+    /// Index into `queue` (arrived requests in arrival order) of the
+    /// request to admit into the next free KV slot.
+    fn pick_admission(&mut self, queue: &[StreamSpec]) -> usize;
+
+    /// Index into `candidates` (active streams in admission order) of
+    /// the stream whose next instruction issues now.
+    fn pick_issue(&mut self, candidates: &[IssueCandidate]) -> usize;
+}
+
+/// Outcome of an admission decision.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmissionDecision {
+    Admit,
+    /// Shed the request (a first-class `StreamOutcome::Rejected`, not
+    /// an error). Carries the prediction that triggered the rejection.
+    Reject { predicted_ttft_cycles: u64, ttft_budget_cycles: u64 },
+}
+
+/// Whether a picked request is admitted at all.
+///
+/// `decide` runs at the moment a free KV slot is available for the
+/// request: `wait_cycles` is the queue delay its admission stamp would
+/// record, and `first_token_est_cycles` is the engine's conservative
+/// uncontended first-token cost (only computed when `needs_estimate`
+/// returns true; 0 otherwise).
+pub trait AdmissionPolicy {
+    /// Short name for reports and metrics.
+    fn name(&self) -> &'static str;
+
+    /// Whether `decide` wants the first-token cost estimate (computing
+    /// it replays the regime-0 template once per engine, so policies
+    /// that ignore it should leave this false).
+    fn needs_estimate(&self) -> bool {
+        false
+    }
+
+    /// Admit or reject `spec` at its prospective admission point.
+    fn decide(
+        &mut self,
+        spec: &StreamSpec,
+        wait_cycles: u64,
+        first_token_est_cycles: u64,
+    ) -> AdmissionDecision;
+}
+
+/// Instantiate the pick + admission policy pair configured in `sched`.
+pub fn build(sched: &SchedulerConfig) -> (Box<dyn PickPolicy>, Box<dyn AdmissionPolicy>) {
+    let pick: Box<dyn PickPolicy> = match sched.policy {
+        PolicySpec::Fcfs | PolicySpec::Slo => Box::new(Fcfs),
+        PolicySpec::Srf => Box::new(ShortestRemainingFirst),
+        PolicySpec::Fair => Box::new(FairShare),
+    };
+    let admission: Box<dyn AdmissionPolicy> = match sched.policy {
+        PolicySpec::Slo => Box::new(SloAdmission { ttft_budget_cycles: sched.slo_ttft_cycles }),
+        _ => Box::new(AdmitAlways),
+    };
+    (pick, admission)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_named_policies() {
+        assert_eq!(PolicySpec::parse("fcfs").unwrap(), (PolicySpec::Fcfs, None));
+        assert_eq!(PolicySpec::parse("srf").unwrap(), (PolicySpec::Srf, None));
+        assert_eq!(PolicySpec::parse("fair").unwrap(), (PolicySpec::Fair, None));
+        assert_eq!(PolicySpec::parse("slo").unwrap(), (PolicySpec::Slo, None));
+        assert_eq!(PolicySpec::parse("slo:2000000").unwrap(), (PolicySpec::Slo, Some(2_000_000)));
+    }
+
+    #[test]
+    fn parse_rejects_malformed_policies() {
+        for bad in ["", "fifo", "FCFS", "srf:3", "slo:", "slo:0", "slo:-4", "slo:1.5", "sl0"] {
+            assert!(PolicySpec::parse(bad).is_err(), "accepted '{bad}'");
+        }
+    }
+
+    #[test]
+    fn display_roundtrips_bare_names() {
+        for s in ["fcfs", "srf", "fair", "slo"] {
+            let (p, _) = PolicySpec::parse(s).unwrap();
+            assert_eq!(p.to_string(), s);
+        }
+        assert_eq!(PolicySpec::default(), PolicySpec::Fcfs);
+    }
+
+    #[test]
+    fn build_matches_spec() {
+        let mut sched = SchedulerConfig::default();
+        let (pick, adm) = build(&sched);
+        assert_eq!((pick.name(), adm.name()), ("fcfs", "admit-always"));
+        sched.policy = PolicySpec::Srf;
+        assert_eq!(build(&sched).0.name(), "srf");
+        sched.policy = PolicySpec::Fair;
+        assert_eq!(build(&sched).0.name(), "fair");
+        sched.policy = PolicySpec::Slo;
+        let (pick, adm) = build(&sched);
+        // SLO is an admission policy on top of FCFS picking.
+        assert_eq!((pick.name(), adm.name()), ("fcfs", "slo"));
+        assert!(adm.needs_estimate());
+    }
+}

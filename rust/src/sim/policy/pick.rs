@@ -1,0 +1,139 @@
+//! Pick policies: which queued/active stream gets the next free
+//! engine or KV slot.
+//!
+//! All three implementations are stateless: their decisions are pure
+//! functions of the candidate lists, and ties always break by explicit
+//! `(key, index)` ordering — see the determinism rules in the module
+//! docs of `super`.
+
+use super::{IssueCandidate, PickPolicy};
+use crate::sim::sched::StreamSpec;
+
+/// First-come-first-served: admit in arrival order, issue the stream
+/// whose next instruction has the earliest dependency-ready time (ties
+/// toward the earliest-admitted stream). This is the engine's
+/// historical inline logic, extracted — with `fcfs` configured, runs
+/// stay cycle-identical to the pre-policy scheduler.
+pub struct Fcfs;
+
+impl PickPolicy for Fcfs {
+    fn name(&self) -> &'static str {
+        "fcfs"
+    }
+
+    fn pick_admission(&mut self, _queue: &[StreamSpec]) -> usize {
+        0
+    }
+
+    fn pick_issue(&mut self, candidates: &[IssueCandidate]) -> usize {
+        candidates
+            .iter()
+            .enumerate()
+            .min_by_key(|(i, c)| (c.ready, *i))
+            .map(|(i, _)| i)
+            .expect("pick_issue called with candidates")
+    }
+}
+
+/// Shortest-remaining-first: the classic mean-latency optimization.
+/// Admission prefers the queued request with the fewest total tokens;
+/// issue prefers the active stream with the fewest remaining tokens
+/// (ties by dependency-ready time, then admission order). Long requests
+/// can starve under sustained short-request load — that is the policy's
+/// documented trade-off, not a bug.
+pub struct ShortestRemainingFirst;
+
+impl PickPolicy for ShortestRemainingFirst {
+    fn name(&self) -> &'static str {
+        "srf"
+    }
+
+    fn pick_admission(&mut self, queue: &[StreamSpec]) -> usize {
+        queue
+            .iter()
+            .enumerate()
+            .min_by_key(|(i, s)| (s.n_tokens, *i))
+            .map(|(i, _)| i)
+            .expect("pick_admission called with a queue")
+    }
+
+    fn pick_issue(&mut self, candidates: &[IssueCandidate]) -> usize {
+        candidates
+            .iter()
+            .enumerate()
+            .min_by_key(|(i, c)| (c.remaining_tokens, c.ready, *i))
+            .map(|(i, _)| i)
+            .expect("pick_issue called with candidates")
+    }
+}
+
+/// Deficit round-robin over stream slots: every issue goes to the
+/// active stream that has received the least attributed service so far
+/// (its deficit versus the most-served stream is maximal), with ties by
+/// dependency-ready time then admission order. Admission stays FCFS —
+/// fairness is enforced at issue granularity, where the service is
+/// actually handed out. Under identical-length streams this bounds the
+/// spread of per-stream service cycles; under mixed loads it trades
+/// some makespan for that bound.
+pub struct FairShare;
+
+impl PickPolicy for FairShare {
+    fn name(&self) -> &'static str {
+        "fair"
+    }
+
+    fn pick_admission(&mut self, _queue: &[StreamSpec]) -> usize {
+        0
+    }
+
+    fn pick_issue(&mut self, candidates: &[IssueCandidate]) -> usize {
+        candidates
+            .iter()
+            .enumerate()
+            .min_by_key(|(i, c)| (c.served_cycles, c.ready, *i))
+            .map(|(i, _)| i)
+            .expect("pick_issue called with candidates")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(ready: u64, remaining: u64, served: u64) -> IssueCandidate {
+        IssueCandidate { id: 0, slot: 0, ready, remaining_tokens: remaining, served_cycles: served }
+    }
+
+    fn spec(id: u64, n_tokens: u64) -> StreamSpec {
+        StreamSpec { id, n_tokens, arrival_cycle: 0 }
+    }
+
+    #[test]
+    fn fcfs_picks_queue_head_and_earliest_ready() {
+        let mut p = Fcfs;
+        assert_eq!(p.pick_admission(&[spec(3, 9), spec(4, 1)]), 0);
+        // Earliest ready wins; ties break toward the lowest index.
+        assert_eq!(p.pick_issue(&[cand(50, 1, 0), cand(10, 9, 0), cand(10, 2, 0)]), 1);
+        assert_eq!(p.pick_issue(&[cand(7, 1, 0)]), 0);
+    }
+
+    #[test]
+    fn srf_prefers_fewest_tokens() {
+        let mut p = ShortestRemainingFirst;
+        assert_eq!(p.pick_admission(&[spec(0, 9), spec(1, 2), spec(2, 2)]), 1, "tie -> earliest");
+        // Remaining tokens dominate readiness...
+        assert_eq!(p.pick_issue(&[cand(0, 9, 0), cand(100, 2, 0)]), 1);
+        // ...and equal remaining falls back to the FCFS order.
+        assert_eq!(p.pick_issue(&[cand(50, 2, 0), cand(10, 2, 0)]), 1);
+    }
+
+    #[test]
+    fn fair_share_serves_the_most_deficient_stream() {
+        let mut p = FairShare;
+        assert_eq!(p.pick_admission(&[spec(0, 4), spec(1, 1)]), 0, "admission stays FCFS");
+        assert_eq!(p.pick_issue(&[cand(0, 1, 500), cand(90, 9, 20)]), 1);
+        // Equal service falls back to earliest-ready, then index.
+        assert_eq!(p.pick_issue(&[cand(30, 1, 100), cand(20, 1, 100)]), 1);
+        assert_eq!(p.pick_issue(&[cand(30, 1, 100), cand(30, 1, 100)]), 0);
+    }
+}

@@ -11,7 +11,8 @@
 //! lets the multi-stream scheduler (`sim::sched`) interleave programs
 //! without a global event queue.
 //!
-//! [`Resources::issue`] is the *only* path that executes an instruction;
+//! `Resources::issue` (crate-internal) is the *only* path that executes
+//! an instruction;
 //! the single-stream `Simulator` and the multi-stream `MultiSim` both go
 //! through it, which is what makes K=1 interleaved scheduling reproduce
 //! the single-stream simulator cycle-for-cycle (see

@@ -7,17 +7,25 @@
 //! request's ASIC op blocks its own critical path. Here each in-flight
 //! request keeps its own dependency-tracking cursor over its compiled
 //! program (served from the shared `ProgramCache`), and the scheduler
-//! issues greedily across streams: at every step it picks the stream
-//! whose next instruction has the earliest dependency-ready time (ties
-//! break by admission order, keeping runs fully deterministic) and
-//! issues it through the same `Resources::issue` path the single-stream
-//! simulator uses. Resource contention needs no global event queue —
-//! every channel bus, bank and the ASIC engine carries its own
-//! `busy_until` and serializes whatever lands on it — so one request's
-//! ASIC softmax naturally overlaps another's bank-level VMM.
+//! repeatedly issues one stream's next instruction through the same
+//! `Resources::issue` path the single-stream simulator uses. Resource
+//! contention needs no global event queue — every channel bus, bank and
+//! the ASIC engine carries its own `busy_until` and serializes whatever
+//! lands on it — so one request's ASIC softmax naturally overlaps
+//! another's bank-level VMM.
 //!
-//! With `max_streams = 1` the scheduler degenerates to exactly the
-//! in-order single-stream pass and reproduces `Simulator` cycle counts
+//! **Scheduling policies** (`super::policy`): *which* stream runs is a
+//! pluggable decision. A `PickPolicy` picks both the queued request that
+//! gets the next free KV slot and the active stream that issues next
+//! (`fcfs` — the historical greedy earliest-dependency-ready rule,
+//! extracted; `srf` — shortest-remaining-first; `fair` — deficit
+//! round-robin over stream slots), and an `AdmissionPolicy` decides
+//! *whether* a picked request is admitted at all (`AdmitAlways`;
+//! `SloAdmission`, which sheds requests whose predicted TTFT busts a
+//! budget). Rejected requests retire as first-class
+//! [`StreamOutcome::Rejected`] results. With the default `fcfs` policy
+//! the engine is cycle-identical to the pre-policy scheduler, and with
+//! `max_streams = 1` it reproduces the single-stream `Simulator`
 //! token-for-token (`tests/integration_sched.rs`).
 //!
 //! **Open-loop arrivals**: every request carries an explicit
@@ -42,13 +50,14 @@
 //! `queue_cycles` measures real KV-capacity queueing from the
 //! request's own arrival, never from the global clock high-water mark
 //! (which can sit far ahead of a mid-run arrival and would corrupt
-//! every queue/TTFT percentile). Blocked requests and peak slot
-//! occupancy are counted in `SimStats` (`admission_blocked`,
-//! `peak_slots_in_use`).
+//! every queue/TTFT percentile). Blocked requests, peak slot occupancy
+//! and policy rejections are counted in `SimStats`
+//! (`admission_blocked`, `peak_slots_in_use`, `rejected`).
 
 use std::collections::VecDeque;
 use std::rc::Rc;
 
+use super::policy::{self, AdmissionDecision, AdmissionPolicy, IssueCandidate, PickPolicy};
 use super::resources::{empty_plan, IssueCtx, Resources};
 use super::stats::{SimStats, StreamStats};
 use crate::compiler::{ProgramCache, ProgramTemplate};
@@ -124,6 +133,69 @@ impl StreamResult {
     }
 }
 
+/// Record of a request shed by the admission policy — a first-class
+/// result (the request was *served* with a rejection), not an error.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RejectedStream {
+    pub id: u64,
+    pub arrival_cycle: u64,
+    /// Cycle the rejection was decided: the admission stamp the request
+    /// *would* have received (`max(arrival, slot free)`).
+    pub decided_cycle: u64,
+    pub n_tokens: u64,
+    /// The predicted TTFT that busted the budget (queue wait so far +
+    /// conservative uncontended first-token cost).
+    pub predicted_ttft_cycles: u64,
+    /// The budget it was judged against.
+    pub ttft_budget_cycles: u64,
+}
+
+impl RejectedStream {
+    /// Cycles the request waited before the rejection was decided.
+    pub fn waited_cycles(&self) -> u64 {
+        self.decided_cycle - self.arrival_cycle
+    }
+}
+
+/// Terminal outcome of one submitted request: completed with per-token
+/// timings, or shed by the admission policy.
+#[derive(Clone, Debug)]
+pub enum StreamOutcome {
+    Completed(StreamResult),
+    Rejected(RejectedStream),
+}
+
+impl StreamOutcome {
+    pub fn id(&self) -> u64 {
+        match self {
+            Self::Completed(r) => r.id,
+            Self::Rejected(r) => r.id,
+        }
+    }
+
+    /// The completion record, if the request ran to completion.
+    pub fn into_completed(self) -> Option<StreamResult> {
+        match self {
+            Self::Completed(r) => Some(r),
+            Self::Rejected(_) => None,
+        }
+    }
+
+    pub fn as_completed(&self) -> Option<&StreamResult> {
+        match self {
+            Self::Completed(r) => Some(r),
+            Self::Rejected(_) => None,
+        }
+    }
+
+    pub fn as_rejected(&self) -> Option<&RejectedStream> {
+        match self {
+            Self::Completed(_) => None,
+            Self::Rejected(r) => Some(r),
+        }
+    }
+}
+
 /// An in-flight stream: program cursor + per-node timing state.
 struct Stream {
     id: u64,
@@ -162,7 +234,9 @@ pub struct MultiSim {
     /// submit order). In-order submissions append in O(1); release pops
     /// the front.
     pending: VecDeque<StreamSpec>,
-    /// Arrived requests awaiting a free KV slot (FCFS by arrival).
+    /// Arrived requests awaiting a free KV slot, in arrival order. The
+    /// pick policy chooses which entry the next free slot goes to
+    /// (FCFS = the front).
     queue: VecDeque<StreamSpec>,
     clock: u64,
     /// Event-time high-water mark: the latest point simulated time has
@@ -170,6 +244,18 @@ pub struct MultiSim {
     /// to the next arrival). Gates the pending -> queue release.
     now: u64,
     pub stats: SimStats,
+    /// Which queued/active stream gets the next free engine or KV slot.
+    pick: Box<dyn PickPolicy>,
+    /// Whether a picked request is admitted at all.
+    admission: Box<dyn AdmissionPolicy>,
+    /// Rejections decided but not yet returned from `step` (admission
+    /// can shed several requests in one pass; outcomes drain one per
+    /// step so every request surfaces individually).
+    rejections: VecDeque<RejectedStream>,
+    /// Reusable issue-candidate scratch (hot path: rebuilt per issue).
+    cand: Vec<IssueCandidate>,
+    /// Cached conservative first-token cost (SLO admission predictor).
+    ttft_est: Option<u64>,
     /// Free KV slot ids (admission pops the earliest-free one).
     free_slots: Vec<usize>,
     /// Cycle each slot was last vacated (0 for never-used slots).
@@ -187,11 +273,13 @@ impl MultiSim {
 
     /// Build from an existing mapping (avoids re-running the Algorithm-3
     /// placement when the caller already holds one, e.g. the server's
-    /// `PimGptSystem`).
+    /// `PimGptSystem`). The pick/admission policies are instantiated
+    /// from `cfg.sched.policy`.
     pub fn from_mapping(model: &GptModel, cfg: &HwConfig, mapping: ModelMapping) -> Self {
         // The mapping is the source of truth for how many disjoint KV
         // contexts exist; the config can only lower it further.
         let n_slots = mapping.kv.n_slots.min(cfg.sched.max_streams.max(1)).max(1);
+        let (pick, admission) = policy::build(&cfg.sched);
         Self {
             cfg: cfg.clone(),
             model: model.clone(),
@@ -206,6 +294,11 @@ impl MultiSim {
             clock: 0,
             now: 0,
             stats: SimStats::default(),
+            pick,
+            admission,
+            rejections: VecDeque::new(),
+            cand: Vec::new(),
+            ttft_est: None,
             free_slots: (0..n_slots).collect(),
             slot_free_at: vec![0; n_slots],
             n_slots,
@@ -241,6 +334,14 @@ impl MultiSim {
     /// (KV-blocked) plus not-yet-arrived (pending).
     pub fn queued_streams(&self) -> usize {
         self.queue.len() + self.pending.len()
+    }
+
+    /// Rejections already decided but not yet returned by [`MultiSim::step`]
+    /// (admission can shed several requests in one pass; outcomes drain
+    /// one per step). A serving loop must keep stepping while this is
+    /// non-zero — these requests still owe their caller a response.
+    pub fn undelivered_rejections(&self) -> usize {
+        self.rejections.len()
     }
 
     /// Register a request. Submission is host bookkeeping: nothing is
@@ -284,14 +385,61 @@ impl MultiSim {
         self.pending.front().map(|p| p.arrival_cycle)
     }
 
+    /// Conservative upper bound on the *uncontended* cost of a stream's
+    /// first decode step, for the SLO admission predictor. The regime-0
+    /// compiled template is replayed once on scratch `Resources` (live
+    /// hardware state untouched) to get the isolated first-token
+    /// critical path, then padded with the worst-case costs a warm
+    /// start can add over a cold one: refresh-phase misalignment (one
+    /// tRFC per tREFI window the step can straddle) and stale bank
+    /// state (write recovery + precharge + activate + row residency).
+    /// Exact per-regime cycle cost, not a heuristic fit — and cached,
+    /// so the replay happens at most once per engine.
+    fn first_token_estimate(&mut self) -> Result<u64> {
+        if let Some(est) = self.ttft_est {
+            return Ok(est);
+        }
+        let tpl = self.cache.get(&self.model, &self.cfg, 0)?;
+        let mut res = Resources::new(&self.cfg);
+        let mut plan = empty_plan(&self.cfg);
+        let mut finish: Vec<u64> = Vec::with_capacity(tpl.len());
+        let mut first_ready: Vec<u64> = Vec::with_capacity(tpl.len());
+        let ctx = IssueCtx {
+            cfg: &self.cfg,
+            t: &self.t,
+            model: &self.model,
+            mapping: &self.mapping,
+        };
+        let mut isolated = 0u64;
+        for i in 0..tpl.len() {
+            let instr = tpl.instr_at(i, 1, 0);
+            let out =
+                res.issue(&ctx, &mut plan, &instr, tpl.deps_of(i), 0, &finish, &first_ready, 0, 1);
+            first_ready.push(out.first_ready);
+            finish.push(out.finish);
+            isolated = isolated.max(out.finish);
+        }
+        // Worst case, every refresh window the padded step can touch
+        // (including the catch-up at a warm start) lands on the critical
+        // path while none did in the isolated replay.
+        let t = &self.t;
+        let refresh_pad = (isolated / t.trefi + 4) * t.trfc;
+        let est = isolated + refresh_pad + t.twr + t.trp + t.trcd + t.tras;
+        self.ttft_est = Some(est);
+        Ok(est)
+    }
+
     /// Admit released requests while free KV slots exist. Admission is a
-    /// *capacity* decision: a request needs a disjoint reserved context,
-    /// and is stamped admitted at `max(arrival cycle, slot free cycle)`
-    /// — the freed slot's actual free time, not the global clock (which
-    /// can lie far past the retiring stream's last cycle and would
-    /// inflate `queue_cycles`). With `count_blocked`, requests left
-    /// waiting are added to `SimStats::admission_blocked` (unit:
-    /// blocked *requests* per attempt — see the field docs).
+    /// *capacity* decision gated by a *policy* decision: the pick policy
+    /// chooses which queued request gets the earliest-free slot, the
+    /// request is stamped admitted at `max(arrival cycle, slot free
+    /// cycle)` — the freed slot's actual free time, not the global clock
+    /// (which can lie far past the retiring stream's last cycle and
+    /// would inflate `queue_cycles`) — and the admission policy then
+    /// admits it or sheds it as a `RejectedStream` (buffered; `step`
+    /// returns rejections one at a time). With `count_blocked`,
+    /// requests left waiting are added to `SimStats::admission_blocked`
+    /// (unit: blocked *requests* per attempt — see the field docs).
     fn admit(&mut self, count_blocked: bool) -> Result<()> {
         while !self.queue.is_empty() && !self.free_slots.is_empty() {
             // Earliest-free slot first (ties -> lowest id): deterministic
@@ -303,29 +451,55 @@ impl MultiSim {
                 .min_by_key(|&(_, &s)| (self.slot_free_at[s], s))
                 .map(|(i, _)| i)
                 .expect("free_slots checked non-empty");
-            let tpl = self.cache.get(&self.model, &self.cfg, 0)?;
-            let slot = self.free_slots.swap_remove(i);
-            let spec = self.queue.pop_front().expect("queue checked non-empty");
+            let slot = self.free_slots[i];
+            let qi = self.pick.pick_admission(self.queue.make_contiguous());
+            assert!(
+                qi < self.queue.len(),
+                "pick policy '{}' returned queue index {qi} of {}",
+                self.pick.name(),
+                self.queue.len()
+            );
+            let spec = self.queue.remove(qi).expect("index checked in range");
             let admitted = spec.arrival_cycle.max(self.slot_free_at[slot]);
-            self.active.push(Stream {
-                id: spec.id,
-                tpl,
-                slot,
-                pos: 0,
-                end_pos: spec.n_tokens,
-                next: 0,
-                finish: Vec::new(),
-                first_ready: Vec::new(),
-                step_start: admitted,
-                step_finish: admitted,
-                arrival: spec.arrival_cycle,
-                admitted,
-                token_finishes: Vec::new(),
-                instructions: 0,
-                attributed: 0,
-            });
-            let in_use = (self.n_slots - self.free_slots.len()) as u64;
-            self.stats.peak_slots_in_use = self.stats.peak_slots_in_use.max(in_use);
+            let wait = admitted - spec.arrival_cycle;
+            let est =
+                if self.admission.needs_estimate() { self.first_token_estimate()? } else { 0 };
+            match self.admission.decide(&spec, wait, est) {
+                AdmissionDecision::Admit => {
+                    let tpl = self.cache.get(&self.model, &self.cfg, 0)?;
+                    self.free_slots.swap_remove(i);
+                    self.active.push(Stream {
+                        id: spec.id,
+                        tpl,
+                        slot,
+                        pos: 0,
+                        end_pos: spec.n_tokens,
+                        next: 0,
+                        finish: Vec::new(),
+                        first_ready: Vec::new(),
+                        step_start: admitted,
+                        step_finish: admitted,
+                        arrival: spec.arrival_cycle,
+                        admitted,
+                        token_finishes: Vec::new(),
+                        instructions: 0,
+                        attributed: 0,
+                    });
+                    let in_use = (self.n_slots - self.free_slots.len()) as u64;
+                    self.stats.peak_slots_in_use = self.stats.peak_slots_in_use.max(in_use);
+                }
+                AdmissionDecision::Reject { predicted_ttft_cycles, ttft_budget_cycles } => {
+                    self.stats.rejected += 1;
+                    self.rejections.push_back(RejectedStream {
+                        id: spec.id,
+                        arrival_cycle: spec.arrival_cycle,
+                        decided_cycle: admitted,
+                        n_tokens: spec.n_tokens,
+                        predicted_ttft_cycles,
+                        ttft_budget_cycles,
+                    });
+                }
+            }
         }
         if count_blocked && !self.queue.is_empty() {
             // Arrived requests stuck behind fully-occupied KV slots.
@@ -334,41 +508,68 @@ impl MultiSim {
         Ok(())
     }
 
-    /// Advance the simulation until the next stream completes; returns
-    /// its result, or `None` when nothing is in flight, queued or
+    /// Pop one buffered rejection, if any.
+    fn take_rejection(&mut self) -> Option<StreamOutcome> {
+        self.rejections.pop_front().map(StreamOutcome::Rejected)
+    }
+
+    /// Advance the simulation until the next request reaches a terminal
+    /// outcome — completion or an admission-policy rejection — and
+    /// return it, or `None` when nothing is in flight, queued or
     /// pending. An idle engine warps time forward to the next pending
     /// arrival instead of spinning.
-    pub fn step(&mut self) -> Result<Option<StreamResult>> {
+    pub fn step(&mut self) -> Result<Option<StreamOutcome>> {
+        if let Some(r) = self.take_rejection() {
+            return Ok(Some(r));
+        }
         self.release_arrivals();
         self.admit(true)?;
-        if self.active.is_empty() {
+        if let Some(r) = self.take_rejection() {
+            return Ok(Some(r));
+        }
+        while self.active.is_empty() {
             // Nothing running and nothing arrived (an arrived request
-            // would have been admitted — all slots are free). Warp to
-            // the next arrival or report the drain complete.
+            // would have been admitted or rejected — all slots are
+            // free). Warp to the next arrival or report the drain
+            // complete. The loop re-warps when an SLO policy sheds
+            // every request a warp released.
             let Some(arrival) = self.next_arrival() else {
                 return Ok(None);
             };
             self.now = self.now.max(arrival);
             self.release_arrivals();
             self.admit(false)?;
-            debug_assert!(!self.active.is_empty(), "warped to an arrival but admitted nothing");
+            if let Some(r) = self.take_rejection() {
+                return Ok(Some(r));
+            }
         }
         loop {
-            // Greedy pick: the stream whose next instruction has the
-            // earliest dependency-ready time (FCFS per resource); ties
-            // break toward the earliest-admitted stream.
-            let mut si = 0;
-            let mut best_ready = u64::MAX;
-            for (i, s) in self.active.iter().enumerate() {
+            // Ask the pick policy which active stream issues next. The
+            // candidate list is rebuilt per issue (admission-ordered,
+            // same order as `active`); the FCFS pick reproduces the
+            // historical greedy earliest-dependency-ready rule exactly.
+            self.cand.clear();
+            for s in &self.active {
                 let mut ready = s.step_start;
                 for &d in s.tpl.deps_of(s.next) {
                     ready = ready.max(s.finish[d]);
                 }
-                if ready < best_ready {
-                    best_ready = ready;
-                    si = i;
-                }
+                self.cand.push(IssueCandidate {
+                    id: s.id,
+                    slot: s.slot,
+                    ready,
+                    remaining_tokens: s.end_pos - s.pos,
+                    served_cycles: s.attributed,
+                });
             }
+            let si = self.pick.pick_issue(&self.cand);
+            assert!(
+                si < self.active.len(),
+                "pick policy '{}' returned stream index {si} of {}",
+                self.pick.name(),
+                self.active.len()
+            );
+            let best_ready = self.cand[si].ready;
 
             // Event-driven release: a pending request whose arrival
             // precedes the next issue gets admitted first when a KV
@@ -381,6 +582,9 @@ impl MultiSim {
                         self.now = self.now.max(arrival);
                         self.release_arrivals();
                         self.admit(false)?;
+                        if let Some(r) = self.take_rejection() {
+                            return Ok(Some(r));
+                        }
                         continue;
                     }
                 }
@@ -474,13 +678,14 @@ impl MultiSim {
             self.stats.streams.push(row);
             self.release_arrivals();
             self.admit(true)?;
-            return Ok(Some(result));
+            return Ok(Some(StreamOutcome::Completed(result)));
         }
     }
 
-    /// Drain everything: run until all submitted streams complete.
-    /// Results are in completion order.
-    pub fn run_all(&mut self) -> Result<Vec<StreamResult>> {
+    /// Drain everything: run until every submitted stream reaches a
+    /// terminal outcome. Outcomes are in decision order (completions at
+    /// their finish, rejections at their admission attempt).
+    pub fn run_all(&mut self) -> Result<Vec<StreamOutcome>> {
         let mut out = Vec::new();
         while let Some(r) = self.step()? {
             out.push(r);
@@ -515,6 +720,18 @@ mod tests {
         MultiSim::new(&m, &cfg).unwrap()
     }
 
+    fn msim_policy(model: &str, k: usize, policy: &str) -> MultiSim {
+        let m = by_name(model).unwrap();
+        let mut cfg = HwConfig::paper_baseline().with_max_streams(k);
+        cfg.sched.set_policy_str(policy).unwrap();
+        MultiSim::new(&m, &cfg).unwrap()
+    }
+
+    /// Keep the completions of a drained run, in completion order.
+    fn completed(outcomes: Vec<StreamOutcome>) -> Vec<StreamResult> {
+        outcomes.into_iter().filter_map(StreamOutcome::into_completed).collect()
+    }
+
     #[test]
     fn empty_engine_steps_to_none() {
         let mut ms = msim("gpt-nano", 2);
@@ -525,7 +742,7 @@ mod tests {
     fn single_request_completes() {
         let mut ms = msim("gpt-nano", 2);
         ms.submit(StreamSpec::new(7, 5)).unwrap();
-        let r = ms.step().unwrap().unwrap();
+        let r = ms.step().unwrap().unwrap().into_completed().expect("completed");
         assert_eq!(r.id, 7);
         assert_eq!(r.tokens, 5);
         assert_eq!(r.token_finishes.len(), 5);
@@ -550,7 +767,7 @@ mod tests {
             ms.submit(StreamSpec::new(id, 4)).unwrap();
         }
         assert_eq!(ms.queued_streams(), 4);
-        let results = ms.run_all().unwrap();
+        let results = completed(ms.run_all().unwrap());
         assert_eq!(results.len(), 4);
         // First two admitted immediately; the last two waited.
         let by_id = |id: u64| results.iter().find(|r| r.id == id).unwrap();
@@ -589,7 +806,7 @@ mod tests {
             for id in 0..5 {
                 ms.submit(StreamSpec::new(id, 3 + id)).unwrap();
             }
-            let results = ms.run_all().unwrap();
+            let results = completed(ms.run_all().unwrap());
             (ms.clock(), results.iter().map(|r| r.finish_cycle).collect::<Vec<_>>())
         };
         assert_eq!(run(), run());
@@ -623,11 +840,12 @@ mod tests {
         for id in 0..5 {
             ms.submit(StreamSpec::new(id, 3)).unwrap();
         }
-        let results = ms.run_all().unwrap();
+        let results = completed(ms.run_all().unwrap());
         ms.finalize_stats();
         assert_eq!(ms.free_kv_slots(), 2, "all slots recycled after drain");
         assert_eq!(ms.stats.kv_slots, 2);
         assert_eq!(ms.stats.peak_slots_in_use, 2);
+        assert_eq!(ms.stats.rejected, 0, "admit-always never sheds");
         assert!(ms.stats.admission_blocked > 0, "5 requests on 2 slots must block");
         // Every stream ran in a valid slot, both slots were used, and 5
         // streams over 2 slots implies at least one id was recycled.
@@ -646,7 +864,7 @@ mod tests {
         ms.submit(StreamSpec::new(0, 12)).unwrap(); // long
         ms.submit(StreamSpec::new(1, 2)).unwrap(); // short
         ms.submit(StreamSpec::new(2, 2)).unwrap(); // backfill
-        let results = ms.run_all().unwrap();
+        let results = completed(ms.run_all().unwrap());
         let by_id = |id: u64| results.iter().find(|r| r.id == id).unwrap();
         let short = by_id(1);
         let backfill = by_id(2);
@@ -672,7 +890,7 @@ mod tests {
         for id in 0..4 {
             ms.submit(StreamSpec::new(id, 2)).unwrap();
         }
-        let results = ms.run_all().unwrap();
+        let results = completed(ms.run_all().unwrap());
         ms.finalize_stats();
         assert_eq!(results.len(), 4);
         assert_eq!(ms.stats.peak_slots_in_use, ms.kv_slots() as u64);
@@ -690,12 +908,12 @@ mod tests {
     fn mid_run_submit_measures_queue_from_arrival_not_clock() {
         let mut ms = msim("gpt-nano", 1);
         ms.submit(StreamSpec::new(0, 12)).unwrap();
-        let r0 = ms.step().unwrap().unwrap();
+        let r0 = ms.step().unwrap().unwrap().into_completed().expect("completed");
         let arrival = 1_000u64;
         assert!(arrival < r0.finish_cycle, "12 gpt-nano tokens outlast cycle {arrival}");
         assert!(ms.clock() >= r0.finish_cycle);
         ms.submit(StreamSpec { id: 1, n_tokens: 2, arrival_cycle: arrival }).unwrap();
-        let r1 = ms.step().unwrap().unwrap();
+        let r1 = ms.step().unwrap().unwrap().into_completed().expect("completed");
         assert_eq!(r1.arrival_cycle, arrival);
         // The only KV slot frees at r0's finish: queueing spans arrival
         // -> that cycle. The old stamping reported queue_cycles == 0.
@@ -713,7 +931,7 @@ mod tests {
         let mut ms = msim("gpt-nano", 2);
         ms.submit(StreamSpec { id: 0, n_tokens: 2, arrival_cycle: 50_000 }).unwrap();
         assert_eq!(ms.queued_streams(), 1);
-        let r = ms.step().unwrap().unwrap();
+        let r = ms.step().unwrap().unwrap().into_completed().expect("completed");
         assert_eq!(r.arrival_cycle, 50_000);
         assert_eq!(r.admitted_cycle, 50_000);
         assert_eq!(r.queue_cycles(), 0);
@@ -727,7 +945,7 @@ mod tests {
         let mut ms = msim("gpt-nano", 1);
         ms.submit(StreamSpec { id: 0, n_tokens: 2, arrival_cycle: 2_000 }).unwrap();
         ms.submit(StreamSpec { id: 1, n_tokens: 8, arrival_cycle: 0 }).unwrap();
-        let results = ms.run_all().unwrap();
+        let results = completed(ms.run_all().unwrap());
         assert_eq!(results[0].id, 1, "the earlier arrival runs first on K=1");
         assert_eq!(results[1].id, 0);
         assert!(results[1].admitted_cycle >= 2_000);
@@ -741,7 +959,7 @@ mod tests {
         let mut ms = msim("gpt-nano", 2);
         ms.submit(StreamSpec::new(0, 12)).unwrap();
         ms.submit(StreamSpec { id: 1, n_tokens: 2, arrival_cycle: 500 }).unwrap();
-        let results = ms.run_all().unwrap();
+        let results = completed(ms.run_all().unwrap());
         let r1 = results.iter().find(|r| r.id == 1).unwrap();
         assert_eq!(r1.arrival_cycle, 500);
         assert_eq!(r1.admitted_cycle, 500, "free slot -> admitted at arrival");
@@ -773,6 +991,146 @@ mod tests {
         assert_eq!(run(1), 0, "a lone request never blocks");
     }
 
+    /// Tentpole: SRF admission drains a heterogeneous backlog shortest
+    /// first. On one slot, four queued requests of lengths {8, 2, 4, 2}
+    /// complete in deterministic shortest-first order (ties by queue
+    /// position), while FCFS keeps arrival order.
+    #[test]
+    fn srf_admission_picks_shortest_queued_request() {
+        let lens = [8u64, 2, 4, 2];
+        let order = |policy: &str| {
+            let mut ms = msim_policy("gpt-nano", 1, policy);
+            for (id, &n) in lens.iter().enumerate() {
+                ms.submit(StreamSpec::new(id as u64, n)).unwrap();
+            }
+            let results = completed(ms.run_all().unwrap());
+            results.iter().map(|r| r.id).collect::<Vec<_>>()
+        };
+        assert_eq!(order("fcfs"), vec![0, 1, 2, 3]);
+        assert_eq!(order("srf"), vec![1, 3, 2, 0]);
+    }
+
+    /// Tentpole: fair-share keeps identical concurrent streams in
+    /// lockstep — the spread of per-stream service cycles stays a small
+    /// fraction of the service itself.
+    #[test]
+    fn fair_share_bounds_service_spread_on_identical_streams() {
+        let mut ms = msim_policy("gpt-nano", 4, "fair");
+        for id in 0..4 {
+            ms.submit(StreamSpec::new(id, 6)).unwrap();
+        }
+        let results = completed(ms.run_all().unwrap());
+        assert_eq!(results.len(), 4);
+        let services: Vec<u64> = results.iter().map(|r| r.service_cycles()).collect();
+        let max = *services.iter().max().unwrap();
+        let min = *services.iter().min().unwrap();
+        assert!(min > 0);
+        assert!(
+            max - min <= max / 2,
+            "fair-share spread {} exceeds half the max service {max}",
+            max - min
+        );
+    }
+
+    /// Tentpole: SLO admission sheds queued requests as first-class
+    /// rejected outcomes (never errors) with the prediction that
+    /// triggered them, while the uncongested request completes.
+    #[test]
+    fn slo_rejections_are_first_class_outcomes() {
+        // Probe the isolated first-token cost to place the budget:
+        // generous enough to admit a wait-free request, far below the
+        // wait behind a 24-token stream on the only slot.
+        let mut probe = msim("gpt-nano", 1);
+        probe.submit(StreamSpec::new(0, 2)).unwrap();
+        let ttft0 = completed(probe.run_all().unwrap())[0].token_finishes[0];
+        let budget = 4 * ttft0 + 3_000;
+
+        let mut ms = msim_policy("gpt-nano", 1, &format!("slo:{budget}"));
+        ms.submit(StreamSpec::new(0, 24)).unwrap();
+        for id in 1..5 {
+            ms.submit(StreamSpec::new(id, 2)).unwrap();
+        }
+        let outcomes = ms.run_all().unwrap();
+        ms.finalize_stats();
+        assert_eq!(outcomes.len(), 5, "every request reaches a terminal outcome");
+        let completed_ids: Vec<u64> =
+            outcomes.iter().filter_map(|o| o.as_completed().map(|r| r.id)).collect();
+        let rejected: Vec<&RejectedStream> =
+            outcomes.iter().filter_map(|o| o.as_rejected()).collect();
+        assert_eq!(completed_ids, vec![0], "only the wait-free request runs");
+        assert_eq!(rejected.len(), 4);
+        assert_eq!(ms.stats.rejected, 4);
+        let r0_finish = outcomes[0].as_completed().unwrap().finish_cycle;
+        for r in rejected {
+            // Each rejection was decided when the only slot freed, and
+            // the busted prediction is carried on the record.
+            assert_eq!(r.decided_cycle, r0_finish);
+            assert_eq!(r.waited_cycles(), r0_finish);
+            assert_eq!(r.ttft_budget_cycles, budget);
+            assert!(r.predicted_ttft_cycles > budget);
+        }
+        // Latency percentiles cover admitted streams only.
+        assert_eq!(ms.stats.streams.len(), 1);
+    }
+
+    /// One admission pass can shed several requests; the outcomes drain
+    /// one per `step` and `undelivered_rejections` exposes the backlog
+    /// (the serving loop keeps stepping on it instead of blocking).
+    #[test]
+    fn buffered_rejections_drain_one_per_step() {
+        let mut ms = msim_policy("gpt-nano", 2, "slo:1");
+        for id in 0..3 {
+            ms.submit(StreamSpec::new(id, 2)).unwrap();
+        }
+        let first = ms.step().unwrap().unwrap();
+        assert_eq!(first.as_rejected().map(|r| r.id), Some(0));
+        assert_eq!(ms.undelivered_rejections(), 2);
+        assert!(ms.step().unwrap().unwrap().as_rejected().is_some());
+        assert!(ms.step().unwrap().unwrap().as_rejected().is_some());
+        assert_eq!(ms.undelivered_rejections(), 0);
+        assert!(ms.step().unwrap().is_none());
+        assert_eq!(ms.stats.rejected, 3);
+    }
+
+    /// An idle-warp arrival that busts the budget is shed too (the warp
+    /// loop must not assume a warp always admits something).
+    #[test]
+    fn slo_sheds_warped_arrival_and_drains() {
+        let mut ms = msim_policy("gpt-nano", 1, "slo:1");
+        ms.submit(StreamSpec { id: 0, n_tokens: 2, arrival_cycle: 10_000 }).unwrap();
+        let out = ms.step().unwrap().unwrap();
+        let rej = out.as_rejected().expect("budget of 1 cycle rejects everything");
+        assert_eq!(rej.id, 0);
+        assert_eq!(rej.arrival_cycle, 10_000);
+        assert_eq!(rej.decided_cycle, 10_000, "decided at the warped arrival");
+        assert!(ms.step().unwrap().is_none(), "engine drains after the rejection");
+    }
+
+    /// Policies are seed-deterministic: identical runs produce identical
+    /// outcome sequences, cycle for cycle.
+    #[test]
+    fn policies_are_deterministic() {
+        for policy in ["fcfs", "srf", "fair", "slo:40000"] {
+            let run = || {
+                let mut ms = msim_policy("gpt-nano", 2, policy);
+                for id in 0..6 {
+                    ms.submit(StreamSpec { id, n_tokens: 2 + (id % 3), arrival_cycle: id * 700 })
+                        .unwrap();
+                }
+                let outcomes = ms.run_all().unwrap();
+                let sig: Vec<(u64, u64, bool)> = outcomes
+                    .iter()
+                    .map(|o| match o {
+                        StreamOutcome::Completed(r) => (r.id, r.finish_cycle, false),
+                        StreamOutcome::Rejected(r) => (r.id, r.decided_cycle, true),
+                    })
+                    .collect();
+                (ms.clock(), sig)
+            };
+            assert_eq!(run(), run(), "policy {policy} diverged across identical runs");
+        }
+    }
+
     /// Satellite property: over randomized seeded arrival traces, the
     /// two latency views agree (queue + service == finish - arrival),
     /// token finishes are strictly monotone with the first at or after
@@ -793,7 +1151,9 @@ mod tests {
                 };
                 ms.submit(spec).map_err(|e| e.to_string())?;
             }
-            let results = ms.run_all().map_err(|e| e.to_string())?;
+            let outcomes = ms.run_all().map_err(|e| e.to_string())?;
+            let results: Vec<StreamResult> =
+                outcomes.into_iter().filter_map(StreamOutcome::into_completed).collect();
             ms.finalize_stats();
             if results.len() as u64 != n_req {
                 return Err(format!("{} of {n_req} streams retired", results.len()));

@@ -109,6 +109,11 @@ pub struct SimStats {
     /// (pending) requests never count — they are waiting on their own
     /// arrival, not on capacity.
     pub admission_blocked: u64,
+    /// Requests shed by the admission policy (`sim::policy`,
+    /// `StreamOutcome::Rejected`). Always 0 under `AdmitAlways`;
+    /// rejected requests never appear in `streams` or the latency
+    /// percentiles — they received no service.
+    pub rejected: u64,
     /// Per-request-stream attribution (one entry per retired stream;
     /// empty for plain single-program runs).
     pub streams: Vec<StreamStats>,

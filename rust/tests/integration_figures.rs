@@ -139,3 +139,32 @@ fn serving_tail_latency_deterministic_and_ordered() {
     let again = report::fig_serving_tail_latency(5, 2, &[0.5, 2.0], 7).unwrap();
     assert_eq!(r.json, again.json);
 }
+
+#[test]
+fn policy_comparison_covers_models_and_policies() {
+    let r = report::fig_policy_comparison(5, 2, 1.5, 7).unwrap();
+    let rows = r.json.as_arr().unwrap();
+    // 8 paper models x 4 policies.
+    assert_eq!(rows.len(), 32);
+    let mut policies_seen = std::collections::BTreeSet::new();
+    for row in rows {
+        let f = |k: &str| row.get(k).unwrap().as_f64().unwrap();
+        policies_seen.insert(row.get("policy").unwrap().as_str().unwrap().to_string());
+        assert!(f("ttft_p50_cycles") > 0.0);
+        assert!(f("ttft_p50_cycles") <= f("ttft_p99_cycles"));
+        assert!(f("ttft_p99_cycles") <= f("e2e_p99_cycles"));
+        assert!(f("makespan_cycles") > 0.0);
+        let rejected = f("rejected");
+        let policy = row.get("policy").unwrap().as_str().unwrap();
+        if policy != "slo" {
+            assert_eq!(rejected, 0.0, "{policy} must never shed");
+        }
+        assert!(f("slo_ttft_budget_cycles") >= 1.0);
+    }
+    let want: std::collections::BTreeSet<String> =
+        ["fcfs", "srf", "fair", "slo"].iter().map(|s| s.to_string()).collect();
+    assert_eq!(policies_seen, want);
+    // Identical seed -> identical table (policies are deterministic).
+    let again = report::fig_policy_comparison(5, 2, 1.5, 7).unwrap();
+    assert_eq!(r.json, again.json);
+}
