@@ -42,6 +42,7 @@ fn main() {
             .collect(),
         input_elems: 768,
         output_elems: 18 * n_banks as u64,
+        passes: 1,
     };
 
     // (1b) per-head: 12 heads, each head's share is a separate region
@@ -67,6 +68,7 @@ fn main() {
             .collect(),
         input_elems: 768,
         output_elems: 18 * n_banks as u64,
+        passes: 1,
     };
 
     // (2) close-row policy: a row switch after every 256-element burst.
@@ -84,6 +86,7 @@ fn main() {
             .collect(),
         input_elems: 768,
         output_elems: 18 * n_banks as u64,
+        passes: 1,
     };
 
     println!("== mapping ablation: one channel VMM over GPT2-small W_qkv share ==\n");

@@ -127,7 +127,8 @@ fn main() {
         let run = |at: &[u64]| {
             let mut ms = MultiSim::from_mapping(&m, &kcfg, mapping.clone());
             for (id, &a) in at.iter().enumerate() {
-                let spec = StreamSpec { id: id as u64, n_tokens: 8, arrival_cycle: a };
+                let spec =
+                    StreamSpec { id: id as u64, n_tokens: 8, prompt_tokens: 1, arrival_cycle: a };
                 ms.submit(spec).unwrap();
             }
             ms.run_all().unwrap();
@@ -154,6 +155,71 @@ fn main() {
         }
     }
 
+    // Chunked-prefill sweep (K=4 Poisson load): the same 256-token-
+    // prompt request set served at prefill chunk sizes {1, 8, 32, 128}.
+    // chunk=1 is token-by-token prefill (the historical path); larger
+    // chunks amortize weight-row activations, GB staging and ASIC
+    // pipeline fills over the chunk, shrinking TTFT (first *generated*
+    // token) and makespan at the cost of longer per-instruction
+    // head-of-line blocking.
+    {
+        let kcfg = HwConfig::paper_baseline().with_max_streams(4);
+        let freq_hz = kcfg.gddr6.freq_ghz * 1e9;
+        let mapping = ModelMapping::build(&m, &kcfg).unwrap();
+        let n_req = 8usize;
+        let (prompt, gen) = (256u64, 8u64);
+        // Offered load calibrated to the chunk=32 batch makespan.
+        let mut batch = MultiSim::from_mapping(&m, &kcfg, mapping.clone());
+        for id in 0..n_req as u64 {
+            batch.submit(StreamSpec::with_prompt(id, prompt, gen)).unwrap();
+        }
+        batch.run_all().unwrap();
+        let rate_per_s = n_req as f64 * freq_hz / batch.clock() as f64;
+        let at = arrivals::generate(
+            &ArrivalSpec::Poisson { rate_per_s },
+            n_req,
+            kcfg.gddr6.freq_ghz,
+            7,
+        )
+        .unwrap();
+        println!(
+            "sim::multi prefill sweep gpt2-small K=4 ({n_req} reqs x {prompt}-token \
+             prompts +{gen} gen, Poisson 1.0x):"
+        );
+        for chunk in [1u64, 8, 32, 128] {
+            let ccfg = kcfg.clone().with_prefill_chunk(chunk);
+            bench(&format!("sim::multi prefill chunk={chunk} gpt2-small K=4"), 1, 3, || {
+                let mut ms = MultiSim::from_mapping(&m, &ccfg, mapping.clone());
+                for (id, &a) in at.iter().enumerate() {
+                    let mut spec = StreamSpec::with_prompt(id as u64, prompt, gen);
+                    spec.arrival_cycle = a;
+                    ms.submit(spec).unwrap();
+                }
+                black_box(ms.run_all().unwrap());
+            });
+            let mut ms = MultiSim::from_mapping(&m, &ccfg, mapping.clone());
+            for (id, &a) in at.iter().enumerate() {
+                let mut spec = StreamSpec::with_prompt(id as u64, prompt, gen);
+                spec.arrival_cycle = a;
+                ms.submit(spec).unwrap();
+            }
+            ms.run_all().unwrap();
+            ms.finalize_stats();
+            let us = |c: u64| c as f64 / (freq_hz / 1e6);
+            let lat = ms.stats.latency_report().unwrap();
+            println!(
+                "  chunk {chunk:>3}: makespan {:.1} us, ttft p50/p99 {:.1}/{:.1} us, \
+                 {} prefill chunks, prefill/decode {:.1}/{:.1} us summed",
+                us(ms.clock()),
+                us(lat.ttft.p50),
+                us(lat.ttft.p99),
+                ms.stats.prefill_chunks,
+                us(ms.stats.prefill_cycles),
+                us(ms.stats.decode_cycles),
+            );
+        }
+    }
+
     // Scheduling-policy sweep (K=4): one mixed Poisson request set
     // served under every pick/admission policy — host cost of the
     // policy layer plus the simulated makespan / tail-latency / shed
@@ -165,7 +231,9 @@ fn main() {
         let lens: Vec<u64> = (0..8u64).map(|i| 4 + 4 * (i % 3)).collect();
         let submit_all = |ms: &mut MultiSim, at: &[u64]| {
             for (id, (&n, &a)) in lens.iter().zip(at.iter()).enumerate() {
-                ms.submit(StreamSpec { id: id as u64, n_tokens: n, arrival_cycle: a }).unwrap();
+                let spec =
+                    StreamSpec { id: id as u64, n_tokens: n, prompt_tokens: 1, arrival_cycle: a };
+                ms.submit(spec).unwrap();
             }
         };
         // Batch makespan calibrates the offered rate and the SLO budget.

@@ -101,6 +101,35 @@ impl AsicOp {
         !matches!(self, AsicOp::LayerNorm { .. })
     }
 
+    /// The op applied to `count` consecutive token positions (a prefill
+    /// chunk): element counts scale by `count`, per-position groups
+    /// multiply (each position's heads stay independent softmax slices),
+    /// and `parts` stays per-pass — a chunked VMM produces `parts`
+    /// partials *per position*, accumulated position by position.
+    /// Positions stream through the engines back to back, so the fixed
+    /// scalar latencies (NR reciprocal/rsqrt) and the pipeline fill
+    /// amortize across the chunk — that amortization is one of the three
+    /// wins chunked prefill buys (with row-ACT and GB-reload
+    /// amortization on the PIM side). `count = 1` returns the op
+    /// unchanged.
+    pub fn for_positions(&self, count: u64) -> AsicOp {
+        if count <= 1 {
+            return *self;
+        }
+        match *self {
+            AsicOp::Softmax { n, groups } => {
+                AsicOp::Softmax { n: n * count, groups: groups * count }
+            }
+            AsicOp::LayerNorm { n } => AsicOp::LayerNorm { n: n * count },
+            AsicOp::Gelu { n } => AsicOp::Gelu { n: n * count },
+            AsicOp::ResidualAdd { n } => AsicOp::ResidualAdd { n: n * count },
+            AsicOp::PartialSum { n, parts } => AsicOp::PartialSum { n: n * count, parts },
+            AsicOp::BiasAdd { n } => AsicOp::BiasAdd { n: n * count },
+            AsicOp::Scale { n } => AsicOp::Scale { n: n * count },
+            AsicOp::Concat { n } => AsicOp::Concat { n: n * count },
+        }
+    }
+
     /// Elements live in SRAM at once (streaming-aware).
     pub fn live_elems(&self) -> u64 {
         match *self {
@@ -205,6 +234,37 @@ mod tests {
     fn partial_sum_scales_with_parts() {
         assert_eq!(AsicOp::PartialSum { n: 100, parts: 3 }.cost().adds, 200);
         assert_eq!(AsicOp::PartialSum { n: 100, parts: 1 }.cost().adds, 0);
+    }
+
+    /// Chunked prefill: the per-chunk op covers `count` positions with
+    /// one pipeline fill, so its latency is strictly below `count`
+    /// separate per-position executions; per-head softmax SRAM liveness
+    /// is unchanged (groups scale with positions).
+    #[test]
+    fn for_positions_scales_and_amortizes_fill() {
+        let e = engine();
+        let per_pos = AsicOp::Softmax { n: 1024, groups: 4 };
+        let chunk = per_pos.for_positions(16);
+        assert_eq!(chunk, AsicOp::Softmax { n: 16 * 1024, groups: 64 });
+        assert_eq!(chunk.live_elems(), per_pos.live_elems());
+        assert!(e.latency(&chunk) < 16 * e.latency(&per_pos));
+        // count = 1 is the identity on every variant.
+        for op in [
+            AsicOp::Softmax { n: 64, groups: 4 },
+            AsicOp::LayerNorm { n: 64 },
+            AsicOp::Gelu { n: 64 },
+            AsicOp::ResidualAdd { n: 64 },
+            AsicOp::PartialSum { n: 64, parts: 3 },
+            AsicOp::BiasAdd { n: 64 },
+            AsicOp::Scale { n: 64 },
+            AsicOp::Concat { n: 64 },
+        ] {
+            assert_eq!(op.for_positions(1), op);
+        }
+        // parts stays per-position: the chunk accumulates each
+        // position's partials, so the add count scales by the count.
+        let ps = AsicOp::PartialSum { n: 100, parts: 3 }.for_positions(8);
+        assert_eq!(ps.cost().adds, 8 * 100 * 2);
     }
 
     #[test]

@@ -15,6 +15,12 @@ use crate::model::{MatrixId, VmmClass};
 /// per concurrent stream). Programs compile slot-agnostic (slot 0); the
 /// slot is a runtime parameter patched in by
 /// `ProgramTemplate::instr_at`, exactly like `ltoken`.
+///
+/// The *pass count* of a prefill chunk (how many consecutive positions
+/// one instruction covers, `sim::prefill`) is likewise a runtime
+/// parameter — handed to `Resources::issue`, not encoded here — so one
+/// compiled program serves decode steps (1 pass) and every chunk size
+/// alike. Operand sizes below are always *per pass*.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Instr {
     /// Broadcast `in_elems` to all channels' GBs, MAC `matrix`, drain

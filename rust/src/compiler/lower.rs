@@ -10,6 +10,13 @@
 //! * **SRAM accounting**: every intermediate vector is sized against the
 //!   128 KB ASIC SRAM; the peak is recorded and checked (overflow is a
 //!   compile error — the hardware has no spill path).
+//!
+//! The accounting is *per position* and stays valid for prefill chunk
+//! programs (`sim::prefill`): a chunk's `T` positions stream through the
+//! engines one after another, each reusing the same double-buffered
+//! windows, so at no point are two positions' intermediates live
+//! together — the chunk multiplies *time* per instruction (`passes` in
+//! `Resources::issue`), never SRAM residency.
 
 use super::isa::{Instr, InstrNode, Program};
 use crate::asic::AsicOp;

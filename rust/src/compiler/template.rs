@@ -28,6 +28,22 @@
 //! overflowing position (the per-token seed compiler failed later). All
 //! paper configurations fit at full context, so this only affects
 //! configs that could not serve the model's `max_seq` anyway.
+//!
+//! **Prefill chunk programs** (`sim::prefill`): a chunk of `T`
+//! consecutive prompt positions executes the decode template of its
+//! *last* position — the engine fetches `cache.get` at the chunk's
+//! `Chunk::regime_pos()` (its last position), which resolves to the
+//! regime [`PosRegime::of_chunk`] describes — with operands
+//! specialized by `instr_at(i, ltoken_end, slot)` and issued in
+//! matrix-matrix mode (`Resources::issue` receives `passes = T`). The
+//! pass count is a runtime parameter exactly like `ltoken` and `slot`:
+//! the compiled node list, dependency edges and per-pass operand sizes
+//! are identical to the decode program, so the cache needs no extra
+//! entries and a 1-position chunk *is* the decode step, bit for bit.
+//! The per-position SRAM accounting stays valid because a chunk's
+//! positions stream through the same double-buffered windows one after
+//! another (`compiler::lower`); only the LM-head logits of the last
+//! position are materialized for the host.
 
 use std::rc::Rc;
 
@@ -53,6 +69,16 @@ impl PosRegime {
         let ltoken = pos + 1;
         let h = model.n_head as u64;
         Self { av_chunked: h * ltoken > cfg.pim.gb_elems() as u64 }
+    }
+
+    /// Regime of a prefill chunk covering positions
+    /// `start_pos .. start_pos + len`: the chunk executes one program
+    /// compiled for its *last* position (the conservative
+    /// representative — a chunk straddling the scores@V boundary runs
+    /// chunked-with-partial-sum for all its positions, a slight
+    /// overcharge on the pre-boundary ones).
+    pub fn of_chunk(model: &GptModel, cfg: &HwConfig, start_pos: u64, len: u64) -> Self {
+        Self::of(model, cfg, start_pos + len.max(1) - 1)
     }
 
     /// Largest `ltoken` this regime covers for `model` — the compile-time
@@ -326,6 +352,18 @@ mod tests {
         let cfg = cfg(); // gb_elems = 1024
         assert!(!PosRegime::of(&m, &cfg, 84).av_chunked); // ltoken 85: 1020
         assert!(PosRegime::of(&m, &cfg, 85).av_chunked); // ltoken 86: 1032
+    }
+
+    /// A chunk's regime is its last position's regime — a chunk
+    /// straddling the boundary compiles chunked (conservative).
+    #[test]
+    fn chunk_regime_is_last_positions_regime() {
+        let m = by_name("gpt2-small").unwrap();
+        let cfg = cfg();
+        assert_eq!(PosRegime::of_chunk(&m, &cfg, 0, 32), PosRegime::of(&m, &cfg, 31));
+        assert!(!PosRegime::of_chunk(&m, &cfg, 64, 21).av_chunked); // ends at pos 84
+        assert!(PosRegime::of_chunk(&m, &cfg, 64, 22).av_chunked); // ends at pos 85
+        assert_eq!(PosRegime::of_chunk(&m, &cfg, 7, 0), PosRegime::of(&m, &cfg, 7));
     }
 
     #[test]

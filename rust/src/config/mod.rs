@@ -181,6 +181,14 @@ pub struct SchedulerConfig {
     /// and JSON `sched.slo_ttft_cycles` both override it. The default
     /// is 2 ms at the 1 GHz Table I clock.
     pub slo_ttft_cycles: u64,
+    /// Prefill chunk size (JSON key `sched.prefill_chunk`): how many
+    /// consecutive prompt positions one prefill program covers
+    /// (`sim::prefill`). Larger chunks amortize more DRAM row
+    /// activations / GB staging / ASIC pipeline fills over the prompt
+    /// but hold shared resources longer per instruction (head-of-line
+    /// blocking for concurrent streams). 1 = token-by-token prefill,
+    /// cycle-identical to the historical no-prefill engine.
+    pub prefill_chunk: u64,
 }
 
 impl Default for SchedulerConfig {
@@ -191,6 +199,7 @@ impl Default for SchedulerConfig {
             seed: 0x5EED,
             policy: PolicySpec::Fcfs,
             slo_ttft_cycles: 2_000_000,
+            prefill_chunk: 32,
         }
     }
 }
@@ -277,6 +286,14 @@ impl HwConfig {
     /// Serving knob: arrival-generator seed.
     pub fn with_arrival_seed(mut self, seed: u64) -> Self {
         self.sched.seed = seed;
+        self
+    }
+
+    /// Serving knob: prefill chunk size (positions per chunk program;
+    /// 1 = token-by-token prefill, the historical behavior).
+    pub fn with_prefill_chunk(mut self, chunk: u64) -> Self {
+        assert!(chunk >= 1);
+        self.sched.prefill_chunk = chunk;
         self
     }
 
@@ -405,6 +422,14 @@ impl HwConfig {
                     bail!("sched.slo_ttft_cycles must be an integer in [1, 2^53), got {n}");
                 }
                 self.sched.slo_ttft_cycles = n as u64;
+            }
+            ("sched", "prefill_chunk") => {
+                // Same exactness contract; a 0-position chunk is a
+                // config mistake (1 = token-by-token prefill).
+                if n < 1.0 || n.fract() != 0.0 || n >= 9_007_199_254_740_992.0 {
+                    bail!("sched.prefill_chunk must be an integer in [1, 2^53), got {n}");
+                }
+                self.sched.prefill_chunk = n as u64;
             }
             ("asic", "freq_ghz") => set!(self.asic.freq_ghz, f64),
             ("asic", "sram_kb") => set!(self.asic.sram_kb, usize),
@@ -541,6 +566,32 @@ mod tests {
         let j = Json::parse(r#"{"sched": {"policy": 3}}"#).unwrap();
         let err = HwConfig::from_json(&j).unwrap_err().to_string();
         assert!(err.contains("must be a string"), "{err}");
+    }
+
+    #[test]
+    fn sched_prefill_chunk_overrides() {
+        assert_eq!(HwConfig::paper_baseline().sched.prefill_chunk, 32, "default chunk");
+        let j = Json::parse(r#"{"sched": {"prefill_chunk": 128}}"#).unwrap();
+        assert_eq!(HwConfig::from_json(&j).unwrap().sched.prefill_chunk, 128);
+        let j = Json::parse(r#"{"sched": {"prefill_chunk": 1}}"#).unwrap();
+        assert_eq!(HwConfig::from_json(&j).unwrap().sched.prefill_chunk, 1);
+        assert_eq!(HwConfig::paper_baseline().with_prefill_chunk(8).sched.prefill_chunk, 8);
+        // Typos, zero, fractional, out-of-range and string-typed values
+        // are rejected loudly, like every other sched key.
+        for bad in [
+            r#"{"sched": {"prefill_chunk": 0}}"#,
+            r#"{"sched": {"prefill_chunk": -4}}"#,
+            r#"{"sched": {"prefill_chunk": 2.5}}"#,
+            r#"{"sched": {"prefill_chunk": 9007199254740993}}"#,
+            r#"{"sched": {"prefill_chunk": "32"}}"#,
+            r#"{"sched": {"prefil_chunk": 32}}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(HwConfig::from_json(&j).is_err(), "accepted {bad}");
+        }
+        let j = Json::parse(r#"{"sched": {"prefill_chunk": "32"}}"#).unwrap();
+        let err = HwConfig::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("must be a number"), "{err}");
     }
 
     /// Satellite: typo'd or mistyped `sched` keys must be rejected with

@@ -11,11 +11,20 @@
 //! completion boundary. Setting `max_streams = 1` reproduces the seed's
 //! FIFO behavior exactly.
 //!
+//! Requests carry a real prompt/generation split: the prompt runs as
+//! batched prefill chunks (`sim::prefill`, `cfg.sched.prefill_chunk`)
+//! whose matrix-matrix programs amortize DRAM row activations over the
+//! prompt, and the reported TTFT is the first *generated* token — the
+//! prompt's prefill completion — with the prefill/decode service split
+//! surfaced per response (`Response::sim_prefill_seconds`) and in
+//! aggregate (`ServerMetrics::{sim_prefill_seconds, sim_decode_seconds}`).
+//!
 //! Scheduling is policy-driven (`sim::policy`, `cfg.sched.policy`):
 //! `fcfs` (default), `srf`, `fair` or `slo` — the latter sheds requests
-//! whose predicted TTFT busts `cfg.sched.slo_ttft_cycles`. A shed
-//! request is served a first-class response with `rejected = true` (no
-//! tokens, no error) and counts in `ServerMetrics::rejected`.
+//! whose predicted TTFT (the chunked-prefill cost of the request's own
+//! prompt length) busts `cfg.sched.slo_ttft_cycles`. A shed request is
+//! served a first-class response with `rejected = true` (no tokens, no
+//! error) and counts in `ServerMetrics::rejected`.
 //!
 //! Requests carry a simulated `arrival_cycle` (open-loop serving): the
 //! scheduler holds each request pending until simulated time reaches
@@ -77,6 +86,12 @@ pub struct Response {
     /// Simulated PIM-GPT service time for this request, seconds
     /// (admission to last token; excludes queueing).
     pub sim_seconds: f64,
+    /// Prefill share of the service, seconds: admission to prompt
+    /// completion — the moment the first generated token existed
+    /// (`sim_seconds - sim_prefill_seconds` is the decode share). 0
+    /// for rejected/errored requests and FIFO (functional) serving,
+    /// which runs token-by-token.
+    pub sim_prefill_seconds: f64,
     /// Wall-clock time from ingestion to completion, seconds.
     pub wall_seconds: f64,
     /// Queueing delay in *simulated* seconds (time the request waited
@@ -102,6 +117,13 @@ pub struct ServerMetrics {
     /// Simulated wall time of the whole run (last completion cycle).
     /// For interleaved serving this is < `sim_seconds`: streams overlap.
     pub sim_makespan_seconds: f64,
+    /// Prefill share of the summed service times (admission to prompt
+    /// completion, per request). Together with `sim_decode_seconds`
+    /// this splits `sim_seconds` into the compute-dense prompt phase
+    /// and the memory-bound generation phase.
+    pub sim_prefill_seconds: f64,
+    /// Decode share of the summed service times.
+    pub sim_decode_seconds: f64,
     /// Disjoint per-stream KV contexts the mapping reserved (the real
     /// admission capacity; may be below the configured `max_streams`
     /// when DRAM rows ran out). 1 for FIFO/functional serving.
@@ -118,8 +140,11 @@ pub struct ServerMetrics {
     /// `tokens` or the latency percentiles.
     pub rejected: u64,
     /// Tail-latency percentiles (queue/TTFT/end-to-end, in simulated
-    /// cycles, measured from each request's arrival). `None` for
-    /// FIFO/functional serving and runs that completed no stream.
+    /// cycles, measured from each request's arrival). TTFT is the
+    /// first *generated* token — the request's prompt-prefill
+    /// completion — not the first prefill position
+    /// (`StreamResult::ttft_cycles`). `None` for FIFO/functional
+    /// serving and runs that completed no stream.
     pub latency: Option<LatencyReport>,
 }
 
@@ -214,6 +239,7 @@ fn error_response(id: u64, err: String) -> Response {
         id,
         tokens: vec![],
         sim_seconds: 0.0,
+        sim_prefill_seconds: 0.0,
         wall_seconds: 0.0,
         sim_queue_seconds: 0.0,
         rejected: false,
@@ -281,6 +307,7 @@ fn fifo_loop(
                     id: req.id,
                     tokens: r.tokens,
                     sim_seconds: r.sim_seconds,
+                    sim_prefill_seconds: 0.0,
                     wall_seconds: wall,
                     sim_queue_seconds: sim_busy_until,
                     rejected: false,
@@ -296,6 +323,7 @@ fn fifo_loop(
                     id: req.id,
                     tokens: vec![],
                     sim_seconds: 0.0,
+                    sim_prefill_seconds: 0.0,
                     wall_seconds: wall0.elapsed().as_secs_f64(),
                     sim_queue_seconds: sim_busy_until,
                     rejected: false,
@@ -331,6 +359,7 @@ fn ingest(
             id: req.id,
             tokens: vec![],
             sim_seconds: 0.0,
+            sim_prefill_seconds: 0.0,
             wall_seconds: 0.0,
             sim_queue_seconds: 0.0,
             rejected: false,
@@ -338,7 +367,15 @@ fn ingest(
         });
         return;
     }
-    let spec = StreamSpec { id: req.id, n_tokens: total, arrival_cycle: req.arrival_cycle };
+    // The request's prompt maps to the prefill phase (batched into
+    // `sched.prefill_chunk`-sized chunk programs); an empty prompt
+    // still prefills its first position, like the seed's decode.
+    let spec = StreamSpec {
+        id: req.id,
+        n_tokens: total,
+        prompt_tokens: (req.prompt.len() as u64).max(1),
+        arrival_cycle: req.arrival_cycle,
+    };
     match msim.submit(spec) {
         Ok(()) => {
             // Timing-only: tokens are synthetic, as in the seed.
@@ -424,15 +461,19 @@ fn interleaved_loop(
             match outcome {
                 StreamOutcome::Completed(done) => {
                     let service_s = done.service_cycles() as f64 / freq_hz;
+                    let prefill_s = done.prefill_cycles() as f64 / freq_hz;
                     let queue_s = done.queue_cycles() as f64 / freq_hz;
                     metrics.tokens += done.tokens;
                     metrics.sim_seconds += service_s;
+                    metrics.sim_prefill_seconds += prefill_s;
+                    metrics.sim_decode_seconds += service_s - prefill_s;
                     metrics.wall_seconds += wall;
                     metrics.sim_makespan_seconds = msim.clock() as f64 / freq_hz;
                     let _ = tx_resp.send(Response {
                         id: m.id,
                         tokens: m.tokens,
                         sim_seconds: service_s,
+                        sim_prefill_seconds: prefill_s,
                         wall_seconds: wall,
                         sim_queue_seconds: queue_s,
                         rejected: false,
@@ -448,6 +489,7 @@ fn interleaved_loop(
                         id: m.id,
                         tokens: vec![],
                         sim_seconds: 0.0,
+                        sim_prefill_seconds: 0.0,
                         wall_seconds: wall,
                         sim_queue_seconds: rej.waited_cycles() as f64 / freq_hz,
                         rejected: true,
@@ -663,6 +705,44 @@ mod tests {
             "interleaved {} !> fifo {}",
             inter.sim_tokens_per_s(),
             fifo.sim_tokens_per_s()
+        );
+    }
+
+    /// Tentpole: prompted requests are served through chunked prefill —
+    /// the response splits service into prefill and decode, the
+    /// aggregate metrics carry both shares, and a larger chunk size
+    /// strictly shrinks the prefill share of the same prompt.
+    #[test]
+    fn prompted_requests_report_prefill_split() {
+        let run = |chunk: u64| {
+            let mut s = Server::start(move || {
+                let m = by_name("gpt-nano").unwrap();
+                let cfg = HwConfig::paper_baseline()
+                    .with_max_streams(2)
+                    .with_prefill_chunk(chunk);
+                PimGptSystem::timing_only(&m, &cfg)
+            });
+            s.submit(Request { id: 0, prompt: vec![1; 64], n_new: 4, arrival_cycle: 0 })
+                .unwrap();
+            let r = s.recv().unwrap();
+            assert!(r.error.is_none());
+            assert_eq!(r.tokens.len(), 68);
+            assert!(r.sim_prefill_seconds > 0.0, "a 64-token prompt prefills");
+            assert!(
+                r.sim_prefill_seconds < r.sim_seconds,
+                "decode tokens take service time too"
+            );
+            let m = s.shutdown();
+            assert!(m.sim_prefill_seconds > 0.0 && m.sim_decode_seconds > 0.0);
+            let total = m.sim_prefill_seconds + m.sim_decode_seconds;
+            assert!((total - m.sim_seconds).abs() < 1e-9, "split sums to service");
+            r.sim_prefill_seconds
+        };
+        let tokenwise = run(1);
+        let chunked = run(32);
+        assert!(
+            chunked < tokenwise,
+            "chunked prefill {chunked} !< token-by-token {tokenwise}"
         );
     }
 

@@ -9,6 +9,19 @@
 //!   cycles-math instead of materializing millions of segments, which is
 //!   what makes a 1024-token GPT2-XL run tractable.
 //!
+//! **Matrix-matrix passes** (chunked prefill): the MAC unit is
+//! weight-stationary — a DRAM row, once activated, can be streamed
+//! against any number of input vectors staged in the channel's global
+//! buffer. `mac_block` / `mac_pattern` therefore take a `passes` count:
+//! each row pays its ACT/PRE *once* and then `passes` MAC streams of
+//! `fill + chunks * tCCD` cycles, so the per-vector row-switch overhead
+//! amortizes as 1/passes. `passes = 1` is the classic vector-matrix
+//! cycle layout, bit-identical to the original math; `passes = T` is
+//! exactly a `mac_sweep` in which each row's segment appears `T`
+//! consecutive times (every repetition after the first is an open-row
+//! hit) — pinned by `prop_block_passes_matches_repeated_sweep` /
+//! `prop_pattern_passes_matches_repeated_sweep`.
+//!
 //! Row-hit statistics are counted at *column-command* granularity (every
 //! `tCCD`-spaced MAC/write chunk is one access), which is the semantics
 //! under which the paper reports ~98% hit rates (Fig. 11a): a fully
@@ -161,6 +174,10 @@ impl Bank {
 
     /// MAC over a weight block: `full_rows` consecutive fully-mapped rows
     /// from `base_row` plus an optional tail — O(1) regardless of size.
+    /// `passes` input vectors stream through each row while it is open
+    /// (matrix-matrix mode, see the module docs); `passes = 1` is the
+    /// classic vector-matrix layout.
+    #[allow(clippy::too_many_arguments)]
     pub fn mac_block(
         &mut self,
         start: u64,
@@ -169,15 +186,17 @@ impl Bank {
         t: &TimingCycles,
         lanes: u64,
         pipeline_fill: u64,
+        passes: u64,
     ) -> u64 {
         let rows = block.total_rows();
-        if rows == 0 {
+        if rows == 0 || passes == 0 {
             return start.max(self.busy_until);
         }
         let mut now = start.max(self.busy_until);
         let begin = now;
         let chunks_full = crate::util::ceil_div(row_elems as u64, lanes);
-        let row_cost = pipeline_fill + chunks_full * t.tccd;
+        // One ACT covers all `passes` streams of a row.
+        let row_cost = passes * (pipeline_fill + chunks_full * t.tccd);
 
         // First row: hit if it happens to be open, else ACT (+PRE).
         let (ready, hit) = self.open(now, block.base_row, t);
@@ -188,13 +207,13 @@ impl Bank {
             crate::util::ceil_div(block.tail_elems as u64, lanes)
         };
         if hit {
-            self.stats.row_hits += first_chunks;
+            self.stats.row_hits += passes * first_chunks;
         } else {
             self.stats.row_misses += 1;
-            self.stats.row_hits += first_chunks - 1;
+            self.stats.row_hits += passes * first_chunks - 1;
         }
-        now += pipeline_fill + first_chunks * t.tccd;
-        self.cmds.mac_read_cycles += first_chunks * t.tccd;
+        now += passes * (pipeline_fill + first_chunks * t.tccd);
+        self.cmds.mac_read_cycles += passes * first_chunks * t.tccd;
 
         // Remaining full rows: every one is a conflict miss. The per-row
         // occupancy (fill + chunks) exceeds tRAS for 1 KB rows at 16
@@ -208,21 +227,21 @@ impl Bank {
             now += remaining_full * (switch + row_cost + residency_gap);
             self.cmds.pre += remaining_full;
             self.cmds.act += remaining_full;
-            self.cmds.mac_read_cycles += remaining_full * chunks_full * t.tccd;
+            self.cmds.mac_read_cycles += remaining_full * passes * chunks_full * t.tccd;
             self.stats.row_misses += remaining_full;
-            self.stats.row_hits += remaining_full * (chunks_full - 1);
+            self.stats.row_hits += remaining_full * (passes * chunks_full - 1);
         }
 
         // Tail row (only when there were full rows before it).
         if block.tail_elems > 0 && block.full_rows > 0 {
             let chunks_tail = crate::util::ceil_div(block.tail_elems as u64, lanes);
             now += t.tras.saturating_sub(row_cost); // residency of prev row
-            now += switch + pipeline_fill + chunks_tail * t.tccd;
+            now += switch + passes * (pipeline_fill + chunks_tail * t.tccd);
             self.cmds.pre += 1;
             self.cmds.act += 1;
-            self.cmds.mac_read_cycles += chunks_tail * t.tccd;
+            self.cmds.mac_read_cycles += passes * chunks_tail * t.tccd;
             self.stats.row_misses += 1;
-            self.stats.row_hits += chunks_tail - 1;
+            self.stats.row_hits += passes * chunks_tail - 1;
         }
 
         // Track the open row + activation time of the final row.
@@ -244,13 +263,16 @@ impl Bank {
     /// region `owned_cols` copies of the per-column fill. All rows are
     /// distinct, so every row after the first is a conflict miss; cycle
     /// math mirrors `mac_sweep` exactly (`prop_pattern_matches_sweep`).
+    /// `passes` input vectors stream through each row while it is open
+    /// (matrix-matrix mode — one ACT, `passes` MAC streams per row);
+    /// `passes = 1` is the classic vector-matrix layout.
     ///
     /// Derivation: in `mac_sweep`, rows 2..n each cost
-    /// `gap(prev) + tRP + tRCD + fill + chunks(row)` where
-    /// `gap(e) = max(0, tRAS - tRCD - fill - chunks(e))` is the residency
-    /// shortfall of the row being closed. Over a repeating pattern the
-    /// two sums telescope to `reps * sum(cost+gap) - cost(first) -
-    /// gap(last)`.
+    /// `gap(prev) + tRP + tRCD + passes * (fill + chunks(row))` where
+    /// `gap(e) = max(0, tRAS - tRCD - passes * (fill + chunks(e)))` is
+    /// the residency shortfall of the row being closed. Over a repeating
+    /// pattern the two sums telescope to `reps * sum(cost+gap) -
+    /// cost(first) - gap(last)`.
     #[allow(clippy::too_many_arguments)]
     pub fn mac_pattern(
         &mut self,
@@ -261,26 +283,28 @@ impl Bank {
         t: &TimingCycles,
         lanes: u64,
         pipeline_fill: u64,
+        passes: u64,
     ) -> u64 {
-        if reps == 0 || pattern.is_empty() {
+        if reps == 0 || pattern.is_empty() || passes == 0 {
             return start.max(self.busy_until);
         }
         let mut now = start.max(self.busy_until);
         let begin = now;
         let switch = t.trp + t.trcd;
         let chunks = |e: u32| crate::util::ceil_div(e as u64, lanes);
-        let cost = |e: u32| switch + pipeline_fill + chunks(e) * t.tccd;
-        let gap = |e: u32| t.tras.saturating_sub(t.trcd + pipeline_fill + chunks(e) * t.tccd);
+        let stream = |e: u32| passes * (pipeline_fill + chunks(e) * t.tccd);
+        let cost = |e: u32| switch + stream(e);
+        let gap = |e: u32| t.tras.saturating_sub(t.trcd + stream(e));
 
         let k = pattern.len() as u64;
         let n_rows = reps as u64 * k;
         let sum_cost_gap: u64 = pattern.iter().map(|&e| cost(e) + gap(e)).sum();
-        let sum_chunks: u64 = pattern.iter().map(|&e| chunks(e)).sum();
+        let sum_chunks: u64 = pattern.iter().map(|&e| passes * chunks(e)).sum();
 
         // First row: hit if already open, else ACT (+PRE on conflict).
-        let first_chunks = chunks(pattern[0]);
+        let first_chunks = passes * chunks(pattern[0]);
         let (ready, hit) = self.open(now, base_row, t);
-        now = ready + pipeline_fill + first_chunks * t.tccd;
+        now = ready + stream(pattern[0]);
         if hit {
             self.stats.row_hits += first_chunks;
         } else {
@@ -304,9 +328,10 @@ impl Bank {
 
         self.open_row = Some(base_row + n_rows as u32 - 1);
         let last = pattern[((n_rows - 1) % k) as usize];
-        // Last row's ACT was tRCD + fill + chunks before `now` (matches
-        // the opened_at a mac_sweep over the same rows would leave).
-        self.opened_at = now.saturating_sub(t.trcd + pipeline_fill + chunks(last) * t.tccd);
+        // Last row's ACT was tRCD + its full pass stream before `now`
+        // (matches the opened_at a mac_sweep over the same rows would
+        // leave).
+        self.opened_at = now.saturating_sub(t.trcd + stream(last));
         self.cmds.busy_cycles += now - begin;
         self.busy_until = now;
         now
@@ -446,7 +471,7 @@ mod tests {
         let mut b = Bank::new();
         let tm = t();
         let block = RowBlock { base_row: 0, full_rows: 100, tail_elems: 0 };
-        b.mac_block(0, &block, 1024, &tm, 16, 5);
+        b.mac_block(0, &block, 1024, &tm, 16, 5, 1);
         let rate = b.stats.hit_rate();
         assert!((rate - 63.0 / 64.0).abs() < 1e-9, "{rate}");
     }
@@ -460,7 +485,8 @@ mod tests {
             (0..20).map(|r| RowSegment { row: r, elems: 1024 }).collect();
         let f1 = b1.mac_sweep(0, &segs, &tm, 16, 5);
         let mut b2 = Bank::new();
-        let f2 = b2.mac_block(0, &RowBlock { base_row: 0, full_rows: 20, tail_elems: 0 }, 1024, &tm, 16, 5);
+        let block = RowBlock { base_row: 0, full_rows: 20, tail_elems: 0 };
+        let f2 = b2.mac_block(0, &block, 1024, &tm, 16, 5, 1);
         assert_eq!(f1, f2);
         assert_eq!(b1.cmds.act, b2.cmds.act);
         assert_eq!(b1.cmds.mac_read_cycles, b2.cmds.mac_read_cycles);
@@ -476,7 +502,8 @@ mod tests {
         segs.push(RowSegment { row: 5, elems: 100 });
         let f1 = b1.mac_sweep(0, &segs, &tm, 16, 5);
         let mut b2 = Bank::new();
-        let f2 = b2.mac_block(0, &RowBlock { base_row: 0, full_rows: 5, tail_elems: 100 }, 1024, &tm, 16, 5);
+        let block = RowBlock { base_row: 0, full_rows: 5, tail_elems: 100 };
+        let f2 = b2.mac_block(0, &block, 1024, &tm, 16, 5, 1);
         assert_eq!(f1, f2);
         assert_eq!(b1.stats, b2.stats);
         assert_eq!(b1.cmds.mac_read_cycles, b2.cmds.mac_read_cycles);
@@ -559,7 +586,7 @@ mod tests {
             let f1 = b1.mac_sweep(7, &segs, &tm, lanes, 5);
             let mut b2 = Bank::new();
             let block = RowBlock { base_row: base, full_rows: full, tail_elems: tail };
-            let f2 = b2.mac_block(7, &block, 1024, &tm, lanes, 5);
+            let f2 = b2.mac_block(7, &block, 1024, &tm, lanes, 5, 1);
             if f1 != f2 {
                 return Err(format!("finish {f1} != {f2} (full={full} tail={tail})"));
             }
@@ -593,7 +620,7 @@ mod tests {
             let mut b1 = Bank::new();
             let f1 = b1.mac_sweep(11, &segs, &tm, 16, 5);
             let mut b2 = Bank::new();
-            let f2 = b2.mac_pattern(11, base, reps, &pattern, &tm, 16, 5);
+            let f2 = b2.mac_pattern(11, base, reps, &pattern, &tm, 16, 5, 1);
             if f1 != f2 {
                 return Err(format!("finish {f1} != {f2} (reps={reps} pattern={pattern:?})"));
             }
@@ -637,6 +664,101 @@ mod tests {
             if fast.stats != slow.stats || fast.cmds != slow.cmds {
                 return Err(format!("state mismatch n={n}: {:?} vs {:?} / {:?} vs {:?}",
                     fast.stats, slow.stats, fast.cmds, slow.cmds));
+            }
+            Ok(())
+        });
+    }
+
+    /// Tentpole pin (chunked prefill): `mac_block` with `passes = T`
+    /// equals a `mac_sweep` in which each row's segment appears `T`
+    /// consecutive times — one ACT per row, every repetition an open-row
+    /// hit. Full 1024-element rows keep the per-row occupancy above
+    /// tRAS, the regime every weight block runs in.
+    #[test]
+    fn prop_block_passes_matches_repeated_sweep() {
+        check("mac_block passes == repeated sweep", 100, |rng| {
+            let tm = t();
+            let base = rng.gen_range(100) as u32;
+            let full = rng.usize_in(1, 8) as u32;
+            let passes = rng.usize_in(1, 6) as u64;
+            let mut segs: Vec<RowSegment> = Vec::new();
+            for i in 0..full {
+                for _ in 0..passes {
+                    segs.push(RowSegment { row: base + i, elems: 1024 });
+                }
+            }
+            let mut b1 = Bank::new();
+            let f1 = b1.mac_sweep(9, &segs, &tm, 16, 5);
+            let mut b2 = Bank::new();
+            let block = RowBlock { base_row: base, full_rows: full, tail_elems: 0 };
+            let f2 = b2.mac_block(9, &block, 1024, &tm, 16, 5, passes);
+            if f1 != f2 {
+                return Err(format!("finish {f1} != {f2} (full={full} passes={passes})"));
+            }
+            if b1.stats != b2.stats {
+                return Err(format!("stats {:?} != {:?}", b1.stats, b2.stats));
+            }
+            if b1.cmds != b2.cmds {
+                return Err(format!("cmds {:?} != {:?}", b1.cmds, b2.cmds));
+            }
+            // Amortization direction: T passes over the block cost less
+            // than T separate single-pass blocks (row switches amortize).
+            if passes > 1 && full > 1 {
+                let mut b3 = Bank::new();
+                let mut now = 9;
+                for _ in 0..passes {
+                    now = b3.mac_block(now, &block, 1024, &tm, 16, 5, 1);
+                }
+                let single = now - 9;
+                if f2 - 9 >= single {
+                    return Err(format!("no amortization: chunk {} !< {single}", f2 - 9));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Tentpole pin: `mac_pattern` with `passes = T` equals a
+    /// `mac_sweep` with each pattern row repeated `T` consecutive times
+    /// (arbitrary segment sizes — the KV-read shapes).
+    #[test]
+    fn prop_pattern_passes_matches_repeated_sweep() {
+        check("mac_pattern passes == repeated sweep", 150, |rng| {
+            let tm = t();
+            let base = rng.gen_range(50) as u32;
+            let reps = rng.usize_in(1, 12) as u32;
+            let k = rng.usize_in(1, 4);
+            let passes = rng.usize_in(1, 6) as u64;
+            let pattern: Vec<u32> = (0..k).map(|_| rng.usize_in(1, 1025) as u32).collect();
+            let mut segs: Vec<RowSegment> = Vec::new();
+            for i in 0..reps as usize * k {
+                for _ in 0..passes {
+                    segs.push(RowSegment { row: base + i as u32, elems: pattern[i % k] });
+                }
+            }
+            let mut b1 = Bank::new();
+            let f1 = b1.mac_sweep(11, &segs, &tm, 16, 5);
+            let mut b2 = Bank::new();
+            let f2 = b2.mac_pattern(11, base, reps, &pattern, &tm, 16, 5, passes);
+            if f1 != f2 {
+                return Err(format!(
+                    "finish {f1} != {f2} (reps={reps} passes={passes} pattern={pattern:?})"
+                ));
+            }
+            if b1.stats != b2.stats {
+                return Err(format!("stats {:?} != {:?}", b1.stats, b2.stats));
+            }
+            if b1.cmds != b2.cmds {
+                return Err(format!("cmds {:?} != {:?}", b1.cmds, b2.cmds));
+            }
+            if b1.open_row() != b2.open_row() {
+                return Err("open_row mismatch".into());
+            }
+            // Continuation must also agree (opened_at consistency).
+            let g1 = b1.mac_sweep(f1, &[RowSegment { row: 9999, elems: 16 }], &tm, 16, 5);
+            let g2 = b2.mac_sweep(f2, &[RowSegment { row: 9999, elems: 16 }], &tm, 16, 5);
+            if g1 != g2 {
+                return Err(format!("continuation {g1} != {g2}"));
             }
             Ok(())
         });

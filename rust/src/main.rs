@@ -6,7 +6,7 @@
 //! pim-gpt figures [--fig ID] [--tokens N]
 //! pim-gpt generate --model NAME [--artifacts DIR] [--prompt 1,2,3] [--n N]
 //! pim-gpt serve --model NAME [--requests N] [--concurrency K] [--arrivals SPEC]
-//!               [--policy SPEC] [--seed N] [--artifacts DIR]
+//!               [--policy SPEC] [--seed N] [--prompt-tokens P] [--artifacts DIR]
 //! ```
 //!
 //! (Arg parsing is hand-rolled — clap is unavailable offline, DESIGN.md
@@ -169,15 +169,23 @@ pim-gpt — hybrid process-in-memory accelerator for autoregressive transformers
 USAGE:
   pim-gpt info     [--config FILE]
   pim-gpt simulate --model NAME [--tokens N] [--config FILE] [--json]
-  pim-gpt figures  [--fig 1|8|10|11|12|13|14|15|t1|t2|serving|policies|all] [--tokens N]
+  pim-gpt figures  [--fig 1|8|10|11|12|13|14|15|t1|t2|serving|policies|prefill|all]
+                   [--tokens N]
   pim-gpt generate --model gpt-nano|gpt-mini [--artifacts DIR] [--prompt 1,2,3] [--n N]
   pim-gpt serve    --model NAME [--requests N] [--concurrency K] [--arrivals SPEC]
-                   [--policy SPEC] [--seed N] [--artifacts DIR]
+                   [--policy SPEC] [--seed N] [--prompt-tokens P] [--artifacts DIR]
 
 ARRIVALS (open-loop serving; latencies report p50/p95/p99 from arrival):
   batch (default) | fixed:<cycles> | poisson:<req/s> | trace:<file.json>
-  trace schema: {\"requests\": [{\"arrival_cycle\": 0, \"n_tokens\": 16}, ...]}
+  trace schema: {\"requests\": [{\"arrival_cycle\": 0, \"n_tokens\": 16,
+                 \"prompt_tokens\": 8}, ...]} (prompt_tokens optional, default 1,
+                 counted inside n_tokens)
   (functional-artifact serving is FIFO and ignores arrival stamps)
+
+PREFILL (prompts run as batched chunk programs; sched.prefill_chunk in --config):
+  --prompt-tokens P gives every generated request a P-token prompt; TTFT is the
+  first *generated* token (prompt prefill completion). Chunked prefill amortizes
+  DRAM row activations over the chunk — see figures --fig prefill.
 
 POLICY (scheduling; sched.policy / sched.slo_ttft_cycles in --config):
   fcfs (default) | srf | fair | slo[:<ttft-cycles>]
@@ -290,6 +298,9 @@ fn cmd_figures(args: &Args) -> Result<()> {
     if all || which == "policies" {
         reports.push(report::fig_policy_comparison(6, 4, 1.5, 7)?);
     }
+    if all || which == "prefill" {
+        reports.push(report::fig_prefill(8, &[1, 8, 32, 128], &[64, 256])?);
+    }
     if reports.is_empty() {
         bail!("unknown figure '{which}'");
     }
@@ -329,7 +340,17 @@ fn cmd_generate(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     args.expect_only(
         "serve",
-        &["model", "requests", "concurrency", "arrivals", "seed", "policy", "artifacts", "config"],
+        &[
+            "model",
+            "requests",
+            "concurrency",
+            "arrivals",
+            "seed",
+            "policy",
+            "prompt-tokens",
+            "artifacts",
+            "config",
+        ],
     )?;
     let name = args.get("model")?.unwrap_or("gpt-nano");
     let mut cfg = load_config(args)?;
@@ -359,26 +380,40 @@ fn cmd_serve(args: &Args) -> Result<()> {
             if args.has("requests") {
                 bail!("--requests conflicts with trace arrivals: the trace defines the requests");
             }
+            if args.has("prompt-tokens") {
+                bail!(
+                    "--prompt-tokens conflicts with trace arrivals: the trace carries \
+                     per-request prompt_tokens"
+                );
+            }
+            // The trace's prompt/generation split maps 1:1 onto the
+            // request: `prompt_tokens` prompt positions (prefilled in
+            // chunks), the rest generated. An oversized total is
+            // rejected at submit with this request's id/index.
             arrivals::load_trace(&path)?
                 .iter()
                 .enumerate()
                 .map(|(id, t)| Request {
                     id: id as u64,
-                    prompt: vec![1],
-                    n_new: (t.n_tokens - 1) as usize,
+                    prompt: vec![1; t.prompt_tokens as usize],
+                    n_new: (t.n_tokens - t.prompt_tokens) as usize,
                     arrival_cycle: t.arrival_cycle,
                 })
                 .collect()
         }
         spec => {
             let n = args.u64_or("requests", 8)? as usize;
+            let prompt_len = args.u64_or("prompt-tokens", 4)? as usize;
+            if prompt_len == 0 {
+                bail!("--prompt-tokens must be >= 1 (every request prefills one position)");
+            }
             let cycles = arrivals::generate(&spec, n, cfg.gddr6.freq_ghz, cfg.sched.seed)?;
             cycles
                 .iter()
                 .enumerate()
                 .map(|(id, &arrival_cycle)| Request {
                     id: id as u64,
-                    prompt: vec![1, 2, 3, (id % 17) as i32],
+                    prompt: (0..prompt_len).map(|i| ((id + i) % 17) as i32 + 1).collect(),
                     n_new: 12,
                     arrival_cycle,
                 })
@@ -457,6 +492,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         fmt_time_s(m.sim_makespan_seconds),
         m.sim_tokens_per_s()
     );
+    // Prefill/decode service split: the compute-dense prompt phase vs
+    // the memory-bound generation phase (timing-only serving; FIFO
+    // functional serving runs token-by-token and reports no split).
+    if m.sim_prefill_seconds > 0.0 || m.sim_decode_seconds > 0.0 {
+        println!(
+            "prefill chunk {}: prefill {} / decode {} of summed service {}",
+            cfg.sched.prefill_chunk,
+            fmt_time_s(m.sim_prefill_seconds),
+            fmt_time_s(m.sim_decode_seconds),
+            fmt_time_s(m.sim_seconds),
+        );
+    }
     // KV-capacity admission stats: fewer slots than K means the mapping
     // degraded (DRAM rows could not hold K disjoint contexts).
     // admission_blocked sums queued requests over admission attempts

@@ -65,10 +65,18 @@ impl UnitWork {
 pub struct VmmPlan {
     /// Work per bank (index = bank id).
     pub bank_work: Vec<UnitWork>,
-    /// Input vector elements to broadcast into the GB.
+    /// Input vector elements to broadcast into the GB *per pass*.
     pub input_elems: u64,
-    /// Output elements this channel produces (drained to the ASIC).
+    /// Output elements this channel produces per pass (drained to the
+    /// ASIC).
     pub output_elems: u64,
+    /// Input vectors streamed through the mapped rows (matrix-matrix
+    /// mode, chunked prefill). 1 = the classic vector-matrix VMM. Each
+    /// pass broadcasts its own `input_elems` into the GB and drains its
+    /// own `output_elems`; the banks pay their row ACT/PRE once and
+    /// `passes` MAC streams per row (`Bank::mac_block` /
+    /// `Bank::mac_pattern`).
+    pub passes: u64,
 }
 
 /// Result of executing one instruction on a channel.
@@ -130,6 +138,15 @@ impl Channel {
     }
 
     /// Execute a VMM instruction starting no earlier than `start`.
+    ///
+    /// With `plan.passes = T > 1` (matrix-matrix mode, chunked prefill)
+    /// the T input vectors stream through the mapped rows back to back:
+    /// the MACs begin once the *first* vector is staged in the GB while
+    /// the bus keeps feeding the rest (the MACs cannot finish before the
+    /// last vector has fully arrived), the banks pay each row's ACT/PRE
+    /// once for all T streams, and the drain moves T passes' worth of
+    /// results. `passes = 1` reproduces the classic vector-matrix
+    /// timeline cycle for cycle.
     pub fn execute_vmm(
         &mut self,
         cfg: &HwConfig,
@@ -138,14 +155,19 @@ impl Channel {
         plan: &VmmPlan,
     ) -> ChannelExec {
         assert_eq!(plan.bank_work.len(), self.banks.len(), "plan/bank arity");
+        let passes = plan.passes.max(1);
         self.catch_up_refresh(start, t);
 
         // 1. GB broadcast over the interface (serializes on the bus).
+        // Matrix-matrix mode loads one vector per pass; the MACs start
+        // after the first and the remaining loads pipeline underneath.
         let in_bytes = plan.input_elems * 2;
-        let gb_load = Self::xfer_cycles(cfg, in_bytes);
+        let per_pass_load = Self::xfer_cycles(cfg, in_bytes);
+        let gb_load = passes * per_pass_load;
         let bus_free = self.bus_busy_until.max(start);
-        let macs_start = bus_free + gb_load;
-        self.bytes_in += in_bytes;
+        let macs_start = bus_free + per_pass_load;
+        let input_done = bus_free + gb_load;
+        self.bytes_in += passes * in_bytes;
 
         // 2. Banks in parallel.
         let lanes = cfg.pim.mac_lanes as u64;
@@ -162,7 +184,9 @@ impl Channel {
             }
             let fin = match work {
                 UnitWork::Idle => macs_start,
-                UnitWork::Block(b) => bank.mac_block(macs_start, b, row_elems, t, lanes, fill),
+                UnitWork::Block(b) => {
+                    bank.mac_block(macs_start, b, row_elems, t, lanes, fill, passes)
+                }
                 UnitWork::Segments(s) => bank.mac_sweep(macs_start, s, t, lanes, fill),
                 UnitWork::Pattern { base_row, reps, pattern, pattern_len } => bank.mac_pattern(
                     macs_start,
@@ -172,6 +196,7 @@ impl Channel {
                     t,
                     lanes,
                     fill,
+                    passes,
                 ),
             };
             slowest = slowest.max(fin);
@@ -179,11 +204,13 @@ impl Channel {
         if first_ready == u64::MAX {
             first_ready = macs_start;
         }
+        // The last pass cannot finish before its input left the bus.
+        let slowest = slowest.max(input_done);
 
         // 3. Drain, pipelined: starts when the first partial result is
         // ready, proceeds at interface rate, cannot finish before the
         // slowest bank produced its last element.
-        let out_bytes = plan.output_elems * 2;
+        let out_bytes = passes * plan.output_elems * 2;
         let drain = Self::xfer_cycles(cfg, out_bytes);
         self.bytes_out += out_bytes;
         let finish = (first_ready + drain).max(slowest);
@@ -264,6 +291,7 @@ mod tests {
                 .collect(),
             input_elems: input,
             output_elems: output,
+            passes: 1,
         }
     }
 
@@ -339,6 +367,67 @@ mod tests {
         assert!(e.finish > 0);
         let (s, _) = ch.stats();
         assert!(s.row_hits > 0);
+    }
+
+    /// Tentpole pin (chunked prefill): a T-pass matrix-matrix VMM is
+    /// strictly cheaper than T separate vector-matrix VMMs over the same
+    /// rows (row ACT/PRE paid once instead of T times), never cheaper
+    /// than T times the pure MAC-stream time, and moves exactly T times
+    /// the bytes.
+    #[test]
+    fn multi_pass_vmm_amortizes_activations() {
+        let (cfg, t) = setup();
+        let passes = 8u64;
+        let plan1 = uniform_plan(&cfg, 4, 1024, 64);
+        let mut plant = uniform_plan(&cfg, 4, 1024, 64);
+        plant.passes = passes;
+
+        let mut chunked = Channel::new(&cfg);
+        let e = chunked.execute_vmm(&cfg, &t, 0, &plant);
+
+        let mut serial = Channel::new(&cfg);
+        let mut fin = 0;
+        for _ in 0..passes {
+            fin = serial.execute_vmm(&cfg, &t, fin, &plan1).finish;
+        }
+        assert!(
+            e.finish < fin,
+            "matrix-matrix {} !< {passes} vector-matrix passes {fin}",
+            e.finish
+        );
+        // Same data volume either way.
+        assert_eq!(chunked.bytes_in, serial.bytes_in);
+        assert_eq!(chunked.bytes_out, serial.bytes_out);
+        // Lower bound: the MAC streams themselves don't compress — at
+        // least T * rows * chunks of tCCD must elapse.
+        let min_mac = passes * 4 * 64 * t.tccd;
+        assert!(e.finish > min_mac, "finish {} below pure MAC floor {min_mac}", e.finish);
+        // passes = 1 in the plan is byte-identical to the legacy shape.
+        let mut a = Channel::new(&cfg);
+        let mut b = Channel::new(&cfg);
+        let ea = a.execute_vmm(&cfg, &t, 0, &plan1);
+        let mut plan1b = plan1.clone();
+        plan1b.passes = 1;
+        let eb = b.execute_vmm(&cfg, &t, 0, &plan1b);
+        assert_eq!(ea, eb);
+    }
+
+    /// The bus keeps feeding later passes while the MACs run, but the
+    /// VMM cannot finish before every pass's input has arrived.
+    #[test]
+    fn multi_pass_input_bounds_finish() {
+        let (cfg, t) = setup();
+        // Tiny MAC work, many passes: the input stream dominates.
+        let mut plan = uniform_plan(&cfg, 1, 1024, 1);
+        for b in 1..16 {
+            plan.bank_work[b] = UnitWork::Idle;
+        }
+        plan.passes = 64;
+        let mut ch = Channel::new(&cfg);
+        let e = ch.execute_vmm(&cfg, &t, 0, &plan);
+        // 64 passes x 64 cycles of GB load = 4096 cycles of input.
+        assert_eq!(e.gb_load_cycles, 64 * 64);
+        assert!(e.finish >= 64 * 64, "finish {} before input done", e.finish);
     }
 
     #[test]

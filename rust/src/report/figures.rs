@@ -14,7 +14,7 @@ use crate::mapping::ModelMapping;
 use crate::model::gpt::by_name;
 use crate::model::{GptModel, PAPER_MODELS};
 use crate::sim::arrivals::{self, ArrivalSpec};
-use crate::sim::{LatencyReport, MultiSim, Simulator, StreamSpec};
+use crate::sim::{LatencyReport, MultiSim, Simulator, StreamOutcome, StreamSpec};
 use crate::util::json::Json;
 use crate::util::table::{fmt_time_s, sig3, Table};
 use anyhow::{anyhow, Result};
@@ -443,7 +443,7 @@ pub fn fig_serving_tail_latency(
             let mut ms = MultiSim::from_mapping(m, &cfg, mapping.clone());
             for (id, &at) in arrival_cycles.iter().enumerate() {
                 let id = id as u64;
-                ms.submit(StreamSpec { id, n_tokens, arrival_cycle: at })?;
+                ms.submit(StreamSpec { id, n_tokens, prompt_tokens: 1, arrival_cycle: at })?;
             }
             ms.run_all()?;
             ms.finalize_stats();
@@ -521,7 +521,9 @@ pub fn fig_policy_comparison(
         let run = |cfg: &HwConfig, at: &[u64]| -> Result<(u64, Option<LatencyReport>, u64)> {
             let mut ms = MultiSim::from_mapping(m, cfg, mapping.clone());
             for (id, (&n, &a)) in lens.iter().zip(at.iter()).enumerate() {
-                ms.submit(StreamSpec { id: id as u64, n_tokens: n, arrival_cycle: a })?;
+                let spec =
+                    StreamSpec { id: id as u64, n_tokens: n, prompt_tokens: 1, arrival_cycle: a };
+                ms.submit(spec)?;
             }
             ms.run_all()?;
             ms.finalize_stats();
@@ -578,6 +580,81 @@ pub fn fig_policy_comparison(
     })
 }
 
+/// Chunked-prefill figure (beyond the paper): true TTFT (first
+/// *generated* token = prompt prefill completion) and end-to-end
+/// makespan versus prefill chunk size and prompt length, over the 8
+/// paper models. Each cell serves one `prompt`-token request generating
+/// `gen_tokens` new tokens on an uncontended K=1 engine; `chunk = 1` is
+/// the historical token-by-token prefill, so the speedup column is the
+/// activation/fill-amortization win the chunked programs buy. Prompts
+/// are clamped to each model's `max_seq - gen_tokens`. Fully
+/// deterministic (no arrivals, no RNG).
+pub fn fig_prefill(gen_tokens: u64, chunks: &[u64], prompts: &[u64]) -> Result<FigureReport> {
+    anyhow::ensure!(!chunks.is_empty() && !prompts.is_empty(), "need chunk and prompt lists");
+    let cfg = HwConfig::paper_baseline();
+    let freq_hz = cfg.gddr6.freq_ghz * 1e9;
+    let fmt = |cycles: u64| fmt_time_s(cycles as f64 / freq_hz);
+    let mut t = Table::new(vec![
+        "model", "prompt", "chunk", "ttft", "e2e", "ttft speedup vs chunk=1",
+    ]);
+    let mut arr = Vec::new();
+    for m in &PAPER_MODELS {
+        // One Algorithm-3 placement per model, shared by every run.
+        let mapping = ModelMapping::build(m, &cfg)?;
+        for &prompt in prompts {
+            let prompt = prompt.min(m.max_seq as u64 - gen_tokens).max(1);
+            let run_one = |chunk: u64| -> Result<(u64, u64)> {
+                let mut run_cfg = cfg.clone();
+                run_cfg.sched.prefill_chunk = chunk;
+                let mut ms = MultiSim::from_mapping(m, &run_cfg, mapping.clone());
+                ms.submit(StreamSpec::with_prompt(0, prompt, gen_tokens))?;
+                let results: Vec<_> = ms
+                    .run_all()?
+                    .into_iter()
+                    .filter_map(StreamOutcome::into_completed)
+                    .collect();
+                let r = results.first().ok_or_else(|| anyhow!("no stream retired"))?;
+                Ok((r.ttft_cycles(), r.e2e_cycles()))
+            };
+            // The speedup baseline is always the token-by-token run,
+            // whether or not chunk = 1 appears in the sweep list.
+            let (ttft_base, e2e_base) = run_one(1)?;
+            for &chunk in chunks {
+                let chunk = chunk.max(1);
+                let (ttft, e2e) =
+                    if chunk == 1 { (ttft_base, e2e_base) } else { run_one(chunk)? };
+                let speedup = ttft_base as f64 / ttft.max(1) as f64;
+                t.row(vec![
+                    m.name.to_string(),
+                    prompt.to_string(),
+                    chunk.to_string(),
+                    fmt(ttft),
+                    fmt(e2e),
+                    format!("{speedup:.2}x"),
+                ]);
+                arr.push(Json::obj(vec![
+                    ("model", m.name.into()),
+                    ("prompt_tokens", prompt.into()),
+                    ("gen_tokens", gen_tokens.into()),
+                    ("prefill_chunk", chunk.into()),
+                    ("ttft_cycles", ttft.into()),
+                    ("e2e_cycles", e2e.into()),
+                    ("ttft_speedup_vs_chunk1", speedup.into()),
+                ]));
+            }
+        }
+    }
+    Ok(FigureReport {
+        id: "prefill",
+        title: format!(
+            "Prefill: TTFT (first generated token) & makespan vs chunk size \
+             (uncontended K=1, +{gen_tokens} generated tokens)"
+        ),
+        rendered: t.render(),
+        json: Json::Arr(arr),
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -609,6 +686,39 @@ mod tests {
         let r = fig10_breakdown(4).unwrap();
         for row in r.json.as_arr().unwrap() {
             assert!(row.get("vmm_share").unwrap().as_f64().unwrap() > 0.7);
+        }
+    }
+
+    /// Acceptance: the prefill figure renders a row for every paper
+    /// model x chunk, and chunked prefill strictly beats token-by-token
+    /// TTFT on every model (the amortization headline).
+    #[test]
+    fn fig_prefill_renders_all_models_with_amortization() {
+        let r = fig_prefill(2, &[1, 16], &[48]).unwrap();
+        let arr = r.json.as_arr().unwrap();
+        assert_eq!(arr.len(), 8 * 2, "8 models x 2 chunk sizes");
+        for m in &PAPER_MODELS {
+            assert!(r.rendered.contains(m.name), "{} missing", m.name);
+            let rows: Vec<_> = arr
+                .iter()
+                .filter(|e| e.get("model").unwrap().as_str().unwrap() == m.name)
+                .collect();
+            let ttft = |chunk: f64| {
+                rows.iter()
+                    .find(|e| e.get("prefill_chunk").unwrap().as_f64().unwrap() == chunk)
+                    .unwrap()
+                    .get("ttft_cycles")
+                    .unwrap()
+                    .as_f64()
+                    .unwrap()
+            };
+            assert!(
+                ttft(16.0) < ttft(1.0),
+                "{}: chunk 16 ttft {} !< token-by-token {}",
+                m.name,
+                ttft(16.0),
+                ttft(1.0)
+            );
         }
     }
 

@@ -17,14 +17,17 @@
 //!   identical traces);
 //! * **trace:`<file>`** — a JSON file replayed through [`crate::util::json`].
 //!
-//! Trace-file schema (`n_tokens >= 1`; requests sorted by
-//! `arrival_cycle`; empty traces, out-of-order arrivals and unknown
-//! keys are rejected so a typo or corrupted file cannot silently change
-//! an experiment):
+//! Trace-file schema (`n_tokens >= 1` total positions, of which the
+//! leading `prompt_tokens` are prompt — optional, default 1, must stay
+//! within `n_tokens`; requests sorted by `arrival_cycle`; empty
+//! traces, out-of-order arrivals and unknown keys are rejected so a
+//! typo or corrupted file cannot silently change an experiment; a
+//! total exceeding the model's `max_seq` is rejected at submit with
+//! the offending request's index):
 //!
 //! ```json
 //! {"requests": [
-//!   {"arrival_cycle": 0,    "n_tokens": 16},
+//!   {"arrival_cycle": 0,    "n_tokens": 16, "prompt_tokens": 8},
 //!   {"arrival_cycle": 4096, "n_tokens": 8}
 //! ]}
 //! ```
@@ -145,8 +148,12 @@ pub fn generate(spec: &ArrivalSpec, n: usize, freq_ghz: f64, seed: u64) -> Resul
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct TraceRequest {
     pub arrival_cycle: u64,
-    /// Total decode positions (prompt + new tokens), >= 1.
+    /// Total positions (prompt + generated), >= 1.
     pub n_tokens: u64,
+    /// Leading positions that are prompt (prefill), in
+    /// `[1, n_tokens]`. Optional in the file; defaults to 1, the
+    /// historical no-split behavior.
+    pub prompt_tokens: u64,
 }
 
 /// Parse the trace-file schema (see the module docs). Rejects empty
@@ -169,8 +176,11 @@ pub fn parse_trace(json: &Json) -> Result<Vec<TraceRequest>> {
             None => bail!("trace request {i} must be an object"),
         };
         for key in obj.keys() {
-            if key != "arrival_cycle" && key != "n_tokens" {
-                bail!("trace request {i}: unknown key '{key}' (schema: arrival_cycle, n_tokens)");
+            if key != "arrival_cycle" && key != "n_tokens" && key != "prompt_tokens" {
+                bail!(
+                    "trace request {i}: unknown key '{key}' (schema: arrival_cycle, \
+                     n_tokens, prompt_tokens)"
+                );
             }
         }
         // JSON numbers are f64: demand exactly-representable integers
@@ -189,6 +199,18 @@ pub fn parse_trace(json: &Json) -> Result<Vec<TraceRequest>> {
         let arrival_cycle = int("arrival_cycle")?;
         let n_tokens = int("n_tokens")?;
         ensure!(n_tokens >= 1, "trace request {i}: n_tokens must be >= 1");
+        let prompt_tokens =
+            if obj.contains_key("prompt_tokens") { int("prompt_tokens")? } else { 1 };
+        ensure!(
+            prompt_tokens >= 1,
+            "trace request {i}: prompt_tokens must be >= 1 (every request prefills at \
+             least one position)"
+        );
+        ensure!(
+            prompt_tokens <= n_tokens,
+            "trace request {i}: prompt_tokens {prompt_tokens} exceeds n_tokens {n_tokens} \
+             (n_tokens counts total positions, prompt included)"
+        );
         if let Some(prev) = out.last() {
             ensure!(
                 arrival_cycle >= prev.arrival_cycle,
@@ -198,7 +220,7 @@ pub fn parse_trace(json: &Json) -> Result<Vec<TraceRequest>> {
                 prev.arrival_cycle
             );
         }
-        out.push(TraceRequest { arrival_cycle, n_tokens });
+        out.push(TraceRequest { arrival_cycle, n_tokens, prompt_tokens });
     }
     Ok(out)
 }
@@ -295,8 +317,8 @@ mod tests {
         .unwrap();
         let t = parse_trace(&j).unwrap();
         assert_eq!(t.len(), 2);
-        assert_eq!(t[0], TraceRequest { arrival_cycle: 0, n_tokens: 16 });
-        assert_eq!(t[1], TraceRequest { arrival_cycle: 4096, n_tokens: 8 });
+        assert_eq!(t[0], TraceRequest { arrival_cycle: 0, n_tokens: 16, prompt_tokens: 1 });
+        assert_eq!(t[1], TraceRequest { arrival_cycle: 4096, n_tokens: 8, prompt_tokens: 1 });
     }
 
     /// Satellite: equal arrivals are fine (a burst), strictly decreasing
@@ -324,6 +346,38 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("no requests"), "{err}");
+    }
+
+    /// Satellite: the optional `prompt_tokens` key parses with its
+    /// default of 1, validates against the request's total, and keeps
+    /// the unknown-key rejection intact.
+    #[test]
+    fn trace_schema_prompt_tokens() {
+        let j = Json::parse(
+            r#"{"requests": [{"arrival_cycle": 0, "n_tokens": 16, "prompt_tokens": 8},
+                             {"arrival_cycle": 10, "n_tokens": 4},
+                             {"arrival_cycle": 20, "n_tokens": 5, "prompt_tokens": 5}]}"#,
+        )
+        .unwrap();
+        let t = parse_trace(&j).unwrap();
+        assert_eq!(t[0], TraceRequest { arrival_cycle: 0, n_tokens: 16, prompt_tokens: 8 });
+        assert_eq!(t[1].prompt_tokens, 1, "absent key defaults to 1-token prompt");
+        assert_eq!(t[2].prompt_tokens, 5, "pure-prefill requests are legal");
+        // Invalid splits fail loudly with the offending index.
+        let bad = Json::parse(
+            r#"{"requests": [{"arrival_cycle": 0, "n_tokens": 4},
+                             {"arrival_cycle": 5, "n_tokens": 4, "prompt_tokens": 5}]}"#,
+        )
+        .unwrap();
+        let err = parse_trace(&bad).unwrap_err().to_string();
+        assert!(err.contains("request 1") && err.contains("exceeds n_tokens"), "{err}");
+        for bad in [
+            r#"{"requests": [{"arrival_cycle": 0, "n_tokens": 4, "prompt_tokens": 0}]}"#,
+            r#"{"requests": [{"arrival_cycle": 0, "n_tokens": 4, "prompt_tokens": 1.5}]}"#,
+            r#"{"requests": [{"arrival_cycle": 0, "n_tokens": 4, "promt_tokens": 2}]}"#,
+        ] {
+            assert!(parse_trace(&Json::parse(bad).unwrap()).is_err(), "accepted {bad}");
+        }
     }
 
     #[test]
@@ -354,7 +408,7 @@ mod tests {
         std::fs::write(&path, r#"{"requests": [{"arrival_cycle": 12, "n_tokens": 3}]}"#).unwrap();
         let t = load_trace(path.to_str().unwrap()).unwrap();
         std::fs::remove_file(&path).ok();
-        assert_eq!(t, vec![TraceRequest { arrival_cycle: 12, n_tokens: 3 }]);
+        assert_eq!(t, vec![TraceRequest { arrival_cycle: 12, n_tokens: 3, prompt_tokens: 1 }]);
         assert!(load_trace("/nonexistent/trace.json").is_err());
     }
 }

@@ -125,7 +125,9 @@ impl Simulator {
             mapping: &self.mapping,
         };
         for i in 0..tpl.len() {
-            // Single-stream decoding always occupies KV slot 0.
+            // Single-stream decoding always occupies KV slot 0 and runs
+            // one position per step (`passes = 1`; chunked prefill lives
+            // in the multi-stream engine, `sim::sched` + `sim::prefill`).
             let instr = tpl.instr_at(i, ltoken, 0);
             let out = self.res.issue(
                 &ctx,
@@ -137,6 +139,7 @@ impl Simulator {
                 &self.first_ready,
                 pos,
                 ltoken,
+                1,
             );
             // Streamable ops may *start* before `ready` (pipelined with
             // their producer) but never finish before it.

@@ -5,15 +5,21 @@
 //! the paper's simulator) and a multi-request interleaving scheduler
 //! ([`sched`]) — both front ends execute instructions through the same
 //! `Resources::issue` path, so K = 1 interleaved scheduling reproduces
-//! the single-stream simulator exactly. Open-loop request arrivals
-//! (batch / fixed / Poisson / trace replay) come from [`arrivals`] and
-//! feed the tail-latency percentiles in [`stats`]; *which* request runs
-//! next — and whether it is admitted at all under a latency SLO — is
-//! the pluggable policy subsystem in [`policy`]. See `sim/README.md`.
+//! the single-stream simulator exactly. Requests carry an explicit
+//! prompt/generation split: prompts run as batched *prefill chunks*
+//! ([`prefill`] — matrix-matrix programs that amortize DRAM row
+//! activations and ASIC pipeline fills over the chunk), generation as
+//! per-token decode steps, and TTFT measures the real first *generated*
+//! token. Open-loop request arrivals (batch / fixed / Poisson / trace
+//! replay) come from [`arrivals`] and feed the tail-latency percentiles
+//! in [`stats`]; *which* request runs next — and whether it is admitted
+//! at all under a latency SLO — is the pluggable policy subsystem in
+//! [`policy`]. See `sim/README.md`.
 
 pub mod arrivals;
 pub mod engine;
 pub mod policy;
+pub mod prefill;
 pub mod resources;
 pub mod sched;
 pub mod stats;
@@ -21,6 +27,7 @@ pub mod stats;
 pub use arrivals::{ArrivalSpec, TraceRequest};
 pub use engine::{Simulator, StepResult};
 pub use policy::{AdmissionPolicy, PickPolicy, PolicySpec};
+pub use prefill::Chunk;
 pub use resources::Resources;
 pub use sched::{MultiSim, RejectedStream, StreamOutcome, StreamResult, StreamSpec};
 pub use stats::{LatClass, LatencyReport, Percentiles, SimStats, StreamStats};

@@ -23,10 +23,11 @@ impl AdmissionPolicy for AdmitAlways {
 }
 
 /// SLO-aware admission: shed a request whose predicted TTFT — queue
-/// wait so far plus the engine's conservative uncontended first-token
-/// cost (derived from the compiled regime-0 program template, see
-/// `MultiSim::first_token_estimate`) — already exceeds the configured
-/// budget.
+/// wait so far plus the engine's conservative uncontended
+/// first-*generated*-token cost (the chunked-prefill replay of the
+/// request's actual prompt length, see
+/// `MultiSim::first_token_estimate` / `sim::prefill`) — already
+/// exceeds the configured budget.
 ///
 /// The predictor is monotone in waiting time, so there is no point
 /// deferring a busted request in the hope it improves: the reject
@@ -74,7 +75,7 @@ mod tests {
     use super::*;
 
     fn spec() -> StreamSpec {
-        StreamSpec { id: 0, n_tokens: 4, arrival_cycle: 0 }
+        StreamSpec { id: 0, n_tokens: 4, prompt_tokens: 1, arrival_cycle: 0 }
     }
 
     #[test]

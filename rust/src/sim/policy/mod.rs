@@ -152,8 +152,11 @@ pub enum AdmissionDecision {
 /// `decide` runs at the moment a free KV slot is available for the
 /// request: `wait_cycles` is the queue delay its admission stamp would
 /// record, and `first_token_est_cycles` is the engine's conservative
-/// uncontended first-token cost (only computed when `needs_estimate`
-/// returns true; 0 otherwise).
+/// uncontended first-*generated*-token cost — the chunked-prefill
+/// replay of the request's *actual* prompt length
+/// (`sim::prefill::isolated_prefill_cost` + warm-start padding), so
+/// long prompts predict proportionally higher TTFT than short ones
+/// (only computed when `needs_estimate` returns true; 0 otherwise).
 pub trait AdmissionPolicy {
     /// Short name for reports and metrics.
     fn name(&self) -> &'static str;

@@ -105,7 +105,7 @@ mod tests {
     }
 
     fn spec(id: u64, n_tokens: u64) -> StreamSpec {
-        StreamSpec { id, n_tokens, arrival_cycle: 0 }
+        StreamSpec { id, n_tokens, prompt_tokens: 1, arrival_cycle: 0 }
     }
 
     #[test]

@@ -1,0 +1,229 @@
+//! Chunked-prefill planning and cost accounting.
+//!
+//! Prompt ingestion is compute-dense and latency-critical (time to
+//! first token *is* the prefill completion), while decode is
+//! memory-bound — serving-oriented PIM work treats the two as distinct
+//! scheduling problems. This module owns the prefill side:
+//!
+//! * **Chunk planning** ([`chunks`]): a prompt of `P` positions is
+//!   split into `ceil(P / chunk)` chunks of at most
+//!   `sched.prefill_chunk` consecutive positions. Each chunk executes
+//!   as *one* program (the decode template of its last position,
+//!   served from the shared `ProgramCache`) issued in matrix-matrix
+//!   mode: `Resources::issue` receives the chunk length as `passes`,
+//!   so every weight row's ACT/PRE and every ASIC op's pipeline fill
+//!   are paid once per chunk instead of once per position — prefill
+//!   cost grows sublinearly in the chunk size.
+//!
+//! * **Amortization model**: per weight row, token-by-token prefill
+//!   pays `T * (switch + fill + chunks·tCCD)`; a `T`-position chunk
+//!   pays `switch + T * (fill + chunks·tCCD)` (`dram::bank`), the GB
+//!   staging of the `T` input vectors pipelines under the MACs
+//!   (`pim::channel`), and the ASIC executes one `T`-scaled op per
+//!   node (`AsicOp::for_positions`). KV writes cover all `T`
+//!   positions at full per-position cost (column-major V writes have
+//!   no locality to amortize — paper §IV.B). KV *reads* charge the
+//!   chunk-end context for every pass — conservative for the
+//!   causally-masked earlier positions, but the parallel-bank
+//!   critical path is set by the oldest token's unit either way.
+//!
+//! * **Head-of-line bound**: the multi-stream engine interleaves at
+//!   instruction granularity, so a chunk's individual instructions —
+//!   each up to `chunk`× longer than a decode-step instruction — are
+//!   the unit of head-of-line blocking another stream can experience.
+//!   `sched.prefill_chunk` is therefore a latency/throughput knob:
+//!   larger chunks amortize more but hold shared resources longer.
+//!
+//! * **Isolated prefill cost** ([`isolated_prefill_cost`]): the exact
+//!   uncontended critical path of a prompt's chunk sequence, replayed
+//!   on scratch [`Resources`] (live hardware state untouched). The
+//!   SLO admission predictor uses this instead of the old regime-0
+//!   single-step replay, so admission decisions track the *actual*
+//!   prompt length of each request. For a 1-token prompt it
+//!   degenerates to exactly the regime-0 replay.
+//!
+//! **Determinism rules**: chunk boundaries are a pure function of
+//! `(prompt_tokens, prefill_chunk)`; the cost replay consults no
+//! clock and no RNG. `prefill_chunk = 1` issues every position with
+//! `passes = 1` and is cycle-identical to the historical
+//! token-by-token path (pinned in `tests/integration_sched.rs`).
+
+use super::resources::{empty_plan, IssueCtx, Resources};
+use crate::compiler::ProgramCache;
+use crate::config::HwConfig;
+use crate::dram::TimingCycles;
+use crate::mapping::ModelMapping;
+use crate::model::GptModel;
+use anyhow::Result;
+
+/// One prefill chunk: `len` consecutive positions starting at
+/// `start_pos` (so it attends over `start_pos + len` tokens).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Chunk {
+    pub start_pos: u64,
+    pub len: u64,
+}
+
+impl Chunk {
+    /// Context length after the chunk (the `ltoken` its KV reads use).
+    pub fn ltoken_end(&self) -> u64 {
+        self.start_pos + self.len
+    }
+
+    /// Position whose decode regime compiles this chunk's program (the
+    /// chunk's last position — the conservative representative).
+    pub fn regime_pos(&self) -> u64 {
+        self.start_pos + self.len - 1
+    }
+}
+
+/// Deterministic chunk schedule for a `prompt_tokens`-position prompt
+/// at chunk size `chunk` (clamped to >= 1): full-size chunks followed
+/// by one remainder chunk. `chunks(p, 1)` yields `p` single-position
+/// chunks — the token-by-token path.
+pub fn chunks(prompt_tokens: u64, chunk: u64) -> impl Iterator<Item = Chunk> {
+    let step = chunk.max(1);
+    let n = crate::util::ceil_div(prompt_tokens, step);
+    (0..n).map(move |i| {
+        chunk_at(i * step, prompt_tokens, step)
+            .expect("i * step < prompt_tokens for every yielded index")
+    })
+}
+
+/// The prefill chunk whose step begins at `pos`, or `None` once the
+/// prompt is done (the caller is in decode). This is the single source
+/// of truth for chunk boundaries: the engine's admission and
+/// step-advance paths and the SLO predictor's replay (via [`chunks`])
+/// all derive their chunk length and regime position from it.
+pub fn chunk_at(pos: u64, prompt_tokens: u64, chunk: u64) -> Option<Chunk> {
+    if pos >= prompt_tokens {
+        return None;
+    }
+    Some(Chunk { start_pos: pos, len: chunk.max(1).min(prompt_tokens - pos) })
+}
+
+/// Chunk length of the step that begins at `pos` (0 once the prompt is
+/// done).
+pub fn chunk_len_at(pos: u64, prompt_tokens: u64, chunk: u64) -> u64 {
+    chunk_at(pos, prompt_tokens, chunk).map_or(0, |c| c.len)
+}
+
+/// Exact uncontended critical path of prefilling a `prompt_tokens`
+/// prompt under `cfg.sched.prefill_chunk`-sized chunks, replayed on
+/// scratch hardware (the caller's live `Resources` are untouched).
+/// Chunk programs come from (and warm) the shared `cache`. This is the
+/// first-*generated*-token service bound the SLO admission predictor
+/// pads with worst-case warm-start costs (`MultiSim`).
+pub fn isolated_prefill_cost(
+    model: &GptModel,
+    cfg: &HwConfig,
+    t: &TimingCycles,
+    mapping: &ModelMapping,
+    cache: &mut ProgramCache,
+    prompt_tokens: u64,
+) -> Result<u64> {
+    let mut res = Resources::new(cfg);
+    let mut plan = empty_plan(cfg);
+    let mut finish: Vec<u64> = Vec::new();
+    let mut first_ready: Vec<u64> = Vec::new();
+    let ctx = IssueCtx { cfg, t, model, mapping };
+    let mut step_start = 0u64;
+    for c in chunks(prompt_tokens.max(1), cfg.sched.prefill_chunk) {
+        let tpl = cache.get(model, cfg, c.regime_pos())?;
+        finish.clear();
+        first_ready.clear();
+        let mut chunk_finish = step_start;
+        for i in 0..tpl.len() {
+            let instr = tpl.instr_at(i, c.ltoken_end(), 0);
+            let out = res.issue(
+                &ctx,
+                &mut plan,
+                &instr,
+                tpl.deps_of(i),
+                step_start,
+                &finish,
+                &first_ready,
+                c.start_pos,
+                c.ltoken_end(),
+                c.len,
+            );
+            first_ready.push(out.first_ready);
+            finish.push(out.finish);
+            chunk_finish = chunk_finish.max(out.finish);
+        }
+        step_start = chunk_finish;
+    }
+    Ok(step_start)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::gpt::by_name;
+
+    #[test]
+    fn chunk_plan_covers_the_prompt_exactly() {
+        for (p, c, want) in [
+            (1u64, 32u64, vec![(0u64, 1u64)]),
+            (5, 1, vec![(0, 1), (1, 1), (2, 1), (3, 1), (4, 1)]),
+            (64, 32, vec![(0, 32), (32, 32)]),
+            (70, 32, vec![(0, 32), (32, 32), (64, 6)]),
+            (32, 128, vec![(0, 32)]),
+            // chunk = 0 clamps to 1 (token-by-token).
+            (3, 0, vec![(0, 1), (1, 1), (2, 1)]),
+        ] {
+            let got: Vec<(u64, u64)> =
+                chunks(p, c).map(|ch| (ch.start_pos, ch.len)).collect();
+            assert_eq!(got, want, "prompt {p} chunk {c}");
+            let covered: u64 = got.iter().map(|&(_, l)| l).sum();
+            assert_eq!(covered, p);
+            // Contiguous, in order.
+            let mut next = 0;
+            for &(s, l) in &got {
+                assert_eq!(s, next);
+                assert!(l >= 1);
+                next = s + l;
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_len_at_matches_plan() {
+        for p in [1u64, 5, 64, 70] {
+            for c in [1u64, 8, 32] {
+                for ch in chunks(p, c) {
+                    assert_eq!(chunk_len_at(ch.start_pos, p, c), ch.len);
+                }
+                assert_eq!(chunk_len_at(p, p, c), 0, "decode positions have no chunk");
+            }
+        }
+        assert_eq!(chunks(0, 8).count(), 0, "no prompt, no chunks");
+    }
+
+    /// The isolated cost is deterministic, strictly positive, and
+    /// monotone in prompt length; chunking strictly beats token-by-token
+    /// on a long prompt (the amortization the subsystem exists for).
+    #[test]
+    fn isolated_cost_monotone_and_amortized() {
+        let m = by_name("gpt-nano").unwrap();
+        let cost = |prompt: u64, chunk: u64| {
+            let mut cfg = HwConfig::paper_baseline();
+            cfg.sched.prefill_chunk = chunk;
+            let mapping = ModelMapping::build(&m, &cfg).unwrap();
+            let t = TimingCycles::from_config(&cfg);
+            let mut cache = ProgramCache::new();
+            isolated_prefill_cost(&m, &cfg, &t, &mapping, &mut cache, prompt).unwrap()
+        };
+        let c1 = cost(1, 32);
+        assert!(c1 > 0);
+        assert_eq!(c1, cost(1, 1), "a 1-token prompt is one 1-position chunk regardless");
+        assert!(cost(16, 32) > c1, "longer prompts cost more");
+        let tokenwise = cost(64, 1);
+        let chunked = cost(64, 32);
+        assert!(
+            chunked < tokenwise,
+            "chunked prefill {chunked} !< token-by-token {tokenwise}"
+        );
+        assert_eq!(cost(64, 32), chunked, "deterministic replay");
+    }
+}

@@ -67,6 +67,7 @@ pub fn empty_plan(cfg: &HwConfig) -> VmmPlan {
         bank_work: (0..cfg.gddr6.banks_per_channel).map(|_| UnitWork::Idle).collect(),
         input_elems: 0,
         output_elems: 0,
+        passes: 1,
     }
 }
 
@@ -82,8 +83,20 @@ impl Resources {
     /// Execute one instruction of a stream's program.
     ///
     /// `finish` / `first_ready` are the issuing stream's per-node times
-    /// for already-issued nodes of the *current* token; `step_start` is
-    /// when that token began; `pos` / `ltoken` drive KV addressing.
+    /// for already-issued nodes of the *current* step; `step_start` is
+    /// when that step began; `pos` / `ltoken` drive KV addressing.
+    ///
+    /// `passes` is the number of consecutive token positions the step
+    /// covers (a prefill *chunk*; 1 = a plain decode step): VMMs run in
+    /// matrix-matrix mode (row ACT/PRE and GB staging amortized over the
+    /// `passes` input vectors), ASIC ops cover `passes` positions with
+    /// one pipeline fill, and KV writes store positions
+    /// `pos .. pos + passes`. KV reads address the chunk-end context
+    /// `ltoken = pos + passes` for every pass — conservative for the
+    /// causally-masked earlier positions of the chunk (they attend over
+    /// fewer tokens than charged), which keeps the chunk program a
+    /// single instruction stream; the parallel-bank critical path is
+    /// dominated by the oldest token's unit either way.
     #[allow(clippy::too_many_arguments)]
     pub(crate) fn issue(
         &mut self,
@@ -96,7 +109,9 @@ impl Resources {
         first_ready: &[u64],
         pos: u64,
         ltoken: u64,
+        passes: u64,
     ) -> Issued {
+        let passes = passes.max(1);
         let mut ready = step_start;
         for &d in deps {
             ready = ready.max(finish[d]);
@@ -104,7 +119,7 @@ impl Resources {
         match instr {
             Instr::PimVmm { matrix, class, in_elems, slot, .. } => {
                 let (fin, fr) = self.exec_vmm(
-                    ctx, plan, ready, matrix.layer, matrix.kind, *slot, *in_elems, ltoken,
+                    ctx, plan, ready, matrix.layer, matrix.kind, *slot, *in_elems, ltoken, passes,
                 );
                 Issued {
                     ready,
@@ -119,6 +134,7 @@ impl Resources {
                 // VMM deps gate at first_ready — but cannot finish
                 // before all inputs have fully arrived (dep finish)
                 // plus the tail of processing the last chunk.
+                let op = op.for_positions(passes);
                 let start = if op.streamable() {
                     let mut s = step_start;
                     for &d in deps {
@@ -128,7 +144,7 @@ impl Resources {
                 } else {
                     ready.max(self.asic_free)
                 };
-                let fin = self.engine.execute(start, op);
+                let fin = self.engine.execute(start, &op);
                 let fin = if op.streamable() {
                     // Last-chunk tail: engine fill + one burst.
                     fin.max(ready + TAIL_CYCLES)
@@ -136,13 +152,21 @@ impl Resources {
                     fin
                 };
                 self.asic_free = fin;
-                Issued { ready, finish: fin, first_ready: fin, class: asic_class(op) }
+                Issued { ready, finish: fin, first_ready: fin, class: asic_class(&op) }
             }
             Instr::WriteK { layer, slot } => {
-                let (unit, segs) = ctx.mapping.kv.k_write(*layer, *slot, pos);
+                // A chunk writes the Key vectors of every covered
+                // position; tokens round-robin over units, so the writes
+                // fan out across channels (each channel's shared bus
+                // serializes whatever lands on it).
                 let mut fin = ready;
-                for seg in segs {
-                    fin = self.channels[unit.channel].write_k(ctx.t, fin, unit.bank, seg);
+                for p in pos..pos + passes {
+                    let (unit, segs) = ctx.mapping.kv.k_write(*layer, *slot, p);
+                    let mut f = ready;
+                    for seg in segs {
+                        f = self.channels[unit.channel].write_k(ctx.t, f, unit.bank, seg);
+                    }
+                    fin = fin.max(f);
                 }
                 Issued { ready, finish: fin, first_ready: fin, class: LatClass::KvWrite }
             }
@@ -154,20 +178,27 @@ impl Resources {
                 // issue-order chain — not just the leaf `busy_until`
                 // clamp — is what the K=1 equivalence guarantee depends
                 // on (pinned by `writev_serializes_per_channel_pinned`).
+                // A chunk stores every covered position's Value elements
+                // (column-major writes have no locality to amortize —
+                // paper §IV.B — so the chunk pays the full per-position
+                // cost and the `chan_fin` chain simply extends over the
+                // chunk's positions).
                 let kv = &ctx.mapping.kv;
                 let banks = kv.banks_per_channel;
                 let n_channels = kv.n_units / banks;
                 let mut fin = ready;
                 for ch in 0..n_channels {
                     let mut chan_fin = ready;
-                    for b in 0..banks {
-                        let u = ch * banks + b;
-                        let (base, n_cols, stride) = kv.v_write(*layer, *slot, pos, u);
-                        if n_cols == 0 {
-                            continue;
+                    for p in pos..pos + passes {
+                        for b in 0..banks {
+                            let u = ch * banks + b;
+                            let (base, n_cols, stride) = kv.v_write(*layer, *slot, p, u);
+                            if n_cols == 0 {
+                                continue;
+                            }
+                            chan_fin =
+                                self.channels[ch].write_v(ctx.t, chan_fin, b, n_cols, base, stride);
                         }
-                        chan_fin =
-                            self.channels[ch].write_v(ctx.t, chan_fin, b, n_cols, base, stride);
                     }
                     fin = fin.max(chan_fin);
                 }
@@ -177,7 +208,9 @@ impl Resources {
     }
 
     /// Dispatch a VMM to all channels; returns (slowest finish, earliest
-    /// first-partial-result time).
+    /// first-partial-result time). `passes > 1` runs matrix-matrix
+    /// (chunked prefill): the same mapped rows stream `passes` input
+    /// vectors, paying ACT/PRE once per row.
     #[allow(clippy::too_many_arguments)]
     fn exec_vmm(
         &mut self,
@@ -189,12 +222,14 @@ impl Resources {
         slot: usize,
         in_elems: u64,
         ltoken: u64,
+        passes: u64,
     ) -> (u64, u64) {
         let banks = ctx.cfg.gddr6.banks_per_channel;
         let n_head = ctx.model.n_head as u64;
         let mut slowest = start;
         let mut first_ready = u64::MAX;
         plan.input_elems = in_elems;
+        plan.passes = passes;
         match kind {
             MatrixKind::KCache | MatrixKind::VCache => {
                 // KV reads are uniform repetitions of a row-fill pattern
@@ -320,7 +355,22 @@ mod tests {
         let mut res = Resources::new(cfg);
         let mut plan = empty_plan(cfg);
         let ctx = IssueCtx { cfg, t, model, mapping };
-        res.issue(&ctx, &mut plan, instr, &[], 0, &[], &[], ltoken - 1, ltoken)
+        res.issue(&ctx, &mut plan, instr, &[], 0, &[], &[], ltoken - 1, ltoken, 1)
+    }
+
+    fn issue_chunk(
+        cfg: &HwConfig,
+        t: &TimingCycles,
+        model: &GptModel,
+        mapping: &ModelMapping,
+        instr: &Instr,
+        pos: u64,
+        passes: u64,
+    ) -> Issued {
+        let mut res = Resources::new(cfg);
+        let mut plan = empty_plan(cfg);
+        let ctx = IssueCtx { cfg, t, model, mapping };
+        res.issue(&ctx, &mut plan, instr, &[], 0, &[], &[], pos, pos + passes, passes)
     }
 
     /// Regression pin (satellite): a WriteV's units serialize over each
@@ -342,6 +392,61 @@ mod tests {
         assert_eq!(out.finish, per_channel, "expected full per-channel serialization");
         // Sanity: strictly more than one unit's worth (the old bug).
         assert!(out.finish > per_unit);
+    }
+
+    /// Tentpole pin (chunked prefill): issuing one instruction with
+    /// `passes = T` costs strictly less than issuing it `T` times
+    /// position by position for weight VMMs (activation + GB-staging
+    /// amortization) and ASIC ops (fill amortization), and exactly the
+    /// per-position sum for KV writes (column-major writes have no
+    /// locality to amortize; K writes land on different units whose
+    /// channel buses run in parallel, so the chunk can even finish
+    /// earlier — never later than the slowest single position).
+    #[test]
+    fn chunk_issue_amortizes_weight_vmms_and_asic() {
+        use crate::model::MatrixId;
+        let (cfg, t, m, mapping) = setup("gpt2-small", 1);
+        let passes = 8u64;
+
+        let vmm = Instr::PimVmm {
+            matrix: MatrixId::new(0, MatrixKind::Wqkv),
+            class: crate::model::VmmClass::Qkv,
+            in_elems: m.d_model as u64,
+            out_elems: 3 * m.d_model as u64,
+            parts: 1,
+            slot: 0,
+        };
+        let chunk = issue_chunk(&cfg, &t, &m, &mapping, &vmm, 0, passes);
+        let mut serial = Resources::new(&cfg);
+        let mut plan = empty_plan(&cfg);
+        let ctx = IssueCtx { cfg: &cfg, t: &t, model: &m, mapping: &mapping };
+        let mut fin = 0u64;
+        for p in 0..passes {
+            fin = serial.issue(&ctx, &mut plan, &vmm, &[], fin, &[], &[], p, p + 1, 1).finish;
+        }
+        assert!(chunk.finish < fin, "chunk VMM {} !< serial {fin}", chunk.finish);
+
+        let gelu = Instr::Asic(crate::asic::AsicOp::Gelu { n: 4 * m.d_model as u64 });
+        let chunk = issue_chunk(&cfg, &t, &m, &mapping, &gelu, 0, passes);
+        let single = issue_one(&cfg, &t, &m, &mapping, &gelu, 1);
+        assert!(chunk.finish < passes * single.finish, "asic fill must amortize");
+        assert!(chunk.finish > single.finish, "a chunk still covers more work");
+
+        // K writes: a chunk stores every position; round-robin units put
+        // consecutive positions on different channels, so the chunk is
+        // bounded by the per-position cost, not the sum.
+        let wk = Instr::WriteK { layer: 0, slot: 0 };
+        let chunk = issue_chunk(&cfg, &t, &m, &mapping, &wk, 0, passes);
+        let single = issue_one(&cfg, &t, &m, &mapping, &wk, 1);
+        assert!(chunk.finish >= single.finish);
+        assert!(chunk.finish <= passes * single.finish);
+
+        // V writes: no locality to amortize — exactly the serial sum
+        // (per-channel chains extend over the chunk's positions).
+        let wv = Instr::WriteV { layer: 0, slot: 0 };
+        let chunk = issue_chunk(&cfg, &t, &m, &mapping, &wv, 0, passes);
+        let single = issue_one(&cfg, &t, &m, &mapping, &wv, 1);
+        assert_eq!(chunk.finish, passes * single.finish);
     }
 
     /// Slot choice shifts KV base rows but never cycle costs: the same

@@ -28,6 +28,22 @@
 //! `max_streams = 1` it reproduces the single-stream `Simulator`
 //! token-for-token (`tests/integration_sched.rs`).
 //!
+//! **Chunked prefill** (`super::prefill`): every request carries a
+//! prompt/generation split. The leading `prompt_tokens` positions run
+//! as a sequence of `sched.prefill_chunk`-sized *chunk programs* — one
+//! instruction stream covering up to `chunk` consecutive positions,
+//! issued in matrix-matrix mode so weight-row activations, GB staging
+//! and ASIC pipeline fills amortize over the chunk — and the remaining
+//! positions decode one token per step. Chunk instructions interleave
+//! with other streams' decode instructions at the same per-instruction
+//! granularity, so `prefill_chunk` bounds the head-of-line blocking a
+//! long prompt can inflict (each chunk instruction holds shared
+//! resources up to `chunk`x longer than a decode instruction). TTFT is
+//! the *first generated token*: the completion of the prompt's last
+//! prefill position, when the first output token's logits exist. With
+//! `prefill_chunk = 1` every position issues exactly like the
+//! historical all-decode path, cycle for cycle.
+//!
 //! **Open-loop arrivals**: every request carries an explicit
 //! `arrival_cycle` (simulated time; 0 = present at start, reproducing
 //! the closed-loop batch). `submit` is *host bookkeeping* and stamps
@@ -58,6 +74,7 @@ use std::collections::VecDeque;
 use std::rc::Rc;
 
 use super::policy::{self, AdmissionDecision, AdmissionPolicy, IssueCandidate, PickPolicy};
+use super::prefill;
 use super::resources::{empty_plan, IssueCtx, Resources};
 use super::stats::{SimStats, StreamStats};
 use crate::compiler::{ProgramCache, ProgramTemplate};
@@ -68,22 +85,45 @@ use crate::model::GptModel;
 use crate::pim::VmmPlan;
 use anyhow::{bail, Result};
 
-/// One generation request, in simulator terms: decode positions
-/// `0..n_tokens` (prompt prefill + new tokens both cost a decode step,
-/// matching `PimGptSystem::generate`).
+/// One generation request, in simulator terms: positions
+/// `0..n_tokens`, of which the leading `prompt_tokens` are prompt
+/// (batched into prefill chunks — `super::prefill`) and the rest are
+/// generated one decode step at a time.
 #[derive(Clone, Copy, Debug)]
 pub struct StreamSpec {
     pub id: u64,
+    /// Total positions (prompt + generated), >= 1.
     pub n_tokens: u64,
+    /// Leading positions that are prompt, in `[1, n_tokens]`. 1 (the
+    /// [`StreamSpec::new`] default) reproduces the historical
+    /// no-prompt-split behavior cycle for cycle; use
+    /// [`StreamSpec::with_prompt`] for real prompted requests.
+    pub prompt_tokens: u64,
     /// Simulated cycle the request arrives. 0 (see [`StreamSpec::new`])
     /// reproduces the closed-loop batch-at-zero behavior exactly.
     pub arrival_cycle: u64,
 }
 
 impl StreamSpec {
-    /// A request present at cycle 0 (closed-loop batch).
+    /// A request present at cycle 0 (closed-loop batch) with a 1-token
+    /// prompt — the historical constructor, pinned cycle-identical to
+    /// the pre-prefill engine.
     pub fn new(id: u64, n_tokens: u64) -> Self {
-        Self { id, n_tokens, arrival_cycle: 0 }
+        Self { id, n_tokens, prompt_tokens: 1, arrival_cycle: 0 }
+    }
+
+    /// A request with an explicit prompt/generation split: a
+    /// `prompt_tokens`-position prompt followed by `gen_tokens`
+    /// generated tokens (total positions = `prompt_tokens +
+    /// gen_tokens`; the prompt's last position produces the first
+    /// generated token, so `gen_tokens = 0` is a pure-prefill request).
+    pub fn with_prompt(id: u64, prompt_tokens: u64, gen_tokens: u64) -> Self {
+        Self { id, n_tokens: prompt_tokens + gen_tokens, prompt_tokens, arrival_cycle: 0 }
+    }
+
+    /// Positions past the prompt (decode steps).
+    pub fn gen_tokens(&self) -> u64 {
+        self.n_tokens.saturating_sub(self.prompt_tokens)
     }
 }
 
@@ -102,9 +142,13 @@ pub struct StreamResult {
     /// Cycle its last token finished.
     pub finish_cycle: u64,
     pub tokens: u64,
+    /// Leading positions that were prompt (prefill).
+    pub prompt_tokens: u64,
     /// KV slot the stream occupied while in flight.
     pub kv_slot: usize,
-    /// Finish cycle of each token (monotone; first entry >= admitted).
+    /// Finish cycle of each position (nondecreasing; the positions of
+    /// one prefill chunk share their chunk's finish, decode positions
+    /// strictly increase; first entry >= admitted).
     pub token_finishes: Vec<u64>,
 }
 
@@ -118,13 +162,31 @@ impl StreamResult {
         self.finish_cycle - self.admitted_cycle
     }
 
-    /// Time to first token: first decode-step completion minus arrival
-    /// (includes queueing). The engine models prompt prefill as decode
-    /// steps and `StreamSpec` carries no prompt/generated split, so for
-    /// a multi-token prompt this is the first *prefill* completion — a
-    /// lower bound on the first generated token a client would see.
+    /// Cycle the prompt finished prefilling — when the first *generated*
+    /// token's logits exist (the prompt's last position produces them).
+    pub fn prefill_finish_cycle(&self) -> u64 {
+        let idx = self.prompt_tokens.clamp(1, self.token_finishes.len() as u64) as usize;
+        self.token_finishes.get(idx - 1).copied().unwrap_or(self.finish_cycle)
+    }
+
+    /// Time to first *generated* token: prompt-prefill completion minus
+    /// arrival (includes queueing). This is the client-visible first
+    /// output token, not the first prefill position — the engine runs
+    /// prompts as chunked prefill (`super::prefill`) and stamps the
+    /// real thing. For a 1-token prompt it equals the first step's
+    /// completion, the historical definition.
     pub fn ttft_cycles(&self) -> u64 {
-        self.token_finishes.first().copied().unwrap_or(self.finish_cycle) - self.arrival_cycle
+        self.prefill_finish_cycle() - self.arrival_cycle
+    }
+
+    /// Prefill share of the service: admission to prompt completion.
+    pub fn prefill_cycles(&self) -> u64 {
+        self.prefill_finish_cycle() - self.admitted_cycle
+    }
+
+    /// Decode share of the service: prompt completion to last token.
+    pub fn decode_cycles(&self) -> u64 {
+        self.finish_cycle - self.prefill_finish_cycle()
     }
 
     /// End-to-end latency: arrival to last token.
@@ -202,10 +264,18 @@ struct Stream {
     tpl: Rc<ProgramTemplate>,
     /// KV slot whose reserved regions this stream's KV traffic addresses.
     slot: usize,
-    /// Current decode position; `ltoken = pos + 1`.
+    /// First position of the current step; the step covers
+    /// `pos .. pos + step_positions` and attends over
+    /// `ltoken = pos + step_positions` tokens.
     pos: u64,
     end_pos: u64,
-    /// Next instruction index in the current token's program.
+    /// Leading positions that are prompt (prefill chunks).
+    prompt_tokens: u64,
+    /// Positions the current step covers: a prefill chunk length while
+    /// `pos < prompt_tokens`, 1 in decode. Doubles as the `passes`
+    /// handed to `Resources::issue`.
+    step_positions: u64,
+    /// Next instruction index in the current step's program.
     next: usize,
     finish: Vec<u64>,
     first_ready: Vec<u64>,
@@ -254,8 +324,10 @@ pub struct MultiSim {
     rejections: VecDeque<RejectedStream>,
     /// Reusable issue-candidate scratch (hot path: rebuilt per issue).
     cand: Vec<IssueCandidate>,
-    /// Cached conservative first-token cost (SLO admission predictor).
-    ttft_est: Option<u64>,
+    /// Cached conservative first-token cost per prompt length (SLO
+    /// admission predictor; the chunked-prefill replay is exact per
+    /// prompt length, so each length is computed at most once).
+    ttft_est: std::collections::BTreeMap<u64, u64>,
     /// Free KV slot ids (admission pops the earliest-free one).
     free_slots: Vec<usize>,
     /// Cycle each slot was last vacated (0 for never-used slots).
@@ -298,7 +370,7 @@ impl MultiSim {
             admission,
             rejections: VecDeque::new(),
             cand: Vec::new(),
-            ttft_est: None,
+            ttft_est: std::collections::BTreeMap::new(),
             free_slots: (0..n_slots).collect(),
             slot_free_at: vec![0; n_slots],
             n_slots,
@@ -357,10 +429,27 @@ impl MultiSim {
         }
         if spec.n_tokens > self.model.max_seq as u64 {
             bail!(
-                "request {} length {} exceeds max_seq {}",
+                "request {} length {} (prompt {} + generated {}) exceeds max_seq {}",
                 spec.id,
                 spec.n_tokens,
+                spec.prompt_tokens,
+                spec.n_tokens.saturating_sub(spec.prompt_tokens),
                 self.model.max_seq
+            );
+        }
+        if spec.prompt_tokens == 0 {
+            bail!(
+                "request {} has a zero-token prompt (every request prefills at least \
+                 one position; StreamSpec::new defaults to 1)",
+                spec.id
+            );
+        }
+        if spec.prompt_tokens > spec.n_tokens {
+            bail!(
+                "request {} prompt {} exceeds its total length {}",
+                spec.id,
+                spec.prompt_tokens,
+                spec.n_tokens
             );
         }
         // Keep pending sorted by (arrival, submit order): stable insert
@@ -386,46 +475,37 @@ impl MultiSim {
     }
 
     /// Conservative upper bound on the *uncontended* cost of a stream's
-    /// first decode step, for the SLO admission predictor. The regime-0
-    /// compiled template is replayed once on scratch `Resources` (live
-    /// hardware state untouched) to get the isolated first-token
-    /// critical path, then padded with the worst-case costs a warm
-    /// start can add over a cold one: refresh-phase misalignment (one
-    /// tRFC per tREFI window the step can straddle) and stale bank
-    /// state (write recovery + precharge + activate + row residency).
-    /// Exact per-regime cycle cost, not a heuristic fit — and cached,
-    /// so the replay happens at most once per engine.
-    fn first_token_estimate(&mut self) -> Result<u64> {
-        if let Some(est) = self.ttft_est {
+    /// first *generated* token, for the SLO admission predictor. The
+    /// request's actual prompt is replayed as its chunked-prefill
+    /// program sequence on scratch `Resources`
+    /// (`prefill::isolated_prefill_cost` — live hardware state
+    /// untouched), then padded with the worst-case costs a warm start
+    /// can add over a cold one: refresh-phase misalignment (one tRFC
+    /// per tREFI window the prefill can straddle) and stale bank state
+    /// (write recovery + precharge + activate + row residency). Exact
+    /// per-prompt-length cycle cost, not a heuristic fit — cached per
+    /// prompt length, so each length replays at most once per engine.
+    /// A 1-token prompt degenerates to exactly the old regime-0
+    /// single-step replay.
+    fn first_token_estimate(&mut self, prompt_tokens: u64) -> Result<u64> {
+        if let Some(&est) = self.ttft_est.get(&prompt_tokens) {
             return Ok(est);
         }
-        let tpl = self.cache.get(&self.model, &self.cfg, 0)?;
-        let mut res = Resources::new(&self.cfg);
-        let mut plan = empty_plan(&self.cfg);
-        let mut finish: Vec<u64> = Vec::with_capacity(tpl.len());
-        let mut first_ready: Vec<u64> = Vec::with_capacity(tpl.len());
-        let ctx = IssueCtx {
-            cfg: &self.cfg,
-            t: &self.t,
-            model: &self.model,
-            mapping: &self.mapping,
-        };
-        let mut isolated = 0u64;
-        for i in 0..tpl.len() {
-            let instr = tpl.instr_at(i, 1, 0);
-            let out =
-                res.issue(&ctx, &mut plan, &instr, tpl.deps_of(i), 0, &finish, &first_ready, 0, 1);
-            first_ready.push(out.first_ready);
-            finish.push(out.finish);
-            isolated = isolated.max(out.finish);
-        }
-        // Worst case, every refresh window the padded step can touch
+        let isolated = prefill::isolated_prefill_cost(
+            &self.model,
+            &self.cfg,
+            &self.t,
+            &self.mapping,
+            &mut self.cache,
+            prompt_tokens,
+        )?;
+        // Worst case, every refresh window the padded prefill can touch
         // (including the catch-up at a warm start) lands on the critical
         // path while none did in the isolated replay.
         let t = &self.t;
         let refresh_pad = (isolated / t.trefi + 4) * t.trfc;
         let est = isolated + refresh_pad + t.twr + t.trp + t.trcd + t.tras;
-        self.ttft_est = Some(est);
+        self.ttft_est.insert(prompt_tokens, est);
         Ok(est)
     }
 
@@ -462,11 +542,23 @@ impl MultiSim {
             let spec = self.queue.remove(qi).expect("index checked in range");
             let admitted = spec.arrival_cycle.max(self.slot_free_at[slot]);
             let wait = admitted - spec.arrival_cycle;
-            let est =
-                if self.admission.needs_estimate() { self.first_token_estimate()? } else { 0 };
+            let est = if self.admission.needs_estimate() {
+                self.first_token_estimate(spec.prompt_tokens)?
+            } else {
+                0
+            };
             match self.admission.decide(&spec, wait, est) {
                 AdmissionDecision::Admit => {
-                    let tpl = self.cache.get(&self.model, &self.cfg, 0)?;
+                    // The first step is the prompt's first prefill chunk
+                    // (1 position for the historical 1-token prompts —
+                    // the regime-0 template, exactly as before).
+                    let first = prefill::chunk_at(
+                        0,
+                        spec.prompt_tokens,
+                        self.cfg.sched.prefill_chunk,
+                    )
+                    .expect("prompt_tokens >= 1 is validated at submit");
+                    let tpl = self.cache.get(&self.model, &self.cfg, first.regime_pos())?;
                     self.free_slots.swap_remove(i);
                     self.active.push(Stream {
                         id: spec.id,
@@ -474,6 +566,8 @@ impl MultiSim {
                         slot,
                         pos: 0,
                         end_pos: spec.n_tokens,
+                        prompt_tokens: spec.prompt_tokens,
+                        step_positions: first.len,
                         next: 0,
                         finish: Vec::new(),
                         first_ready: Vec::new(),
@@ -592,13 +686,16 @@ impl MultiSim {
             self.now = self.now.max(best_ready);
 
             // Issue it on the shared resources, addressed to the
-            // stream's own KV slot.
+            // stream's own KV slot. A prefill chunk issues with the
+            // chunk-end context and its position count as the pass
+            // count (`passes = 1` in decode — the historical path).
             let tpl = Rc::clone(&self.active[si].tpl);
-            let (pos, step_start, next, slot) = {
+            let (pos, step_start, next, slot, step_positions) = {
                 let s = &self.active[si];
-                (s.pos, s.step_start, s.next, s.slot)
+                (s.pos, s.step_start, s.next, s.slot, s.step_positions)
             };
-            let instr = tpl.instr_at(next, pos + 1, slot);
+            let ltoken = pos + step_positions;
+            let instr = tpl.instr_at(next, ltoken, slot);
             let ctx = IssueCtx {
                 cfg: &self.cfg,
                 t: &self.t,
@@ -616,7 +713,8 @@ impl MultiSim {
                     &s.finish,
                     &s.first_ready,
                     pos,
-                    pos + 1,
+                    ltoken,
+                    step_positions,
                 )
             };
 
@@ -638,18 +736,40 @@ impl MultiSim {
                 continue;
             }
 
-            self.stats.tokens += 1;
+            // The step retires all the positions it covered: every
+            // position of a prefill chunk completes at the chunk's
+            // finish (its tokens only exist once the whole chunk has
+            // run), a decode step completes its single token.
+            self.stats.tokens += step_positions;
+            if pos < self.active[si].prompt_tokens {
+                self.stats.prefill_chunks += 1;
+            }
             let stream_done = {
                 let s = &mut self.active[si];
                 let fin = s.step_finish;
-                s.token_finishes.push(fin);
-                s.pos += 1;
+                for _ in 0..step_positions {
+                    s.token_finishes.push(fin);
+                }
+                s.pos += step_positions;
                 s.pos >= s.end_pos
             };
             if !stream_done {
-                let tpl = self.cache.get(&self.model, &self.cfg, self.active[si].pos)?;
+                // Next step: the prompt's next prefill chunk, or a
+                // 1-position decode step once the prompt is done.
+                let (next_pos, prompt_tokens) = {
+                    let s = &self.active[si];
+                    (s.pos, s.prompt_tokens)
+                };
+                let (regime_pos, step_positions) =
+                    match prefill::chunk_at(next_pos, prompt_tokens, self.cfg.sched.prefill_chunk)
+                    {
+                        Some(c) => (c.regime_pos(), c.len),
+                        None => (next_pos, 1),
+                    };
+                let tpl = self.cache.get(&self.model, &self.cfg, regime_pos)?;
                 let s = &mut self.active[si];
                 s.tpl = tpl;
+                s.step_positions = step_positions;
                 s.step_start = s.step_finish;
                 s.next = 0;
                 s.finish.clear();
@@ -671,9 +791,12 @@ impl MultiSim {
                 admitted_cycle: s.admitted,
                 finish_cycle: s.step_finish,
                 tokens: s.token_finishes.len() as u64,
+                prompt_tokens: s.prompt_tokens,
                 kv_slot: s.slot,
                 token_finishes: s.token_finishes,
             };
+            self.stats.prefill_cycles += result.prefill_cycles();
+            self.stats.decode_cycles += result.decode_cycles();
             let row = StreamStats::from_result(&result, s.instructions, s.attributed);
             self.stats.streams.push(row);
             self.release_arrivals();
@@ -912,7 +1035,8 @@ mod tests {
         let arrival = 1_000u64;
         assert!(arrival < r0.finish_cycle, "12 gpt-nano tokens outlast cycle {arrival}");
         assert!(ms.clock() >= r0.finish_cycle);
-        ms.submit(StreamSpec { id: 1, n_tokens: 2, arrival_cycle: arrival }).unwrap();
+        ms.submit(StreamSpec { id: 1, n_tokens: 2, prompt_tokens: 1, arrival_cycle: arrival })
+            .unwrap();
         let r1 = ms.step().unwrap().unwrap().into_completed().expect("completed");
         assert_eq!(r1.arrival_cycle, arrival);
         // The only KV slot frees at r0's finish: queueing spans arrival
@@ -929,7 +1053,8 @@ mod tests {
     #[test]
     fn idle_engine_warps_to_future_arrival() {
         let mut ms = msim("gpt-nano", 2);
-        ms.submit(StreamSpec { id: 0, n_tokens: 2, arrival_cycle: 50_000 }).unwrap();
+        ms.submit(StreamSpec { id: 0, n_tokens: 2, prompt_tokens: 1, arrival_cycle: 50_000 })
+            .unwrap();
         assert_eq!(ms.queued_streams(), 1);
         let r = ms.step().unwrap().unwrap().into_completed().expect("completed");
         assert_eq!(r.arrival_cycle, 50_000);
@@ -943,8 +1068,9 @@ mod tests {
     #[test]
     fn release_follows_arrival_order_not_submit_order() {
         let mut ms = msim("gpt-nano", 1);
-        ms.submit(StreamSpec { id: 0, n_tokens: 2, arrival_cycle: 2_000 }).unwrap();
-        ms.submit(StreamSpec { id: 1, n_tokens: 8, arrival_cycle: 0 }).unwrap();
+        ms.submit(StreamSpec { id: 0, n_tokens: 2, prompt_tokens: 1, arrival_cycle: 2_000 })
+            .unwrap();
+        ms.submit(StreamSpec { id: 1, n_tokens: 8, prompt_tokens: 1, arrival_cycle: 0 }).unwrap();
         let results = completed(ms.run_all().unwrap());
         assert_eq!(results[0].id, 1, "the earlier arrival runs first on K=1");
         assert_eq!(results[1].id, 0);
@@ -958,7 +1084,7 @@ mod tests {
     fn busy_engine_releases_arrival_into_free_slot() {
         let mut ms = msim("gpt-nano", 2);
         ms.submit(StreamSpec::new(0, 12)).unwrap();
-        ms.submit(StreamSpec { id: 1, n_tokens: 2, arrival_cycle: 500 }).unwrap();
+        ms.submit(StreamSpec { id: 1, n_tokens: 2, prompt_tokens: 1, arrival_cycle: 500 }).unwrap();
         let results = completed(ms.run_all().unwrap());
         let r1 = results.iter().find(|r| r.id == 1).unwrap();
         assert_eq!(r1.arrival_cycle, 500);
@@ -1097,7 +1223,8 @@ mod tests {
     #[test]
     fn slo_sheds_warped_arrival_and_drains() {
         let mut ms = msim_policy("gpt-nano", 1, "slo:1");
-        ms.submit(StreamSpec { id: 0, n_tokens: 2, arrival_cycle: 10_000 }).unwrap();
+        ms.submit(StreamSpec { id: 0, n_tokens: 2, prompt_tokens: 1, arrival_cycle: 10_000 })
+            .unwrap();
         let out = ms.step().unwrap().unwrap();
         let rej = out.as_rejected().expect("budget of 1 cycle rejects everything");
         assert_eq!(rej.id, 0);
@@ -1114,7 +1241,13 @@ mod tests {
             let run = || {
                 let mut ms = msim_policy("gpt-nano", 2, policy);
                 for id in 0..6 {
-                    ms.submit(StreamSpec { id, n_tokens: 2 + (id % 3), arrival_cycle: id * 700 })
+                    let spec = StreamSpec {
+                        id,
+                        n_tokens: 2 + (id % 3),
+                        prompt_tokens: 1,
+                        arrival_cycle: id * 700,
+                    };
+                    ms.submit(spec)
                         .unwrap();
                 }
                 let outcomes = ms.run_all().unwrap();
@@ -1131,22 +1264,29 @@ mod tests {
         }
     }
 
-    /// Satellite property: over randomized seeded arrival traces, the
-    /// two latency views agree (queue + service == finish - arrival),
-    /// token finishes are strictly monotone with the first at or after
-    /// admission, and the derived `StreamStats` row matches its
-    /// `StreamResult` exactly.
+    /// Satellite property: over randomized seeded arrival traces *and*
+    /// randomized prompt/generation splits and chunk sizes, the latency
+    /// views agree (queue + service == finish - arrival, prefill +
+    /// decode == service), token finishes are nondecreasing (equal only
+    /// within a prefill chunk) and strictly increasing across decode
+    /// steps, TTFT is the prompt-completion stamp, and the derived
+    /// `StreamStats` row matches its `StreamResult` exactly.
     #[test]
     fn stream_identities_over_random_arrival_traces() {
         use crate::util::prop::check;
         check("stream latency identities", 12, |rng| {
             let k = 1 + rng.gen_range(3) as usize;
             let n_req = 1 + rng.gen_range(5);
-            let mut ms = msim("gpt-nano", k);
+            let m = by_name("gpt-nano").unwrap();
+            let mut cfg = HwConfig::paper_baseline().with_max_streams(k);
+            cfg.sched.prefill_chunk = 1 + rng.gen_range(16);
+            let mut ms = MultiSim::new(&m, &cfg).unwrap();
             for id in 0..n_req {
+                let n_tokens = 1 + rng.gen_range(24);
                 let spec = StreamSpec {
                     id,
-                    n_tokens: 1 + rng.gen_range(5),
+                    n_tokens,
+                    prompt_tokens: 1 + rng.gen_range(n_tokens),
                     arrival_cycle: rng.gen_range(20_000),
                 };
                 ms.submit(spec).map_err(|e| e.to_string())?;
@@ -1165,11 +1305,24 @@ mod tests {
                 if r.queue_cycles() + r.service_cycles() != r.e2e_cycles() {
                     return Err(format!("stream {} latency identity broken", r.id));
                 }
-                if !r.token_finishes.windows(2).all(|w| w[0] < w[1]) {
-                    return Err(format!("stream {} token finishes not monotone", r.id));
+                if r.prefill_cycles() + r.decode_cycles() != r.service_cycles() {
+                    return Err(format!("stream {} prefill/decode split broken", r.id));
+                }
+                if !r.token_finishes.windows(2).all(|w| w[0] <= w[1]) {
+                    return Err(format!("stream {} token finishes decrease", r.id));
+                }
+                // Decode positions (past the prompt) strictly increase.
+                let decode = &r.token_finishes[r.prompt_tokens as usize - 1..];
+                if !decode.windows(2).all(|w| w[0] < w[1]) {
+                    return Err(format!("stream {} decode finishes not strict", r.id));
                 }
                 if r.token_finishes[0] < r.admitted_cycle {
                     return Err(format!("stream {} first token before admission", r.id));
+                }
+                if r.prefill_finish_cycle()
+                    != r.token_finishes[r.prompt_tokens as usize - 1]
+                {
+                    return Err(format!("stream {} ttft stamp not the prompt's last", r.id));
                 }
                 if r.ttft_cycles() > r.e2e_cycles() {
                     return Err(format!("stream {} ttft exceeds e2e", r.id));
@@ -1183,14 +1336,148 @@ mod tests {
                 let same = s.arrival_cycle == r.arrival_cycle
                     && s.queue_cycles == r.queue_cycles()
                     && s.service_cycles == r.service_cycles()
+                    && s.prefill_cycles == r.prefill_cycles()
+                    && s.decode_cycles() == r.decode_cycles()
                     && s.ttft_cycles == r.ttft_cycles()
                     && s.e2e_cycles() == r.e2e_cycles()
-                    && s.tokens == r.tokens;
+                    && s.tokens == r.tokens
+                    && s.prompt_tokens == r.prompt_tokens;
                 if !same {
                     return Err(format!("stream {} stats diverge from result", r.id));
                 }
             }
+            // Aggregate split matches the per-stream sums.
+            let prefill: u64 = results.iter().map(|r| r.prefill_cycles()).sum();
+            let decode: u64 = results.iter().map(|r| r.decode_cycles()).sum();
+            if ms.stats.prefill_cycles != prefill || ms.stats.decode_cycles != decode {
+                return Err("aggregate prefill/decode split diverges".into());
+            }
             Ok(())
         });
+    }
+
+    /// Tentpole: a prompted request is one prefill-chunk sequence plus
+    /// decode steps — token counts, chunk counters and the TTFT stamp
+    /// all line up, and every prompt position completes at its chunk's
+    /// finish.
+    #[test]
+    fn chunked_prompt_completes_with_chunk_grained_finishes() {
+        let m = by_name("gpt-nano").unwrap();
+        let mut cfg = HwConfig::paper_baseline().with_max_streams(2);
+        cfg.sched.prefill_chunk = 8;
+        let mut ms = MultiSim::new(&m, &cfg).unwrap();
+        ms.submit(StreamSpec::with_prompt(0, 20, 3)).unwrap();
+        let r = ms.step().unwrap().unwrap().into_completed().expect("completed");
+        ms.finalize_stats();
+        assert_eq!(r.tokens, 23);
+        assert_eq!(r.prompt_tokens, 20);
+        assert_eq!(r.token_finishes.len(), 23);
+        // 20 prompt positions at chunk 8 -> chunks of 8, 8, 4.
+        assert_eq!(ms.stats.prefill_chunks, 3);
+        assert_eq!(ms.stats.tokens, 23);
+        // Chunk-grained finishes: positions within a chunk share one
+        // finish cycle; distinct chunks/decodes strictly advance.
+        let f = &r.token_finishes;
+        assert_eq!(f[0..8].iter().collect::<std::collections::BTreeSet<_>>().len(), 1);
+        assert_eq!(f[8..16].iter().collect::<std::collections::BTreeSet<_>>().len(), 1);
+        assert_eq!(f[16..20].iter().collect::<std::collections::BTreeSet<_>>().len(), 1);
+        assert!(f[7] < f[8] && f[15] < f[16]);
+        assert!(f[19] < f[20] && f[20] < f[21] && f[21] < f[22]);
+        // TTFT is the prompt-completion stamp, not the first chunk's.
+        assert_eq!(r.prefill_finish_cycle(), f[19]);
+        assert_eq!(r.ttft_cycles(), f[19]);
+        assert!(r.prefill_cycles() > 0 && r.decode_cycles() > 0);
+        assert_eq!(r.prefill_cycles() + r.decode_cycles(), r.service_cycles());
+    }
+
+    /// Tentpole acceptance: chunked prefill strictly lowers TTFT and
+    /// makespan versus token-by-token prefill of the same prompt
+    /// (`prefill_chunk = 1`), and larger chunks keep helping.
+    #[test]
+    fn chunked_prefill_beats_token_by_token_ttft() {
+        let m = by_name("gpt-nano").unwrap();
+        let run = |chunk: u64| {
+            let mut cfg = HwConfig::paper_baseline().with_max_streams(1);
+            cfg.sched.prefill_chunk = chunk;
+            let mut ms = MultiSim::new(&m, &cfg).unwrap();
+            ms.submit(StreamSpec::with_prompt(0, 96, 4)).unwrap();
+            let r = ms.step().unwrap().unwrap().into_completed().expect("completed");
+            (r.ttft_cycles(), r.e2e_cycles())
+        };
+        let (ttft1, e2e1) = run(1);
+        let (ttft16, e2e16) = run(16);
+        let (ttft48, e2e48) = run(48);
+        assert!(ttft16 < ttft1, "chunk 16 ttft {ttft16} !< token-by-token {ttft1}");
+        assert!(ttft48 < ttft16, "chunk 48 ttft {ttft48} !< chunk 16 {ttft16}");
+        assert!(e2e16 < e2e1, "chunk 16 e2e {e2e16} !< token-by-token {e2e1}");
+        assert!(e2e48 < e2e16);
+    }
+
+    /// Pure-prefill requests (`gen_tokens = 0`) are legal: the last
+    /// prompt position is the first generated token, so TTFT == e2e.
+    #[test]
+    fn pure_prefill_request_ttft_equals_e2e() {
+        let m = by_name("gpt-nano").unwrap();
+        let mut cfg = HwConfig::paper_baseline().with_max_streams(1);
+        cfg.sched.prefill_chunk = 16;
+        let mut ms = MultiSim::new(&m, &cfg).unwrap();
+        ms.submit(StreamSpec::with_prompt(0, 24, 0)).unwrap();
+        let r = ms.step().unwrap().unwrap().into_completed().expect("completed");
+        assert_eq!(r.tokens, 24);
+        assert_eq!(r.ttft_cycles(), r.e2e_cycles());
+        assert_eq!(r.decode_cycles(), 0);
+    }
+
+    /// Submit validation covers the prompt split: zero-prompt and
+    /// prompt-exceeds-total both fail loudly with the request id, and
+    /// the total-length error names the split.
+    #[test]
+    fn submit_rejects_invalid_prompt_splits() {
+        let mut ms = msim("gpt-nano", 2); // max_seq 128
+        let bad = StreamSpec { id: 7, n_tokens: 4, prompt_tokens: 0, arrival_cycle: 0 };
+        let err = ms.submit(bad).unwrap_err().to_string();
+        assert!(err.contains("request 7") && err.contains("zero-token prompt"), "{err}");
+        let bad = StreamSpec { id: 8, n_tokens: 4, prompt_tokens: 5, arrival_cycle: 0 };
+        let err = ms.submit(bad).unwrap_err().to_string();
+        assert!(err.contains("request 8") && err.contains("prompt 5"), "{err}");
+        let err = ms.submit(StreamSpec::with_prompt(9, 100, 29)).unwrap_err().to_string();
+        assert!(err.contains("request 9") && err.contains("prompt 100"), "{err}");
+        assert!(ms.submit(StreamSpec::with_prompt(10, 100, 28)).is_ok());
+    }
+
+    /// The SLO predictor tracks the actual prompt length: a long prompt
+    /// predicts a higher first-token cost than a short one, so a budget
+    /// can admit short prompts while shedding long ones.
+    #[test]
+    fn slo_prediction_scales_with_prompt_length() {
+        let m = by_name("gpt-nano").unwrap();
+        // Probe the short-prompt cost to place the budget between the
+        // two prompt lengths.
+        let mut probe = msim_policy("gpt-nano", 2, "slo:1");
+        probe.submit(StreamSpec::with_prompt(0, 1, 1)).unwrap();
+        let short_pred = probe
+            .run_all()
+            .unwrap()
+            .remove(0)
+            .as_rejected()
+            .expect("1-cycle budget rejects")
+            .predicted_ttft_cycles;
+
+        let mut cfg = HwConfig::paper_baseline().with_max_streams(2);
+        cfg.sched.set_policy_str(&format!("slo:{}", 2 * short_pred)).unwrap();
+        let mut ms = MultiSim::new(&m, &cfg).unwrap();
+        ms.submit(StreamSpec::with_prompt(0, 1, 1)).unwrap();
+        ms.submit(StreamSpec::with_prompt(1, 96, 1)).unwrap();
+        let outcomes = ms.run_all().unwrap();
+        ms.finalize_stats();
+        let completed_ids: Vec<u64> =
+            outcomes.iter().filter_map(|o| o.as_completed().map(|r| r.id)).collect();
+        let rejected: Vec<&RejectedStream> =
+            outcomes.iter().filter_map(|o| o.as_rejected()).collect();
+        assert_eq!(completed_ids, vec![0], "short prompt admitted");
+        assert_eq!(rejected.len(), 1, "long prompt shed on its own predicted prefill");
+        assert_eq!(rejected[0].id, 1);
+        assert_eq!(rejected[0].waited_cycles(), 0, "shed at admission, not after queueing");
+        assert!(rejected[0].predicted_ttft_cycles > 2 * short_pred);
     }
 }

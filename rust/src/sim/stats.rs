@@ -114,6 +114,18 @@ pub struct SimStats {
     /// rejected requests never appear in `streams` or the latency
     /// percentiles — they received no service.
     pub rejected: u64,
+    /// Prefill chunk programs executed (`sim::prefill`; one per
+    /// `sched.prefill_chunk`-sized slice of each admitted prompt — a
+    /// 1-token prompt costs exactly one 1-position chunk).
+    pub prefill_chunks: u64,
+    /// Sum over retired streams of their prefill service (admission to
+    /// prompt completion). Like `service_cycles`, per-stream spans
+    /// overlap under concurrency, so the sum can exceed wall cycles.
+    pub prefill_cycles: u64,
+    /// Sum over retired streams of their decode service (prompt
+    /// completion to last token). `prefill_cycles + decode_cycles` =
+    /// summed `service_cycles`.
+    pub decode_cycles: u64,
     /// Per-request-stream attribution (one entry per retired stream;
     /// empty for plain single-program runs).
     pub streams: Vec<StreamStats>,
@@ -126,6 +138,8 @@ pub struct StreamStats {
     /// KV slot the stream occupied while in flight.
     pub kv_slot: u64,
     pub tokens: u64,
+    /// Leading positions that were prompt (prefill); the rest decoded.
+    pub prompt_tokens: u64,
     pub instructions: u64,
     /// Sum of per-instruction critical-path cycles attributed to this
     /// stream (same semantics as `class_cycles`: concurrency can make
@@ -136,13 +150,17 @@ pub struct StreamStats {
     pub arrival_cycle: u64,
     /// Simulated cycles spent queued between arrival and admission.
     pub queue_cycles: u64,
-    /// Simulated cycles from admission to last token.
+    /// Simulated cycles from admission to last token
+    /// (`prefill_cycles + decode_cycles()`).
     pub service_cycles: u64,
-    /// Time to first token: first decode-step completion minus arrival,
-    /// queueing included. Prompt prefill positions are decode steps in
-    /// this engine (no prompt/generated split), so for prompted
-    /// requests this lower-bounds the client-visible first output
-    /// token — see `StreamResult::ttft_cycles`.
+    /// Prefill share of the service: admission to prompt completion
+    /// (the cycle the first generated token became available).
+    pub prefill_cycles: u64,
+    /// Time to first *generated* token: prompt-prefill completion minus
+    /// arrival, queueing included — what a client actually waits before
+    /// the first output token. For 1-token prompts this equals the
+    /// first decode-step completion (the historical definition); see
+    /// `StreamResult::ttft_cycles`.
     pub ttft_cycles: u64,
 }
 
@@ -155,11 +173,13 @@ impl StreamStats {
             id: r.id,
             kv_slot: r.kv_slot as u64,
             tokens: r.tokens,
+            prompt_tokens: r.prompt_tokens,
             instructions,
             attributed_cycles,
             arrival_cycle: r.arrival_cycle,
             queue_cycles: r.queue_cycles(),
             service_cycles: r.service_cycles(),
+            prefill_cycles: r.prefill_cycles(),
             ttft_cycles: r.ttft_cycles(),
         }
     }
@@ -167,6 +187,11 @@ impl StreamStats {
     /// End-to-end latency: arrival to last token.
     pub fn e2e_cycles(&self) -> u64 {
         self.queue_cycles + self.service_cycles
+    }
+
+    /// Decode share of the service (prompt completion to last token).
+    pub fn decode_cycles(&self) -> u64 {
+        self.service_cycles - self.prefill_cycles
     }
 }
 
@@ -195,8 +220,9 @@ impl Percentiles {
 }
 
 /// Tail-latency report of an open-loop run: percentiles of per-stream
-/// queueing, time-to-first-token and end-to-end latency (all measured
-/// from each request's *arrival* cycle).
+/// queueing, time-to-first-*generated*-token (prompt-prefill
+/// completion — see `StreamResult::ttft_cycles`) and end-to-end
+/// latency (all measured from each request's *arrival* cycle).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct LatencyReport {
     pub queue: Percentiles,

@@ -173,6 +173,137 @@ fn k1_equivalence_holds_under_degraded_capacity() {
     assert_eq!(r.token_finishes, want);
 }
 
+/// Tentpole equivalence pin (chunked prefill): with `prefill_chunk = 1`
+/// every prompt position is a 1-position chunk issued with `passes = 1`
+/// — cycle-identical to the historical all-decode path. A prompted
+/// request under chunk=1 must reproduce the single-stream simulator's
+/// per-position finishes exactly, and a 1-token prompt must do so under
+/// *any* chunk size (the first chunk is 1 position regardless).
+#[test]
+fn prefill_chunk_one_reproduces_token_by_token_exactly() {
+    let m = by_name("gpt2-small").unwrap();
+    let n_tokens = 12u64;
+    let mut cfg = HwConfig::paper_baseline().with_max_streams(1);
+
+    let mut sim = Simulator::new(&m, &cfg).unwrap();
+    let mut want = Vec::new();
+    for pos in 0..n_tokens {
+        want.push(sim.decode_step(pos).unwrap().finish_cycle);
+    }
+
+    // chunk = 1, multi-token prompt: the prompt/generation split is
+    // pure bookkeeping — the schedule is unchanged.
+    cfg.sched.prefill_chunk = 1;
+    let mut ms = MultiSim::new(&m, &cfg).unwrap();
+    ms.submit(StreamSpec::with_prompt(0, 7, n_tokens - 7)).unwrap();
+    let r = completed(ms.run_all().unwrap()).remove(0);
+    assert_eq!(r.token_finishes, want, "chunk=1 prompted run diverged");
+    assert_eq!(r.prompt_tokens, 7);
+    // TTFT is now the 7th position's finish — the split changes the
+    // *measurement*, never the schedule.
+    assert_eq!(r.ttft_cycles(), want[6]);
+
+    // 1-token prompt at the default chunk (32): still identical.
+    let cfg = HwConfig::paper_baseline().with_max_streams(1);
+    let mut ms = MultiSim::new(&m, &cfg).unwrap();
+    ms.submit(StreamSpec::new(0, n_tokens)).unwrap();
+    let r = completed(ms.run_all().unwrap()).remove(0);
+    assert_eq!(r.token_finishes, want, "1-token prompt diverged at default chunk");
+    assert_eq!(r.ttft_cycles(), want[0], "historical TTFT for 1-token prompts");
+}
+
+/// Property variant of the chunk=1 equivalence: random prompt splits
+/// under `prefill_chunk = 1` always equal the same request with the
+/// historical 1-token-prompt split, cycle for cycle (on the same
+/// engine-visible schedule — only the TTFT measurement moves).
+#[test]
+fn prefill_chunk_one_split_invariance_property() {
+    use pim_gpt::util::prop::check;
+    check("chunk=1 split invariance", 10, |rng| {
+        let n_tokens = 2 + rng.gen_range(20);
+        let prompt = 1 + rng.gen_range(n_tokens);
+        let m = by_name("gpt-nano").unwrap();
+        let mut cfg = HwConfig::paper_baseline().with_max_streams(1);
+        cfg.sched.prefill_chunk = 1;
+        let run = |prompt_tokens: u64| {
+            let mut ms = MultiSim::new(&m, &cfg).unwrap();
+            ms.submit(StreamSpec { id: 0, n_tokens, prompt_tokens, arrival_cycle: 0 })
+                .unwrap();
+            completed(ms.run_all().unwrap()).remove(0).token_finishes
+        };
+        if run(prompt) != run(1) {
+            return Err(format!("split {prompt}/{n_tokens} changed the schedule"));
+        }
+        Ok(())
+    });
+}
+
+/// Tentpole acceptance pin (satellite): on a 256-token prompt, chunked
+/// prefill strictly reduces TTFT versus token-by-token prefill — the
+/// weight-row ACT/PRE, GB-staging and ASIC-fill amortization the
+/// matrix-matrix chunk programs buy. Monotone across chunk sizes.
+#[test]
+fn chunked_prefill_reduces_ttft_on_256_token_prompt() {
+    let m = by_name("gpt2-small").unwrap();
+    let run = |chunk: u64| {
+        let mut cfg = HwConfig::paper_baseline().with_max_streams(1);
+        cfg.sched.prefill_chunk = chunk;
+        let mut ms = MultiSim::new(&m, &cfg).unwrap();
+        ms.submit(StreamSpec::with_prompt(0, 256, 4)).unwrap();
+        let r = completed(ms.run_all().unwrap()).remove(0);
+        assert_eq!(r.tokens, 260);
+        assert_eq!(r.prompt_tokens, 256);
+        (r.ttft_cycles(), r.e2e_cycles())
+    };
+    let (ttft1, e2e1) = run(1);
+    let (ttft32, e2e32) = run(32);
+    let (ttft128, e2e128) = run(128);
+    assert!(ttft32 < ttft1, "chunk 32 ttft {ttft32} !< token-by-token {ttft1}");
+    assert!(ttft128 < ttft32, "chunk 128 ttft {ttft128} !< chunk 32 {ttft32}");
+    assert!(e2e32 < e2e1 && e2e128 < e2e32, "makespan follows: {e2e1} {e2e32} {e2e128}");
+}
+
+/// Tentpole acceptance: under multi-stream Poisson load, chunked
+/// prefill strictly lowers p99 TTFT (and the makespan) versus
+/// token-by-token prefill of the same prompted request set — the
+/// serving win the subsystem exists for. Seed-deterministic.
+#[test]
+fn chunked_prefill_lowers_p99_ttft_under_poisson_load() {
+    let m = by_name("gpt-nano").unwrap();
+    // 6 requests with 64-token prompts arriving ~1k cycles apart on 2
+    // slots: prompts dominate service, so prefill speed sets the tail.
+    let spec = ArrivalSpec::Poisson { rate_per_s: 1_000_000.0 };
+    let at = arrivals::generate(&spec, 6, 1.0, 23).unwrap();
+    let run = |chunk: u64| {
+        let mut cfg = HwConfig::paper_baseline().with_max_streams(2);
+        cfg.sched.prefill_chunk = chunk;
+        let mut ms = MultiSim::new(&m, &cfg).unwrap();
+        for (id, &a) in at.iter().enumerate() {
+            let mut s = StreamSpec::with_prompt(id as u64, 64, 4);
+            s.arrival_cycle = a;
+            ms.submit(s).unwrap();
+        }
+        let n = completed(ms.run_all().unwrap()).len();
+        assert_eq!(n, 6);
+        ms.finalize_stats();
+        (ms.stats.latency_report().unwrap(), ms.clock(), ms.stats.prefill_chunks)
+    };
+    let (lat1, mk1, chunks1) = run(1);
+    let (lat32, mk32, chunks32) = run(32);
+    assert_eq!(chunks1, 6 * 64, "token-by-token: one chunk per prompt position");
+    assert_eq!(chunks32, 6 * 2, "chunk 32: two chunks per 64-token prompt");
+    assert!(
+        lat32.ttft.p99 < lat1.ttft.p99,
+        "chunked p99 ttft {} !< token-by-token {}",
+        lat32.ttft.p99,
+        lat1.ttft.p99
+    );
+    assert!(lat32.ttft.p50 < lat1.ttft.p50, "the median moves too");
+    assert!(mk32 < mk1, "chunked makespan {mk32} !< {mk1}");
+    // Determinism: same seed, same percentiles.
+    assert_eq!(run(32).0, lat32);
+}
+
 /// Multi-stream stats: per-stream attribution sums to the totals, and
 /// resource-utilization counters are sane and improve with K.
 #[test]
@@ -215,7 +346,7 @@ fn arrival_stamping_measured_from_arrival_not_clock() {
     let mut ms = MultiSim::new(&m, &cfg).unwrap();
     let a = 2_000u64;
     ms.submit(StreamSpec::new(0, 12)).unwrap();
-    ms.submit(StreamSpec { id: 1, n_tokens: 2, arrival_cycle: a }).unwrap();
+    ms.submit(StreamSpec { id: 1, n_tokens: 2, prompt_tokens: 1, arrival_cycle: a }).unwrap();
     let results = completed(ms.run_all().unwrap());
     let r0 = results.iter().find(|r| r.id == 0).unwrap();
     let r1 = results.iter().find(|r| r.id == 1).unwrap();
@@ -246,7 +377,7 @@ fn degraded_capacity_open_loop_poisson_tail() {
         let mut ms = MultiSim::new(&m, &cfg).unwrap();
         for (id, &arrival_cycle) in at.iter().enumerate() {
             let id = id as u64;
-            ms.submit(StreamSpec { id, n_tokens: 2, arrival_cycle }).unwrap();
+            ms.submit(StreamSpec { id, n_tokens: 2, prompt_tokens: 1, arrival_cycle }).unwrap();
         }
         let n = completed(ms.run_all().unwrap()).len();
         ms.finalize_stats();
@@ -291,7 +422,7 @@ fn fixed_interval_pacing_vs_batch_compression() {
     let mut batch = MultiSim::new(&m, &cfg).unwrap();
     for (id, &arrival_cycle) in at.iter().enumerate() {
         let id = id as u64;
-        paced.submit(StreamSpec { id, n_tokens: 2, arrival_cycle }).unwrap();
+        paced.submit(StreamSpec { id, n_tokens: 2, prompt_tokens: 1, arrival_cycle }).unwrap();
         batch.submit(StreamSpec::new(id, 2)).unwrap();
     }
     let paced_results = completed(paced.run_all().unwrap());
@@ -343,7 +474,8 @@ fn srf_beats_fcfs_on_mean_e2e_with_one_long_many_short() {
     let run = |policy: &str| -> f64 {
         let mut ms = MultiSim::new(&m, &policy_cfg(1, policy)).unwrap();
         for (id, (&n, &a)) in lens.iter().zip(at.iter()).enumerate() {
-            ms.submit(StreamSpec { id: id as u64, n_tokens: n, arrival_cycle: a }).unwrap();
+            ms.submit(StreamSpec { id: id as u64, n_tokens: n, prompt_tokens: 1, arrival_cycle: a })
+                .unwrap();
         }
         let results = completed(ms.run_all().unwrap());
         assert_eq!(results.len(), lens.len(), "admit-always completes everything");
@@ -367,7 +499,8 @@ fn fair_share_bounds_spread_under_poisson() {
     let run = || {
         let mut ms = MultiSim::new(&m, &policy_cfg(4, "fair")).unwrap();
         for (id, &a) in at.iter().enumerate() {
-            ms.submit(StreamSpec { id: id as u64, n_tokens: 6, arrival_cycle: a }).unwrap();
+            ms.submit(StreamSpec { id: id as u64, n_tokens: 6, prompt_tokens: 1, arrival_cycle: a })
+                .unwrap();
         }
         let results = completed(ms.run_all().unwrap());
         assert_eq!(results.len(), 4);
@@ -404,7 +537,8 @@ fn slo_admission_keeps_p99_ttft_under_budget_and_sheds_overload() {
     let run = || {
         let mut ms = MultiSim::new(&m, &policy_cfg(1, &format!("slo:{budget}"))).unwrap();
         for (id, &a) in at.iter().enumerate() {
-            ms.submit(StreamSpec { id: id as u64, n_tokens: 8, arrival_cycle: a }).unwrap();
+            ms.submit(StreamSpec { id: id as u64, n_tokens: 8, prompt_tokens: 1, arrival_cycle: a })
+                .unwrap();
         }
         let outcomes = ms.run_all().unwrap();
         ms.finalize_stats();
@@ -445,7 +579,8 @@ fn slo_admission_under_concurrency_is_deterministic() {
     let run = || {
         let mut ms = MultiSim::new(&m, &policy_cfg(4, &format!("slo:{budget}"))).unwrap();
         for (id, &a) in at.iter().enumerate() {
-            ms.submit(StreamSpec { id: id as u64, n_tokens: 8, arrival_cycle: a }).unwrap();
+            ms.submit(StreamSpec { id: id as u64, n_tokens: 8, prompt_tokens: 1, arrival_cycle: a })
+                .unwrap();
         }
         let outcomes = ms.run_all().unwrap();
         ms.finalize_stats();
@@ -473,7 +608,8 @@ fn default_policy_never_rejects() {
     let m = by_name("gpt-nano").unwrap();
     let mut ms = MultiSim::new(&m, &HwConfig::paper_baseline()).unwrap();
     for id in 0..6 {
-        ms.submit(StreamSpec { id, n_tokens: 3, arrival_cycle: id * 400 }).unwrap();
+        ms.submit(StreamSpec { id, n_tokens: 3, prompt_tokens: 1, arrival_cycle: id * 400 })
+            .unwrap();
     }
     let outcomes = ms.run_all().unwrap();
     ms.finalize_stats();
