@@ -244,6 +244,29 @@ impl ProgramTemplate {
         instr
     }
 
+    /// Whether node `i` can be **fused across streams**: issued once
+    /// with `passes = K` on behalf of K decode streams at the same
+    /// position regime, instead of once per stream. True exactly for
+    /// the position- and slot-independent nodes — the weight-stationary
+    /// VMMs (QKV / attention output / FFN / LM head) and the ASIC ops
+    /// whose operand sizes do not scale with the context length. Every
+    /// KV-touching instruction (K/V writes, KCache/VCache reads) and
+    /// every position-patched node is per-stream: its `slot` or
+    /// `ltoken` differs between the fused streams. The KV-cache VMM
+    /// check is redundant today (both KV reads are position-patched)
+    /// but keeps the predicate correct if a future regime ever leaves
+    /// one unpatched.
+    pub fn shareable_across_streams(&self, i: usize) -> bool {
+        if self.patch_of[i].is_some() {
+            return false;
+        }
+        match &self.program.nodes[i].instr {
+            Instr::WriteK { .. } | Instr::WriteV { .. } => false,
+            Instr::PimVmm { matrix, .. } => !matrix.kind.is_kv_cache(),
+            Instr::Asic(_) => true,
+        }
+    }
+
     /// Fully materialize the program at `ltoken`, slot 0 (tests /
     /// tooling; the hot path uses `instr_at` and never allocates).
     pub fn materialize(&self, ltoken: u64) -> Program {
@@ -402,6 +425,40 @@ mod tests {
         let last = tpl.len() - 1;
         assert_eq!(tpl.instr_at(last, 1, 0), tpl.instr_at(last, 50, 0));
         assert_eq!(tpl.instr_at(last, 1, 0), tpl.instr_at(last, 1, 3));
+    }
+
+    /// A node is shareable across streams iff `instr_at` is invariant
+    /// in both `ltoken` and `slot` — the contract batched decode fuses
+    /// on. The non-shareable set is exactly the per-layer KV writes
+    /// plus every patched node (which includes both KV-cache reads).
+    #[test]
+    fn shareable_nodes_are_exactly_the_ltoken_and_slot_invariant_ones() {
+        let m = by_name("gpt2-small").unwrap();
+        let cfg = cfg();
+        for regime in [PosRegime { av_chunked: false }, PosRegime { av_chunked: true }] {
+            let tpl = ProgramTemplate::build(&m, &cfg, regime).unwrap();
+            let mut shareable = 0usize;
+            let mut kv_writes = 0usize;
+            for i in 0..tpl.len() {
+                let instr = tpl.instr_at(i, 5, 1);
+                if tpl.shareable_across_streams(i) {
+                    shareable += 1;
+                    assert_eq!(instr, tpl.instr_at(i, 9, 3), "shareable node {i} varies");
+                    match &instr {
+                        Instr::WriteK { .. } | Instr::WriteV { .. } => {
+                            panic!("KV write node {i} marked shareable")
+                        }
+                        Instr::PimVmm { matrix, .. } => assert!(!matrix.kind.is_kv_cache()),
+                        Instr::Asic(_) => {}
+                    }
+                } else if let Instr::WriteK { .. } | Instr::WriteV { .. } = instr {
+                    kv_writes += 1;
+                }
+            }
+            // Weight VMMs and fixed-size ASIC ops dominate the program.
+            assert!(shareable > tpl.len() / 2, "only {shareable}/{} shareable", tpl.len());
+            assert_eq!(kv_writes, 2 * m.n_layer, "av_chunked={}", regime.av_chunked);
+        }
     }
 
     #[test]

@@ -189,6 +189,16 @@ pub struct SchedulerConfig {
     /// blocking for concurrent streams). 1 = token-by-token prefill,
     /// cycle-identical to the historical no-prefill engine.
     pub prefill_chunk: u64,
+    /// Cross-stream batched decode (JSON key `sched.batch_decode`, 0 or
+    /// 1; CLI `serve --batch-decode on|off`). When on, active streams
+    /// whose next step is a decode token in the same position regime
+    /// are fused into one multi-pass weight sweep: the
+    /// weight-stationary VMMs and fixed-size ASIC ops issue once with
+    /// `passes = K` (one ACT/PRE sweep, one ASIC pipeline fill shared
+    /// by all K tokens) while per-stream KV attention stays separate
+    /// (slots are disjoint). Off (the default) is cycle-identical to
+    /// the unbatched engine on any arrival trace.
+    pub batch_decode: bool,
 }
 
 impl Default for SchedulerConfig {
@@ -200,6 +210,7 @@ impl Default for SchedulerConfig {
             policy: PolicySpec::Fcfs,
             slo_ttft_cycles: 2_000_000,
             prefill_chunk: 32,
+            batch_decode: false,
         }
     }
 }
@@ -294,6 +305,13 @@ impl HwConfig {
     pub fn with_prefill_chunk(mut self, chunk: u64) -> Self {
         assert!(chunk >= 1);
         self.sched.prefill_chunk = chunk;
+        self
+    }
+
+    /// Serving knob: cross-stream batched decode (off reproduces the
+    /// unbatched engine cycle-for-cycle).
+    pub fn with_batch_decode(mut self, on: bool) -> Self {
+        self.sched.batch_decode = on;
         self
     }
 
@@ -430,6 +448,14 @@ impl HwConfig {
                     bail!("sched.prefill_chunk must be an integer in [1, 2^53), got {n}");
                 }
                 self.sched.prefill_chunk = n as u64;
+            }
+            ("sched", "batch_decode") => {
+                // JSON has no bool path in this config system; the knob
+                // is 0 (off) / 1 (on) like a hardware strap.
+                if n != 0.0 && n != 1.0 {
+                    bail!("sched.batch_decode must be 0 (off) or 1 (on), got {n}");
+                }
+                self.sched.batch_decode = n == 1.0;
             }
             ("asic", "freq_ghz") => set!(self.asic.freq_ghz, f64),
             ("asic", "sram_kb") => set!(self.asic.sram_kb, usize),
@@ -590,6 +616,31 @@ mod tests {
             assert!(HwConfig::from_json(&j).is_err(), "accepted {bad}");
         }
         let j = Json::parse(r#"{"sched": {"prefill_chunk": "32"}}"#).unwrap();
+        let err = HwConfig::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("must be a number"), "{err}");
+    }
+
+    #[test]
+    fn sched_batch_decode_overrides() {
+        assert!(!HwConfig::paper_baseline().sched.batch_decode, "off by default");
+        let j = Json::parse(r#"{"sched": {"batch_decode": 1}}"#).unwrap();
+        assert!(HwConfig::from_json(&j).unwrap().sched.batch_decode);
+        let j = Json::parse(r#"{"sched": {"batch_decode": 0}}"#).unwrap();
+        assert!(!HwConfig::from_json(&j).unwrap().sched.batch_decode);
+        assert!(HwConfig::paper_baseline().with_batch_decode(true).sched.batch_decode);
+        // Anything but the 0/1 strap values is rejected loudly, like
+        // every other sched key.
+        for bad in [
+            r#"{"sched": {"batch_decode": 2}}"#,
+            r#"{"sched": {"batch_decode": -1}}"#,
+            r#"{"sched": {"batch_decode": 0.5}}"#,
+            r#"{"sched": {"batch_decode": "on"}}"#,
+            r#"{"sched": {"batch_decod": 1}}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(HwConfig::from_json(&j).is_err(), "accepted {bad}");
+        }
+        let j = Json::parse(r#"{"sched": {"batch_decode": "on"}}"#).unwrap();
         let err = HwConfig::from_json(&j).unwrap_err().to_string();
         assert!(err.contains("must be a number"), "{err}");
     }

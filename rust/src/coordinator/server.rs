@@ -117,6 +117,20 @@ pub struct ServerMetrics {
     /// Simulated wall time of the whole run (last completion cycle).
     /// For interleaved serving this is < `sim_seconds`: streams overlap.
     pub sim_makespan_seconds: f64,
+    /// Makespan minus idle arrival-gap warp time (`SimStats::busy_cycles`)
+    /// in seconds: the time the engine actually had work. Under open-loop
+    /// arrivals the makespan includes offered-load gaps, so
+    /// [`ServerMetrics::sim_tokens_per_s`] conflates load with capacity;
+    /// [`ServerMetrics::sim_tokens_per_busy_s`] divides by this instead.
+    pub sim_busy_seconds: f64,
+    /// Fused decode sweeps (`sched.batch_decode`; 0 when off).
+    pub fused_sweeps: u64,
+    /// Mean streams per fused sweep (0 when nothing fused).
+    pub mean_decode_batch: f64,
+    /// Most streams ever fused into one sweep.
+    pub max_decode_batch: u64,
+    /// Decode steps that ran solo (unfused).
+    pub solo_decode_steps: u64,
     /// Prefill share of the summed service times (admission to prompt
     /// completion, per request). Together with `sim_decode_seconds`
     /// this splits `sim_seconds` into the compute-dense prompt phase
@@ -162,6 +176,20 @@ impl ServerMetrics {
             return 0.0;
         }
         self.tokens as f64 / denom
+    }
+
+    /// Engine-capacity throughput: tokens over *busy* time (makespan
+    /// minus idle arrival-gap warps). Equals `sim_tokens_per_s` for
+    /// closed-loop batch-at-zero runs; strictly higher under sparse
+    /// open-loop arrivals, where the makespan counts waiting-for-work
+    /// time the engine never spent. Falls back to the makespan basis
+    /// for runs that recorded no busy time.
+    pub fn sim_tokens_per_busy_s(&self) -> f64 {
+        if self.sim_busy_seconds > 0.0 {
+            self.tokens as f64 / self.sim_busy_seconds
+        } else {
+            self.sim_tokens_per_s()
+        }
     }
 }
 
@@ -412,15 +440,18 @@ fn interleaved_loop(
         || msim.active_streams() > 0
         || msim.queued_streams() > 0
         || msim.undelivered_rejections() > 0
+        || msim.undelivered_completions() > 0
     {
         // Idle with an open queue and no undelivered outcomes: block
-        // for the next request. (Undelivered rejections must drain
-        // first — blocking here would deadlock a client that waits for
-        // every response before shutting down.)
+        // for the next request. (Undelivered rejections and buffered
+        // completions — a fused sweep can retire several streams at
+        // once — must drain first: blocking here would deadlock a
+        // client that waits for every response before shutting down.)
         if open
             && msim.active_streams() == 0
             && msim.queued_streams() == 0
             && msim.undelivered_rejections() == 0
+            && msim.undelivered_completions() == 0
         {
             match rx.recv() {
                 Ok(req) => ingest(req, &mut msim, &mut inflight, metrics, tx_resp),
@@ -504,6 +535,11 @@ fn interleaved_loop(
     metrics.kv_slots = msim.stats.kv_slots;
     metrics.peak_slots_in_use = msim.stats.peak_slots_in_use;
     metrics.admission_blocked = msim.stats.admission_blocked;
+    metrics.sim_busy_seconds = msim.stats.busy_seconds(cfg.gddr6.freq_ghz);
+    metrics.fused_sweeps = msim.stats.fused_sweeps;
+    metrics.mean_decode_batch = msim.stats.mean_decode_batch();
+    metrics.max_decode_batch = msim.stats.max_decode_batch;
+    metrics.solo_decode_steps = msim.stats.solo_decode_steps;
     metrics.latency = msim.stats.latency_report();
     Ok(())
 }
@@ -547,6 +583,48 @@ mod tests {
         // KV-capacity queue stats are part of the aggregate metrics.
         assert_eq!(m.kv_slots, 4);
         assert!(m.peak_slots_in_use >= 1 && m.peak_slots_in_use <= 4);
+        // Batch-at-zero: the engine never idles, so the busy-cycle
+        // throughput basis coincides with the makespan basis.
+        assert!((m.sim_busy_seconds - m.sim_makespan_seconds).abs() < 1e-12);
+        assert_eq!(m.fused_sweeps, 0, "batching defaults off");
+    }
+
+    /// Batched decode through the serving loop: every response is
+    /// delivered even when one fused sweep retires several streams at
+    /// once (the loop drains `undelivered_completions`), and the
+    /// occupancy metrics surface the fusion.
+    #[test]
+    fn batched_serving_delivers_all_responses_with_occupancy() {
+        let mut s = Server::start(move || {
+            let m = by_name("gpt-nano").unwrap();
+            PimGptSystem::timing_only(
+                &m,
+                &HwConfig::paper_baseline().with_max_streams(4).with_batch_decode(true),
+            )
+        });
+        for id in 0..4 {
+            s.submit(Request { id, prompt: vec![1, 2], n_new: 6, arrival_cycle: 0 }).unwrap();
+        }
+        let mut seen = Vec::new();
+        for _ in 0..4 {
+            let r = s.recv().unwrap();
+            assert!(r.error.is_none());
+            assert!(!r.rejected);
+            assert_eq!(r.tokens.len(), 8);
+            assert!(r.sim_seconds > 0.0);
+            seen.push(r.id);
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2, 3]);
+        let m = s.shutdown();
+        assert_eq!(m.requests, 4);
+        assert_eq!(m.failed, 0);
+        assert_eq!(m.tokens, 32);
+        assert!(m.fused_sweeps > 0, "identical decode-heavy streams must fuse");
+        assert!(m.mean_decode_batch >= 2.0);
+        assert!(m.max_decode_batch >= 2);
+        assert!(m.sim_busy_seconds > 0.0);
+        assert!(m.sim_tokens_per_busy_s() >= m.sim_tokens_per_s());
     }
 
     #[test]

@@ -169,11 +169,12 @@ pim-gpt — hybrid process-in-memory accelerator for autoregressive transformers
 USAGE:
   pim-gpt info     [--config FILE]
   pim-gpt simulate --model NAME [--tokens N] [--config FILE] [--json]
-  pim-gpt figures  [--fig 1|8|10|11|12|13|14|15|t1|t2|serving|policies|prefill|all]
-                   [--tokens N]
+  pim-gpt figures  [--fig 1|8|10|11|12|13|14|15|t1|t2|serving|policies|prefill|batching|all]
+                   [--tokens N] [--models A,B]
   pim-gpt generate --model gpt-nano|gpt-mini [--artifacts DIR] [--prompt 1,2,3] [--n N]
   pim-gpt serve    --model NAME [--requests N] [--concurrency K] [--arrivals SPEC]
-                   [--policy SPEC] [--seed N] [--prompt-tokens P] [--artifacts DIR]
+                   [--policy SPEC] [--seed N] [--prompt-tokens P] [--batch-decode on|off]
+                   [--artifacts DIR]
 
 ARRIVALS (open-loop serving; latencies report p50/p95/p99 from arrival):
   batch (default) | fixed:<cycles> | poisson:<req/s> | trace:<file.json>
@@ -186,6 +187,12 @@ PREFILL (prompts run as batched chunk programs; sched.prefill_chunk in --config)
   --prompt-tokens P gives every generated request a P-token prompt; TTFT is the
   first *generated* token (prompt prefill completion). Chunked prefill amortizes
   DRAM row activations over the chunk — see figures --fig prefill.
+
+BATCHED DECODE (sched.batch_decode in --config, or serve --batch-decode on):
+  fuses the ready decode tokens of concurrent streams into one multi-pass
+  weight sweep (continuous batching): one ACT/PRE sweep + one ASIC pipeline
+  fill serve K streams. off (default) is cycle-identical to the unbatched
+  engine; see figures --fig batching (--models filters the model sweep).
 
 POLICY (scheduling; sched.policy / sched.slo_ttft_cycles in --config):
   fcfs (default) | srf | fair | slo[:<ttft-cycles>]
@@ -257,9 +264,15 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 }
 
 fn cmd_figures(args: &Args) -> Result<()> {
-    args.expect_only("figures", &["fig", "tokens"])?;
+    args.expect_only("figures", &["fig", "tokens", "models"])?;
     let which = args.get("fig")?.unwrap_or("all");
     let tokens = args.u64_or("tokens", 64)?;
+    // Optional model filter (comma-separated), consumed by the figures
+    // that sweep the paper zoo; empty = all 8 paper models.
+    let models: Vec<String> = match args.get("models")? {
+        Some(list) => list.split(',').map(|s| s.trim().to_string()).collect(),
+        None => Vec::new(),
+    };
     let mut reports = Vec::new();
     let all = which == "all";
     if all || which == "1" {
@@ -300,6 +313,9 @@ fn cmd_figures(args: &Args) -> Result<()> {
     }
     if all || which == "prefill" {
         reports.push(report::fig_prefill(8, &[1, 8, 32, 128], &[64, 256])?);
+    }
+    if all || which == "batching" {
+        reports.push(report::fig_batching(tokens.min(12), &[1, 2, 4], &models)?);
     }
     if reports.is_empty() {
         bail!("unknown figure '{which}'");
@@ -348,6 +364,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "seed",
             "policy",
             "prompt-tokens",
+            "batch-decode",
             "artifacts",
             "config",
         ],
@@ -369,6 +386,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     if let Some(policy) = args.get("policy")? {
         cfg.sched.set_policy_str(policy)?;
+    }
+    if let Some(v) = args.get("batch-decode")? {
+        cfg.sched.batch_decode = match v {
+            "on" => true,
+            "off" => false,
+            other => bail!("--batch-decode must be 'on' or 'off', got '{other}'"),
+        };
     }
     // Build the whole request trace up front: arrivals are *simulated*
     // cycles, so the set is known before serving starts. The worker is
@@ -492,6 +516,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
         fmt_time_s(m.sim_makespan_seconds),
         m.sim_tokens_per_s()
     );
+    // Busy-cycle basis: makespan minus idle arrival-gap warps — engine
+    // capacity rather than offered load (they coincide for batch
+    // arrivals, where the engine never idles).
+    if m.sim_busy_seconds > 0.0 {
+        println!(
+            "busy time {} (idle warps excluded), capacity throughput {:.0} tok/s",
+            fmt_time_s(m.sim_busy_seconds),
+            m.sim_tokens_per_busy_s()
+        );
+    }
+    if cfg.sched.batch_decode {
+        println!(
+            "batched decode: {} fused sweeps (mean {:.2} / max {} streams), {} solo decode steps",
+            m.fused_sweeps, m.mean_decode_batch, m.max_decode_batch, m.solo_decode_steps
+        );
+    }
     // Prefill/decode service split: the compute-dense prompt phase vs
     // the memory-bound generation phase (timing-only serving; FIFO
     // functional serving runs token-by-token and reports no split).

@@ -655,6 +655,88 @@ pub fn fig_prefill(gen_tokens: u64, chunks: &[u64], prompts: &[u64]) -> Result<F
     })
 }
 
+/// Cross-stream batched decode: aggregate decode throughput
+/// (busy-cycle basis) at K concurrent streams, batching on vs off.
+/// Saturated closed-loop load — K identical 1-token-prompt requests
+/// present at cycle 0, so the engine always holds K ready decode
+/// tokens and the fused sweeps run at full occupancy. K = 1 pins the
+/// equivalence (speedup exactly 1.0 — the batched engine replays the
+/// unbatched schedule); K >= 2 shows the ACT/PRE + pipeline-fill
+/// amortization. `models` filters the paper zoo by name (empty = all
+/// 8 — the CI smoke runs one model via `--models`).
+pub fn fig_batching(gen_tokens: u64, ks: &[usize], models: &[String]) -> Result<FigureReport> {
+    anyhow::ensure!(!ks.is_empty(), "need a K list");
+    anyhow::ensure!(gen_tokens >= 1, "need at least one generated token");
+    for name in models {
+        anyhow::ensure!(
+            PAPER_MODELS.iter().any(|m| m.name == name),
+            "unknown model '{name}' in --models"
+        );
+    }
+    let max_k = *ks.iter().max().expect("ks checked non-empty");
+    let base = HwConfig::paper_baseline();
+    let freq = base.gddr6.freq_ghz;
+    let mut t = Table::new(vec![
+        "model", "K", "unbatched tok/s", "batched tok/s", "speedup", "mean batch", "max batch",
+    ]);
+    let mut arr = Vec::new();
+    let selected = PAPER_MODELS
+        .iter()
+        .filter(|m| models.is_empty() || models.iter().any(|n| n == m.name));
+    for m in selected {
+        // One Algorithm-3 placement per model (sized for the largest
+        // K), shared by every run.
+        let map_cfg = base.clone().with_max_streams(max_k);
+        let mapping = ModelMapping::build(m, &map_cfg)?;
+        for &k in ks {
+            anyhow::ensure!(k >= 1, "K must be >= 1");
+            let run_one = |batch: bool| -> Result<(f64, f64, u64)> {
+                let run_cfg = base.clone().with_max_streams(k).with_batch_decode(batch);
+                let mut ms = MultiSim::from_mapping(m, &run_cfg, mapping.clone());
+                for id in 0..k as u64 {
+                    ms.submit(StreamSpec::new(id, 1 + gen_tokens))?;
+                }
+                let done = ms.run_all()?.len();
+                anyhow::ensure!(done == k, "{done} of {k} streams retired");
+                ms.finalize_stats();
+                let tput = ms.stats.tokens as f64 / ms.stats.busy_seconds(freq);
+                Ok((tput, ms.stats.mean_decode_batch(), ms.stats.max_decode_batch))
+            };
+            let (off_tput, _, _) = run_one(false)?;
+            let (on_tput, mean_batch, max_batch) = run_one(true)?;
+            let speedup = on_tput / off_tput;
+            t.row(vec![
+                m.name.to_string(),
+                k.to_string(),
+                format!("{off_tput:.0}"),
+                format!("{on_tput:.0}"),
+                format!("{speedup:.2}x"),
+                format!("{mean_batch:.2}"),
+                max_batch.to_string(),
+            ]);
+            arr.push(Json::obj(vec![
+                ("model", m.name.into()),
+                ("k", (k as u64).into()),
+                ("gen_tokens", gen_tokens.into()),
+                ("unbatched_tokens_per_s", off_tput.into()),
+                ("batched_tokens_per_s", on_tput.into()),
+                ("speedup", speedup.into()),
+                ("mean_decode_batch", mean_batch.into()),
+                ("max_decode_batch", max_batch.into()),
+            ]));
+        }
+    }
+    Ok(FigureReport {
+        id: "batching",
+        title: format!(
+            "Batched decode: saturated throughput (busy-cycle basis) vs K, \
+             batching on/off (+{gen_tokens} generated tokens per stream)"
+        ),
+        rendered: t.render(),
+        json: Json::Arr(arr),
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -720,6 +802,32 @@ mod tests {
                 ttft(1.0)
             );
         }
+    }
+
+    /// Acceptance: the batching figure pins the equivalence and speedup
+    /// contracts — K=1 has speedup exactly 1.0 (batching never engages),
+    /// K=2 fuses (mean batch >= 2) and strictly beats unbatched
+    /// busy-cycle throughput.
+    #[test]
+    fn fig_batching_k1_identity_and_k2_speedup() {
+        let r = fig_batching(3, &[1, 2], &["gpt2-small".to_string()]).unwrap();
+        let arr = r.json.as_arr().unwrap();
+        assert_eq!(arr.len(), 2, "1 model x 2 Ks");
+        let get = |i: usize, k: &str| arr[i].get(k).unwrap().as_f64().unwrap();
+        // K=1: batching can never engage, so the runs are cycle-identical.
+        assert_eq!(get(0, "k"), 1.0);
+        assert_eq!(get(0, "speedup"), 1.0, "K=1 must be cycle-identical");
+        assert_eq!(get(0, "mean_decode_batch"), 0.0);
+        // K=2: fused sweeps engage and amortize the weight sweep.
+        assert_eq!(get(1, "k"), 2.0);
+        assert!(get(1, "speedup") > 1.0, "K=2 speedup {}", get(1, "speedup"));
+        assert!(get(1, "mean_decode_batch") >= 2.0);
+        assert!(r.rendered.contains("gpt2-small"));
+    }
+
+    #[test]
+    fn fig_batching_rejects_unknown_model() {
+        assert!(fig_batching(2, &[1], &["no-such-model".to_string()]).is_err());
     }
 
     #[test]

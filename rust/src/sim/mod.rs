@@ -14,7 +14,12 @@
 //! replay) come from [`arrivals`] and feed the tail-latency percentiles
 //! in [`stats`]; *which* request runs next — and whether it is admitted
 //! at all under a latency SLO — is the pluggable policy subsystem in
-//! [`policy`]. See `sim/README.md`.
+//! [`policy`]. With `sched.batch_decode` on, the scheduler additionally
+//! fuses ready decode tokens *across* streams into one multi-pass
+//! weight sweep (continuous batching): weight-stationary VMMs issue
+//! once with `passes = K` while per-stream KV attention stays separate,
+//! amortizing DRAM row activations and ASIC pipeline fills over the
+//! batch. See `sim/README.md`.
 
 pub mod arrivals;
 pub mod engine;

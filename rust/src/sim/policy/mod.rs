@@ -103,7 +103,11 @@ impl fmt::Display for PolicySpec {
 
 /// One active stream as the issue pick sees it. The engine rebuilds the
 /// candidate list before every issue; indices into it are positions in
-/// the engine's admission-ordered active list.
+/// the engine's admission-ordered active list. Under batched decode a
+/// fused batch contributes a *single* candidate (its lead member's id
+/// and slot, the batch-wide ready/remaining/served aggregates) and its
+/// members contribute none — the pick chooses between whole batches and
+/// solo streams, never inside a batch.
 #[derive(Clone, Copy, Debug)]
 pub struct IssueCandidate {
     /// Request id (diagnostics; not a tie-breaker — ids are

@@ -44,6 +44,26 @@
 //! `prefill_chunk = 1` every position issues exactly like the
 //! historical all-decode path, cycle for cycle.
 //!
+//! **Cross-stream batched decode** (`sched.batch_decode`): decode is
+//! memory-bound — every generated token re-streams the full weight
+//! matrices — so at K concurrent streams the unbatched engine pays the
+//! same weight-row ACT/PRE and ASIC pipeline-fill cost K times per
+//! layer per step. With batching on, active streams whose next step is
+//! a decode token in the same position regime are *fused* into one
+//! sweep ([`FusedBatch`]): the shareable nodes — weight-stationary
+//! VMMs (QKV / attention output / FFN / LM head) and fixed-size ASIC
+//! ops (`ProgramTemplate::shareable_across_streams`) — issue **once**
+//! with `passes = K` through the same matrix-matrix machinery chunked
+//! prefill uses, while the per-stream nodes (K/V writes, KCache/VCache
+//! attention reads, position-scaled softmax/scale/partial sums) issue
+//! once per member at that member's own position and KV slot. A
+//! stream whose sweep boundary has a same-regime partner still
+//! mid-step *waits at the boundary* to fuse with it; batches dissolve
+//! when their sweep completes and re-form every step, so streams join
+//! and leave between sweeps — continuous batching, not static
+//! batching. `batch_decode = off` (the default) and K = 1 are
+//! cycle-identical to the unbatched schedule on any arrival trace.
+//!
 //! **Open-loop arrivals**: every request carries an explicit
 //! `arrival_cycle` (simulated time; 0 = present at start, reproducing
 //! the closed-loop batch). `submit` is *host bookkeeping* and stamps
@@ -77,7 +97,7 @@ use super::policy::{self, AdmissionDecision, AdmissionPolicy, IssueCandidate, Pi
 use super::prefill;
 use super::resources::{empty_plan, IssueCtx, Resources};
 use super::stats::{SimStats, StreamStats};
-use crate::compiler::{ProgramCache, ProgramTemplate};
+use crate::compiler::{PosRegime, ProgramCache, ProgramTemplate};
 use crate::config::HwConfig;
 use crate::dram::TimingCycles;
 use crate::mapping::ModelMapping;
@@ -289,6 +309,31 @@ struct Stream {
     attributed: u64,
 }
 
+/// A fused decode sweep in flight: >= 2 streams' decode tokens sharing
+/// one multi-pass program walk (`sched.batch_decode`). Members advance
+/// in lockstep over the shared template — shareable nodes issue once
+/// with `passes = K`, per-stream nodes once per member — and the batch
+/// dissolves when the sweep completes, so streams join and leave
+/// between sweeps (continuous batching, not static batching).
+struct FusedBatch {
+    /// KV slots of the members, in admission order. Slots are unique
+    /// among active streams (ids need not be), so they are the stable
+    /// member key while `active` indices shift around retirements.
+    member_slots: Vec<usize>,
+    /// The shared decode template (every member is at the same
+    /// position regime, so they hold the same `Rc` from the cache).
+    tpl: Rc<ProgramTemplate>,
+    /// Next node index in the shared template walk.
+    next: usize,
+}
+
+/// Where an `IssueCandidate` came from: a solo stream (index into
+/// `active`) or a fused batch (index into `batches`).
+enum CandSrc {
+    Stream(usize),
+    Batch(usize),
+}
+
 /// The interleaved multi-request engine.
 pub struct MultiSim {
     pub cfg: HwConfig,
@@ -324,6 +369,15 @@ pub struct MultiSim {
     rejections: VecDeque<RejectedStream>,
     /// Reusable issue-candidate scratch (hot path: rebuilt per issue).
     cand: Vec<IssueCandidate>,
+    /// Source of each entry in `cand` (same length, same order).
+    cand_src: Vec<CandSrc>,
+    /// Fused decode sweeps in flight (`sched.batch_decode` only;
+    /// always empty on the unbatched path).
+    batches: Vec<FusedBatch>,
+    /// Completions decided but not yet returned from `step` (a fused
+    /// sweep can retire several streams at once; outcomes drain one
+    /// per step so every request surfaces individually).
+    completions: VecDeque<StreamResult>,
     /// Cached conservative first-token cost per prompt length (SLO
     /// admission predictor; the chunked-prefill replay is exact per
     /// prompt length, so each length is computed at most once).
@@ -370,6 +424,9 @@ impl MultiSim {
             admission,
             rejections: VecDeque::new(),
             cand: Vec::new(),
+            cand_src: Vec::new(),
+            batches: Vec::new(),
+            completions: VecDeque::new(),
             ttft_est: std::collections::BTreeMap::new(),
             free_slots: (0..n_slots).collect(),
             slot_free_at: vec![0; n_slots],
@@ -414,6 +471,15 @@ impl MultiSim {
     /// non-zero — these requests still owe their caller a response.
     pub fn undelivered_rejections(&self) -> usize {
         self.rejections.len()
+    }
+
+    /// Completions already decided but not yet returned by
+    /// [`MultiSim::step`]: a fused decode sweep (`sched.batch_decode`)
+    /// can retire several streams at the same cycle; outcomes drain
+    /// one per step. A serving loop must keep stepping while this is
+    /// non-zero — these requests still owe their caller a response.
+    pub fn undelivered_completions(&self) -> usize {
+        self.completions.len()
     }
 
     /// Register a request. Submission is host bookkeeping: nothing is
@@ -607,6 +673,322 @@ impl MultiSim {
         self.rejections.pop_front().map(StreamOutcome::Rejected)
     }
 
+    /// Whether `slot`'s stream is a member of a fused sweep in flight.
+    fn slot_in_batch(&self, slot: usize) -> bool {
+        self.batches.iter().any(|b| b.member_slots.contains(&slot))
+    }
+
+    /// The active stream occupying `slot`. Slots are unique among
+    /// active streams, so this is the stable member lookup while
+    /// `active` indices shift around retirements.
+    fn stream_by_slot(&self, slot: usize) -> &Stream {
+        self.active
+            .iter()
+            .find(|s| s.slot == slot)
+            .expect("batch member stays active during its sweep")
+    }
+
+    /// Index of the active stream occupying `slot`.
+    fn stream_index_by_slot(&self, slot: usize) -> usize {
+        self.active
+            .iter()
+            .position(|s| s.slot == slot)
+            .expect("batch member stays active during its sweep")
+    }
+
+    /// Form new fused decode sweeps (`sched.batch_decode`): group the
+    /// active streams sitting at a decode-step boundary (`next == 0`,
+    /// past their prompt, not already fused) by position regime;
+    /// every group with >= 2 members becomes a [`FusedBatch`]. Runs at
+    /// the top of each issue iteration, so a stream reaching its
+    /// boundary fuses at the earliest opportunity — the
+    /// continuous-batching join point. Note K = 1 never forms a batch:
+    /// a lone boundary stream issues solo, exactly the unbatched path.
+    fn form_batches(&mut self) {
+        let mut groups: Vec<(PosRegime, Vec<usize>)> = Vec::new();
+        for i in 0..self.active.len() {
+            let s = &self.active[i];
+            if s.next != 0 || s.pos < s.prompt_tokens || self.slot_in_batch(s.slot) {
+                continue;
+            }
+            let regime = PosRegime::of(&self.model, &self.cfg, s.pos);
+            match groups.iter_mut().find(|(r, _)| *r == regime) {
+                Some((_, idxs)) => idxs.push(i),
+                None => groups.push((regime, vec![i])),
+            }
+        }
+        for (_, idxs) in groups {
+            if idxs.len() < 2 {
+                continue;
+            }
+            let member_slots: Vec<usize> = idxs.iter().map(|&i| self.active[i].slot).collect();
+            // Same regime -> same cached template `Rc`, so the lead
+            // member's template is the shared walk for everyone.
+            let tpl = Rc::clone(&self.active[idxs[0]].tpl);
+            self.batches.push(FusedBatch { member_slots, tpl, next: 0 });
+        }
+    }
+
+    /// Whether stream `i`, sitting at a decode-step boundary, should
+    /// wait for a partner: some other active stream is mid-step (or in
+    /// a flying sweep) whose *next* step is a decode token in the same
+    /// position regime. The issue loop warps time and issues eagerly,
+    /// so without this boundary wait two streams would essentially
+    /// never be simultaneously at a boundary and fusion would never
+    /// trigger. Stateless — recomputed every issue iteration — and
+    /// deadlock-free: the partner is itself issuable (solo mid-step or
+    /// via its batch), so the engine always makes progress, and once
+    /// the partner reaches its boundary `form_batches` fuses the pair.
+    /// If the partner instead retires, the deferral vanishes and the
+    /// stream issues solo on the next iteration.
+    fn deferred_for_fusion(&self, i: usize) -> bool {
+        let s = &self.active[i];
+        if s.next != 0 || s.pos < s.prompt_tokens {
+            return false;
+        }
+        let regime = PosRegime::of(&self.model, &self.cfg, s.pos);
+        self.active.iter().enumerate().any(|(j, p)| {
+            if j == i || (p.next == 0 && !self.slot_in_batch(p.slot)) {
+                return false;
+            }
+            let next_pos = p.pos + p.step_positions;
+            next_pos >= p.prompt_tokens
+                && next_pos < p.end_pos
+                && PosRegime::of(&self.model, &self.cfg, next_pos) == regime
+        })
+    }
+
+    /// The issue candidate representing fused batch `bi`: lead member's
+    /// identity, members' collective readiness for the batch's next
+    /// node (max over members for a shared multi-pass node — all pass
+    /// inputs must exist; min for a per-stream node — the earliest
+    /// member's issue can start then), and the most conservative
+    /// remaining/served figures so SRF/fair policies rank the batch at
+    /// least as urgent as its neediest member.
+    fn batch_candidate(&self, bi: usize) -> IssueCandidate {
+        let b = &self.batches[bi];
+        let deps = b.tpl.deps_of(b.next);
+        let shareable = b.tpl.shareable_across_streams(b.next);
+        let lead = self.stream_by_slot(b.member_slots[0]);
+        let mut ready: Option<u64> = None;
+        let mut remaining = u64::MAX;
+        let mut served = u64::MAX;
+        for &ms in &b.member_slots {
+            let s = self.stream_by_slot(ms);
+            let mut r = s.step_start;
+            for &d in deps {
+                r = r.max(s.finish[d]);
+            }
+            ready = Some(match ready {
+                None => r,
+                Some(acc) if shareable => acc.max(r),
+                Some(acc) => acc.min(r),
+            });
+            remaining = remaining.min(s.end_pos - s.pos);
+            served = served.min(s.attributed);
+        }
+        IssueCandidate {
+            id: lead.id,
+            slot: lead.slot,
+            ready: ready.expect("a batch has >= 2 members"),
+            remaining_tokens: remaining,
+            served_cycles: served,
+        }
+    }
+
+    /// Issue fused batch `bi`'s next node and advance the shared walk.
+    /// A shareable node issues **once** with `passes = K` on behalf of
+    /// every member (dependency times remapped to the per-dep max over
+    /// members — a pass cannot start before its own inputs exist); a
+    /// per-stream node issues once per member at that member's own
+    /// position and KV slot with its own timing vectors. When the walk
+    /// completes, every member retires one decode token, the batch
+    /// dissolves (members re-fuse or leave next iteration — continuous
+    /// batching), finished members retire exactly like the solo path,
+    /// and the first completion is returned (the rest drain one per
+    /// `step` via `completions`).
+    fn issue_batch_node(&mut self, bi: usize) -> Result<Option<StreamOutcome>> {
+        let tpl = Rc::clone(&self.batches[bi].tpl);
+        let node = self.batches[bi].next;
+        let member_slots = self.batches[bi].member_slots.clone();
+        let members: Vec<usize> =
+            member_slots.iter().map(|&slot| self.stream_index_by_slot(slot)).collect();
+        let deps = tpl.deps_of(node);
+        let ctx = IssueCtx {
+            cfg: &self.cfg,
+            t: &self.t,
+            model: &self.model,
+            mapping: &self.mapping,
+        };
+        if tpl.shareable_across_streams(node) {
+            // One multi-pass issue for all members: same weights, K
+            // input vectors — one ACT/PRE sweep, one pipeline fill.
+            let step_start =
+                members.iter().map(|&mi| self.active[mi].step_start).max().expect(">= 2 members");
+            let fdeps: Vec<usize> = (0..deps.len()).collect();
+            let mut ffin = Vec::with_capacity(deps.len());
+            let mut ffr = Vec::with_capacity(deps.len());
+            for &d in deps {
+                ffin.push(
+                    members.iter().map(|&mi| self.active[mi].finish[d]).max().expect("members"),
+                );
+                ffr.push(
+                    members
+                        .iter()
+                        .map(|&mi| self.active[mi].first_ready[d])
+                        .max()
+                        .expect("members"),
+                );
+            }
+            let (pos, slot) = {
+                let lead = &self.active[members[0]];
+                (lead.pos, lead.slot)
+            };
+            // Shareable nodes are ltoken/slot-invariant within the
+            // regime (`shareable_nodes_are_exactly_the_...` test), so
+            // the lead member's patch stands in for everyone.
+            let ltoken = pos + 1;
+            let instr = tpl.instr_at(node, ltoken, slot);
+            let out = self.res.issue(
+                &ctx,
+                &mut self.plan_scratch,
+                &instr,
+                &fdeps,
+                step_start,
+                &ffin,
+                &ffr,
+                pos,
+                ltoken,
+                members.len() as u64,
+            );
+            self.stats.add_class(out.class, out.finish.saturating_sub(out.ready));
+            self.stats.instructions += 1;
+            self.clock = self.clock.max(out.finish);
+            let span = out.finish.saturating_sub(out.ready);
+            for &mi in &members {
+                let s = &mut self.active[mi];
+                s.instructions += 1;
+                s.attributed += span;
+                s.first_ready.push(out.first_ready);
+                s.finish.push(out.finish);
+                s.step_finish = s.step_finish.max(out.finish);
+                s.next += 1;
+            }
+        } else {
+            // Per-stream node (K/V writes, KV-cache attention reads,
+            // position-scaled ASIC ops): KV slots are disjoint, so
+            // each member issues at its own position and slot.
+            for &mi in &members {
+                let (pos, slot, step_start) = {
+                    let s = &self.active[mi];
+                    (s.pos, s.slot, s.step_start)
+                };
+                let ltoken = pos + 1;
+                let instr = tpl.instr_at(node, ltoken, slot);
+                let out = {
+                    let s = &self.active[mi];
+                    self.res.issue(
+                        &ctx,
+                        &mut self.plan_scratch,
+                        &instr,
+                        deps,
+                        step_start,
+                        &s.finish,
+                        &s.first_ready,
+                        pos,
+                        ltoken,
+                        1,
+                    )
+                };
+                self.stats.add_class(out.class, out.finish.saturating_sub(out.ready));
+                self.stats.instructions += 1;
+                self.clock = self.clock.max(out.finish);
+                let s = &mut self.active[mi];
+                s.instructions += 1;
+                s.attributed += out.finish.saturating_sub(out.ready);
+                s.first_ready.push(out.first_ready);
+                s.finish.push(out.finish);
+                s.step_finish = s.step_finish.max(out.finish);
+                s.next += 1;
+            }
+        }
+        self.batches[bi].next = node + 1;
+        if node + 1 < tpl.len() {
+            return Ok(None);
+        }
+
+        // Sweep complete: every member finished one decode token.
+        self.stats.fused_sweeps += 1;
+        self.stats.fused_streams += members.len() as u64;
+        self.stats.max_decode_batch = self.stats.max_decode_batch.max(members.len() as u64);
+        self.stats.tokens += members.len() as u64;
+        let mut finished_slots = Vec::new();
+        let mut survivor_slots = Vec::new();
+        for &mi in &members {
+            let s = &mut self.active[mi];
+            let fin = s.step_finish;
+            s.token_finishes.push(fin);
+            s.pos += 1;
+            if s.pos >= s.end_pos {
+                finished_slots.push(s.slot);
+            } else {
+                survivor_slots.push(s.slot);
+            }
+        }
+        // Dissolve the batch before touching `active` (removals shift
+        // stream indices; slots stay stable) — survivors re-fuse or
+        // issue solo next iteration, the continuous-batching leave
+        // point.
+        self.batches.remove(bi);
+        for &slot in &survivor_slots {
+            let mi = self.stream_index_by_slot(slot);
+            let pos = self.active[mi].pos;
+            // Decode steps are always single-position; `cache.get`
+            // re-keys the template when the stream crosses a regime
+            // boundary.
+            let tpl = self.cache.get(&self.model, &self.cfg, pos)?;
+            let s = &mut self.active[mi];
+            s.tpl = tpl;
+            s.step_positions = 1;
+            s.step_start = s.step_finish;
+            s.next = 0;
+            s.finish.clear();
+            s.first_ready.clear();
+        }
+        let mut first_outcome = None;
+        for &slot in &finished_slots {
+            let si = self.stream_index_by_slot(slot);
+            let s = self.active.remove(si);
+            self.slot_free_at[s.slot] = s.step_finish;
+            self.free_slots.push(s.slot);
+            self.now = self.now.max(s.step_finish);
+            let result = StreamResult {
+                id: s.id,
+                arrival_cycle: s.arrival,
+                admitted_cycle: s.admitted,
+                finish_cycle: s.step_finish,
+                tokens: s.token_finishes.len() as u64,
+                prompt_tokens: s.prompt_tokens,
+                kv_slot: s.slot,
+                token_finishes: s.token_finishes,
+            };
+            self.stats.prefill_cycles += result.prefill_cycles();
+            self.stats.decode_cycles += result.decode_cycles();
+            let row = StreamStats::from_result(&result, s.instructions, s.attributed);
+            self.stats.streams.push(row);
+            if first_outcome.is_none() {
+                first_outcome = Some(StreamOutcome::Completed(result));
+            } else {
+                self.completions.push_back(result);
+            }
+        }
+        if !finished_slots.is_empty() {
+            self.release_arrivals();
+            self.admit(true)?;
+        }
+        Ok(first_outcome)
+    }
+
     /// Advance the simulation until the next request reaches a terminal
     /// outcome — completion or an admission-policy rejection — and
     /// return it, or `None` when nothing is in flight, queued or
@@ -615,6 +997,9 @@ impl MultiSim {
     pub fn step(&mut self) -> Result<Option<StreamOutcome>> {
         if let Some(r) = self.take_rejection() {
             return Ok(Some(r));
+        }
+        if let Some(r) = self.completions.pop_front() {
+            return Ok(Some(StreamOutcome::Completed(r)));
         }
         self.release_arrivals();
         self.admit(true)?;
@@ -630,6 +1015,10 @@ impl MultiSim {
             let Some(arrival) = self.next_arrival() else {
                 return Ok(None);
             };
+            // The warp-to-arrival gap is offered-load idle time, not
+            // engine capacity: count it so busy-cycle throughput can
+            // subtract it (`SimStats::busy_cycles`).
+            self.stats.idle_cycles += arrival.saturating_sub(self.now);
             self.now = self.now.max(arrival);
             self.release_arrivals();
             self.admit(false)?;
@@ -638,12 +1027,28 @@ impl MultiSim {
             }
         }
         loop {
-            // Ask the pick policy which active stream issues next. The
-            // candidate list is rebuilt per issue (admission-ordered,
-            // same order as `active`); the FCFS pick reproduces the
-            // historical greedy earliest-dependency-ready rule exactly.
+            // Ask the pick policy which active stream (or fused batch)
+            // issues next. The candidate list is rebuilt per issue
+            // (admission-ordered, same order as `active`, batches
+            // after solos); the FCFS pick reproduces the historical
+            // greedy earliest-dependency-ready rule exactly. With
+            // batching off the list is one candidate per active stream
+            // in `active` order — identical to the unbatched engine.
+            if self.cfg.sched.batch_decode {
+                self.form_batches();
+            }
             self.cand.clear();
-            for s in &self.active {
+            self.cand_src.clear();
+            for i in 0..self.active.len() {
+                if self.cfg.sched.batch_decode
+                    && (self.slot_in_batch(self.active[i].slot) || self.deferred_for_fusion(i))
+                {
+                    // Batch members are represented by their batch's
+                    // candidate; a deferred stream waits at its decode
+                    // boundary for a same-regime partner to reach it.
+                    continue;
+                }
+                let s = &self.active[i];
                 let mut ready = s.step_start;
                 for &d in s.tpl.deps_of(s.next) {
                     ready = ready.max(s.finish[d]);
@@ -655,15 +1060,26 @@ impl MultiSim {
                     remaining_tokens: s.end_pos - s.pos,
                     served_cycles: s.attributed,
                 });
+                self.cand_src.push(CandSrc::Stream(i));
             }
-            let si = self.pick.pick_issue(&self.cand);
+            for bi in 0..self.batches.len() {
+                let c = self.batch_candidate(bi);
+                self.cand.push(c);
+                self.cand_src.push(CandSrc::Batch(bi));
+            }
             assert!(
-                si < self.active.len(),
-                "pick policy '{}' returned stream index {si} of {}",
-                self.pick.name(),
+                !self.cand.is_empty(),
+                "issue loop produced no candidates with {} active streams",
                 self.active.len()
             );
-            let best_ready = self.cand[si].ready;
+            let ci = self.pick.pick_issue(&self.cand);
+            assert!(
+                ci < self.cand.len(),
+                "pick policy '{}' returned candidate index {ci} of {}",
+                self.pick.name(),
+                self.cand.len()
+            );
+            let best_ready = self.cand[ci].ready;
 
             // Event-driven release: a pending request whose arrival
             // precedes the next issue gets admitted first when a KV
@@ -684,6 +1100,19 @@ impl MultiSim {
                 }
             }
             self.now = self.now.max(best_ready);
+
+            let si = match self.cand_src[ci] {
+                CandSrc::Stream(si) => si,
+                CandSrc::Batch(bi) => {
+                    // A fused sweep advances one node per pick, same
+                    // granularity as solo streams, and may retire
+                    // several members at once when it completes.
+                    if let Some(outcome) = self.issue_batch_node(bi)? {
+                        return Ok(Some(outcome));
+                    }
+                    continue;
+                }
+            };
 
             // Issue it on the shared resources, addressed to the
             // stream's own KV slot. A prefill chunk issues with the
@@ -743,6 +1172,8 @@ impl MultiSim {
             self.stats.tokens += step_positions;
             if pos < self.active[si].prompt_tokens {
                 self.stats.prefill_chunks += 1;
+            } else {
+                self.stats.solo_decode_steps += 1;
             }
             let stream_done = {
                 let s = &mut self.active[si];
@@ -1479,5 +1910,282 @@ mod tests {
         assert_eq!(rejected[0].id, 1);
         assert_eq!(rejected[0].waited_cycles(), 0, "shed at admission, not after queueing");
         assert!(rejected[0].predicted_ttft_cycles > 2 * short_pred);
+    }
+
+    /// Tentpole pin: `batch_decode = on` at K = 1 replays the unbatched
+    /// schedule cycle-for-cycle on arbitrary arrival traces — a lone
+    /// stream never has a fusion partner, so it never defers and never
+    /// fuses (and `batch_decode = off` is the untouched historical path
+    /// at any K).
+    #[test]
+    fn batch_decode_k1_is_cycle_identical_over_random_traces() {
+        use crate::util::prop::check;
+        check("batched K=1 equivalence", 10, |rng| {
+            let n_req = 1 + rng.gen_range(5);
+            let chunk = 1 + rng.gen_range(8);
+            let mut specs = Vec::new();
+            for id in 0..n_req {
+                let n_tokens = 1 + rng.gen_range(20);
+                specs.push(StreamSpec {
+                    id,
+                    n_tokens,
+                    prompt_tokens: 1 + rng.gen_range(n_tokens),
+                    arrival_cycle: rng.gen_range(30_000),
+                });
+            }
+            let run = |batch: bool| -> Result<(u64, u64, u64, Vec<(u64, u64, Vec<u64>)>), String> {
+                let m = by_name("gpt-nano").unwrap();
+                let mut cfg =
+                    HwConfig::paper_baseline().with_max_streams(1).with_batch_decode(batch);
+                cfg.sched.prefill_chunk = chunk;
+                let mut ms = MultiSim::new(&m, &cfg).unwrap();
+                for s in &specs {
+                    ms.submit(*s).map_err(|e| e.to_string())?;
+                }
+                let results = ms.run_all().map_err(|e| e.to_string())?;
+                ms.finalize_stats();
+                let sig: Vec<(u64, u64, Vec<u64>)> = results
+                    .into_iter()
+                    .filter_map(StreamOutcome::into_completed)
+                    .map(|r| (r.id, r.admitted_cycle, r.token_finishes))
+                    .collect();
+                Ok((ms.clock(), ms.stats.instructions, ms.stats.fused_sweeps, sig))
+            };
+            let on = run(true)?;
+            let off = run(false)?;
+            if on.2 != 0 {
+                return Err(format!("K=1 fused {} sweeps", on.2));
+            }
+            if on != off {
+                return Err(format!("K=1 batched diverged: clock {} vs {}", on.0, off.0));
+            }
+            Ok(())
+        });
+    }
+
+    /// Tentpole: four identical decode-heavy streams at K = 4 fuse
+    /// (occupancy counters move) and the batched engine finishes
+    /// strictly earlier than the unbatched one — the shared ACT/PRE
+    /// sweep and ASIC pipeline fill amortize across streams.
+    #[test]
+    fn batched_decode_fuses_and_beats_unbatched_makespan() {
+        let run = |batch: bool| {
+            let m = by_name("gpt-nano").unwrap();
+            let cfg = HwConfig::paper_baseline().with_max_streams(4).with_batch_decode(batch);
+            let mut ms = MultiSim::new(&m, &cfg).unwrap();
+            for id in 0..4 {
+                ms.submit(StreamSpec::new(id, 12)).unwrap();
+            }
+            let results = completed(ms.run_all().unwrap());
+            ms.finalize_stats();
+            assert_eq!(results.len(), 4);
+            for r in &results {
+                assert_eq!(r.tokens, 12);
+                let decode = &r.token_finishes[r.prompt_tokens as usize - 1..];
+                assert!(decode.windows(2).all(|w| w[0] < w[1]), "decode finishes not strict");
+            }
+            (ms.clock(), ms.stats.clone())
+        };
+        let (on_clock, on) = run(true);
+        let (off_clock, off) = run(false);
+        assert!(on.fused_sweeps > 0, "no sweeps fused at K=4");
+        assert!(on.max_decode_batch >= 2);
+        assert!(on.mean_decode_batch() >= 2.0);
+        assert_eq!(on.tokens, off.tokens);
+        assert_eq!(off.fused_sweeps, 0, "unbatched engine must not fuse");
+        assert_eq!(off.max_decode_batch, 0);
+        assert!(
+            on.solo_decode_steps < off.solo_decode_steps,
+            "batching must convert solo decode steps into fused sweeps"
+        );
+        assert!(on_clock < off_clock, "batched makespan {on_clock} !< unbatched {off_clock}");
+    }
+
+    /// Edge: staggered lengths — the short member retires mid-run while
+    /// the survivors keep fusing; slots recycle and every stream's
+    /// token count is exact.
+    #[test]
+    fn stream_retires_mid_batch_and_survivors_keep_fusing() {
+        let m = by_name("gpt-nano").unwrap();
+        let cfg = HwConfig::paper_baseline().with_max_streams(3).with_batch_decode(true);
+        let mut ms = MultiSim::new(&m, &cfg).unwrap();
+        ms.submit(StreamSpec::new(0, 4)).unwrap();
+        ms.submit(StreamSpec::new(1, 10)).unwrap();
+        ms.submit(StreamSpec::new(2, 16)).unwrap();
+        let results = completed(ms.run_all().unwrap());
+        ms.finalize_stats();
+        assert_eq!(results.len(), 3);
+        let by_id = |id: u64| results.iter().find(|r| r.id == id).unwrap();
+        assert_eq!(by_id(0).tokens, 4);
+        assert_eq!(by_id(1).tokens, 10);
+        assert_eq!(by_id(2).tokens, 16);
+        assert!(ms.stats.fused_sweeps > 0);
+        assert!(ms.stats.max_decode_batch >= 2);
+        assert_eq!(ms.free_kv_slots(), 3, "slots recycled after drain");
+        assert_eq!(ms.stats.tokens, 30);
+    }
+
+    /// Edge: a request arriving mid-run joins later sweeps (the
+    /// continuous-batching join) — it completes with exact latency
+    /// stamps while the earlier pair keeps fusing.
+    #[test]
+    fn stream_arriving_mid_run_joins_later_sweeps() {
+        let m = by_name("gpt-nano").unwrap();
+        let cfg = HwConfig::paper_baseline().with_max_streams(3).with_batch_decode(true);
+        let mut ms = MultiSim::new(&m, &cfg).unwrap();
+        ms.submit(StreamSpec::new(0, 20)).unwrap();
+        ms.submit(StreamSpec::new(1, 20)).unwrap();
+        ms.submit(StreamSpec { id: 2, n_tokens: 8, prompt_tokens: 1, arrival_cycle: 10_000 })
+            .unwrap();
+        let results = completed(ms.run_all().unwrap());
+        ms.finalize_stats();
+        assert_eq!(results.len(), 3);
+        let late = results.iter().find(|r| r.id == 2).unwrap();
+        assert_eq!(late.arrival_cycle, 10_000);
+        assert_eq!(late.queue_cycles(), 0, "a free slot admits the arrival immediately");
+        assert_eq!(late.tokens, 8);
+        assert!(ms.stats.fused_sweeps > 0);
+        assert!(ms.stats.max_decode_batch >= 2);
+    }
+
+    /// A sweep that retires several members at once surfaces one
+    /// completion per `step`; `undelivered_completions` exposes the
+    /// backlog so a serving loop keeps stepping instead of blocking.
+    #[test]
+    fn fused_retirements_drain_one_per_step() {
+        let m = by_name("gpt-nano").unwrap();
+        let cfg = HwConfig::paper_baseline().with_max_streams(2).with_batch_decode(true);
+        let mut ms = MultiSim::new(&m, &cfg).unwrap();
+        ms.submit(StreamSpec::new(0, 6)).unwrap();
+        ms.submit(StreamSpec::new(1, 6)).unwrap();
+        let first = ms.step().unwrap().unwrap();
+        assert!(first.as_completed().is_some());
+        // Identical twins retire on the same final sweep: the second
+        // completion is buffered and drains on the next step.
+        assert_eq!(ms.undelivered_completions(), 1);
+        let second = ms.step().unwrap().unwrap();
+        assert!(second.as_completed().is_some());
+        assert_eq!(ms.undelivered_completions(), 0);
+        assert!(ms.step().unwrap().is_none());
+        ms.finalize_stats();
+        assert!(ms.stats.fused_sweeps > 0);
+    }
+
+    /// Edge: chunked prefill interleaves with decode batching —
+    /// prefill chunks run per-stream with chunk-grained finishes while
+    /// the decode phases fuse (a last-chunk prefiller counts as a
+    /// fusion partner, so the decode stream waits at its boundary).
+    #[test]
+    fn mixed_prefill_chunks_and_decode_batches() {
+        let m = by_name("gpt-nano").unwrap();
+        let mut cfg = HwConfig::paper_baseline().with_max_streams(2).with_batch_decode(true);
+        cfg.sched.prefill_chunk = 8;
+        let mut ms = MultiSim::new(&m, &cfg).unwrap();
+        ms.submit(StreamSpec::with_prompt(0, 20, 10)).unwrap();
+        ms.submit(StreamSpec::with_prompt(1, 12, 10)).unwrap();
+        let results = completed(ms.run_all().unwrap());
+        ms.finalize_stats();
+        assert_eq!(results.len(), 2);
+        let by_id = |id: u64| results.iter().find(|r| r.id == id).unwrap();
+        assert_eq!(by_id(0).tokens, 30);
+        assert_eq!(by_id(1).tokens, 22);
+        // 20 prompt positions at chunk 8 -> 3 chunks; 12 -> 2 chunks.
+        assert_eq!(ms.stats.prefill_chunks, 5);
+        assert!(ms.stats.fused_sweeps > 0, "decode phases must fuse");
+        // Prefill keeps chunk-grained finishes under batching.
+        let f = &by_id(0).token_finishes;
+        assert_eq!(f[0..8].iter().collect::<std::collections::BTreeSet<_>>().len(), 1);
+        assert!(f.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(by_id(0).prefill_finish_cycle(), f[19]);
+    }
+
+    /// Satellite property: with batching ON over random traces, prompt
+    /// splits, chunk sizes and K, every latency identity from the
+    /// unbatched engine still holds, token accounting is exact, and
+    /// the occupancy counters are internally consistent.
+    #[test]
+    fn batched_identities_over_random_arrival_traces() {
+        use crate::util::prop::check;
+        check("batched stream identities", 10, |rng| {
+            let k = 2 + rng.gen_range(3) as usize;
+            let n_req = 2 + rng.gen_range(5);
+            let m = by_name("gpt-nano").unwrap();
+            let mut cfg = HwConfig::paper_baseline().with_max_streams(k).with_batch_decode(true);
+            cfg.sched.prefill_chunk = 1 + rng.gen_range(8);
+            let mut ms = MultiSim::new(&m, &cfg).unwrap();
+            let mut total = 0u64;
+            for id in 0..n_req {
+                let n_tokens = 2 + rng.gen_range(20);
+                total += n_tokens;
+                let spec = StreamSpec {
+                    id,
+                    n_tokens,
+                    prompt_tokens: 1 + rng.gen_range(n_tokens),
+                    arrival_cycle: rng.gen_range(20_000),
+                };
+                ms.submit(spec).map_err(|e| e.to_string())?;
+            }
+            let results: Vec<StreamResult> = ms
+                .run_all()
+                .map_err(|e| e.to_string())?
+                .into_iter()
+                .filter_map(StreamOutcome::into_completed)
+                .collect();
+            ms.finalize_stats();
+            if results.len() as u64 != n_req {
+                return Err(format!("{} of {n_req} streams retired", results.len()));
+            }
+            if ms.stats.tokens != total {
+                return Err(format!("token total {} != {total}", ms.stats.tokens));
+            }
+            for r in &results {
+                if r.admitted_cycle < r.arrival_cycle {
+                    return Err(format!("stream {} admitted before arrival", r.id));
+                }
+                if r.queue_cycles() + r.service_cycles() != r.e2e_cycles() {
+                    return Err(format!("stream {} latency identity broken", r.id));
+                }
+                if r.prefill_cycles() + r.decode_cycles() != r.service_cycles() {
+                    return Err(format!("stream {} prefill/decode split broken", r.id));
+                }
+                if r.token_finishes.len() as u64 != r.tokens {
+                    return Err(format!("stream {} token count broken", r.id));
+                }
+                let decode = &r.token_finishes[r.prompt_tokens as usize - 1..];
+                if !decode.windows(2).all(|w| w[0] < w[1]) {
+                    return Err(format!("stream {} decode finishes not strict", r.id));
+                }
+            }
+            let s = &ms.stats;
+            if s.fused_streams < 2 * s.fused_sweeps {
+                return Err("fused_streams < 2 * fused_sweeps".into());
+            }
+            if s.fused_sweeps > 0 && s.mean_decode_batch() > s.max_decode_batch as f64 {
+                return Err("mean occupancy exceeds max".into());
+            }
+            Ok(())
+        });
+    }
+
+    /// Satellite: idle arrival-gap warp time is counted and excluded
+    /// from busy cycles — a lone late arrival warps exactly its gap,
+    /// while a batch-at-zero run has zero idle.
+    #[test]
+    fn idle_warp_time_is_excluded_from_busy_cycles() {
+        let mut ms = msim("gpt-nano", 2);
+        ms.submit(StreamSpec { id: 0, n_tokens: 2, prompt_tokens: 1, arrival_cycle: 50_000 })
+            .unwrap();
+        ms.run_all().unwrap();
+        ms.finalize_stats();
+        assert_eq!(ms.stats.idle_cycles, 50_000);
+        assert!(ms.stats.busy_cycles() < ms.stats.cycles);
+        assert_eq!(ms.stats.cycles, ms.stats.busy_cycles() + ms.stats.idle_cycles);
+
+        let mut ms = msim("gpt-nano", 2);
+        ms.submit(StreamSpec::new(0, 2)).unwrap();
+        ms.run_all().unwrap();
+        ms.finalize_stats();
+        assert_eq!(ms.stats.idle_cycles, 0);
+        assert_eq!(ms.stats.busy_cycles(), ms.stats.cycles);
     }
 }

@@ -126,6 +126,25 @@ pub struct SimStats {
     /// completion to last token). `prefill_cycles + decode_cycles` =
     /// summed `service_cycles`.
     pub decode_cycles: u64,
+    /// Cycles an *idle* engine warped forward to the next arrival
+    /// (`MultiSim::step` with no active stream). Makespan-based
+    /// throughput divides by `cycles`, which under open-loop arrivals
+    /// conflates offered load with capacity; `busy_cycles()` subtracts
+    /// these gaps to measure the engine itself. Always 0 for
+    /// batch-at-zero and single-stream runs.
+    pub idle_cycles: u64,
+    /// Fused decode sweeps executed (cross-stream batched decode: one
+    /// multi-pass weight sweep shared by >= 2 streams' decode tokens).
+    /// 0 whenever `sched.batch_decode` is off.
+    pub fused_sweeps: u64,
+    /// Sum of batch sizes over fused sweeps (mean occupancy =
+    /// `fused_streams / fused_sweeps`).
+    pub fused_streams: u64,
+    /// Largest number of streams ever fused into one sweep.
+    pub max_decode_batch: u64,
+    /// Decode steps that ran unfused (solo) — either batching is off,
+    /// or no same-regime partner was at its step boundary.
+    pub solo_decode_steps: u64,
     /// Per-request-stream attribution (one entry per retired stream;
     /// empty for plain single-program runs).
     pub streams: Vec<StreamStats>,
@@ -252,6 +271,27 @@ impl SimStats {
         self.cycles as f64 / (freq_ghz * 1e9)
     }
 
+    /// Makespan cycles minus idle arrival-gap warp cycles: the time the
+    /// engine actually had work. The capacity-honest denominator for
+    /// open-loop throughput (`tokens / busy_seconds`), equal to
+    /// `cycles` for batch-at-zero runs.
+    pub fn busy_cycles(&self) -> u64 {
+        self.cycles.saturating_sub(self.idle_cycles)
+    }
+
+    /// `busy_cycles()` in seconds at `freq_ghz` DRAM clock.
+    pub fn busy_seconds(&self, freq_ghz: f64) -> f64 {
+        self.busy_cycles() as f64 / (freq_ghz * 1e9)
+    }
+
+    /// Mean streams per fused decode sweep (0.0 when nothing fused).
+    pub fn mean_decode_batch(&self) -> f64 {
+        if self.fused_sweeps == 0 {
+            return 0.0;
+        }
+        self.fused_streams as f64 / self.fused_sweeps as f64
+    }
+
     /// Fraction of attributed time spent in VMM classes.
     pub fn vmm_fraction(&self) -> f64 {
         let total: u64 = self.class_cycles.values().sum();
@@ -364,6 +404,27 @@ mod tests {
         assert!((s.asic_utilization() - 0.25).abs() < 1e-12);
         assert_eq!(SimStats::default().program_cache_hit_rate(), 1.0);
         assert_eq!(SimStats::default().asic_utilization(), 0.0);
+    }
+
+    #[test]
+    fn busy_cycles_subtract_idle_warp_time() {
+        let s = SimStats { cycles: 1000, idle_cycles: 300, ..Default::default() };
+        assert_eq!(s.busy_cycles(), 700);
+        assert!((s.busy_seconds(1.0) - 700e-9).abs() < 1e-18);
+        // Batch-at-zero runs never warp: busy == makespan.
+        let s = SimStats { cycles: 1000, ..Default::default() };
+        assert_eq!(s.busy_cycles(), s.cycles);
+        // Defensive: idle beyond makespan saturates instead of wrapping.
+        let s = SimStats { cycles: 10, idle_cycles: 99, ..Default::default() };
+        assert_eq!(s.busy_cycles(), 0);
+    }
+
+    #[test]
+    fn decode_batch_occupancy() {
+        let s = SimStats::default();
+        assert_eq!(s.mean_decode_batch(), 0.0, "nothing fused -> 0, not NaN");
+        let s = SimStats { fused_sweeps: 4, fused_streams: 10, ..Default::default() };
+        assert!((s.mean_decode_batch() - 2.5).abs() < 1e-12);
     }
 
     #[test]

@@ -600,6 +600,124 @@ fn slo_admission_under_concurrency_is_deterministic() {
     assert_eq!(run(), (sig, rejected), "identical seed, identical outcome sequence");
 }
 
+/// Tentpole equivalence pin (batched decode): with `batch_decode = on`
+/// but only one KV slot, a fused batch can never form (fusion needs two
+/// co-resident decode streams), so the run must stay cycle-identical to
+/// the pinned single-stream equivalence above — and to the same run
+/// with batching off.
+#[test]
+fn batch_decode_on_at_k1_reproduces_single_stream_cycles_exactly() {
+    let m = by_name("gpt-nano").unwrap();
+    let n_tokens = 12u64;
+    let base = HwConfig::paper_baseline().with_max_streams(1);
+
+    let mut sim = Simulator::new(&m, &base).unwrap();
+    let mut want = Vec::new();
+    for pos in 0..n_tokens {
+        want.push(sim.decode_step(pos).unwrap().finish_cycle);
+    }
+
+    let run = |batch: bool| {
+        let cfg = base.clone().with_batch_decode(batch);
+        let mut ms = MultiSim::new(&m, &cfg).unwrap();
+        ms.submit(StreamSpec::new(0, n_tokens)).unwrap();
+        let r = completed(ms.run_all().unwrap()).remove(0);
+        ms.finalize_stats();
+        assert_eq!(ms.stats.fused_sweeps, 0, "K=1 must never fuse");
+        (r.token_finishes, ms.clock())
+    };
+    let (on_fin, on_clock) = run(true);
+    let (off_fin, off_clock) = run(false);
+    assert_eq!(on_fin, want, "batch_decode=on at K=1 diverged from single-stream");
+    assert_eq!(on_fin, off_fin);
+    assert_eq!(on_clock, off_clock);
+    assert_eq!(on_clock, sim.clock());
+}
+
+/// Tentpole acceptance: at saturation (K identical streams, batch at
+/// zero), batched decode strictly beats the unbatched schedule on
+/// busy-cycle tokens/s, and the win *grows* with K — the ACT/PRE and
+/// ASIC-fill amortization is shared by more streams per sweep.
+#[test]
+fn saturated_batched_decode_beats_unbatched_and_scales_with_k() {
+    let m = by_name("gpt-nano").unwrap();
+    let run = |k: usize, batch: bool| {
+        let cfg = HwConfig::paper_baseline().with_max_streams(k).with_batch_decode(batch);
+        let mut ms = MultiSim::new(&m, &cfg).unwrap();
+        for id in 0..4u64 {
+            ms.submit(StreamSpec::new(id, 16)).unwrap();
+        }
+        let results = completed(ms.run_all().unwrap());
+        assert_eq!(results.len(), 4);
+        ms.finalize_stats();
+        let tokens: u64 = results.iter().map(|r| r.tokens).sum();
+        assert_eq!(tokens, 64);
+        // Batch-at-zero: no idle warp time, so busy == makespan cycles.
+        assert_eq!(ms.stats.busy_cycles(), ms.clock());
+        let tput = tokens as f64 / ms.stats.busy_cycles() as f64;
+        (tput, ms.stats.clone())
+    };
+    let (off2, _) = run(2, false);
+    let (on2, stats2) = run(2, true);
+    let (off4, _) = run(4, false);
+    let (on4, stats4) = run(4, true);
+    assert!(on2 > off2, "K=2 batched tok/cycle {on2} !> unbatched {off2}");
+    assert!(on4 > off4, "K=4 batched tok/cycle {on4} !> unbatched {off4}");
+    assert!(
+        on4 / off4 > on2 / off2,
+        "speedup must grow with K: K=4 {} !> K=2 {}",
+        on4 / off4,
+        on2 / off2
+    );
+    assert!(stats2.fused_sweeps > 0 && stats4.fused_sweeps > 0);
+    assert!(stats4.mean_decode_batch() > stats2.mean_decode_batch());
+    assert_eq!(stats4.max_decode_batch, 4, "saturated K=4 must reach full-width sweeps");
+}
+
+/// Batched decode under an overloaded Poisson trace with mixed request
+/// lengths: every request completes, token totals match the unbatched
+/// run (batching changes the schedule, never the work), fusion engages,
+/// and the same seed replays the same cycle-exact outcome sequence.
+#[test]
+fn batched_poisson_trace_conserves_tokens_and_is_deterministic() {
+    let m = by_name("gpt-nano").unwrap();
+    let lens = [2u64, 6, 10, 4, 8, 3, 5, 7];
+    let spec = ArrivalSpec::Poisson { rate_per_s: 2_000_000.0 };
+    let at = arrivals::generate(&spec, lens.len(), 1.0, 29).unwrap();
+    let run = |batch: bool| {
+        let cfg = HwConfig::paper_baseline().with_max_streams(4).with_batch_decode(batch);
+        let mut ms = MultiSim::new(&m, &cfg).unwrap();
+        for (id, (&n, &a)) in lens.iter().zip(at.iter()).enumerate() {
+            ms.submit(StreamSpec { id: id as u64, n_tokens: n, prompt_tokens: 1, arrival_cycle: a })
+                .unwrap();
+        }
+        let results = completed(ms.run_all().unwrap());
+        assert_eq!(results.len(), lens.len());
+        ms.finalize_stats();
+        let sig: Vec<(u64, u64, u64, Vec<u64>)> = results
+            .iter()
+            .map(|r| (r.id, r.admitted_cycle, r.finish_cycle, r.token_finishes.clone()))
+            .collect();
+        let tokens: u64 = results.iter().map(|r| r.tokens).sum();
+        (sig, tokens, ms.stats.clone())
+    };
+    let (sig_on, tokens_on, stats_on) = run(true);
+    let (_, tokens_off, stats_off) = run(false);
+    assert_eq!(tokens_on, lens.iter().sum::<u64>());
+    assert_eq!(tokens_on, tokens_off, "batching must not change the delivered work");
+    // A fused shareable node issues once for the whole batch, so the
+    // engine executes strictly fewer instructions; each stream still
+    // accounts a full program (the per-stream sum is conserved).
+    assert!(stats_on.instructions < stats_off.instructions);
+    let per_stream = |s: &pim_gpt::sim::SimStats| -> u64 {
+        s.streams.iter().map(|st| st.instructions).sum()
+    };
+    assert_eq!(per_stream(&stats_on), per_stream(&stats_off));
+    assert!(stats_on.fused_sweeps > 0, "overloaded 4-slot trace must fuse");
+    assert_eq!(stats_off.fused_sweeps, 0);
+    assert_eq!(run(true).0, sig_on, "identical seed, identical cycle-exact schedule");
+}
+
 /// With the default `fcfs` policy the engine never rejects and the
 /// stats stay rejection-free — the policy subsystem is invisible unless
 /// asked for (guards the cycle-identity contract from the stats side).
