@@ -252,10 +252,19 @@ impl ProgramTemplate {
     /// whose operand sizes do not scale with the context length. Every
     /// KV-touching instruction (K/V writes, KCache/VCache reads) and
     /// every position-patched node is per-stream: its `slot` or
-    /// `ltoken` differs between the fused streams. The KV-cache VMM
-    /// check is redundant today (both KV reads are position-patched)
-    /// but keeps the predicate correct if a future regime ever leaves
-    /// one unpatched.
+    /// `ltoken` differs between the fused streams.
+    ///
+    /// Under **paged KV** (`sched.kv_paging`) the exclusion of KV-cache
+    /// reads is load-bearing on its own, not just via the `ltoken`
+    /// patch: a KV read resolves through the issuing stream's *page
+    /// table* at issue time (`Resources::issue` turns it into per-page
+    /// row segments), so two streams at the same `ltoken` still read
+    /// different rows. The explicit `is_kv_cache()` check keeps the
+    /// predicate correct even for a hypothetical regime where a KV read
+    /// escaped position patching — and the shareable set is therefore
+    /// *identical* with paging on or off (pinned below), which is what
+    /// lets the batched-decode engine share one fused node stream
+    /// across both modes.
     pub fn shareable_across_streams(&self, i: usize) -> bool {
         if self.patch_of[i].is_some() {
             return false;
@@ -458,6 +467,35 @@ mod tests {
             // Weight VMMs and fixed-size ASIC ops dominate the program.
             assert!(shareable > tpl.len() / 2, "only {shareable}/{} shareable", tpl.len());
             assert_eq!(kv_writes, 2 * m.n_layer, "av_chunked={}", regime.av_chunked);
+        }
+    }
+
+    /// Pinned: the shareable node set does not depend on the KV
+    /// layout. Templates compile from the model and PIM geometry alone;
+    /// turning `sched.kv_paging` on must leave both the compiled nodes
+    /// and the shareable predicate bit-identical, so batched decode
+    /// fuses the same node set in slot and paged mode (the paged
+    /// difference lives entirely in issue-time page indirection).
+    #[test]
+    fn shareable_set_is_identical_with_paging_on_and_off() {
+        let m = by_name("gpt2-small").unwrap();
+        let off = cfg();
+        let mut on = cfg();
+        on.sched.kv_paging = true;
+        on.sched.kv_page_tokens = 128;
+        for regime in [PosRegime { av_chunked: false }, PosRegime { av_chunked: true }] {
+            let t_off = ProgramTemplate::build(&m, &off, regime).unwrap();
+            let t_on = ProgramTemplate::build(&m, &on, regime).unwrap();
+            assert_eq!(t_off.len(), t_on.len());
+            for i in 0..t_off.len() {
+                assert_eq!(
+                    t_off.shareable_across_streams(i),
+                    t_on.shareable_across_streams(i),
+                    "node {i}, av_chunked={}",
+                    regime.av_chunked
+                );
+                assert_eq!(t_off.instr_at(i, 9, 1), t_on.instr_at(i, 9, 1), "node {i}");
+            }
         }
     }
 

@@ -199,6 +199,33 @@ pub struct SchedulerConfig {
     /// (slots are disjoint). Off (the default) is cycle-identical to
     /// the unbatched engine on any arrival trace.
     pub batch_decode: bool,
+    /// Paged KV cache (JSON key `sched.kv_paging`, 0 or 1; CLI
+    /// `serve --kv-paging on|off`). When on, the per-stream KV row
+    /// budget is carved into fixed-size page frames
+    /// (`kv_page_tokens` positions each) held in a free list; each
+    /// stream owns a page table, KV reads/writes resolve through it at
+    /// issue time, frames are allocated on demand as decode advances,
+    /// and exhaustion preempts a victim stream (modeled
+    /// writeback/restore cost) — `sim::sched`. Off (the default) keeps
+    /// the static contiguous per-stream slot and is cycle-identical to
+    /// the historical engine on any arrival trace. Paging with page
+    /// size = `max_seq` and `kv_oversub` = 1 is also cycle-identical
+    /// (one frame == one slot) — the pinned equivalence anchor.
+    pub kv_paging: bool,
+    /// KV page size in token positions (JSON key
+    /// `sched.kv_page_tokens`). Rounded up to a multiple of the unit
+    /// count and capped at (padded) `max_seq` at mapping time
+    /// (`mapping::kv_reserve::round_page_tokens`), so the
+    /// token-to-unit interleave is page-invariant. Only consulted when
+    /// `kv_paging` is on.
+    pub kv_page_tokens: u64,
+    /// KV oversubscription ratio >= 1.0 (JSON key `sched.kv_oversub`).
+    /// Admission commits streams against `floor(n_frames *
+    /// kv_oversub)` worst-case frames, betting that most streams
+    /// finish before reaching `max_seq`; a lost bet is a page fault
+    /// resolved by preempting a victim. 1.0 (the default) can never
+    /// fault. Only consulted when `kv_paging` is on.
+    pub kv_oversub: f64,
 }
 
 impl Default for SchedulerConfig {
@@ -211,6 +238,9 @@ impl Default for SchedulerConfig {
             slo_ttft_cycles: 2_000_000,
             prefill_chunk: 32,
             batch_decode: false,
+            kv_paging: false,
+            kv_page_tokens: 128,
+            kv_oversub: 1.0,
         }
     }
 }
@@ -312,6 +342,29 @@ impl HwConfig {
     /// unbatched engine cycle-for-cycle).
     pub fn with_batch_decode(mut self, on: bool) -> Self {
         self.sched.batch_decode = on;
+        self
+    }
+
+    /// Serving knob: paged KV cache (off reproduces the static-slot
+    /// engine cycle-for-cycle).
+    pub fn with_kv_paging(mut self, on: bool) -> Self {
+        self.sched.kv_paging = on;
+        self
+    }
+
+    /// Serving knob: KV page size in token positions (rounded up to
+    /// the unit count and capped at `max_seq` at mapping time).
+    pub fn with_kv_page_tokens(mut self, tokens: u64) -> Self {
+        assert!(tokens >= 1);
+        self.sched.kv_page_tokens = tokens;
+        self
+    }
+
+    /// Serving knob: KV oversubscription ratio (>= 1.0; 1.0 never
+    /// faults).
+    pub fn with_kv_oversub(mut self, ratio: f64) -> Self {
+        assert!(ratio >= 1.0);
+        self.sched.kv_oversub = ratio;
         self
     }
 
@@ -456,6 +509,30 @@ impl HwConfig {
                     bail!("sched.batch_decode must be 0 (off) or 1 (on), got {n}");
                 }
                 self.sched.batch_decode = n == 1.0;
+            }
+            ("sched", "kv_paging") => {
+                // Same 0/1 strap as batch_decode.
+                if n != 0.0 && n != 1.0 {
+                    bail!("sched.kv_paging must be 0 (off) or 1 (on), got {n}");
+                }
+                self.sched.kv_paging = n == 1.0;
+            }
+            ("sched", "kv_page_tokens") => {
+                // Same exactness contract as `sched.seed`; a 0-token
+                // page is a config mistake (the mapper rounds up to
+                // the unit count anyway).
+                if n < 1.0 || n.fract() != 0.0 || n >= 9_007_199_254_740_992.0 {
+                    bail!("sched.kv_page_tokens must be an integer in [1, 2^53), got {n}");
+                }
+                self.sched.kv_page_tokens = n as u64;
+            }
+            ("sched", "kv_oversub") => {
+                // A ratio below 1 would deny frames streams are
+                // entitled to; 1.0 (no oversubscription) never faults.
+                if !(n >= 1.0) || !n.is_finite() {
+                    bail!("sched.kv_oversub must be a finite ratio >= 1.0, got {n}");
+                }
+                self.sched.kv_oversub = n;
             }
             ("asic", "freq_ghz") => set!(self.asic.freq_ghz, f64),
             ("asic", "sram_kb") => set!(self.asic.sram_kb, usize),
@@ -641,6 +718,53 @@ mod tests {
             assert!(HwConfig::from_json(&j).is_err(), "accepted {bad}");
         }
         let j = Json::parse(r#"{"sched": {"batch_decode": "on"}}"#).unwrap();
+        let err = HwConfig::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("must be a number"), "{err}");
+    }
+
+    #[test]
+    fn sched_kv_paging_overrides() {
+        let base = HwConfig::paper_baseline();
+        assert!(!base.sched.kv_paging, "off by default");
+        assert_eq!(base.sched.kv_page_tokens, 128, "default page size");
+        assert_eq!(base.sched.kv_oversub, 1.0, "no oversubscription by default");
+        let j = Json::parse(r#"{"sched": {"kv_paging": 1}}"#).unwrap();
+        assert!(HwConfig::from_json(&j).unwrap().sched.kv_paging);
+        let j = Json::parse(r#"{"sched": {"kv_paging": 0}}"#).unwrap();
+        assert!(!HwConfig::from_json(&j).unwrap().sched.kv_paging);
+        let src = r#"{"sched": {"kv_paging": 1, "kv_page_tokens": 256, "kv_oversub": 1.5}}"#;
+        let cfg = HwConfig::from_json(&Json::parse(src).unwrap()).unwrap();
+        assert!(cfg.sched.kv_paging);
+        assert_eq!(cfg.sched.kv_page_tokens, 256);
+        assert_eq!(cfg.sched.kv_oversub, 1.5);
+        let cfg = HwConfig::paper_baseline()
+            .with_kv_paging(true)
+            .with_kv_page_tokens(64)
+            .with_kv_oversub(2.0);
+        assert!(cfg.sched.kv_paging);
+        assert_eq!(cfg.sched.kv_page_tokens, 64);
+        assert_eq!(cfg.sched.kv_oversub, 2.0);
+        // Anything but the 0/1 strap, non-integer page sizes, and
+        // ratios below 1 are rejected loudly, like every other sched
+        // key.
+        for bad in [
+            r#"{"sched": {"kv_paging": 2}}"#,
+            r#"{"sched": {"kv_paging": 0.5}}"#,
+            r#"{"sched": {"kv_paging": "on"}}"#,
+            r#"{"sched": {"kv_pagin": 1}}"#,
+            r#"{"sched": {"kv_page_tokens": 0}}"#,
+            r#"{"sched": {"kv_page_tokens": -128}}"#,
+            r#"{"sched": {"kv_page_tokens": 2.5}}"#,
+            r#"{"sched": {"kv_page_tokens": 9007199254740993}}"#,
+            r#"{"sched": {"kv_page_tokens": "128"}}"#,
+            r#"{"sched": {"kv_oversub": 0.9}}"#,
+            r#"{"sched": {"kv_oversub": -1}}"#,
+            r#"{"sched": {"kv_oversub": "1.5"}}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(HwConfig::from_json(&j).is_err(), "accepted {bad}");
+        }
+        let j = Json::parse(r#"{"sched": {"kv_paging": "on"}}"#).unwrap();
         let err = HwConfig::from_json(&j).unwrap_err().to_string();
         assert!(err.contains("must be a number"), "{err}");
     }

@@ -148,6 +148,20 @@ pub struct ServerMetrics {
     /// summed over admission attempts (queue-depth-weighted KV-capacity
     /// pressure — see `SimStats::admission_blocked`).
     pub admission_blocked: u64,
+    /// KV frames in the paged pool (`sched.kv_paging`; 0 when the slot
+    /// engine served the run).
+    pub kv_pages: u64,
+    /// Most frames ever in use at once under paging.
+    pub peak_pages_in_use: u64,
+    /// Decode steps that needed a KV frame with the free list empty
+    /// (each fault resolves by preempting a victim stream).
+    pub page_faults: u64,
+    /// Streams preempted (evicted, context written back, re-queued for
+    /// re-admission) to resolve page faults.
+    pub preemptions: u64,
+    /// Context tokens written back by those evictions (restore cost is
+    /// symmetric, so this measures the oversubscription swap traffic).
+    pub evicted_tokens: u64,
     /// Requests shed by the configured admission policy
     /// (`sched.policy = slo`; always 0 under admit-always policies).
     /// Rejected requests count in `requests` but not in `failed`,
@@ -535,6 +549,11 @@ fn interleaved_loop(
     metrics.kv_slots = msim.stats.kv_slots;
     metrics.peak_slots_in_use = msim.stats.peak_slots_in_use;
     metrics.admission_blocked = msim.stats.admission_blocked;
+    metrics.kv_pages = msim.stats.kv_pages;
+    metrics.peak_pages_in_use = msim.stats.peak_pages_in_use;
+    metrics.page_faults = msim.stats.page_faults;
+    metrics.preemptions = msim.stats.preemptions;
+    metrics.evicted_tokens = msim.stats.evicted_tokens;
     metrics.sim_busy_seconds = msim.stats.busy_seconds(cfg.gddr6.freq_ghz);
     metrics.fused_sweeps = msim.stats.fused_sweeps;
     metrics.mean_decode_batch = msim.stats.mean_decode_batch();
@@ -625,6 +644,33 @@ mod tests {
         assert!(m.max_decode_batch >= 2);
         assert!(m.sim_busy_seconds > 0.0);
         assert!(m.sim_tokens_per_busy_s() >= m.sim_tokens_per_s());
+    }
+
+    /// Paged-KV serving surfaces the frame-pool counters and, with a
+    /// full-context page per stream and no oversubscription, behaves
+    /// exactly like slot serving (zero faults, zero preemptions).
+    #[test]
+    fn paged_serving_reports_frame_counters() {
+        let mut s = Server::start(move || {
+            let m = by_name("gpt-nano").unwrap();
+            let mut cfg = HwConfig::paper_baseline().with_max_streams(4);
+            cfg.sched.kv_paging = true;
+            cfg.sched.kv_page_tokens = 128; // = gpt-nano max_seq: 1 frame/context
+            PimGptSystem::timing_only(&m, &cfg)
+        });
+        for id in 0..4 {
+            s.submit(Request { id, prompt: vec![1, 2], n_new: 3, arrival_cycle: 0 }).unwrap();
+        }
+        for _ in 0..4 {
+            let r = s.recv().unwrap();
+            assert!(r.error.is_none());
+            assert_eq!(r.tokens.len(), 5);
+        }
+        let m = s.shutdown();
+        assert_eq!((m.requests, m.failed, m.tokens), (4, 0, 20));
+        assert_eq!(m.kv_pages, 4, "4 streams x 1 full-context frame");
+        assert!(m.peak_pages_in_use >= 1 && m.peak_pages_in_use <= 4);
+        assert_eq!((m.page_faults, m.preemptions, m.evicted_tokens), (0, 0, 0));
     }
 
     #[test]

@@ -169,12 +169,12 @@ pim-gpt — hybrid process-in-memory accelerator for autoregressive transformers
 USAGE:
   pim-gpt info     [--config FILE]
   pim-gpt simulate --model NAME [--tokens N] [--config FILE] [--json]
-  pim-gpt figures  [--fig 1|8|10|11|12|13|14|15|t1|t2|serving|policies|prefill|batching|all]
-                   [--tokens N] [--models A,B]
+  pim-gpt figures  [--fig 1|8|10|11|12|13|14|15|t1|t2|serving|policies|prefill|batching|
+                    paging|all] [--tokens N] [--models A,B]
   pim-gpt generate --model gpt-nano|gpt-mini [--artifacts DIR] [--prompt 1,2,3] [--n N]
   pim-gpt serve    --model NAME [--requests N] [--concurrency K] [--arrivals SPEC]
                    [--policy SPEC] [--seed N] [--prompt-tokens P] [--batch-decode on|off]
-                   [--artifacts DIR]
+                   [--kv-paging on|off] [--artifacts DIR]
 
 ARRIVALS (open-loop serving; latencies report p50/p95/p99 from arrival):
   batch (default) | fixed:<cycles> | poisson:<req/s> | trace:<file.json>
@@ -193,6 +193,14 @@ BATCHED DECODE (sched.batch_decode in --config, or serve --batch-decode on):
   weight sweep (continuous batching): one ACT/PRE sweep + one ASIC pipeline
   fill serve K streams. off (default) is cycle-identical to the unbatched
   engine; see figures --fig batching (--models filters the model sweep).
+
+PAGED KV (sched.kv_paging in --config, or serve --kv-paging on):
+  carves the KV row budget into fixed-size pages (sched.kv_page_tokens) behind
+  per-stream page tables: admission commits *expected* footprint (oversubscribe
+  with sched.kv_oversub > 1), pages allocate on demand as decode advances, and
+  an exhausted pool preempts a victim stream (context written back, re-queued).
+  off (default) is cycle-identical to the static-slot engine; see figures
+  --fig paging.
 
 POLICY (scheduling; sched.policy / sched.slo_ttft_cycles in --config):
   fcfs (default) | srf | fair | slo[:<ttft-cycles>]
@@ -317,6 +325,9 @@ fn cmd_figures(args: &Args) -> Result<()> {
     if all || which == "batching" {
         reports.push(report::fig_batching(tokens.min(12), &[1, 2, 4], &models)?);
     }
+    if all || which == "paging" {
+        reports.push(report::fig_paging(tokens.min(8), &models)?);
+    }
     if reports.is_empty() {
         bail!("unknown figure '{which}'");
     }
@@ -365,6 +376,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "policy",
             "prompt-tokens",
             "batch-decode",
+            "kv-paging",
             "artifacts",
             "config",
         ],
@@ -392,6 +404,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "on" => true,
             "off" => false,
             other => bail!("--batch-decode must be 'on' or 'off', got '{other}'"),
+        };
+    }
+    if let Some(v) = args.get("kv-paging")? {
+        cfg.sched.kv_paging = match v {
+            "on" => true,
+            "off" => false,
+            other => bail!("--kv-paging must be 'on' or 'off', got '{other}'"),
         };
     }
     // Build the whole request trace up front: arrivals are *simulated*
@@ -552,6 +571,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "kv slots {} (peak in use {}), admission-blocked pressure {} request-attempts",
         m.kv_slots, m.peak_slots_in_use, m.admission_blocked
     );
+    // Paged-KV frame pool: faults resolve by preempting a victim stream
+    // (its context is written back and it re-queues for re-admission).
+    if cfg.sched.kv_paging {
+        println!(
+            "kv pages {} x {} tokens (peak in use {}): {} page faults, {} preemptions, \
+             {} tokens written back",
+            m.kv_pages,
+            cfg.sched.kv_page_tokens,
+            m.peak_pages_in_use,
+            m.page_faults,
+            m.preemptions,
+            m.evicted_tokens
+        );
+    }
     // Scheduling policy + per-policy reject count (SLO sheds requests
     // whose predicted TTFT busts the budget; other policies never do).
     if cfg.sched.policy == pim_gpt::sim::PolicySpec::Slo {

@@ -1,5 +1,8 @@
 //! KV-cache region reservation + runtime address computation
-//! (paper Algorithm 3 lines 8-14, Fig. 7), partitioned per stream slot.
+//! (paper Algorithm 3 lines 8-14, Fig. 7), organized around *page
+//! tables*: physical DRAM reservations are fixed-size **frames**, and a
+//! stream's logical token positions resolve to frames through a
+//! per-stream page table.
 //!
 //! * **Key cache** (row-major, Fig. 7a): token `t`'s head-concatenated
 //!   Key vector (d elements) occupies `ceil(d / row_elems)` consecutive
@@ -9,21 +12,43 @@
 //!   locality.
 //! * **Value cache** (column-major, Fig. 7b): V's `d` columns round-robin
 //!   over units (`cols_pu` columns each); each column owns
-//!   `ceil(max_seq / row_elems)` consecutive rows. Writing token `t`
-//!   touches one row per owned column (ACT + 1 write + PRE each — no
-//!   locality, as the paper notes); the scores@V VMM reads each owned
-//!   column as `ceil(ltoken / row_elems)` row segments.
+//!   `ceil(page_tokens / row_elems)` consecutive rows per frame. Writing
+//!   token `t` touches one row per owned column (ACT + 1 write + PRE
+//!   each — no locality, as the paper notes); the scores@V VMM reads
+//!   each owned column as `ceil(span / row_elems)` row segments per
+//!   covered frame.
 //!
-//! **Slots**: serving K concurrent decode streams honestly requires K
-//! *disjoint* `max_seq` contexts, so the reservation carries a slot
-//! dimension — `k_base[layer][slot][unit]` / `v_base[layer][slot][unit]`
-//! — and every address computation takes the stream's slot id. Slot 0 is
-//! the single-stream layout; the multi-stream scheduler
-//! (`sim::sched::MultiSim`) admits a stream only when a free slot
-//! exists and recycles slot ids on retirement. When DRAM rows run out
-//! before `max_streams` slots fit, `ModelMapping::build` degrades to
-//! fewer slots and reports the shortfall (`mapping::KvSlotReport`)
-//! instead of failing.
+//! **Two granularities, one geometry.**
+//!
+//! * **Slot mode** (`build`, `page_tokens = None`): the historical
+//!   layout. One frame == one full `max_seq` context ("slot"); serving K
+//!   concurrent streams reserves K disjoint slots —
+//!   `k_base[layer][slot][unit]` / `v_base[layer][slot][unit]` — and
+//!   every address computation takes the stream's slot id directly.
+//!   Reads are single contiguous regions (`k_read_pattern` /
+//!   `v_read_pattern` with a per-slot base row).
+//! * **Paged mode** (`build_paged`, `page_tokens = Some(P)`): the same
+//!   `[layer][frame][unit]` base arrays, but each frame covers only `P`
+//!   tokens (`sched.kv_page_tokens`, rounded up to a multiple of
+//!   `n_units` so a token's owning unit is page-invariant, and capped at
+//!   the padded `max_seq`). Streams own a *page table* — `pages[j]` is
+//!   the physical frame holding logical tokens `[j*P, (j+1)*P)` — and
+//!   the address methods take that table instead of a slot id:
+//!   `k_write_paged` / `v_write_paged` for stores, and `k_read_runs` /
+//!   `v_read_runs` which return **per-page [`PatternRun`] lists** (one
+//!   base row + row-fill pattern per covered frame) instead of one
+//!   contiguous region. Consecutive runs on the same bank compose
+//!   cycle-exactly with the slot-mode sweep when the frames happen to be
+//!   contiguous, and pay the honest ACT/PRE row-switch cost when they
+//!   are not.
+//!
+//! With `P = max_seq` (padded) a page table holds exactly one entry and
+//! every paged method degenerates to its slot-mode twin — the
+//! cycle-identity anchor the scheduler's `kv_paging` equivalence tests
+//! pin. Frame pools are sized by `ModelMapping::build` (degrading with a
+//! `KvSlotReport` when DRAM rows run short); the multi-stream scheduler
+//! (`sim::sched::MultiSim`) owns the free list, the per-stream page
+//! tables, on-demand growth, and preemption/eviction on exhaustion.
 
 use super::layout::{BankAllocator, CapacityError, UnitId};
 use crate::config::HwConfig;
@@ -68,6 +93,55 @@ fn fill_pattern_trusted(elems: u64, row_elems: u64) -> ([u32; MAX_PATTERN], u8) 
     (pat, len)
 }
 
+/// One contiguous KV read on a single bank: `reps` repetitions of a
+/// row-fill `pattern` starting at `base_row`. Paged K/V reads are *lists*
+/// of these — one run per covered page frame — instead of the slot
+/// engine's single `(base_row, reps, pattern)` region. A single-run list
+/// is bit-identical in cost to the slot read (the bank's `mac_pattern`
+/// is invoked with the same arguments); consecutive runs chain through
+/// the bank's `busy_until`/`opened_at` state, paying the honest row
+/// ACT/PRE switch cost between frames.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PatternRun {
+    /// First reserved row of the frame's region on this bank.
+    pub base_row: u32,
+    /// Pattern repetitions (stored K vectors, or V columns, in the frame).
+    pub reps: u32,
+    /// Row-fill pattern of one repetition.
+    pub pattern: [u32; MAX_PATTERN],
+    /// Live prefix length of `pattern`.
+    pub pattern_len: u8,
+}
+
+/// Canonical page size: `page_tokens` rounded **up** to a multiple of
+/// `n_units` (so `token % n_units` — the owning unit — is the same
+/// whether computed globally or page-locally) and capped at `max_seq`
+/// padded the same way (a page larger than one full context buys
+/// nothing). `page_tokens = max_seq` therefore yields exactly one page
+/// per full context — the slot-equivalence configuration.
+pub fn round_page_tokens(page_tokens: u64, n_units: usize, max_seq: u64) -> u64 {
+    use crate::util::pad_to;
+    pad_to(page_tokens.max(1), n_units as u64).min(pad_to(max_seq.max(1), n_units as u64))
+}
+
+/// Rows one page frame reserves per unit over *all* layers (each
+/// layer's K region plus V region) — the paged analog of
+/// [`slot_rows_per_unit`], used by `ModelMapping::build` to size the
+/// frame pool in closed form. Note the V region floor: every frame
+/// reserves `v_cols_per_unit * ceil(P / row_elems)` V rows, so at small
+/// `P` the V share does not shrink below one row per owned column —
+/// paging trades that inflation for on-demand growth.
+pub fn frame_rows_per_unit(model: &GptModel, cfg: &HwConfig, n_units: usize, page_tokens: u64) -> u32 {
+    let row_elems = cfg.gddr6.row_elems();
+    let d = model.d_model as u64;
+    let p = round_page_tokens(page_tokens, n_units, model.max_seq as u64);
+    let rows_per_k = ceil_div(d, row_elems) as u32;
+    let toks_per_unit = (p / n_units as u64) as u32;
+    let rows_per_vcol = ceil_div(p, row_elems) as u32;
+    let v_cols = super::weight_map::columns_per_unit(d, n_units as u64) as u32;
+    model.n_layer as u32 * (toks_per_unit * rows_per_k + v_cols * rows_per_vcol)
+}
+
 /// Rows one stream slot reserves per unit over *all* layers (each
 /// layer's K region plus V region). The footprint is uniform across
 /// units, which is what lets `ModelMapping::build` size the slot count
@@ -84,14 +158,18 @@ pub fn slot_rows_per_unit(model: &GptModel, cfg: &HwConfig, n_units: usize) -> u
     model.n_layer as u32 * (toks_per_unit * rows_per_k + v_cols * rows_per_vcol)
 }
 
-/// Reserved KV regions for every (layer, stream slot).
+/// Reserved KV regions for every (layer, frame). In slot mode
+/// (`page_tokens = None`) a frame is a full `max_seq` context addressed
+/// by slot id; in paged mode (`page_tokens = Some(P)`) a frame covers
+/// `P` tokens and is addressed through a per-stream page table.
 #[derive(Clone, Debug)]
 pub struct KvReservation {
-    /// K region base row per (layer, slot, unit): `k_base[layer][slot][unit]`.
+    /// K region base row per (layer, frame, unit): `k_base[layer][frame][unit]`.
     pub k_base: Vec<Vec<Vec<u32>>>,
-    /// V region base row per (layer, slot, unit).
+    /// V region base row per (layer, frame, unit).
     pub v_base: Vec<Vec<Vec<u32>>>,
-    /// Disjoint `max_seq` contexts reserved (= concurrent streams servable).
+    /// Frames reserved. Slot mode: disjoint `max_seq` contexts
+    /// (= concurrent streams servable). Paged mode: pool size in pages.
     pub n_slots: usize,
     pub d_model: u64,
     pub max_seq: u64,
@@ -99,10 +177,13 @@ pub struct KvReservation {
     pub banks_per_channel: usize,
     /// Rows per stored Key vector (= ceil(d / row_elems)).
     pub rows_per_k: u32,
-    /// Rows per stored Value column (= ceil(max_seq / row_elems)).
+    /// Rows per stored Value column (= ceil(tokens-per-frame / row_elems)).
     pub rows_per_vcol: u32,
     /// V columns owned per unit.
     pub v_cols_per_unit: u64,
+    /// `None` = slot mode; `Some(P)` = paged mode with `P` tokens per
+    /// frame (already rounded via [`round_page_tokens`]).
+    pub page_tokens: Option<u64>,
     row_elems: u64,
 }
 
@@ -166,8 +247,83 @@ impl KvReservation {
             rows_per_k,
             rows_per_vcol,
             v_cols_per_unit,
+            page_tokens: None,
             row_elems,
         })
+    }
+
+    /// Reserve a pool of `n_frames` page frames of `page_tokens` tokens
+    /// each (rounded via [`round_page_tokens`]). The allocation loop is
+    /// the same layer -> frame -> unit order as [`build`], so with
+    /// `page_tokens = max_seq` and `n_frames = n_slots` every frame gets
+    /// the *identical* base rows the slot build would assign — the
+    /// foundation of the paging-off cycle-equivalence contract.
+    pub fn build_paged(
+        model: &GptModel,
+        cfg: &HwConfig,
+        alloc: &mut BankAllocator,
+        n_frames: usize,
+        page_tokens: u64,
+    ) -> Result<Self, CapacityError> {
+        assert!(n_frames >= 1, "at least one KV page frame is required");
+        let n_units = alloc.n_units();
+        let row_elems = cfg.gddr6.row_elems();
+        let d = model.d_model as u64;
+        let max_seq = model.max_seq as u64;
+        let p = round_page_tokens(page_tokens, n_units, max_seq);
+
+        // Validate both runtime row-fill patterns now (see `build`); the
+        // widest V span per frame is one page, not the whole context.
+        fill_pattern(d, row_elems)?;
+        fill_pattern(p, row_elems)?;
+
+        let rows_per_k = ceil_div(d, row_elems) as u32;
+        let toks_per_unit = (p / n_units as u64) as u32; // P is a multiple of n_units
+        let rows_per_vcol = ceil_div(p, row_elems) as u32;
+        let v_cols_per_unit = super::weight_map::columns_per_unit(d, n_units as u64);
+
+        let mut k_base = Vec::with_capacity(model.n_layer);
+        let mut v_base = Vec::with_capacity(model.n_layer);
+        for _layer in 0..model.n_layer {
+            let mut k_frames = Vec::with_capacity(n_frames);
+            let mut v_frames = Vec::with_capacity(n_frames);
+            for _frame in 0..n_frames {
+                let mut kb = Vec::with_capacity(n_units);
+                let mut vb = Vec::with_capacity(n_units);
+                for u in 0..n_units {
+                    let unit = alloc.unit(u);
+                    kb.push(alloc.alloc(unit, toks_per_unit * rows_per_k)?);
+                    vb.push(alloc.alloc(unit, v_cols_per_unit as u32 * rows_per_vcol)?);
+                }
+                k_frames.push(kb);
+                v_frames.push(vb);
+            }
+            k_base.push(k_frames);
+            v_base.push(v_frames);
+        }
+
+        Ok(Self {
+            k_base,
+            v_base,
+            n_slots: n_frames,
+            d_model: d,
+            max_seq,
+            n_units,
+            banks_per_channel: cfg.gddr6.banks_per_channel,
+            rows_per_k,
+            rows_per_vcol,
+            v_cols_per_unit,
+            page_tokens: Some(p),
+            row_elems,
+        })
+    }
+
+    /// Page frames a context of `tokens` positions occupies (>= 1, so an
+    /// admitted stream can always write its first token). Panics in slot
+    /// mode — frame accounting is a paged-mode concept.
+    pub fn frames_for(&self, tokens: u64) -> usize {
+        let p = self.page_tokens.expect("frames_for on a slot-mode reservation");
+        ceil_div(tokens.max(1), p) as usize
     }
 
     /// Unit that stores token `t`'s Key vector (round-robin).
@@ -311,6 +467,83 @@ impl KvReservation {
                 }
             }
         }
+    }
+
+    /// Paged twin of [`k_write`]: `pages[t / P]` names the physical
+    /// frame holding token `t`; within the frame the row math is the
+    /// page-local copy of the slot layout (`P` a multiple of `n_units`
+    /// keeps the owning unit identical to the global round-robin).
+    pub fn k_write_paged(&self, layer: usize, pages: &[u32], t: u64) -> (UnitId, Vec<RowSegment>) {
+        let p = self.page_tokens.expect("paged addressing on a slot-mode reservation");
+        let frame = pages[(t / p) as usize] as usize;
+        let u = self.k_unit(t);
+        let tok_slot = ((t % p) / self.n_units as u64) as u32;
+        let base = self.k_base[layer][frame][u] + tok_slot * self.rows_per_k;
+        let mut segs = Vec::with_capacity(self.rows_per_k as usize);
+        let mut rem = self.d_model;
+        for r in 0..self.rows_per_k {
+            let elems = rem.min(self.row_elems) as u32;
+            segs.push(RowSegment { row: base + r, elems });
+            rem -= elems as u64;
+        }
+        (self.unit_id(u), segs)
+    }
+
+    /// Paged twin of [`v_write`]: token `t`'s V elements land in row
+    /// `(t % P) / row_elems` of each owned column of frame `pages[t/P]`.
+    pub fn v_write_paged(&self, layer: usize, pages: &[u32], t: u64, u: usize) -> (u32, u32, u32) {
+        let p = self.page_tokens.expect("paged addressing on a slot-mode reservation");
+        let frame = pages[(t / p) as usize] as usize;
+        let base = self.v_base[layer][frame][u] + ((t % p) / self.row_elems) as u32;
+        (base, self.v_cols(u), self.rows_per_vcol)
+    }
+
+    /// q@K^T read of a paged context at `ltoken`, for unit `u`: one
+    /// [`PatternRun`] per covered page frame (the per-page share of
+    /// [`k_owned`] repetitions of [`k_read_pattern`]). With a single
+    /// full-context page this is exactly the slot read.
+    pub fn k_read_runs(&self, layer: usize, pages: &[u32], ltoken: u64, u: usize) -> Vec<PatternRun> {
+        let p = self.page_tokens.expect("paged addressing on a slot-mode reservation");
+        let (pattern, pattern_len) = self.k_read_pattern();
+        let mut runs = Vec::new();
+        for (j, &frame) in pages.iter().enumerate() {
+            let lo = j as u64 * p;
+            if lo >= ltoken {
+                break;
+            }
+            // tokens u, u + n_units, ... within this page's live span
+            let span = (ltoken - lo).min(p);
+            if (u as u64) >= span {
+                continue;
+            }
+            let reps = ceil_div(span - u as u64, self.n_units as u64) as u32;
+            runs.push(PatternRun { base_row: self.k_base[layer][frame as usize][u], reps, pattern, pattern_len });
+        }
+        runs
+    }
+
+    /// scores@V read of a paged context at `ltoken`, for unit `u`: one
+    /// [`PatternRun`] per covered page frame — each owned column
+    /// contributes `ceil(span / row_elems)` row segments where `span` is
+    /// the page's live token count. With a single full-context page this
+    /// is exactly the slot read ([`v_read_pattern`] x [`v_cols`]).
+    pub fn v_read_runs(&self, layer: usize, pages: &[u32], ltoken: u64, u: usize) -> Vec<PatternRun> {
+        let p = self.page_tokens.expect("paged addressing on a slot-mode reservation");
+        let cols = self.v_cols(u);
+        let mut runs = Vec::new();
+        if cols == 0 {
+            return runs;
+        }
+        for (j, &frame) in pages.iter().enumerate() {
+            let lo = j as u64 * p;
+            if lo >= ltoken {
+                break;
+            }
+            let span = (ltoken - lo).min(p);
+            let (pattern, pattern_len) = fill_pattern_trusted(span, self.row_elems);
+            runs.push(PatternRun { base_row: self.v_base[layer][frame as usize][u], reps: cols, pattern, pattern_len });
+        }
+        runs
     }
 
     fn unit_id(&self, u: usize) -> UnitId {
@@ -501,6 +734,153 @@ mod tests {
         let mut alloc2 = BankAllocator::new(&cfg);
         KvReservation::build(&m, &cfg, &mut alloc2, 2).unwrap();
         assert_eq!(alloc2.used(alloc2.unit(0)), 2 * per_slot);
+    }
+
+    fn kv_paged(model: &str, n_frames: usize, page_tokens: u64) -> KvReservation {
+        let m = by_name(model).unwrap();
+        let cfg = HwConfig::paper_baseline();
+        let mut alloc = BankAllocator::new(&cfg);
+        KvReservation::build_paged(&m, &cfg, &mut alloc, n_frames, page_tokens).unwrap()
+    }
+
+    #[test]
+    fn round_page_tokens_rounds_and_caps() {
+        // Up to a multiple of n_units...
+        assert_eq!(round_page_tokens(1, 128, 1024), 128);
+        assert_eq!(round_page_tokens(128, 128, 1024), 128);
+        assert_eq!(round_page_tokens(129, 128, 1024), 256);
+        // ...and capped at the padded full context.
+        assert_eq!(round_page_tokens(4096, 128, 1024), 1024);
+        assert_eq!(round_page_tokens(u64::MAX / 2, 128, 1000), 1024);
+        assert_eq!(round_page_tokens(0, 128, 1024), 128, "0 coerces to one unit round");
+    }
+
+    #[test]
+    fn full_context_page_is_the_slot_layout() {
+        // P = max_seq, n_frames = n_slots: the paged build must assign
+        // the *identical* base rows as the slot build, and every paged
+        // address method must degenerate to its slot twin. This is the
+        // mapping-level half of the kv_paging equivalence contract.
+        let slot = kv_slots("gpt2-small", 2);
+        let paged = kv_paged("gpt2-small", 2, slot.max_seq);
+        assert_eq!(paged.page_tokens, Some(1024));
+        assert_eq!(paged.k_base, slot.k_base);
+        assert_eq!(paged.v_base, slot.v_base);
+        assert_eq!(paged.rows_per_vcol, slot.rows_per_vcol);
+        for s in 0..2u32 {
+            let pages = [s];
+            for t in [0u64, 1, 127, 128, 500] {
+                assert_eq!(paged.k_write_paged(3, &pages, t), slot.k_write(3, s as usize, t));
+                let u = slot.k_unit(t);
+                assert_eq!(paged.v_write_paged(3, &pages, t, u), slot.v_write(3, s as usize, t, u));
+            }
+            for ltoken in [1u64, 128, 129, 1000] {
+                for u in 0..slot.n_units {
+                    let runs = paged.k_read_runs(0, &pages, ltoken, u);
+                    let owned = slot.k_owned(u, ltoken);
+                    if owned == 0 {
+                        assert!(runs.is_empty());
+                    } else {
+                        let (pattern, pattern_len) = slot.k_read_pattern();
+                        assert_eq!(
+                            runs,
+                            vec![PatternRun {
+                                base_row: slot.k_base[0][s as usize][u],
+                                reps: owned,
+                                pattern,
+                                pattern_len,
+                            }]
+                        );
+                    }
+                    let runs = paged.v_read_runs(0, &pages, ltoken, u);
+                    let (pattern, pattern_len) = slot.v_read_pattern(ltoken);
+                    assert_eq!(
+                        runs,
+                        vec![PatternRun {
+                            base_row: slot.v_base[0][s as usize][u],
+                            reps: slot.v_cols(u),
+                            pattern,
+                            pattern_len,
+                        }]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn paged_reads_cover_all_tokens() {
+        // Multi-page read plans account for every stored element exactly
+        // once, whatever (shuffled) frames the page table names.
+        let kv = kv_paged("gpt2-small", 8, 128);
+        let pages = [5u32, 0, 7, 2, 6, 1, 3, 4];
+        for ltoken in [1u64, 127, 128, 129, 500, 1000, 1024] {
+            let k_total: u64 = (0..kv.n_units)
+                .flat_map(|u| kv.k_read_runs(0, &pages, ltoken, u))
+                .map(|r| r.reps as u64 * kv.d_model)
+                .sum();
+            assert_eq!(k_total, ltoken * kv.d_model, "K ltoken={ltoken}");
+            let v_total: u64 = (0..kv.n_units)
+                .flat_map(|u| kv.v_read_runs(0, &pages, ltoken, u))
+                .map(|r| {
+                    let span: u64 = r.pattern[..r.pattern_len as usize].iter().map(|&e| e as u64).sum();
+                    r.reps as u64 * span
+                })
+                .sum();
+            assert_eq!(v_total, ltoken * kv.d_model, "V ltoken={ltoken}");
+        }
+    }
+
+    #[test]
+    fn paged_writes_stay_inside_their_frame() {
+        let kv = kv_paged("gpt2-small", 4, 128);
+        let p = kv.page_tokens.unwrap();
+        let pages = [3u32, 1, 0, 2];
+        let k_rows = (p / kv.n_units as u64) as u32 * kv.rows_per_k;
+        for t in [0u64, 127, 128, 300, 511] {
+            let frame = pages[(t / p) as usize] as usize;
+            let (unit, segs) = kv.k_write_paged(0, &pages, t);
+            let u = unit.channel * kv.banks_per_channel + unit.bank;
+            let base = kv.k_base[0][frame][u];
+            for s in &segs {
+                assert!(s.row >= base && s.row < base + k_rows, "t={t} row {}", s.row);
+            }
+            let (vb, cols, stride) = kv.v_write_paged(0, &pages, t, u);
+            assert_eq!(cols, kv.v_cols(u));
+            assert_eq!(stride, kv.rows_per_vcol);
+            let vbase = kv.v_base[0][frame][u];
+            assert!(vb >= vbase && vb < vbase + kv.rows_per_vcol, "t={t}");
+        }
+    }
+
+    #[test]
+    fn frame_footprint_matches_actual_allocation() {
+        // Closed-form frame footprint == rows one frame consumes (the
+        // paged pool sizing in ModelMapping::build relies on this).
+        let m = by_name("gpt2-small").unwrap();
+        let cfg = HwConfig::paper_baseline();
+        let mut alloc = BankAllocator::new(&cfg);
+        let kv = KvReservation::build_paged(&m, &cfg, &mut alloc, 1, 128).unwrap();
+        let per_frame = frame_rows_per_unit(&m, &cfg, kv.n_units, 128);
+        assert_eq!(per_frame, 12 * (1 + 6)); // 12 layers x (K 1 row + V 6 rows)
+        for u in 0..kv.n_units {
+            assert_eq!(alloc.used(alloc.unit(u)), per_frame, "unit {u}");
+        }
+        // A full-context frame costs exactly one slot.
+        assert_eq!(
+            frame_rows_per_unit(&m, &cfg, kv.n_units, m.max_seq as u64),
+            slot_rows_per_unit(&m, &cfg, kv.n_units)
+        );
+    }
+
+    #[test]
+    fn frames_for_rounds_up() {
+        let kv = kv_paged("gpt2-small", 2, 128);
+        assert_eq!(kv.frames_for(0), 1, "an admitted stream needs a first page");
+        assert_eq!(kv.frames_for(1), 1);
+        assert_eq!(kv.frames_for(128), 1);
+        assert_eq!(kv.frames_for(129), 2);
+        assert_eq!(kv.frames_for(1024), 8);
     }
 
     #[test]

@@ -6,6 +6,6 @@ pub mod kv_reserve;
 pub mod layout;
 pub mod weight_map;
 
-pub use kv_reserve::KvReservation;
+pub use kv_reserve::{KvReservation, PatternRun};
 pub use layout::{BankAllocator, CapacityError};
 pub use weight_map::{KvSlotReport, MatrixPlacement, ModelMapping};

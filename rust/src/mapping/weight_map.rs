@@ -47,10 +47,13 @@ impl MatrixPlacement {
 
 /// Report emitted when DRAM rows could not hold the requested number of
 /// per-stream KV slots and the mapping degraded to fewer (the model and
-/// at least one full context still fit).
+/// at least one full context still fit). Under paged KV
+/// (`sched.kv_paging`) the counts are page *frames* rather than
+/// contiguous stream slots — same degradation contract, finer currency.
 #[derive(Clone, Debug)]
 pub struct KvSlotReport {
-    /// Slots requested (`cfg.sched.max_streams`).
+    /// Slots requested (`cfg.sched.max_streams`; paged: frames to hold
+    /// `max_streams` full contexts).
     pub requested: usize,
     /// Slots actually reserved (>= 1).
     pub granted: usize,
@@ -93,6 +96,9 @@ impl ModelMapping {
     /// placement per candidate count — and records a `KvSlotReport`.
     /// Only a model that cannot fit even a single context fails.
     pub fn build(model: &GptModel, cfg: &HwConfig) -> Result<Self, CapacityError> {
+        if cfg.sched.kv_paging {
+            return Self::build_paged(model, cfg);
+        }
         let requested = cfg.sched.max_streams.max(1);
         match Self::build_with_slots(model, cfg, requested) {
             Ok(mm) => Ok(mm),
@@ -116,6 +122,70 @@ impl ModelMapping {
                 Ok(mm)
             }
         }
+    }
+
+    /// Paged-KV mapping (`sched.kv_paging`): the KV budget is a pool of
+    /// fixed-size page frames instead of `max_streams` contiguous
+    /// slots. The requested pool holds `max_streams` *worst-case*
+    /// contexts (`ceil(max_seq / P)` frames each); under row pressure
+    /// it degrades in single-frame steps — far finer than the
+    /// whole-context steps of the slot path, which is exactly why
+    /// paging sustains more short streams on a capacity-squeezed model.
+    /// The degradation arithmetic mirrors the slot path: weights-only
+    /// scratch placement + closed-form per-frame footprint
+    /// (`kv_reserve::frame_rows_per_unit`). Only a model whose weights
+    /// leave no room for even one frame fails.
+    fn build_paged(model: &GptModel, cfg: &HwConfig) -> Result<Self, CapacityError> {
+        let n_units = cfg.gddr6.channels * cfg.gddr6.banks_per_channel;
+        let max_seq = model.max_seq as u64;
+        let p = super::kv_reserve::round_page_tokens(cfg.sched.kv_page_tokens, n_units, max_seq);
+        let frames_per_context = crate::util::ceil_div(max_seq.max(1), p) as usize;
+        let requested = (cfg.sched.max_streams.max(1) * frames_per_context).max(1);
+        match Self::build_with_frames(model, cfg, requested, p) {
+            Ok(mm) => Ok(mm),
+            Err(e @ CapacityError::Pattern { .. }) => Err(e),
+            Err(cause) => {
+                let mut scratch = BankAllocator::new(cfg);
+                Self::place_weights(model, cfg, &mut scratch)?;
+                let per_frame =
+                    super::kv_reserve::frame_rows_per_unit(model, cfg, scratch.n_units(), p).max(1);
+                let granted = (scratch.min_free_rows() / per_frame) as usize;
+                // The requested count just failed, so the fit is
+                // strictly below it whatever the arithmetic says.
+                let granted = granted.min(requested - 1);
+                if granted == 0 {
+                    return Err(cause);
+                }
+                let mut mm = Self::build_with_frames(model, cfg, granted, p)?;
+                mm.kv_shortfall = Some(KvSlotReport { requested, granted, cause });
+                Ok(mm)
+            }
+        }
+    }
+
+    /// One paged mapping attempt at a fixed frame count.
+    fn build_with_frames(
+        model: &GptModel,
+        cfg: &HwConfig,
+        n_frames: usize,
+        page_tokens: u64,
+    ) -> Result<Self, CapacityError> {
+        let mut alloc = BankAllocator::new(cfg);
+        // Frames first, weights second — same ordering as the slot path
+        // so the paged base rows at `P = max_seq` coincide with the
+        // slot base rows (the pinned cycle-equivalence anchor).
+        let kv =
+            super::KvReservation::build_paged(model, cfg, &mut alloc, n_frames, page_tokens)?;
+        let matrices = Self::place_weights(model, cfg, &mut alloc)?;
+        Ok(Self {
+            matrices,
+            kv,
+            n_channels: cfg.gddr6.channels,
+            banks_per_channel: cfg.gddr6.banks_per_channel,
+            fill: alloc.max_fill(),
+            imbalance_rows: alloc.imbalance_rows(),
+            kv_shortfall: None,
+        })
     }
 
     /// One mapping attempt at a fixed KV slot count.
@@ -281,6 +351,71 @@ mod tests {
         // Display is the operator-facing message; it must name the counts.
         let msg = report.to_string();
         assert!(msg.contains("of 4 requested"), "{msg}");
+    }
+
+    #[test]
+    fn paged_full_context_pool_matches_slot_build() {
+        // P = max_seq: one frame per full context, frames-first
+        // allocation order — the paged pool must be the slot build
+        // address-for-address (the cycle-equivalence anchor).
+        let m = by_name("gpt2-small").unwrap();
+        let slot_cfg = HwConfig::paper_baseline().with_max_streams(4);
+        let paged_cfg = slot_cfg
+            .clone()
+            .with_kv_paging(true)
+            .with_kv_page_tokens(m.max_seq as u64);
+        let slot = ModelMapping::build(&m, &slot_cfg).unwrap();
+        let paged = ModelMapping::build(&m, &paged_cfg).unwrap();
+        assert_eq!(paged.kv.n_slots, 4, "one frame per requested context");
+        assert_eq!(paged.kv.page_tokens, Some(m.max_seq as u64));
+        assert!(paged.kv_shortfall.is_none());
+        assert_eq!(paged.kv.k_base, slot.kv.k_base);
+        assert_eq!(paged.kv.v_base, slot.kv.v_base);
+        for (id, p) in &slot.matrices {
+            let q = &paged.matrices[id];
+            for (a, b) in p.per_unit.iter().zip(&q.per_unit) {
+                assert_eq!(a.base_row, b.base_row, "{id:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn paged_pool_sized_in_frames() {
+        // Default P = 128 on a 1024-token context: 8 frames per
+        // worst-case stream.
+        let m = by_name("gpt2-small").unwrap();
+        let cfg = HwConfig::paper_baseline().with_max_streams(2).with_kv_paging(true);
+        let mm = ModelMapping::build(&m, &cfg).unwrap();
+        assert_eq!(mm.kv.n_slots, 16, "2 streams x 8 frames");
+        assert_eq!(mm.kv.page_tokens, Some(128));
+        // An oversized page clamps to the padded full context.
+        let cfg = cfg.with_kv_page_tokens(10 * m.max_seq as u64);
+        let mm = ModelMapping::build(&m, &cfg).unwrap();
+        assert_eq!(mm.kv.page_tokens, Some(m.max_seq as u64));
+        assert_eq!(mm.kv.n_slots, 2);
+    }
+
+    #[test]
+    fn paged_degradation_outgrants_whole_slots() {
+        // gpt2-xl under the Table I baseline fits only 2 of 4 whole
+        // contexts; the paged pool degrades frame-by-frame and must
+        // grant at least 3 short (<= 128-token) streams' worth — the
+        // concurrency headline of paging.
+        let m = by_name("gpt2-xl").unwrap();
+        let slot_cfg = HwConfig::paper_baseline().with_max_streams(4);
+        let slot = ModelMapping::build(&m, &slot_cfg).unwrap();
+        assert!(slot.kv.n_slots < 4, "premise: xl is capacity-squeezed");
+        let paged_cfg = slot_cfg.clone().with_kv_paging(true);
+        let paged = ModelMapping::build(&m, &paged_cfg).unwrap();
+        let report = paged.kv_shortfall.as_ref().expect("frame shortfall report");
+        assert_eq!(report.requested, 4 * 8, "4 streams x 8 frames of 128");
+        assert_eq!(report.granted, paged.kv.n_slots);
+        assert!(
+            paged.kv.n_slots >= 3,
+            "expected >= 3 frames (>= 3 short streams), got {}",
+            paged.kv.n_slots
+        );
+        assert!(paged.fill <= 1.0);
     }
 
     #[test]

@@ -37,6 +37,12 @@ pub enum UnitWork {
         pattern: [u32; crate::mapping::kv_reserve::MAX_PATTERN],
         pattern_len: u8,
     },
+    /// A paged KV read: one `Pattern`-shaped run per covered page frame,
+    /// executed back to back on the bank. A single-run list is
+    /// cycle-identical to the equivalent `Pattern` (same `mac_pattern`
+    /// call); between runs the bank's own `busy_until`/`opened_at` state
+    /// charges the honest row-switch cost when frames are not adjacent.
+    PatternRuns(Vec<crate::mapping::PatternRun>),
 }
 
 impl UnitWork {
@@ -46,6 +52,8 @@ impl UnitWork {
             || matches!(self, UnitWork::Block(b) if b.total_rows() == 0)
             || matches!(self, UnitWork::Pattern { reps, pattern_len, .. }
                         if *reps == 0 || *pattern_len == 0)
+            || matches!(self, UnitWork::PatternRuns(runs)
+                        if runs.iter().all(|r| r.reps == 0 || r.pattern_len == 0))
     }
 
     fn first_row(&self) -> Option<u32> {
@@ -56,6 +64,10 @@ impl UnitWork {
             UnitWork::Pattern { base_row, reps, pattern_len, .. } => {
                 (*reps > 0 && *pattern_len > 0).then_some(*base_row)
             }
+            UnitWork::PatternRuns(runs) => runs
+                .iter()
+                .find(|r| r.reps > 0 && r.pattern_len > 0)
+                .map(|r| r.base_row),
         }
     }
 }
@@ -198,6 +210,30 @@ impl Channel {
                     fill,
                     passes,
                 ),
+                UnitWork::PatternRuns(runs) => {
+                    // Back-to-back per-page sweeps: `mac_pattern` clamps
+                    // its start to the bank's `busy_until`, so chaining
+                    // each run's finish composes cycle-exactly with one
+                    // contiguous sweep when the frames are adjacent and
+                    // pays the row-switch conflict when they are not.
+                    let mut fin = macs_start;
+                    for r in runs {
+                        if r.reps == 0 || r.pattern_len == 0 {
+                            continue;
+                        }
+                        fin = bank.mac_pattern(
+                            fin,
+                            r.base_row,
+                            r.reps,
+                            &r.pattern[..r.pattern_len as usize],
+                            t,
+                            lanes,
+                            fill,
+                            passes,
+                        );
+                    }
+                    fin
+                }
             };
             slowest = slowest.max(fin);
         }
@@ -428,6 +464,51 @@ mod tests {
         // 64 passes x 64 cycles of GB load = 4096 cycles of input.
         assert_eq!(e.gb_load_cycles, 64 * 64);
         assert!(e.finish >= 64 * 64, "finish {} before input done", e.finish);
+    }
+
+    /// Paged-KV pin: a single-run `PatternRuns` is cycle-identical to
+    /// the equivalent `Pattern`, and an adjacent two-run split of one
+    /// sweep composes to the exact same finish (the bank's
+    /// `busy_until`/`opened_at` continuation is what the paged read path
+    /// relies on for the page-size = max_seq equivalence).
+    #[test]
+    fn pattern_runs_compose_like_one_sweep() {
+        use crate::mapping::PatternRun;
+        let (cfg, t) = setup();
+        let mut pattern = [0u32; crate::mapping::kv_reserve::MAX_PATTERN];
+        pattern[0] = 1024;
+        pattern[1] = 512;
+        let plan = |work: UnitWork| {
+            let mut bank_work = vec![UnitWork::Idle; cfg.gddr6.banks_per_channel];
+            bank_work[2] = work;
+            VmmPlan { bank_work, input_elems: 512, output_elems: 64, passes: 1 }
+        };
+        let one = UnitWork::Pattern { base_row: 40, reps: 5, pattern, pattern_len: 2 };
+        let single_run = UnitWork::PatternRuns(vec![PatternRun {
+            base_row: 40,
+            reps: 5,
+            pattern,
+            pattern_len: 2,
+        }]);
+        // Rows advance pattern_len per rep, so rep 3 starts at row 46.
+        let split = UnitWork::PatternRuns(vec![
+            PatternRun { base_row: 40, reps: 3, pattern, pattern_len: 2 },
+            PatternRun { base_row: 46, reps: 2, pattern, pattern_len: 2 },
+        ]);
+        let base = Channel::new(&cfg).execute_vmm(&cfg, &t, 0, &plan(one));
+        let runs1 = Channel::new(&cfg).execute_vmm(&cfg, &t, 0, &plan(single_run));
+        let runs2 = Channel::new(&cfg).execute_vmm(&cfg, &t, 0, &plan(split));
+        assert_eq!(base, runs1, "single run != Pattern");
+        assert_eq!(base, runs2, "adjacent split != contiguous sweep");
+        // Empty / all-zero run lists are idle, like a zero-rep Pattern.
+        assert!(UnitWork::PatternRuns(vec![]).is_idle());
+        assert!(UnitWork::PatternRuns(vec![PatternRun {
+            base_row: 0,
+            reps: 0,
+            pattern,
+            pattern_len: 2
+        }])
+        .is_idle());
     }
 
     #[test]

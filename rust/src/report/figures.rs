@@ -737,6 +737,128 @@ pub fn fig_batching(gen_tokens: u64, ks: &[usize], models: &[String]) -> Result<
     })
 }
 
+/// Paged-KV figure (beyond the paper): makespan and p99 TTFT with the
+/// static slot engine vs the paged engine (128-token pages, 1.5x
+/// oversubscription) on two workload mixes — *many short chats* (2K
+/// requests, 8-token prompts) and *few long documents* (2 requests,
+/// long prompts) — under KV-constrained capacity. Each model's DRAM
+/// capacity is squeezed (a deterministic descending scan) until the
+/// slot engine grants fewer than K = 4 contexts; the paged engine then
+/// out-admits it on the short mix because admission commits *expected*
+/// (per-frame) footprint, not worst-case whole contexts. Models where
+/// no scanned capacity degrades the slot grant run at the baseline
+/// (both engines behave identically there — the equivalence contract).
+/// `models` filters the paper zoo (empty = all 8; the CI smoke runs
+/// one model via `--models`). Fully deterministic (closed loop, no RNG).
+pub fn fig_paging(gen_tokens: u64, models: &[String]) -> Result<FigureReport> {
+    anyhow::ensure!(gen_tokens >= 1, "need at least one generated token");
+    for name in models {
+        anyhow::ensure!(
+            PAPER_MODELS.iter().any(|m| m.name == name),
+            "unknown model '{name}' in --models"
+        );
+    }
+    const K: usize = 4;
+    let base = HwConfig::paper_baseline();
+    let freq_hz = base.gddr6.freq_ghz * 1e9;
+    let fmt = |cycles: u64| fmt_time_s(cycles as f64 / freq_hz);
+    let mut t = Table::new(vec![
+        "model", "mix", "engine", "grant", "peak", "preempt", "ttft p99", "makespan",
+    ]);
+    let mut arr = Vec::new();
+    let selected = PAPER_MODELS
+        .iter()
+        .filter(|m| models.is_empty() || models.iter().any(|n| n == m.name));
+    for m in selected {
+        // Deterministic capacity squeeze: the first (largest) scanned
+        // capacity whose *slot* grant falls below K makes KV rows the
+        // binding constraint; baseline if none does.
+        let mut capacity = base.gddr6.capacity_gbit;
+        for factor in [0.5, 0.35, 0.25, 0.18, 0.12, 0.08, 0.05, 0.03, 0.02] {
+            let mut cfg = base.clone().with_max_streams(K);
+            cfg.gddr6.capacity_gbit = base.gddr6.capacity_gbit * factor;
+            let Ok(mapping) = ModelMapping::build(m, &cfg) else { continue };
+            if (1..K).contains(&mapping.kv.n_slots) {
+                capacity = cfg.gddr6.capacity_gbit;
+                break;
+            }
+        }
+        let long_prompt = (m.max_seq as u64 / 4).clamp(8, 128);
+        let mixes: [(&str, Vec<StreamSpec>); 2] = [
+            (
+                "short-chats",
+                (0..2 * K as u64)
+                    .map(|id| StreamSpec::with_prompt(id, 8, gen_tokens))
+                    .collect(),
+            ),
+            (
+                "long-docs",
+                (0..2u64)
+                    .map(|id| StreamSpec::with_prompt(id, long_prompt, 2 * gen_tokens))
+                    .collect(),
+            ),
+        ];
+        for (mix, specs) in &mixes {
+            for paged in [false, true] {
+                let mut cfg = base.clone().with_max_streams(K);
+                cfg.gddr6.capacity_gbit = capacity;
+                if paged {
+                    cfg.sched.kv_paging = true;
+                    cfg.sched.kv_page_tokens = 128;
+                    cfg.sched.kv_oversub = 1.5;
+                }
+                let mut ms = MultiSim::new(m, &cfg)?;
+                for spec in specs {
+                    ms.submit(*spec)?;
+                }
+                let done = ms.run_all()?.len();
+                anyhow::ensure!(done == specs.len(), "{done} of {} streams retired", specs.len());
+                ms.finalize_stats();
+                let s = &ms.stats;
+                let lat =
+                    s.latency_report().ok_or_else(|| anyhow!("no streams retired"))?;
+                let (engine, grant) =
+                    if paged { ("pages", s.kv_pages) } else { ("slots", s.kv_slots) };
+                let peak = if paged { s.peak_pages_in_use } else { s.peak_slots_in_use };
+                t.row(vec![
+                    m.name.to_string(),
+                    mix.to_string(),
+                    engine.into(),
+                    grant.to_string(),
+                    peak.to_string(),
+                    s.preemptions.to_string(),
+                    fmt(lat.ttft.p99),
+                    fmt(ms.clock()),
+                ]);
+                arr.push(Json::obj(vec![
+                    ("model", m.name.into()),
+                    ("mix", (*mix).into()),
+                    ("engine", engine.into()),
+                    ("capacity_gbit", capacity.into()),
+                    ("grant", grant.into()),
+                    ("peak_in_use", peak.into()),
+                    ("peak_streams", s.peak_slots_in_use.into()),
+                    ("page_faults", s.page_faults.into()),
+                    ("preemptions", s.preemptions.into()),
+                    ("evicted_tokens", s.evicted_tokens.into()),
+                    ("ttft_p99_cycles", lat.ttft.p99.into()),
+                    ("e2e_p99_cycles", lat.e2e.p99.into()),
+                    ("makespan_cycles", ms.clock().into()),
+                ]));
+            }
+        }
+    }
+    Ok(FigureReport {
+        id: "paging",
+        title: format!(
+            "Paged KV: slot vs paged engine under KV-constrained capacity \
+             (K={K}, 128-token pages, oversub 1.5, +{gen_tokens} generated tokens)"
+        ),
+        rendered: t.render(),
+        json: Json::Arr(arr),
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -828,6 +950,50 @@ mod tests {
     #[test]
     fn fig_batching_rejects_unknown_model() {
         assert!(fig_batching(2, &[1], &["no-such-model".to_string()]).is_err());
+    }
+
+    /// Acceptance: under KV-constrained capacity the paged engine
+    /// out-admits the slot engine on the many-short-chats mix (peak
+    /// concurrent streams strictly higher) and its makespan is no worse.
+    #[test]
+    fn fig_paging_short_chats_beat_slots_under_pressure() {
+        let r = fig_paging(2, &["gpt2-small".to_string()]).unwrap();
+        let arr = r.json.as_arr().unwrap();
+        assert_eq!(arr.len(), 4, "2 mixes x 2 engines");
+        let find = |mix: &str, engine: &str| {
+            arr.iter()
+                .find(|e| {
+                    e.get("mix").unwrap().as_str().unwrap() == mix
+                        && e.get("engine").unwrap().as_str().unwrap() == engine
+                })
+                .unwrap()
+        };
+        let slots = find("short-chats", "slots");
+        let pages = find("short-chats", "pages");
+        let f = |e: &Json, k: &str| e.get(k).unwrap().as_f64().unwrap();
+        assert!(
+            f(slots, "grant") < 4.0,
+            "capacity squeeze must bind the slot grant, got {}",
+            f(slots, "grant")
+        );
+        assert!(
+            f(pages, "peak_streams") > f(slots, "peak_in_use"),
+            "paged short-chat concurrency {} !> slot concurrency {}",
+            f(pages, "peak_streams"),
+            f(slots, "peak_in_use")
+        );
+        assert!(
+            f(pages, "makespan_cycles") <= f(slots, "makespan_cycles"),
+            "paged makespan {} !<= slot makespan {}",
+            f(pages, "makespan_cycles"),
+            f(slots, "makespan_cycles")
+        );
+        assert!(r.rendered.contains("short-chats") && r.rendered.contains("long-docs"));
+    }
+
+    #[test]
+    fn fig_paging_rejects_unknown_model() {
+        assert!(fig_paging(2, &["no-such-model".to_string()]).is_err());
     }
 
     #[test]

@@ -140,6 +140,7 @@ impl Simulator {
                 pos,
                 ltoken,
                 1,
+                None,
             );
             // Streamable ops may *start* before `ready` (pipelined with
             // their producer) but never finish before it.

@@ -37,6 +37,18 @@ impl AdmissionPolicy for AdmitAlways {
 /// admitted request can still exceed the budget through cross-stream
 /// resource contention — the SLO is exact at effective K = 1 and
 /// best-effort above it.
+///
+/// **Batch awareness.** With fused decode batching on
+/// (`sched.batch_decode`), the uncontended bound is systematically
+/// pessimistic: the weight-sweep cost it charges per stream is in fact
+/// amortized over every stream fused into the sweep. The engine
+/// corrects for this *before* calling `decide` — it divides the raw
+/// estimate by the observed mean decode-batch occupancy
+/// (`SimStats::mean_decode_batch`, floored at 1.0), so a warm serving
+/// run that demonstrably fuses B streams per sweep sheds as if each
+/// request cost 1/B of the solo sweep. The policy itself stays a pure
+/// threshold on `wait + est`; the amortization is the engine's estimate
+/// refinement, not a policy knob.
 pub struct SloAdmission {
     /// TTFT budget in DRAM cycles (`sched.slo_ttft_cycles`,
     /// `--policy slo:<cycles>`).

@@ -140,6 +140,19 @@ pub trait PickPolicy {
     /// Index into `candidates` (active streams in admission order) of
     /// the stream whose next instruction issues now.
     fn pick_issue(&mut self, candidates: &[IssueCandidate]) -> usize;
+
+    /// Index into `candidates` of the stream to *preempt* when the
+    /// paged KV frame pool is exhausted (`sched.kv_paging`). The list
+    /// is the faulting step's eviction candidates in admission order —
+    /// never the faulting stream itself — and is always non-empty.
+    ///
+    /// The default picks the last (latest-admitted) candidate: evicting
+    /// the newest stream preserves FCFS seniority and wastes the least
+    /// restored context, the classic recompute-last-admitted rule.
+    /// Overrides must follow the module determinism rules.
+    fn pick_victim(&mut self, candidates: &[IssueCandidate]) -> usize {
+        candidates.len() - 1
+    }
 }
 
 /// Outcome of an admission decision.
@@ -238,5 +251,26 @@ mod tests {
         // SLO is an admission policy on top of FCFS picking.
         assert_eq!((pick.name(), adm.name()), ("fcfs", "slo"));
         assert!(adm.needs_estimate());
+    }
+
+    #[test]
+    fn default_victim_is_latest_admitted() {
+        // Every built-in policy inherits the recompute-last-admitted
+        // default: the final candidate (admission order) is evicted.
+        let cand = |id: u64| IssueCandidate {
+            id,
+            slot: id as usize,
+            ready: 100 - id, // deliberately anti-correlated with order
+            remaining_tokens: id + 1,
+            served_cycles: id * 10,
+        };
+        let candidates: Vec<IssueCandidate> = (0..3).map(cand).collect();
+        let mut sched = SchedulerConfig::default();
+        for spec in [PolicySpec::Fcfs, PolicySpec::Srf, PolicySpec::Fair, PolicySpec::Slo] {
+            sched.policy = spec;
+            let (mut pick, _) = build(&sched);
+            assert_eq!(pick.pick_victim(&candidates), 2, "{spec}");
+            assert_eq!(pick.pick_victim(&candidates[..1]), 0, "{spec}");
+        }
     }
 }

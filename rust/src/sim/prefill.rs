@@ -146,6 +146,10 @@ pub fn isolated_prefill_cost(
                 c.start_pos,
                 c.ltoken_end(),
                 c.len,
+                // The admission predictor's uncontended bound stays
+                // slot-addressed: page indirection shifts base rows, not
+                // uncontended cycle costs.
+                None,
             );
             first_ready.push(out.first_ready);
             finish.push(out.finish);

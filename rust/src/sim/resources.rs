@@ -97,6 +97,14 @@ impl Resources {
     /// fewer tokens than charged), which keeps the chunk program a
     /// single instruction stream; the parallel-bank critical path is
     /// dominated by the oldest token's unit either way.
+    ///
+    /// `pages` selects the KV addressing mode: `None` is the historical
+    /// slot path (the instruction's patched `slot` id names a full
+    /// `max_seq` context), `Some(table)` resolves every KV read/write
+    /// through the issuing stream's page table at issue time (paged KV
+    /// — the `slot` id is ignored and reads become per-page
+    /// `PatternRuns`). The caller guarantees the table covers
+    /// `ltoken` / `pos + passes`.
     #[allow(clippy::too_many_arguments)]
     pub(crate) fn issue(
         &mut self,
@@ -110,6 +118,7 @@ impl Resources {
         pos: u64,
         ltoken: u64,
         passes: u64,
+        pages: Option<&[u32]>,
     ) -> Issued {
         let passes = passes.max(1);
         let mut ready = step_start;
@@ -120,6 +129,7 @@ impl Resources {
             Instr::PimVmm { matrix, class, in_elems, slot, .. } => {
                 let (fin, fr) = self.exec_vmm(
                     ctx, plan, ready, matrix.layer, matrix.kind, *slot, *in_elems, ltoken, passes,
+                    pages,
                 );
                 Issued {
                     ready,
@@ -161,7 +171,10 @@ impl Resources {
                 // serializes whatever lands on it).
                 let mut fin = ready;
                 for p in pos..pos + passes {
-                    let (unit, segs) = ctx.mapping.kv.k_write(*layer, *slot, p);
+                    let (unit, segs) = match pages {
+                        Some(table) => ctx.mapping.kv.k_write_paged(*layer, table, p),
+                        None => ctx.mapping.kv.k_write(*layer, *slot, p),
+                    };
                     let mut f = ready;
                     for seg in segs {
                         f = self.channels[unit.channel].write_k(ctx.t, f, unit.bank, seg);
@@ -192,7 +205,10 @@ impl Resources {
                     for p in pos..pos + passes {
                         for b in 0..banks {
                             let u = ch * banks + b;
-                            let (base, n_cols, stride) = kv.v_write(*layer, *slot, p, u);
+                            let (base, n_cols, stride) = match pages {
+                                Some(table) => kv.v_write_paged(*layer, table, p, u),
+                                None => kv.v_write(*layer, *slot, p, u),
+                            };
                             if n_cols == 0 {
                                 continue;
                             }
@@ -223,6 +239,7 @@ impl Resources {
         in_elems: u64,
         ltoken: u64,
         passes: u64,
+        pages: Option<&[u32]>,
     ) -> (u64, u64) {
         let banks = ctx.cfg.gddr6.banks_per_channel;
         let n_head = ctx.model.n_head as u64;
@@ -231,6 +248,32 @@ impl Resources {
         plan.input_elems = in_elems;
         plan.passes = passes;
         match kind {
+            MatrixKind::KCache | MatrixKind::VCache if pages.is_some() => {
+                // Paged KV reads: the page table resolves to one
+                // pattern run per covered frame (`PatternRuns`); a
+                // single-page context issues the identical `mac_pattern`
+                // call as the slot path below.
+                let table = pages.unwrap();
+                let kv = &ctx.mapping.kv;
+                for (ch, channel) in self.channels.iter_mut().enumerate() {
+                    let mut out = 0u64;
+                    for b in 0..banks {
+                        let u = ch * banks + b;
+                        let runs = if kind == MatrixKind::KCache {
+                            out += kv.k_out_elems(u, ltoken, n_head);
+                            kv.k_read_runs(layer, table, ltoken, u)
+                        } else {
+                            out += kv.v_cols(u) as u64;
+                            kv.v_read_runs(layer, table, ltoken, u)
+                        };
+                        plan.bank_work[b] = UnitWork::PatternRuns(runs);
+                    }
+                    plan.output_elems = out;
+                    let e = channel.execute_vmm(ctx.cfg, ctx.t, start, plan);
+                    slowest = slowest.max(e.finish);
+                    first_ready = first_ready.min(e.first_ready);
+                }
+            }
             MatrixKind::KCache | MatrixKind::VCache => {
                 // KV reads are uniform repetitions of a row-fill pattern
                 // per unit: O(1) work via `Bank::mac_pattern` regardless
@@ -355,7 +398,7 @@ mod tests {
         let mut res = Resources::new(cfg);
         let mut plan = empty_plan(cfg);
         let ctx = IssueCtx { cfg, t, model, mapping };
-        res.issue(&ctx, &mut plan, instr, &[], 0, &[], &[], ltoken - 1, ltoken, 1)
+        res.issue(&ctx, &mut plan, instr, &[], 0, &[], &[], ltoken - 1, ltoken, 1, None)
     }
 
     fn issue_chunk(
@@ -370,7 +413,7 @@ mod tests {
         let mut res = Resources::new(cfg);
         let mut plan = empty_plan(cfg);
         let ctx = IssueCtx { cfg, t, model, mapping };
-        res.issue(&ctx, &mut plan, instr, &[], 0, &[], &[], pos, pos + passes, passes)
+        res.issue(&ctx, &mut plan, instr, &[], 0, &[], &[], pos, pos + passes, passes, None)
     }
 
     /// Regression pin (satellite): a WriteV's units serialize over each
@@ -422,7 +465,9 @@ mod tests {
         let ctx = IssueCtx { cfg: &cfg, t: &t, model: &m, mapping: &mapping };
         let mut fin = 0u64;
         for p in 0..passes {
-            fin = serial.issue(&ctx, &mut plan, &vmm, &[], fin, &[], &[], p, p + 1, 1).finish;
+            fin = serial
+                .issue(&ctx, &mut plan, &vmm, &[], fin, &[], &[], p, p + 1, 1, None)
+                .finish;
         }
         assert!(chunk.finish < fin, "chunk VMM {} !< serial {fin}", chunk.finish);
 
@@ -447,6 +492,79 @@ mod tests {
         let chunk = issue_chunk(&cfg, &t, &m, &mapping, &wv, 0, passes);
         let single = issue_one(&cfg, &t, &m, &mapping, &wv, 1);
         assert_eq!(chunk.finish, passes * single.finish);
+    }
+
+    /// Paged-KV pin: with page size = max_seq (one page per context) the
+    /// paged mapping assigns the identical base rows as the slot build,
+    /// and every KV instruction issued through a one-entry page table is
+    /// cycle-identical to the slot-addressed issue — the resource-layer
+    /// half of the `kv_paging` equivalence contract.
+    #[test]
+    fn paged_full_context_issue_is_cycle_identical() {
+        use crate::model::MatrixId;
+        let (cfg, t, m, mapping) = setup("gpt2-small", 2);
+        let mut pcfg = cfg.clone();
+        pcfg.sched.kv_paging = true;
+        pcfg.sched.kv_page_tokens = m.max_seq as u64;
+        let pmapping = ModelMapping::build(&m, &pcfg).unwrap();
+        assert_eq!(pmapping.kv.page_tokens, Some(m.max_seq as u64));
+        assert_eq!(pmapping.kv.n_slots, mapping.kv.n_slots, "frame pool == slot pool");
+        let instrs = [
+            Instr::PimVmm {
+                matrix: MatrixId::new(1, MatrixKind::KCache),
+                class: crate::model::VmmClass::Score,
+                in_elems: m.d_model as u64,
+                out_elems: 0,
+                parts: 1,
+                slot: 0,
+            },
+            Instr::PimVmm {
+                matrix: MatrixId::new(1, MatrixKind::VCache),
+                class: crate::model::VmmClass::AttnV,
+                in_elems: 64,
+                out_elems: 0,
+                parts: 1,
+                slot: 0,
+            },
+            Instr::WriteK { layer: 1, slot: 0 },
+            Instr::WriteV { layer: 1, slot: 0 },
+        ];
+        for frame in 0..2u32 {
+            let pages = [frame];
+            for instr in &instrs {
+                let mut slotted = instr.clone();
+                match &mut slotted {
+                    Instr::PimVmm { slot, .. }
+                    | Instr::WriteK { slot, .. }
+                    | Instr::WriteV { slot, .. } => *slot = frame as usize,
+                    _ => {}
+                }
+                for ltoken in [1u64, 129, 777] {
+                    let base = issue_one(&cfg, &t, &m, &mapping, &slotted, ltoken);
+                    let mut res = Resources::new(&pcfg);
+                    let mut plan = empty_plan(&pcfg);
+                    let ctx = IssueCtx { cfg: &pcfg, t: &t, model: &m, mapping: &pmapping };
+                    let paged = res.issue(
+                        &ctx,
+                        &mut plan,
+                        instr,
+                        &[],
+                        0,
+                        &[],
+                        &[],
+                        ltoken - 1,
+                        ltoken,
+                        1,
+                        Some(&pages),
+                    );
+                    assert_eq!(
+                        (base.finish, base.first_ready),
+                        (paged.finish, paged.first_ready),
+                        "{instr:?} frame {frame} ltoken {ltoken}"
+                    );
+                }
+            }
+        }
     }
 
     /// Slot choice shifts KV base rows but never cycle costs: the same

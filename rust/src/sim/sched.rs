@@ -89,6 +89,33 @@
 //! every queue/TTFT percentile). Blocked requests, peak slot occupancy
 //! and policy rejections are counted in `SimStats`
 //! (`admission_blocked`, `peak_slots_in_use`, `rejected`).
+//!
+//! **Paged KV** (`sched.kv_paging`): instead of one worst-case
+//! `max_seq` KV region per stream, the mapping carves its KV budget
+//! into fixed-size *page frames* of `sched.kv_page_tokens` positions
+//! (`mapping::KvReservation::build_paged`) and each stream owns a page
+//! *table* — logical token pages mapped to physical frames, grown on
+//! demand as its context advances. Admission then charges a stream its
+//! *expected* footprint (`ceil(n_tokens / P)` frames — the size it will
+//! actually reach) instead of a full `max_seq` reservation, so short
+//! requests stop paying for contexts they never grow;
+//! `sched.kv_oversub > 1` additionally lets the committed total
+//! overshoot the physical pool. When an on-demand frame allocation
+//! finds the free list empty (a *page fault* — only possible when
+//! oversubscribed), the engine preempts a victim stream
+//! (`PickPolicy::pick_victim`, default latest-admitted): the victim's
+//! partial step is discarded, its KV context is written back at the
+//! modeled interface cost, its frames and virtual slot are recycled,
+//! and it waits in an evicted queue with priority over fresh
+//! admissions — re-admission restores the context (same cost model)
+//! and resumes at the evicted position with all its original stamps.
+//! `kv_paging = off` (the default) is cycle-identical to the slot
+//! engine, and paging with `kv_page_tokens = max_seq` and
+//! `kv_oversub = 1` is *also* cycle-identical on any arrival trace —
+//! one full-context frame per stream reproduces the slot layout row
+//! for row (pinned here and in `tests/integration_sched.rs`).
+//! Counters: `SimStats::{kv_pages, peak_pages_in_use, page_faults,
+//! preemptions, evicted_tokens}`.
 
 use std::collections::VecDeque;
 use std::rc::Rc;
@@ -307,6 +334,31 @@ struct Stream {
     token_finishes: Vec<u64>,
     instructions: u64,
     attributed: u64,
+    /// Page table (`sched.kv_paging`): physical frame of each logical
+    /// token page, grown on demand as the context advances. Always
+    /// empty in slot mode.
+    pages: Vec<u32>,
+}
+
+/// A preempted stream's swapped-out state: everything needed to resume
+/// it from `pos` once frames free up (`sched.kv_paging`). Original
+/// arrival/admission stamps and completed-token finishes are preserved
+/// — eviction delays a stream, it never re-queues it as a new request.
+struct EvictedStream {
+    id: u64,
+    end_pos: u64,
+    prompt_tokens: u64,
+    /// Completed positions at eviction (the partial step in flight was
+    /// discarded; its KV writes are rolled into the writeback).
+    pos: u64,
+    arrival: u64,
+    admitted: u64,
+    token_finishes: Vec<u64>,
+    instructions: u64,
+    attributed: u64,
+    /// Cycle the eviction writeback completes — the earliest its
+    /// restore can begin.
+    ready_at: u64,
 }
 
 /// A fused decode sweep in flight: >= 2 streams' decode tokens sharing
@@ -382,13 +434,31 @@ pub struct MultiSim {
     /// admission predictor; the chunked-prefill replay is exact per
     /// prompt length, so each length is computed at most once).
     ttft_est: std::collections::BTreeMap<u64, u64>,
-    /// Free KV slot ids (admission pops the earliest-free one).
+    /// Free KV slot ids (admission pops the earliest-free one). Under
+    /// paging these are *virtual* stream identities — KV capacity is
+    /// governed by the frame pool, not the slot count.
     free_slots: Vec<usize>,
     /// Cycle each slot was last vacated (0 for never-used slots).
     slot_free_at: Vec<u64>,
-    /// Concurrency cap = KV slots actually reserved by the mapping
-    /// (<= `cfg.sched.max_streams`; fewer when capacity degraded).
+    /// Concurrency cap: KV slots actually reserved by the mapping
+    /// (<= `cfg.sched.max_streams`; fewer when capacity degraded), or
+    /// `max_streams` virtual slots under paging.
     n_slots: usize,
+    /// Paged KV frame pool size (`mapping.kv.n_slots` under paging; 0
+    /// when paging is off).
+    n_frames: usize,
+    /// Free physical frame ids (allocation picks the earliest-free).
+    free_frames: Vec<u32>,
+    /// Cycle each frame was last vacated (retirement or eviction
+    /// writeback completion; 0 for never-used frames).
+    frame_free_at: Vec<u64>,
+    /// Frames committed by admitted (active + evicted) streams at their
+    /// expected full footprint (`frames_for(n_tokens)`). Admission
+    /// blocks when this would exceed `floor(n_frames * kv_oversub)`.
+    committed_frames: u64,
+    /// Preempted streams awaiting re-admission, in eviction order.
+    /// Re-admission has priority over the fresh queue.
+    evicted: VecDeque<EvictedStream>,
 }
 
 impl MultiSim {
@@ -402,9 +472,19 @@ impl MultiSim {
     /// `PimGptSystem`). The pick/admission policies are instantiated
     /// from `cfg.sched.policy`.
     pub fn from_mapping(model: &GptModel, cfg: &HwConfig, mapping: ModelMapping) -> Self {
-        // The mapping is the source of truth for how many disjoint KV
-        // contexts exist; the config can only lower it further.
-        let n_slots = mapping.kv.n_slots.min(cfg.sched.max_streams.max(1)).max(1);
+        // The mapping is the source of truth for how much disjoint KV
+        // capacity exists; the config can only lower it further. Slot
+        // mode: one `max_seq` context per slot, concurrency = slots.
+        // Paged mode: the mapping's "slots" are page frames, slots
+        // become virtual stream identities capped by `max_streams`, and
+        // concurrency is governed by frame commitment instead.
+        let paging = cfg.sched.kv_paging;
+        let n_slots = if paging {
+            cfg.sched.max_streams.max(1)
+        } else {
+            mapping.kv.n_slots.min(cfg.sched.max_streams.max(1)).max(1)
+        };
+        let n_frames = if paging { mapping.kv.n_slots } else { 0 };
         let (pick, admission) = policy::build(&cfg.sched);
         Self {
             cfg: cfg.clone(),
@@ -431,6 +511,11 @@ impl MultiSim {
             free_slots: (0..n_slots).collect(),
             slot_free_at: vec![0; n_slots],
             n_slots,
+            n_frames,
+            free_frames: (0..n_frames as u32).collect(),
+            frame_free_at: vec![0; n_frames],
+            committed_frames: 0,
+            evicted: VecDeque::new(),
         }
     }
 
@@ -459,10 +544,26 @@ impl MultiSim {
         self.active.len()
     }
 
-    /// Requests submitted but not yet admitted: arrived-and-waiting
-    /// (KV-blocked) plus not-yet-arrived (pending).
+    /// Requests submitted but not currently running: arrived-and-waiting
+    /// (KV-blocked), not-yet-arrived (pending), and preempted streams
+    /// awaiting re-admission (`sched.kv_paging`).
     pub fn queued_streams(&self) -> usize {
-        self.queue.len() + self.pending.len()
+        self.queue.len() + self.pending.len() + self.evicted.len()
+    }
+
+    /// Paged KV frame pool size (0 when `sched.kv_paging` is off).
+    pub fn kv_pages(&self) -> usize {
+        self.n_frames
+    }
+
+    /// Free page frames (0 when paging is off).
+    pub fn free_kv_pages(&self) -> usize {
+        self.free_frames.len()
+    }
+
+    /// Preempted streams waiting to be restored.
+    pub fn evicted_streams(&self) -> usize {
+        self.evicted.len()
     }
 
     /// Rejections already decided but not yet returned by [`MultiSim::step`]
@@ -517,6 +618,26 @@ impl MultiSim {
                 spec.prompt_tokens,
                 spec.n_tokens
             );
+        }
+        if self.cfg.sched.kv_paging {
+            // A request whose full context cannot fit in the physical
+            // frame pool could never complete — even alone, with every
+            // peer evicted — so refuse it up front. This also
+            // guarantees eviction can always make room for a fault:
+            // no single stream can hold the entire pool and still need
+            // more.
+            let need = self.mapping.kv.frames_for(spec.n_tokens);
+            if need > self.n_frames {
+                bail!(
+                    "request {} needs {} KV page frames ({} tokens at {} tokens/page) \
+                     but the pool holds {}",
+                    spec.id,
+                    need,
+                    spec.n_tokens,
+                    self.mapping.kv.page_tokens.unwrap_or(0),
+                    self.n_frames
+                );
+            }
         }
         // Keep pending sorted by (arrival, submit order): stable insert
         // behind every entry arriving at or before this one (O(1) for
@@ -575,6 +696,285 @@ impl MultiSim {
         Ok(est)
     }
 
+    /// Committed-frame ceiling: the physical pool scaled by the
+    /// oversubscription ratio. `kv_oversub = 1` admits only what fits,
+    /// so the free list can never run dry and no fault can occur.
+    fn frame_budget(&self) -> u64 {
+        (self.n_frames as f64 * self.cfg.sched.kv_oversub).floor() as u64
+    }
+
+    /// Whether another request could be admitted right now: a free slot
+    /// in slot mode; a free virtual slot *and* committed-frame headroom
+    /// under paging (every request commits at least one frame).
+    fn has_admission_headroom(&self) -> bool {
+        if !self.cfg.sched.kv_paging {
+            return !self.free_slots.is_empty();
+        }
+        !self.free_slots.is_empty() && self.committed_frames < self.frame_budget()
+    }
+
+    /// Modeled cycles to move a `tokens`-position KV context across the
+    /// GDDR6 interface (eviction writeback and re-admission restore are
+    /// symmetric): K and V vectors of every layer, bf16, streamed at
+    /// the aggregate per-cycle interface bandwidth.
+    fn kv_transfer_cycles(&self, tokens: u64) -> u64 {
+        let bytes = tokens * self.model.n_layer as u64 * 2 * self.model.d_model as u64 * 2;
+        let per_cycle =
+            self.cfg.gddr6.channel_bytes_per_cycle() * self.cfg.gddr6.channels as f64;
+        (bytes as f64 / per_cycle).ceil() as u64
+    }
+
+    /// The `need` earliest-free frames (ties -> lowest id), without
+    /// removing them, plus the latest cycle any of them frees — the
+    /// admission-stamp contribution. `None` if the free list is short.
+    /// The (free-cycle, id) order mirrors the slot pick, which makes
+    /// the full-context paged frame sequence identical to the slot
+    /// sequence — the cycle-equivalence anchor.
+    fn pick_free_frames(&self, need: usize) -> Option<(Vec<u32>, u64)> {
+        if self.free_frames.len() < need {
+            return None;
+        }
+        let mut frames = self.free_frames.clone();
+        frames.sort_by_key(|&f| (self.frame_free_at[f as usize], f));
+        frames.truncate(need);
+        let free_at = frames.iter().map(|&f| self.frame_free_at[f as usize]).max().unwrap_or(0);
+        Some((frames, free_at))
+    }
+
+    /// Remove `frames` (previously returned by [`Self::pick_free_frames`])
+    /// from the free list and record the occupancy high-water mark.
+    fn take_frames(&mut self, frames: &[u32]) {
+        self.free_frames.retain(|f| !frames.contains(f));
+        let in_use = (self.n_frames - self.free_frames.len()) as u64;
+        self.stats.peak_pages_in_use = self.stats.peak_pages_in_use.max(in_use);
+    }
+
+    /// Grow stream `si`'s page table to cover its armed step
+    /// (`pos + step_positions` positions), allocating frames on demand.
+    /// An empty free list is a page fault: a victim stream is preempted
+    /// (`PickPolicy::pick_victim`) until a frame exists. The step start
+    /// is clamped to the allocated frames' free cycles — a frame still
+    /// draining its previous owner's writeback is not usable earlier.
+    /// No-op in slot mode and whenever the table already covers the
+    /// step (in particular always, after admission, when
+    /// `kv_page_tokens = max_seq`).
+    fn grow_stream_frames(&mut self, si: usize) -> Result<()> {
+        if !self.cfg.sched.kv_paging {
+            return Ok(());
+        }
+        let slot = self.active[si].slot;
+        let needed = {
+            let s = &self.active[si];
+            self.mapping.kv.frames_for(s.pos + s.step_positions)
+        };
+        loop {
+            // Re-derive the index each round: eviction removes streams
+            // and shifts `active` (the slot is the stable identity).
+            let si = self.stream_index_by_slot(slot);
+            if self.active[si].pages.len() >= needed {
+                break;
+            }
+            if self.free_frames.is_empty() {
+                self.stats.page_faults += 1;
+                self.evict_victim(slot)?;
+            }
+            let (frames, free_at) =
+                self.pick_free_frames(1).expect("eviction freed at least one frame");
+            self.take_frames(&frames);
+            let s = &mut self.active[si];
+            s.pages.push(frames[0]);
+            s.step_start = s.step_start.max(free_at);
+            s.step_finish = s.step_finish.max(s.step_start);
+        }
+        Ok(())
+    }
+
+    /// Resolve a page fault raised while growing the stream occupying
+    /// `faulting_slot`: preempt one victim among the other active
+    /// streams (never the faulting one; fused-sweep members only after
+    /// every solo candidate is exhausted — dissolving a sweep discards
+    /// all its members' partial work). The victim's partial step is
+    /// discarded (`pos` unchanged — preempted work is wasted work; the
+    /// cycles it burned on shared hardware stay burned), its context is
+    /// written back at the modeled interface cost, its frames and
+    /// virtual slot recycle at writeback completion, and it joins the
+    /// evicted queue with every original stamp intact.
+    fn evict_victim(&mut self, faulting_slot: usize) -> Result<()> {
+        // Never the faulting stream, never a stream that already
+        // finished its last token (it is about to retire and free its
+        // frames anyway — evicting it would resurrect it).
+        let evictable = |s: &Stream| s.slot != faulting_slot && s.pos < s.end_pos;
+        let mut idxs: Vec<usize> = (0..self.active.len())
+            .filter(|&i| {
+                evictable(&self.active[i]) && !self.slot_in_batch(self.active[i].slot)
+            })
+            .collect();
+        if idxs.is_empty() {
+            // Every peer is mid fused sweep: dissolve the sweeps
+            // (members return to their step boundary, partial sweep
+            // work discarded) so they become evictable.
+            self.dissolve_batches_for_eviction();
+            idxs = (0..self.active.len())
+                .filter(|&i| evictable(&self.active[i]))
+                .collect();
+        }
+        // `submit` guarantees no single stream can hold the whole pool
+        // and still fault, so a peer must exist.
+        assert!(
+            !idxs.is_empty(),
+            "page fault with no evictable peer (stream alone in a pool it cannot exhaust)"
+        );
+        let cands: Vec<IssueCandidate> = idxs
+            .iter()
+            .map(|&i| {
+                let s = &self.active[i];
+                let mut ready = s.step_start;
+                if s.next < s.tpl.len() {
+                    for &d in s.tpl.deps_of(s.next) {
+                        ready = ready.max(s.finish[d]);
+                    }
+                }
+                IssueCandidate {
+                    id: s.id,
+                    slot: s.slot,
+                    ready,
+                    remaining_tokens: s.end_pos - s.pos,
+                    served_cycles: s.attributed,
+                }
+            })
+            .collect();
+        let vi = self.pick.pick_victim(&cands);
+        assert!(
+            vi < cands.len(),
+            "pick policy '{}' returned victim index {vi} of {}",
+            self.pick.name(),
+            cands.len()
+        );
+        let v = self.active.remove(idxs[vi]);
+        let writeback = self.kv_transfer_cycles(v.pos);
+        let done = v.step_finish + writeback;
+        for &f in &v.pages {
+            self.frame_free_at[f as usize] = done;
+            self.free_frames.push(f);
+        }
+        self.slot_free_at[v.slot] = done;
+        self.free_slots.push(v.slot);
+        self.committed_frames -= self.mapping.kv.frames_for(v.end_pos) as u64;
+        self.stats.preemptions += 1;
+        self.stats.evicted_tokens += v.pos;
+        self.evicted.push_back(EvictedStream {
+            id: v.id,
+            end_pos: v.end_pos,
+            prompt_tokens: v.prompt_tokens,
+            pos: v.pos,
+            arrival: v.arrival,
+            admitted: v.admitted,
+            token_finishes: v.token_finishes,
+            instructions: v.instructions,
+            attributed: v.attributed,
+            ready_at: done,
+        });
+        Ok(())
+    }
+
+    /// Recycle a retiring stream's KV capacity: its slot (free as of
+    /// the stream's own last cycle, not the global clock) and, under
+    /// paging, its page frames and footprint commitment.
+    fn release_stream_kv(&mut self, s: &Stream) {
+        self.slot_free_at[s.slot] = s.step_finish;
+        self.free_slots.push(s.slot);
+        for &f in &s.pages {
+            self.frame_free_at[f as usize] = s.step_finish;
+            self.free_frames.push(f);
+        }
+        if self.cfg.sched.kv_paging {
+            self.committed_frames -= self.mapping.kv.frames_for(s.end_pos) as u64;
+        }
+    }
+
+    /// Discard every fused sweep in flight: members return to their
+    /// decode-step boundary with the sweep's partial work thrown away
+    /// (resource cycles already burned stay burned). Only used when a
+    /// page fault finds every potential victim mid-sweep.
+    fn dissolve_batches_for_eviction(&mut self) {
+        for b in std::mem::take(&mut self.batches) {
+            for &slot in &b.member_slots {
+                let mi = self.stream_index_by_slot(slot);
+                let s = &mut self.active[mi];
+                s.next = 0;
+                s.finish.clear();
+                s.first_ready.clear();
+                s.step_start = s.step_finish;
+            }
+        }
+    }
+
+    /// Restore evicted streams while capacity allows, in eviction order
+    /// — with priority over the fresh queue (`admit` calls this first),
+    /// so a preempted request cannot be starved by new arrivals.
+    /// Re-admission needs a free virtual slot, committed-frame headroom
+    /// for the stream's full expected footprint, and enough free frames
+    /// to cover its resume step; the restore pays the same interface
+    /// cost its writeback did, then the stream resumes at its evicted
+    /// position with its original stamps and token history.
+    fn readmit_evicted(&mut self) -> Result<()> {
+        while let Some(e) = self.evicted.front() {
+            let need_total = self.mapping.kv.frames_for(e.end_pos) as u64;
+            let (regime_pos, step_positions) =
+                match prefill::chunk_at(e.pos, e.prompt_tokens, self.cfg.sched.prefill_chunk) {
+                    Some(c) => (c.regime_pos(), c.len),
+                    None => (e.pos, 1),
+                };
+            let need_now = self.mapping.kv.frames_for(e.pos + step_positions);
+            if self.free_slots.is_empty()
+                || self.committed_frames + need_total > self.frame_budget()
+                || self.free_frames.len() < need_now
+            {
+                break;
+            }
+            let e = self.evicted.pop_front().expect("front checked");
+            let i = self
+                .free_slots
+                .iter()
+                .enumerate()
+                .min_by_key(|&(_, &s)| (self.slot_free_at[s], s))
+                .map(|(i, _)| i)
+                .expect("free_slots checked non-empty");
+            let slot = self.free_slots.swap_remove(i);
+            let (pages, frames_free_at) =
+                self.pick_free_frames(need_now).expect("free_frames checked sufficient");
+            self.take_frames(&pages);
+            let tpl = self.cache.get(&self.model, &self.cfg, regime_pos)?;
+            let restore_start =
+                e.ready_at.max(self.slot_free_at[slot]).max(frames_free_at);
+            let step_start = restore_start + self.kv_transfer_cycles(e.pos);
+            self.committed_frames += need_total;
+            self.active.push(Stream {
+                id: e.id,
+                tpl,
+                slot,
+                pos: e.pos,
+                end_pos: e.end_pos,
+                prompt_tokens: e.prompt_tokens,
+                step_positions,
+                next: 0,
+                finish: Vec::new(),
+                first_ready: Vec::new(),
+                step_start,
+                step_finish: step_start,
+                arrival: e.arrival,
+                admitted: e.admitted,
+                token_finishes: e.token_finishes,
+                instructions: e.instructions,
+                attributed: e.attributed,
+                pages,
+            });
+            let in_use = (self.n_slots - self.free_slots.len()) as u64;
+            self.stats.peak_slots_in_use = self.stats.peak_slots_in_use.max(in_use);
+        }
+        Ok(())
+    }
+
     /// Admit released requests while free KV slots exist. Admission is a
     /// *capacity* decision gated by a *policy* decision: the pick policy
     /// chooses which queued request gets the earliest-free slot, the
@@ -587,7 +987,12 @@ impl MultiSim {
     /// requests left waiting are added to `SimStats::admission_blocked`
     /// (unit: blocked *requests* per attempt — see the field docs).
     fn admit(&mut self, count_blocked: bool) -> Result<()> {
-        while !self.queue.is_empty() && !self.free_slots.is_empty() {
+        if self.cfg.sched.kv_paging {
+            // Preempted streams are restored before any fresh request
+            // is considered — eviction must never starve its victim.
+            self.readmit_evicted()?;
+        }
+        while !self.queue.is_empty() && self.has_admission_headroom() {
             // Earliest-free slot first (ties -> lowest id): deterministic
             // and admits as early as the KV capacity allows.
             let i = self
@@ -605,11 +1010,60 @@ impl MultiSim {
                 self.pick.name(),
                 self.queue.len()
             );
+            let paging = self.cfg.sched.kv_paging;
+            // Paged capacity gates, checked against the picked request
+            // *before* it leaves the queue: commitment headroom for its
+            // full expected footprint, and free frames for its first
+            // prefill chunk. Either shortfall blocks admission exactly
+            // like a missing slot (head-of-line; retirements and
+            // eviction writebacks free capacity and re-trigger).
+            let mut first_frames: Vec<u32> = Vec::new();
+            let mut frames_free_at = 0u64;
+            if paging {
+                let spec = &self.queue[qi];
+                let need_total = self.mapping.kv.frames_for(spec.n_tokens) as u64;
+                if self.committed_frames + need_total > self.frame_budget() {
+                    break;
+                }
+                let first =
+                    prefill::chunk_at(0, spec.prompt_tokens, self.cfg.sched.prefill_chunk)
+                        .expect("prompt_tokens >= 1 is validated at submit");
+                let need_now = self.mapping.kv.frames_for(first.ltoken_end());
+                let Some((frames, free_at)) = self.pick_free_frames(need_now) else {
+                    break;
+                };
+                first_frames = frames;
+                frames_free_at = free_at;
+            }
             let spec = self.queue.remove(qi).expect("index checked in range");
-            let admitted = spec.arrival_cycle.max(self.slot_free_at[slot]);
+            // Under paging the admission stamp tracks the *frames*'
+            // availability — the virtual slot is bookkeeping, not
+            // capacity. With one full-context frame per stream the
+            // frame pick mirrors the slot pick and the stamps are
+            // identical (the cycle-equivalence contract).
+            let admitted = if paging {
+                spec.arrival_cycle.max(frames_free_at)
+            } else {
+                spec.arrival_cycle.max(self.slot_free_at[slot])
+            };
             let wait = admitted - spec.arrival_cycle;
             let est = if self.admission.needs_estimate() {
-                self.first_token_estimate(spec.prompt_tokens)?
+                let est = self.first_token_estimate(spec.prompt_tokens)?;
+                if self.cfg.sched.batch_decode {
+                    // Batch-aware estimate: the uncontended replay
+                    // charges full per-step sweep cost, but with fused
+                    // decode the weight sweep is shared by every batch
+                    // member, so the engine's effective per-stream cost
+                    // shrinks by the observed mean sweep occupancy.
+                    // Without this, SLO admission over-sheds under
+                    // `batch_decode = on` — it prices contention the
+                    // fusion machinery removes. Occupancy 0 (nothing
+                    // fused yet) clamps to 1: the raw estimate.
+                    let occ = self.stats.mean_decode_batch().max(1.0);
+                    (est as f64 / occ).ceil() as u64
+                } else {
+                    est
+                }
             } else {
                 0
             };
@@ -626,6 +1080,11 @@ impl MultiSim {
                     .expect("prompt_tokens >= 1 is validated at submit");
                     let tpl = self.cache.get(&self.model, &self.cfg, first.regime_pos())?;
                     self.free_slots.swap_remove(i);
+                    if paging {
+                        self.take_frames(&first_frames);
+                        self.committed_frames +=
+                            self.mapping.kv.frames_for(spec.n_tokens) as u64;
+                    }
                     self.active.push(Stream {
                         id: spec.id,
                         tpl,
@@ -644,6 +1103,7 @@ impl MultiSim {
                         token_finishes: Vec::new(),
                         instructions: 0,
                         attributed: 0,
+                        pages: first_frames,
                     });
                     let in_use = (self.n_slots - self.free_slots.len()) as u64;
                     self.stats.peak_slots_in_use = self.stats.peak_slots_in_use.max(in_use);
@@ -845,10 +1305,17 @@ impl MultiSim {
                 (lead.pos, lead.slot)
             };
             // Shareable nodes are ltoken/slot-invariant within the
-            // regime (`shareable_nodes_are_exactly_the_...` test), so
-            // the lead member's patch stands in for everyone.
+            // regime (`shareable_nodes_are_exactly_the_...` test) and
+            // never page-indirected — `shareable_across_streams`
+            // excludes every KV-addressed node, so a fused issue never
+            // needs a page table (`pages = None`) and stays correct
+            // under `kv_paging`. The lead member's patch stands in for
+            // everyone (slot 0 under paging: virtual slot ids can
+            // exceed the mapping's frame count, and the patch value is
+            // unused on non-KV nodes anyway).
             let ltoken = pos + 1;
-            let instr = tpl.instr_at(node, ltoken, slot);
+            let patch_slot = if self.cfg.sched.kv_paging { 0 } else { slot };
+            let instr = tpl.instr_at(node, ltoken, patch_slot);
             let out = self.res.issue(
                 &ctx,
                 &mut self.plan_scratch,
@@ -860,6 +1327,7 @@ impl MultiSim {
                 pos,
                 ltoken,
                 members.len() as u64,
+                None,
             );
             self.stats.add_class(out.class, out.finish.saturating_sub(out.ready));
             self.stats.instructions += 1;
@@ -876,17 +1344,21 @@ impl MultiSim {
             }
         } else {
             // Per-stream node (K/V writes, KV-cache attention reads,
-            // position-scaled ASIC ops): KV slots are disjoint, so
-            // each member issues at its own position and slot.
+            // position-scaled ASIC ops): KV contexts are disjoint, so
+            // each member issues at its own position and slot — or,
+            // under paging, through its own page table.
             for &mi in &members {
                 let (pos, slot, step_start) = {
                     let s = &self.active[mi];
                     (s.pos, s.slot, s.step_start)
                 };
                 let ltoken = pos + 1;
-                let instr = tpl.instr_at(node, ltoken, slot);
+                let patch_slot = if self.cfg.sched.kv_paging { 0 } else { slot };
+                let instr = tpl.instr_at(node, ltoken, patch_slot);
                 let out = {
                     let s = &self.active[mi];
+                    let pages =
+                        if self.cfg.sched.kv_paging { Some(s.pages.as_slice()) } else { None };
                     self.res.issue(
                         &ctx,
                         &mut self.plan_scratch,
@@ -898,6 +1370,7 @@ impl MultiSim {
                         pos,
                         ltoken,
                         1,
+                        pages,
                     )
                 };
                 self.stats.add_class(out.class, out.finish.saturating_sub(out.ready));
@@ -940,27 +1413,14 @@ impl MultiSim {
         // issue solo next iteration, the continuous-batching leave
         // point.
         self.batches.remove(bi);
-        for &slot in &survivor_slots {
-            let mi = self.stream_index_by_slot(slot);
-            let pos = self.active[mi].pos;
-            // Decode steps are always single-position; `cache.get`
-            // re-keys the template when the stream crosses a regime
-            // boundary.
-            let tpl = self.cache.get(&self.model, &self.cfg, pos)?;
-            let s = &mut self.active[mi];
-            s.tpl = tpl;
-            s.step_positions = 1;
-            s.step_start = s.step_finish;
-            s.next = 0;
-            s.finish.clear();
-            s.first_ready.clear();
-        }
+        // Retire finished members before re-arming survivors: their
+        // freed frames are then available to a survivor's page-table
+        // growth (and a finished stream is never an eviction victim).
         let mut first_outcome = None;
         for &slot in &finished_slots {
             let si = self.stream_index_by_slot(slot);
             let s = self.active.remove(si);
-            self.slot_free_at[s.slot] = s.step_finish;
-            self.free_slots.push(s.slot);
+            self.release_stream_kv(&s);
             self.now = self.now.max(s.step_finish);
             let result = StreamResult {
                 id: s.id,
@@ -981,6 +1441,27 @@ impl MultiSim {
             } else {
                 self.completions.push_back(result);
             }
+        }
+        for &slot in &survivor_slots {
+            // A survivor can be preempted by an earlier survivor's
+            // page-table growth in this very loop — it is already in
+            // the evicted queue, boundary state intact; skip it.
+            let Some(mi) = self.active.iter().position(|s| s.slot == slot) else {
+                continue;
+            };
+            let pos = self.active[mi].pos;
+            // Decode steps are always single-position; `cache.get`
+            // re-keys the template when the stream crosses a regime
+            // boundary.
+            let tpl = self.cache.get(&self.model, &self.cfg, pos)?;
+            let s = &mut self.active[mi];
+            s.tpl = tpl;
+            s.step_positions = 1;
+            s.step_start = s.step_finish;
+            s.next = 0;
+            s.finish.clear();
+            s.first_ready.clear();
+            self.grow_stream_frames(mi)?;
         }
         if !finished_slots.is_empty() {
             self.release_arrivals();
@@ -1007,6 +1488,13 @@ impl MultiSim {
             return Ok(Some(r));
         }
         while self.active.is_empty() {
+            // An idle engine has every slot and frame free, so the
+            // `admit` above restored any evicted stream — none can be
+            // stranded here.
+            debug_assert!(
+                self.evicted.is_empty(),
+                "evicted streams must re-admit once the engine drains"
+            );
             // Nothing running and nothing arrived (an arrived request
             // would have been admitted or rejected — all slots are
             // free). Warp to the next arrival or report the drain
@@ -1082,11 +1570,11 @@ impl MultiSim {
             let best_ready = self.cand[ci].ready;
 
             // Event-driven release: a pending request whose arrival
-            // precedes the next issue gets admitted first when a KV
-            // slot is free — it may well be the better pick. (With no
-            // free slot a release changes nothing until a retirement,
-            // which releases anyway.)
-            if !self.free_slots.is_empty() {
+            // precedes the next issue gets admitted first when KV
+            // capacity is free — it may well be the better pick. (With
+            // no admission headroom a release changes nothing until a
+            // retirement, which releases anyway.)
+            if self.has_admission_headroom() {
                 if let Some(arrival) = self.next_arrival() {
                     if arrival <= best_ready {
                         self.now = self.now.max(arrival);
@@ -1124,7 +1612,11 @@ impl MultiSim {
                 (s.pos, s.step_start, s.next, s.slot, s.step_positions)
             };
             let ltoken = pos + step_positions;
-            let instr = tpl.instr_at(next, ltoken, slot);
+            // Under paging the KV addressing comes from the stream's
+            // page table, not the slot patch (slot ids are virtual and
+            // the patched rows are unused on the paged path).
+            let patch_slot = if self.cfg.sched.kv_paging { 0 } else { slot };
+            let instr = tpl.instr_at(next, ltoken, patch_slot);
             let ctx = IssueCtx {
                 cfg: &self.cfg,
                 t: &self.t,
@@ -1133,6 +1625,8 @@ impl MultiSim {
             };
             let out = {
                 let s = &self.active[si];
+                let pages =
+                    if self.cfg.sched.kv_paging { Some(s.pages.as_slice()) } else { None };
                 self.res.issue(
                     &ctx,
                     &mut self.plan_scratch,
@@ -1144,6 +1638,7 @@ impl MultiSim {
                     pos,
                     ltoken,
                     step_positions,
+                    pages,
                 )
             };
 
@@ -1205,16 +1700,19 @@ impl MultiSim {
                 s.next = 0;
                 s.finish.clear();
                 s.first_ready.clear();
+                // Paged: the new step may cross a page boundary —
+                // extend the table (allocating, faulting and evicting
+                // as needed) before the step can issue.
+                self.grow_stream_frames(si)?;
                 continue;
             }
 
-            // Retire the stream: recycle its KV slot (free as of the
-            // stream's own last cycle, not the global clock) and
+            // Retire the stream: recycle its KV capacity (free as of
+            // the stream's own last cycle, not the global clock) and
             // backfill from the queue. The stats row is derived from
             // the completion record so the two views cannot diverge.
             let s = self.active.remove(si);
-            self.slot_free_at[s.slot] = s.step_finish;
-            self.free_slots.push(s.slot);
+            self.release_stream_kv(&s);
             self.now = self.now.max(s.step_finish);
             let result = StreamResult {
                 id: s.id,
@@ -1251,6 +1749,7 @@ impl MultiSim {
     pub fn finalize_stats(&mut self) -> &SimStats {
         self.stats.cycles = self.clock;
         self.stats.kv_slots = self.n_slots as u64;
+        self.stats.kv_pages = self.n_frames as u64;
         self.res.fold_stats(&mut self.stats);
         self.stats.program_cache_hits = self.cache.hits;
         self.stats.program_cache_misses = self.cache.misses;
@@ -1260,6 +1759,43 @@ impl MultiSim {
     /// The compiled-program cache (hit/miss counters, entry count).
     pub fn program_cache(&self) -> &ProgramCache {
         &self.cache
+    }
+
+    /// Test support: the page-table bijection. Every physical frame is
+    /// either free exactly once or owned by exactly one active stream's
+    /// table (no sharing, no double-free — across admissions,
+    /// preemptions and re-admissions), evicted streams hold no frames,
+    /// and the committed-frame ledger equals the active population's
+    /// expected footprints.
+    #[cfg(test)]
+    fn assert_frame_invariants(&self) {
+        if !self.cfg.sched.kv_paging {
+            assert!(self.free_frames.is_empty(), "slot mode has no frame pool");
+            assert!(self.active.iter().all(|s| s.pages.is_empty()));
+            return;
+        }
+        let mut owners = vec![0u32; self.n_frames];
+        for &f in &self.free_frames {
+            owners[f as usize] += 1;
+        }
+        for s in &self.active {
+            assert!(
+                s.pages.len() >= 1 && s.pages.len() <= self.mapping.kv.frames_for(s.end_pos),
+                "stream {} holds {} frames outside [1, {}]",
+                s.id,
+                s.pages.len(),
+                self.mapping.kv.frames_for(s.end_pos)
+            );
+            for &f in &s.pages {
+                owners[f as usize] += 1;
+            }
+        }
+        for (f, &n) in owners.iter().enumerate() {
+            assert_eq!(n, 1, "frame {f} referenced {n} times (bijection violated)");
+        }
+        let committed: u64 =
+            self.active.iter().map(|s| self.mapping.kv.frames_for(s.end_pos) as u64).sum();
+        assert_eq!(committed, self.committed_frames, "committed-frame ledger drifted");
     }
 }
 
@@ -2187,5 +2723,270 @@ mod tests {
         ms.finalize_stats();
         assert_eq!(ms.stats.idle_cycles, 0);
         assert_eq!(ms.stats.busy_cycles(), ms.stats.cycles);
+    }
+
+    /// Drain a paged engine one outcome at a time, checking the
+    /// page-table bijection (no shared frame, no double-free) before
+    /// every step.
+    fn run_all_with_invariants(ms: &mut MultiSim) -> Vec<StreamOutcome> {
+        let mut out = Vec::new();
+        loop {
+            ms.assert_frame_invariants();
+            match ms.step().unwrap() {
+                Some(o) => out.push(o),
+                None => break,
+            }
+        }
+        ms.assert_frame_invariants();
+        out
+    }
+
+    /// Tentpole equivalence: paging with one full-context page per
+    /// stream (`kv_page_tokens = max_seq`) and no oversubscription is
+    /// cycle-identical to the slot engine on arbitrary arrival traces —
+    /// same admission stamps, same per-token finishes, same final
+    /// clock. (Slot ids are excluded: paged slots are virtual.)
+    #[test]
+    fn paged_full_context_is_cycle_identical_over_random_traces() {
+        use crate::util::prop::check;
+        check("paged full-context equivalence", 10, |rng| {
+            let k = 1 + rng.gen_range(3) as usize;
+            let n_req = 1 + rng.gen_range(5);
+            let chunk = 1 + rng.gen_range(8);
+            let mut specs = Vec::new();
+            for id in 0..n_req {
+                let n_tokens = 1 + rng.gen_range(24);
+                specs.push(StreamSpec {
+                    id,
+                    n_tokens,
+                    prompt_tokens: 1 + rng.gen_range(n_tokens),
+                    arrival_cycle: rng.gen_range(30_000),
+                });
+            }
+            let run = |paged: bool| -> Result<(u64, Vec<(u64, u64, u64, Vec<u64>)>), String> {
+                let m = by_name("gpt-nano").unwrap();
+                let mut cfg = HwConfig::paper_baseline().with_max_streams(k);
+                cfg.sched.prefill_chunk = chunk;
+                if paged {
+                    cfg.sched.kv_paging = true;
+                    cfg.sched.kv_page_tokens = m.max_seq as u64;
+                }
+                let mut ms = MultiSim::new(&m, &cfg).map_err(|e| e.to_string())?;
+                for s in &specs {
+                    ms.submit(*s).map_err(|e| e.to_string())?;
+                }
+                let outcomes = if paged {
+                    run_all_with_invariants(&mut ms)
+                } else {
+                    ms.run_all().map_err(|e| e.to_string())?
+                };
+                let mut rows: Vec<(u64, u64, u64, Vec<u64>)> = outcomes
+                    .into_iter()
+                    .filter_map(StreamOutcome::into_completed)
+                    .map(|r| (r.id, r.admitted_cycle, r.finish_cycle, r.token_finishes))
+                    .collect();
+                rows.sort_by_key(|r| r.0);
+                Ok((ms.clock(), rows))
+            };
+            let slot = run(false)?;
+            let paged = run(true)?;
+            if slot != paged {
+                return Err("paged full-context run diverged from slot run".into());
+            }
+            Ok(())
+        });
+    }
+
+    /// The same full-context equivalence holds with fused decode
+    /// batching on: shareable nodes never touch the page table and
+    /// per-member nodes resolve a single full-context page.
+    #[test]
+    fn paged_full_context_batched_is_cycle_identical() {
+        let m = by_name("gpt-nano").unwrap();
+        let run = |paged: bool| {
+            let mut cfg =
+                HwConfig::paper_baseline().with_max_streams(3).with_batch_decode(true);
+            if paged {
+                cfg.sched.kv_paging = true;
+                cfg.sched.kv_page_tokens = m.max_seq as u64;
+            }
+            let mut ms = MultiSim::new(&m, &cfg).unwrap();
+            for id in 0..3 {
+                ms.submit(StreamSpec::with_prompt(id, 4, 12)).unwrap();
+            }
+            let mut rows: Vec<(u64, u64, u64, Vec<u64>)> = completed(ms.run_all().unwrap())
+                .into_iter()
+                .map(|r| (r.id, r.admitted_cycle, r.finish_cycle, r.token_finishes))
+                .collect();
+            rows.sort_by_key(|r| r.0);
+            ms.finalize_stats();
+            (ms.clock(), ms.stats.fused_sweeps, rows)
+        };
+        assert_eq!(run(false), run(true));
+    }
+
+    /// Multi-page tables without oversubscription: contexts span page
+    /// boundaries and the table grows on demand, but `kv_oversub = 1`
+    /// guarantees the free list never runs dry — zero faults, zero
+    /// preemptions, exact completion.
+    #[test]
+    fn multi_page_tables_grow_without_faults() {
+        let m = by_name("gpt-mini").unwrap(); // max_seq 256 -> 2 pages at P=128
+        let mut cfg = HwConfig::paper_baseline().with_max_streams(2);
+        cfg.sched.kv_paging = true;
+        cfg.sched.kv_page_tokens = 128;
+        let mut ms = MultiSim::new(&m, &cfg).unwrap();
+        assert_eq!(ms.kv_pages(), 4, "2 streams x 2 frames per 256-token context");
+        for id in 0..2 {
+            ms.submit(StreamSpec::with_prompt(id, 16, 184)).unwrap(); // 200 > 128 tokens
+        }
+        let results = completed(run_all_with_invariants(&mut ms));
+        ms.finalize_stats();
+        assert_eq!(results.len(), 2);
+        for r in &results {
+            assert_eq!(r.tokens, 200);
+            assert!(r.token_finishes.windows(2).all(|w| w[0] <= w[1]));
+        }
+        let s = &ms.stats;
+        assert_eq!(s.kv_pages, 4);
+        assert_eq!(s.peak_pages_in_use, 4, "both streams crossed the page boundary");
+        assert_eq!((s.page_faults, s.preemptions, s.evicted_tokens), (0, 0, 0));
+    }
+
+    /// A paged engine whose frame pool was degraded below the
+    /// worst-case demand (the whole point of paging), oversubscribed
+    /// 2x. Built by squeezing DRAM capacity until the mapping grants
+    /// fewer frames than `max_streams` full contexts need.
+    fn degraded_paged_sim(oversub: f64, batch: bool) -> MultiSim {
+        let m = by_name("gpt-mini").unwrap();
+        for cap in [0.03, 0.04, 0.05, 0.06, 0.08, 0.1, 0.15] {
+            let mut cfg = HwConfig::paper_baseline().with_max_streams(3);
+            cfg.gddr6.capacity_gbit = cap;
+            cfg.sched.kv_paging = true;
+            cfg.sched.kv_page_tokens = 128;
+            cfg.sched.kv_oversub = oversub;
+            cfg.sched.batch_decode = batch;
+            if let Ok(ms) = MultiSim::new(&m, &cfg) {
+                if ms.kv_pages() >= 2 && ms.kv_pages() < 6 {
+                    return ms;
+                }
+            }
+        }
+        panic!("no probed capacity produced a degraded paged pool");
+    }
+
+    /// Satellite: oversubscription faults, preempts a victim (possibly
+    /// mid-step — its partial work is discarded), writes its context
+    /// back, re-admits it with original stamps, and every stream still
+    /// completes exactly — with the frame bijection intact at every
+    /// step and the preemption counters reconciling.
+    #[test]
+    fn oversubscribed_pool_preempts_and_every_stream_completes() {
+        let mut ms = degraded_paged_sim(2.0, false);
+        let n_frames = ms.kv_pages() as u64;
+        for id in 0..3 {
+            // 256 tokens = 2 frames each: eventual demand 6 frames
+            // against a pool of < 6 — growth must fault.
+            ms.submit(StreamSpec::with_prompt(id, 32, 224)).unwrap();
+        }
+        let results = completed(run_all_with_invariants(&mut ms));
+        ms.finalize_stats();
+        assert_eq!(results.len(), 3, "every admitted stream eventually completes");
+        for r in &results {
+            assert_eq!(r.tokens, 256);
+            assert_eq!(r.token_finishes.len(), 256);
+            assert!(r.admitted_cycle >= r.arrival_cycle);
+            assert!(r.token_finishes.windows(2).all(|w| w[0] <= w[1]));
+            let decode = &r.token_finishes[r.prompt_tokens as usize - 1..];
+            assert!(decode.windows(2).all(|w| w[0] < w[1]), "decode finishes strict");
+        }
+        let s = &ms.stats;
+        assert!(s.page_faults >= 1, "an oversubscribed pool must fault");
+        assert!(s.preemptions >= 1, "faults resolve by preemption");
+        assert!(s.evicted_tokens >= 1, "victims had live context to write back");
+        assert_eq!(s.streams.len(), 3);
+        assert_eq!(s.rejected, 0);
+        assert!(s.peak_pages_in_use <= n_frames);
+        assert_eq!(s.kv_pages, n_frames);
+        assert_eq!(ms.evicted_streams(), 0, "no stream left swapped out");
+        assert_eq!(ms.free_kv_pages() as u64, n_frames, "all frames returned");
+    }
+
+    /// The preemption machinery also holds together under fused decode
+    /// batching: victims that are mid-sweep force a dissolve, survivors
+    /// re-arm, and everything still completes with the bijection intact.
+    #[test]
+    fn oversubscribed_pool_with_batching_completes() {
+        let mut ms = degraded_paged_sim(2.0, true);
+        for id in 0..3 {
+            ms.submit(StreamSpec::with_prompt(id, 8, 248)).unwrap();
+        }
+        let results = completed(run_all_with_invariants(&mut ms));
+        ms.finalize_stats();
+        assert_eq!(results.len(), 3);
+        for r in &results {
+            assert_eq!(r.tokens, 256);
+            assert!(r.token_finishes.windows(2).all(|w| w[0] <= w[1]));
+        }
+        assert!(ms.stats.preemptions >= 1, "oversubscribed batched run must preempt");
+        assert_eq!(ms.evicted_streams(), 0);
+    }
+
+    /// Re-admission preserves the victim's identity: original arrival
+    /// and admission stamps survive the eviction round-trip (queueing
+    /// is measured once, at first admission), and the pre-eviction
+    /// token finishes are a prefix of the final history.
+    #[test]
+    fn eviction_round_trip_preserves_stamps() {
+        let mut ms = degraded_paged_sim(2.0, false);
+        ms.submit(StreamSpec::with_prompt(0, 32, 224)).unwrap();
+        ms.submit(StreamSpec { id: 1, n_tokens: 256, prompt_tokens: 32, arrival_cycle: 5 })
+            .unwrap();
+        ms.submit(StreamSpec { id: 2, n_tokens: 256, prompt_tokens: 32, arrival_cycle: 9 })
+            .unwrap();
+        let mut results = completed(run_all_with_invariants(&mut ms));
+        ms.finalize_stats();
+        assert!(ms.stats.preemptions >= 1);
+        results.sort_by_key(|r| r.id);
+        for (r, arrival) in results.iter().zip([0u64, 5, 9]) {
+            assert_eq!(r.arrival_cycle, arrival, "arrival stamp survives eviction");
+            assert!(r.admitted_cycle >= arrival);
+            assert_eq!(r.tokens, 256);
+            // The stats row is derived from the same record, so the
+            // queue/service split reconciles even across evictions.
+            assert_eq!(r.queue_cycles() + r.service_cycles(), r.e2e_cycles());
+        }
+    }
+
+    /// Satellite: the SLO admission estimate amortizes over the
+    /// observed decode-batch occupancy — a request the raw estimate
+    /// would shed is admitted once fusion demonstrably halves the
+    /// per-stream sweep cost. Without batching the raw estimate stands.
+    #[test]
+    fn slo_estimate_amortizes_over_decode_batch_occupancy() {
+        let m = by_name("gpt-nano").unwrap();
+        let raw = {
+            let mut probe = msim("gpt-nano", 2);
+            probe.first_token_estimate(1).unwrap()
+        };
+        assert!(raw > 2);
+        let budget = raw / 2 + 1; // rejects the raw estimate, admits raw/2
+        let run = |batch: bool| {
+            let mut cfg = HwConfig::paper_baseline().with_max_streams(2);
+            cfg.sched.set_policy_str(&format!("slo:{budget}")).unwrap();
+            cfg.sched.batch_decode = batch;
+            let mut ms = MultiSim::new(&m, &cfg).unwrap();
+            if batch {
+                // Seed an observed mean sweep occupancy of 2.0, as a
+                // warm serving run would have.
+                ms.stats.fused_sweeps = 1;
+                ms.stats.fused_streams = 2;
+            }
+            ms.submit(StreamSpec::new(0, 4)).unwrap();
+            let outcomes = ms.run_all().unwrap();
+            outcomes[0].as_rejected().is_some()
+        };
+        assert!(run(false), "raw estimate {raw} must bust budget {budget}");
+        assert!(!run(true), "amortized estimate must fit budget {budget}");
     }
 }

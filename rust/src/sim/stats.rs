@@ -145,6 +145,23 @@ pub struct SimStats {
     /// Decode steps that ran unfused (solo) — either batching is off,
     /// or no same-regime partner was at its step boundary.
     pub solo_decode_steps: u64,
+    /// Paged KV (`sched.kv_paging`): page-frame pool size the mapping
+    /// reserved (`kv_slots` counts frames in paged mode; this mirrors
+    /// it under the paging name). 0 when paging is off.
+    pub kv_pages: u64,
+    /// Most page frames ever allocated at once across all streams.
+    pub peak_pages_in_use: u64,
+    /// On-demand frame allocations that found the free list empty and
+    /// had to preempt to make room. 0 whenever `kv_oversub` is 1.0.
+    pub page_faults: u64,
+    /// Streams evicted to resolve page faults (one stream may be
+    /// preempted, re-admitted, and preempted again — each eviction
+    /// counts).
+    pub preemptions: u64,
+    /// KV token positions written back on eviction, summed over
+    /// preemptions (the modeled writeback/restore traffic is
+    /// proportional to this).
+    pub evicted_tokens: u64,
     /// Per-request-stream attribution (one entry per retired stream;
     /// empty for plain single-program runs).
     pub streams: Vec<StreamStats>,

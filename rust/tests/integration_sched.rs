@@ -718,6 +718,141 @@ fn batched_poisson_trace_conserves_tokens_and_is_deterministic() {
     assert_eq!(run(true).0, sig_on, "identical seed, identical cycle-exact schedule");
 }
 
+/// Tentpole equivalence pin (paged KV): paging with one full-context
+/// page per stream (`kv_page_tokens = max_seq`) and no
+/// oversubscription must be cycle-identical to the slot engine on a
+/// prompted open-loop trace that crosses the scores@V regime boundary
+/// — admission stamps, per-token finishes and the final clock all
+/// match (slot ids are excluded: paged slots are virtual).
+#[test]
+fn paged_full_context_matches_slot_engine_on_prompted_trace() {
+    let m = by_name("gpt2-small").unwrap();
+    let reqs: [(u64, u64, u64); 5] =
+        [(0, 8, 90), (1, 64, 30), (2, 1, 12), (3, 32, 64), (4, 8, 8)];
+    let run = |paged: bool| {
+        let mut cfg = HwConfig::paper_baseline().with_max_streams(3);
+        if paged {
+            cfg.sched.kv_paging = true;
+            cfg.sched.kv_page_tokens = m.max_seq as u64; // 1 frame per context
+        }
+        let mut ms = MultiSim::new(&m, &cfg).unwrap();
+        for (i, &(arrival, prompt, gen)) in reqs.iter().enumerate() {
+            let mut s = StreamSpec::with_prompt(i as u64, prompt, gen);
+            s.arrival_cycle = arrival * 50_000;
+            ms.submit(s).unwrap();
+        }
+        let mut rows: Vec<(u64, u64, u64, Vec<u64>)> = completed(ms.run_all().unwrap())
+            .into_iter()
+            .map(|r| (r.id, r.admitted_cycle, r.finish_cycle, r.token_finishes))
+            .collect();
+        rows.sort_by_key(|r| r.0);
+        ms.finalize_stats();
+        (ms.clock(), ms.stats.instructions, rows)
+    };
+    let slot = run(false);
+    let paged = run(true);
+    assert_eq!(slot, paged, "paged full-context engine diverged from slot engine");
+}
+
+/// Tentpole acceptance: on gpt2-xl at the Table I baseline the slot
+/// engine grants only 2 whole-context slots, but the paged engine's
+/// frame-granular grant sustains >= 3 concurrent short-prompt streams
+/// with zero queueing — the headline capacity win of page-table
+/// indirection.
+#[test]
+fn paged_gpt2_xl_sustains_three_short_streams_at_baseline() {
+    let m = by_name("gpt2-xl").unwrap();
+    let run = |paged: bool| {
+        let mut cfg = HwConfig::paper_baseline().with_max_streams(4);
+        if paged {
+            cfg.sched.kv_paging = true;
+            cfg.sched.kv_page_tokens = 128;
+        }
+        let mut ms = MultiSim::new(&m, &cfg).unwrap();
+        for id in 0..3 {
+            ms.submit(StreamSpec::with_prompt(id, 8, 8)).unwrap();
+        }
+        let results = completed(ms.run_all().unwrap());
+        assert_eq!(results.len(), 3);
+        ms.finalize_stats();
+        (results, ms.stats.clone())
+    };
+    let (slot_results, slot_stats) = run(false);
+    assert!(
+        slot_stats.kv_slots < 3,
+        "baseline gpt2-xl should grant < 3 whole-context slots, got {}",
+        slot_stats.kv_slots
+    );
+    assert!(slot_results.iter().any(|r| r.queue_cycles() > 0), "third stream must queue");
+
+    let (paged_results, paged_stats) = run(true);
+    assert!(paged_stats.kv_pages >= 3, "frame grant {} too small", paged_stats.kv_pages);
+    assert_eq!(paged_stats.peak_slots_in_use, 3, "all three streams co-resident");
+    for r in &paged_results {
+        assert_eq!(r.queue_cycles(), 0, "stream {} queued under paging", r.id);
+        assert_eq!(r.admitted_cycle, 0);
+        assert_eq!(r.tokens, 16);
+    }
+    assert_eq!((paged_stats.page_faults, paged_stats.preemptions), (0, 0));
+    // A 16-token stream never outgrows its first 128-token frame, and
+    // the slot engine serializes the third stream: paging finishes first.
+    let mk = |rs: &[StreamResult]| rs.iter().map(|r| r.finish_cycle).max().unwrap();
+    assert!(mk(&paged_results) < mk(&slot_results));
+    // Full-length requests exceed the degraded frame pool and are
+    // rejected at submit (eviction could never make room for them).
+    let mut cfg = HwConfig::paper_baseline().with_max_streams(4);
+    cfg.sched.kv_paging = true;
+    cfg.sched.kv_page_tokens = 128;
+    let mut ms = MultiSim::new(&m, &cfg).unwrap();
+    let err = ms.submit(StreamSpec::new(9, m.max_seq as u64)).unwrap_err();
+    assert!(err.to_string().contains("frame"), "{err}");
+}
+
+/// Oversubscribed paged serving end to end: an over-committed frame
+/// pool faults, preempts and re-admits, yet the counters reconcile —
+/// submitted = completed + rejected, every stream delivers its exact
+/// token count, no stream is left swapped out, and every frame returns
+/// to the free list.
+#[test]
+fn oversubscribed_paging_reconciles_counters_end_to_end() {
+    let m = by_name("gpt2-small").unwrap();
+    let mut cfg = HwConfig::paper_baseline().with_max_streams(4);
+    cfg.gddr6.capacity_gbit = 0.34; // weights + ~2 whole contexts of rows
+    cfg.sched.kv_paging = true;
+    cfg.sched.kv_page_tokens = 128;
+    cfg.sched.kv_oversub = 2.0;
+    let mut ms = MultiSim::new(&m, &cfg).unwrap();
+    let pool = ms.kv_pages() as u64;
+    // Each stream eventually needs 6 frames (768 tokens at P=128); four
+    // of them over-commit the ~16-frame pool, forcing faults.
+    assert!(pool < 24, "pool {pool} too large to oversubscribe");
+    for id in 0..4 {
+        ms.submit(StreamSpec::with_prompt(id, 704, 64)).unwrap();
+    }
+    let results = completed(ms.run_all().unwrap());
+    ms.finalize_stats();
+    let s = &ms.stats;
+    assert_eq!(results.len(), 4, "every admitted stream eventually completes");
+    for r in &results {
+        assert_eq!(r.tokens, 768);
+        assert_eq!(r.token_finishes.len(), 768);
+        assert!(r.token_finishes.windows(2).all(|w| w[0] <= w[1]));
+    }
+    // submitted = completed + rejected; nothing in flight, nothing
+    // swapped out, every frame back on the free list.
+    assert_eq!(s.streams.len() as u64 + s.rejected, 4);
+    assert_eq!(s.rejected, 0);
+    assert_eq!(ms.active_streams(), 0);
+    assert_eq!(ms.queued_streams(), 0);
+    assert_eq!(ms.evicted_streams(), 0);
+    assert_eq!(ms.free_kv_pages() as u64, pool);
+    assert!(s.page_faults >= 1, "over-committed pool must fault");
+    assert!(s.preemptions >= 1);
+    assert!(s.evicted_tokens >= 1);
+    assert!(s.peak_pages_in_use <= pool);
+    assert_eq!(s.kv_pages, pool);
+}
+
 /// With the default `fcfs` policy the engine never rejects and the
 /// stats stay rejection-free — the policy subsystem is invisible unless
 /// asked for (guards the cycle-identity contract from the stats side).
