@@ -6,11 +6,11 @@
 //! scheduling-policy sweep at K=4 (fcfs / srf / fair / slo).
 use pim_gpt::compiler::compile;
 use pim_gpt::config::HwConfig;
-use pim_gpt::mapping::ModelMapping;
+use pim_gpt::mapping::{ModelMapping, PartitionStrategy};
 use pim_gpt::model::gpt::by_name;
 use pim_gpt::model::DecodeGraph;
 use pim_gpt::sim::arrivals::{self, ArrivalSpec};
-use pim_gpt::sim::{MultiSim, Simulator, StreamSpec};
+use pim_gpt::sim::{FleetSim, MultiSim, Simulator, StreamSpec};
 use pim_gpt::util::bench::{bench, black_box};
 
 fn main() {
@@ -387,6 +387,72 @@ fn main() {
                     ms.stats.peak_slots_in_use,
                     ms.stats.page_faults,
                     ms.stats.preemptions,
+                );
+            }
+        }
+    }
+
+    // Multi-device fleet sweep (N in {1, 2, 4} x both partition
+    // strategies, K=4 Poisson load): the same gpt2-small request set
+    // served across partitioned packages. The bench timings carry the
+    // host cost of the step-cost composition (compile + scratch walk,
+    // memoized per context); the printed lines carry the simulated
+    // makespan, the interconnect cycles the strategy pays, and the
+    // per-device busy split.
+    {
+        let freq_hz = cfg.gddr6.freq_ghz * 1e9;
+        let n_req = 8usize;
+        let base = HwConfig::paper_baseline().with_max_streams(4);
+        let mut batch = MultiSim::new(&m, &base).unwrap();
+        for id in 0..n_req as u64 {
+            batch.submit(StreamSpec::new(id, 8)).unwrap();
+        }
+        batch.run_all().unwrap();
+        let rate_per_s = 1.5 * n_req as f64 * freq_hz / batch.clock() as f64;
+        let at =
+            arrivals::generate(&ArrivalSpec::Poisson { rate_per_s }, n_req, cfg.gddr6.freq_ghz, 7)
+                .unwrap();
+        println!("sim::fleet sweep gpt2-small K=4 ({n_req} reqs x 8 tokens, Poisson 1.5x):");
+        for devices in [1usize, 2, 4] {
+            for strategy in
+                [PartitionStrategy::LayerPipeline, PartitionStrategy::TensorParallel]
+            {
+                if devices == 1 && strategy == PartitionStrategy::TensorParallel {
+                    continue; // identical to the N=1 pipeline row
+                }
+                let fcfg = base.clone().with_devices(devices).with_partition(strategy);
+                let submit_all = |fleet: &mut FleetSim| {
+                    for (id, &a) in at.iter().enumerate() {
+                        let spec = StreamSpec {
+                            id: id as u64,
+                            n_tokens: 8,
+                            prompt_tokens: 1,
+                            arrival_cycle: a,
+                        };
+                        fleet.submit(spec).unwrap();
+                    }
+                };
+                let tag = if devices == 1 { "single".to_string() } else { strategy.to_string() };
+                bench(&format!("sim::fleet N={devices} {tag} gpt2-small K=4"), 1, 5, || {
+                    let mut fleet = FleetSim::new(&m, &fcfg).unwrap();
+                    submit_all(&mut fleet);
+                    black_box(fleet.run_all().unwrap());
+                });
+                let mut fleet = FleetSim::new(&m, &fcfg).unwrap();
+                submit_all(&mut fleet);
+                fleet.run_all().unwrap();
+                let clock = fleet.clock();
+                let s = fleet.finalize_stats();
+                let us = |c: u64| c as f64 / (freq_hz / 1e6);
+                let busy: Vec<String> =
+                    s.device_busy_cycles.iter().map(|b| format!("{:.1}", us(*b))).collect();
+                println!(
+                    "  N={devices} {tag:>14}: makespan {:.1} us, {:.0} tok/s, \
+                     link {:.1} us, device busy us [{}]",
+                    us(clock),
+                    s.tokens as f64 * freq_hz / clock as f64,
+                    us(s.link_transfer_cycles),
+                    busy.join(", "),
                 );
             }
         }

@@ -6,6 +6,7 @@
 //! overridden from a JSON file (`HwConfig::from_json`), giving the
 //! "real config system" of the launcher.
 
+use crate::mapping::PartitionStrategy;
 use crate::sim::arrivals::ArrivalSpec;
 use crate::sim::policy::PolicySpec;
 use crate::util::json::Json;
@@ -226,6 +227,36 @@ pub struct SchedulerConfig {
     /// resolved by preempting a victim. 1.0 (the default) can never
     /// fault. Only consulted when `kv_paging` is on.
     pub kv_oversub: f64,
+    /// Paged-KV eviction low watermark in [0, 1] (JSON key
+    /// `sched.kv_evict_watermark`). When > 0, a faulting stream keeps
+    /// evicting victims until `ceil(watermark * n_frames)` frames are
+    /// free (not just one), so eviction stops competing with admission
+    /// for the same frames on every subsequent fault — the swap-thrash
+    /// cliff smoother. 0.0 (the default) evicts exactly one victim per
+    /// fault, cycle-identical to the historical paged engine. Only
+    /// consulted when `kv_paging` is on.
+    pub kv_evict_watermark: f64,
+    /// Number of PIM-GPT devices (packages) the model is partitioned
+    /// across (JSON key `sched.devices`). 1 (the default) is the
+    /// paper's single 8-channel package, byte-identical to the
+    /// historical engine. N > 1 splits the model with the
+    /// `partition` strategy (`mapping::DevicePartition`) and runs the
+    /// fleet engine (`sim::fleet::FleetSim`) with modeled interconnect
+    /// hops (`link_gbit_s`, `link_hop_cycles`).
+    pub devices: usize,
+    /// Device-partitioning strategy (JSON string key `sched.partition`:
+    /// `layer_pipeline` or `tensor_parallel`). Only consulted when
+    /// `devices > 1`.
+    pub partition: PartitionStrategy,
+    /// Inter-device link bandwidth in Gbit/s (JSON key
+    /// `sched.link_gbit_s`). The default 256 Gbit/s = 32 B/cycle at
+    /// the 1 GHz Table I clock — one channel's interface bandwidth,
+    /// a conservative package-to-package serdes.
+    pub link_gbit_s: f64,
+    /// Fixed per-hop link latency in DRAM cycles (JSON key
+    /// `sched.link_hop_cycles`): serialization/protocol overhead paid
+    /// once per transfer on top of the byte cost.
+    pub link_hop_cycles: u64,
 }
 
 impl Default for SchedulerConfig {
@@ -241,6 +272,11 @@ impl Default for SchedulerConfig {
             kv_paging: false,
             kv_page_tokens: 128,
             kv_oversub: 1.0,
+            kv_evict_watermark: 0.0,
+            devices: 1,
+            partition: PartitionStrategy::LayerPipeline,
+            link_gbit_s: 256.0,
+            link_hop_cycles: 250,
         }
     }
 }
@@ -368,6 +404,43 @@ impl HwConfig {
         self
     }
 
+    /// Serving knob: paged-KV eviction low watermark (fraction of the
+    /// frame pool kept free by faulting streams; 0.0 = evict exactly
+    /// one victim per fault, the historical behavior).
+    pub fn with_kv_evict_watermark(mut self, watermark: f64) -> Self {
+        assert!((0.0..=1.0).contains(&watermark));
+        self.sched.kv_evict_watermark = watermark;
+        self
+    }
+
+    /// Fleet knob: number of PIM-GPT devices the model is partitioned
+    /// across (1 = the paper's single package).
+    pub fn with_devices(mut self, devices: usize) -> Self {
+        assert!(devices >= 1);
+        self.sched.devices = devices;
+        self
+    }
+
+    /// Fleet knob: device-partitioning strategy (only consulted when
+    /// `devices > 1`).
+    pub fn with_partition(mut self, strategy: PartitionStrategy) -> Self {
+        self.sched.partition = strategy;
+        self
+    }
+
+    /// Fleet knob: inter-device link bandwidth (Gbit/s).
+    pub fn with_link_gbit_s(mut self, gbit_s: f64) -> Self {
+        assert!(gbit_s > 0.0);
+        self.sched.link_gbit_s = gbit_s;
+        self
+    }
+
+    /// Fleet knob: fixed per-hop link latency (DRAM cycles).
+    pub fn with_link_hop_cycles(mut self, cycles: u64) -> Self {
+        self.sched.link_hop_cycles = cycles;
+        self
+    }
+
     /// Apply overrides from a JSON object, e.g.
     /// `{"asic": {"freq_ghz": 0.5}, "gddr6": {"channels": 16}}`.
     pub fn from_json(json: &Json) -> Result<Self> {
@@ -420,6 +493,11 @@ impl HwConfig {
                 self.sched
                     .set_policy_str(s)
                     .with_context(|| format!("sched.policy = '{s}'"))?;
+                Ok(())
+            }
+            ("sched", "partition") => {
+                self.sched.partition = PartitionStrategy::parse(s)
+                    .with_context(|| format!("sched.partition = '{s}'"))?;
                 Ok(())
             }
             _ => {
@@ -533,6 +611,41 @@ impl HwConfig {
                     bail!("sched.kv_oversub must be a finite ratio >= 1.0, got {n}");
                 }
                 self.sched.kv_oversub = n;
+            }
+            ("sched", "kv_evict_watermark") => {
+                // A fraction of the frame pool; 0.0 (off) evicts one
+                // victim per fault, 1.0 would drain every peer.
+                if !(0.0..=1.0).contains(&n) || !n.is_finite() {
+                    bail!("sched.kv_evict_watermark must be a fraction in [0, 1], got {n}");
+                }
+                self.sched.kv_evict_watermark = n;
+            }
+            ("sched", "devices") => {
+                // Same exactness contract as `sched.seed`; 0 devices
+                // cannot hold a model (1 = the single-package paper
+                // system).
+                if n < 1.0 || n.fract() != 0.0 || n >= 9_007_199_254_740_992.0 {
+                    bail!("sched.devices must be an integer in [1, 2^53), got {n}");
+                }
+                self.sched.devices = n as usize;
+            }
+            ("sched", "partition") => {
+                bail!("sched.partition must be a string: \"layer_pipeline\" or \"tensor_parallel\"")
+            }
+            ("sched", "link_gbit_s") => {
+                // A zero-bandwidth link would stall every hop forever.
+                if !(n > 0.0) || !n.is_finite() {
+                    bail!("sched.link_gbit_s must be a finite bandwidth > 0, got {n}");
+                }
+                self.sched.link_gbit_s = n;
+            }
+            ("sched", "link_hop_cycles") => {
+                // Same exactness contract as `sched.seed`; 0 (a free
+                // hop) is a legitimate idealized-interconnect setting.
+                if n < 0.0 || n.fract() != 0.0 || n >= 9_007_199_254_740_992.0 {
+                    bail!("sched.link_hop_cycles must be an integer in [0, 2^53), got {n}");
+                }
+                self.sched.link_hop_cycles = n as u64;
             }
             ("asic", "freq_ghz") => set!(self.asic.freq_ghz, f64),
             ("asic", "sram_kb") => set!(self.asic.sram_kb, usize),
@@ -767,6 +880,81 @@ mod tests {
         let j = Json::parse(r#"{"sched": {"kv_paging": "on"}}"#).unwrap();
         let err = HwConfig::from_json(&j).unwrap_err().to_string();
         assert!(err.contains("must be a number"), "{err}");
+    }
+
+    #[test]
+    fn sched_kv_evict_watermark_overrides() {
+        let base = HwConfig::paper_baseline();
+        assert_eq!(base.sched.kv_evict_watermark, 0.0, "off by default");
+        let j = Json::parse(r#"{"sched": {"kv_evict_watermark": 0.25}}"#).unwrap();
+        assert_eq!(HwConfig::from_json(&j).unwrap().sched.kv_evict_watermark, 0.25);
+        // The whole inclusive range parses (1.0 is also the probe value
+        // the string-key path uses on every numeric field).
+        let j = Json::parse(r#"{"sched": {"kv_evict_watermark": 1}}"#).unwrap();
+        assert_eq!(HwConfig::from_json(&j).unwrap().sched.kv_evict_watermark, 1.0);
+        let cfg = HwConfig::paper_baseline().with_kv_evict_watermark(0.5);
+        assert_eq!(cfg.sched.kv_evict_watermark, 0.5);
+        for bad in [
+            r#"{"sched": {"kv_evict_watermark": -0.1}}"#,
+            r#"{"sched": {"kv_evict_watermark": 1.1}}"#,
+            r#"{"sched": {"kv_evict_watermark": "0.5"}}"#,
+            r#"{"sched": {"kv_evict_watermrk": 0.5}}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(HwConfig::from_json(&j).is_err(), "accepted {bad}");
+        }
+    }
+
+    #[test]
+    fn sched_sharding_overrides() {
+        let base = HwConfig::paper_baseline();
+        assert_eq!(base.sched.devices, 1, "single package by default");
+        assert_eq!(base.sched.partition, PartitionStrategy::LayerPipeline);
+        assert_eq!(base.sched.link_gbit_s, 256.0);
+        assert_eq!(base.sched.link_hop_cycles, 250);
+        let src = r#"{"sched": {"devices": 4, "partition": "tensor_parallel",
+                      "link_gbit_s": 512, "link_hop_cycles": 100}}"#;
+        let cfg = HwConfig::from_json(&Json::parse(src).unwrap()).unwrap();
+        assert_eq!(cfg.sched.devices, 4);
+        assert_eq!(cfg.sched.partition, PartitionStrategy::TensorParallel);
+        assert_eq!(cfg.sched.link_gbit_s, 512.0);
+        assert_eq!(cfg.sched.link_hop_cycles, 100);
+        // A free hop (0 cycles) is a legitimate idealized interconnect.
+        let j = Json::parse(r#"{"sched": {"link_hop_cycles": 0}}"#).unwrap();
+        assert_eq!(HwConfig::from_json(&j).unwrap().sched.link_hop_cycles, 0);
+        let cfg = HwConfig::paper_baseline()
+            .with_devices(2)
+            .with_partition(PartitionStrategy::TensorParallel)
+            .with_link_gbit_s(128.0)
+            .with_link_hop_cycles(500);
+        assert_eq!(cfg.sched.devices, 2);
+        assert_eq!(cfg.sched.partition, PartitionStrategy::TensorParallel);
+        assert_eq!(cfg.sched.link_gbit_s, 128.0);
+        assert_eq!(cfg.sched.link_hop_cycles, 500);
+        // Typos, zero/fractional devices, bad strategies, non-positive
+        // bandwidth and mistyped values are rejected loudly.
+        for bad in [
+            r#"{"sched": {"devices": 0}}"#,
+            r#"{"sched": {"devices": -2}}"#,
+            r#"{"sched": {"devices": 1.5}}"#,
+            r#"{"sched": {"devices": "2"}}"#,
+            r#"{"sched": {"devicess": 2}}"#,
+            r#"{"sched": {"partition": "pipeline"}}"#,
+            r#"{"sched": {"partition": "tensor"}}"#,
+            r#"{"sched": {"link_gbit_s": 0}}"#,
+            r#"{"sched": {"link_gbit_s": -256}}"#,
+            r#"{"sched": {"link_gbit_s": "256"}}"#,
+            r#"{"sched": {"link_hop_cycles": -1}}"#,
+            r#"{"sched": {"link_hop_cycles": 2.5}}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(HwConfig::from_json(&j).is_err(), "accepted {bad}");
+        }
+        // A number where the strategy string is required names the
+        // expectation.
+        let j = Json::parse(r#"{"sched": {"partition": 2}}"#).unwrap();
+        let err = HwConfig::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("must be a string"), "{err}");
     }
 
     /// Satellite: typo'd or mistyped `sched` keys must be rejected with

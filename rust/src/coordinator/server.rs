@@ -167,6 +167,13 @@ pub struct ServerMetrics {
     /// Rejected requests count in `requests` but not in `failed`,
     /// `tokens` or the latency percentiles.
     pub rejected: u64,
+    /// Devices the model was partitioned across (`sched.devices`; 1 for
+    /// the single-package engine).
+    pub devices: u64,
+    /// Modeled interconnect cycles (pipeline stage hops, tensor-parallel
+    /// all-reduces and LM-head gathers — `SimStats::link_transfer_cycles`;
+    /// 0 at `devices = 1`).
+    pub link_transfer_cycles: u64,
     /// Tail-latency percentiles (queue/TTFT/end-to-end, in simulated
     /// cycles, measured from each request's arrival). TTFT is the
     /// first *generated* token — the request's prompt-prefill
@@ -559,6 +566,8 @@ fn interleaved_loop(
     metrics.mean_decode_batch = msim.stats.mean_decode_batch();
     metrics.max_decode_batch = msim.stats.max_decode_batch;
     metrics.solo_decode_steps = msim.stats.solo_decode_steps;
+    metrics.devices = msim.stats.devices.max(1);
+    metrics.link_transfer_cycles = msim.stats.link_transfer_cycles;
     metrics.latency = msim.stats.latency_report();
     Ok(())
 }

@@ -170,7 +170,7 @@ USAGE:
   pim-gpt info     [--config FILE]
   pim-gpt simulate --model NAME [--tokens N] [--config FILE] [--json]
   pim-gpt figures  [--fig 1|8|10|11|12|13|14|15|t1|t2|serving|policies|prefill|batching|
-                    paging|all] [--tokens N] [--models A,B]
+                    paging|sharding|all] [--tokens N] [--models A,B]
   pim-gpt generate --model gpt-nano|gpt-mini [--artifacts DIR] [--prompt 1,2,3] [--n N]
   pim-gpt serve    --model NAME [--requests N] [--concurrency K] [--arrivals SPEC]
                    [--policy SPEC] [--seed N] [--prompt-tokens P] [--batch-decode on|off]
@@ -201,6 +201,14 @@ PAGED KV (sched.kv_paging in --config, or serve --kv-paging on):
   an exhausted pool preempts a victim stream (context written back, re-queued).
   off (default) is cycle-identical to the static-slot engine; see figures
   --fig paging.
+
+MULTI-DEVICE SHARDING (sched.devices / sched.partition in --config):
+  partitions a model across N PIM packages — layer_pipeline (contiguous layer
+  ranges, activations hop stage to stage) or tensor_parallel (Megatron-style
+  head/FFN-column shards, two all-reduces per layer + an LM-head gather) —
+  with interconnect modeled from sched.link_gbit_s / sched.link_hop_cycles
+  and charged explicitly. devices = 1 (default) is cycle-identical to the
+  single-package engine; see figures --fig sharding.
 
 POLICY (scheduling; sched.policy / sched.slo_ttft_cycles in --config):
   fcfs (default) | srf | fair | slo[:<ttft-cycles>]
@@ -327,6 +335,9 @@ fn cmd_figures(args: &Args) -> Result<()> {
     }
     if all || which == "paging" {
         reports.push(report::fig_paging(tokens.min(8), &models)?);
+    }
+    if all || which == "sharding" {
+        reports.push(report::fig_sharding(tokens.min(8), &models)?);
     }
     if reports.is_empty() {
         bail!("unknown figure '{which}'");

@@ -1,11 +1,16 @@
 //! Model mapping (paper Algorithm 3, §IV): weight placement with
 //! multi-head concatenation and even channel/bank distribution, plus
-//! KV-cache region reservation (K row-major, V column-major).
+//! KV-cache region reservation (K row-major, V column-major). The
+//! `partition` pass splits a model across several devices first
+//! (`sched.devices`); each device slice then maps onto its own
+//! channel/bank space via `ModelMapping::build_device`.
 
 pub mod kv_reserve;
 pub mod layout;
+pub mod partition;
 pub mod weight_map;
 
 pub use kv_reserve::{KvReservation, PatternRun};
 pub use layout::{BankAllocator, CapacityError};
+pub use partition::{DevicePartition, DeviceSlice, PartitionStrategy};
 pub use weight_map::{KvSlotReport, MatrixPlacement, ModelMapping};

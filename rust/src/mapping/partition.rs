@@ -1,0 +1,642 @@
+//! Device partitioning: split one model across N PIM-GPT devices.
+//!
+//! The paper evaluates a single 8-channel package; this pass lifts that
+//! assumption into an explicit compiler stage (the shape of
+//! berkeley-emulation-engine's `passes/partition.rs`, which splits one
+//! netlist across boards). `DevicePartition::build` consumes the model
+//! plus `sched.{devices, partition}` and emits one [`DeviceSlice`] per
+//! device: the weight matrices that device stores (device-local
+//! `MatrixId`s and shapes), the sub-model view that sizes its KV
+//! reservation, and a per-device decode graph builder. Each slice maps
+//! onto its *own* channel/bank space (`ModelMapping::build_device`) —
+//! a model that degrades to 2 KV slots on one device fits full contexts
+//! across 2 devices because both weights and KV shrink per device.
+//!
+//! Two strategies (`sched.partition`):
+//!
+//! * **`layer_pipeline`** — contiguous layer ranges per device
+//!   (remainder layers go to the earliest devices), activations hop
+//!   device-to-device between stages (`d_model` elements per pass).
+//!   Only the last device stores the LM head. Requires
+//!   `devices <= n_layer`.
+//! * **`tensor_parallel`** — every device holds all layers but a
+//!   `1/N` column shard of each (Megatron-style): `n_head / N`
+//!   attention heads (Wqkv columns, KV cache, softmax groups) and
+//!   `d_ff / N` FFN columns. Row-parallel matrices (Wo, W2) produce
+//!   partial sums, so every layer pays two all-reduce hops; the LM
+//!   head is vocab-sharded and gathered once per step. Requires
+//!   `n_head % devices == 0`.
+//!
+//! Interconnect cost mirrors `MultiSim::kv_transfer_cycles`' explicit
+//! accounting: a hop of `b` bytes costs `link_hop_cycles +
+//! ceil(b * 8 * freq_ghz / link_gbit_s)` DRAM cycles
+//! (`sched.{link_gbit_s, link_hop_cycles}`), charged by the fleet
+//! engine as transfer edges between device programs — never hidden
+//! inside compute costs.
+//!
+//! Element conservation is exact and property-tested: the union of the
+//! per-device weight lists covers every weight element of the
+//! single-device model exactly once, under both strategies.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::asic::AsicOp;
+use crate::config::HwConfig;
+use crate::model::{DecodeGraph, GptModel, GraphNode, GraphOp, MatrixId, MatrixKind, VmmClass};
+use crate::util::ceil_div;
+
+/// How a model is split across devices (`sched.partition`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PartitionStrategy {
+    /// Contiguous layer ranges per device; activations hop between
+    /// pipeline stages.
+    #[default]
+    LayerPipeline,
+    /// Attention heads / FFN columns split per layer; two all-reduce
+    /// hops per layer plus an LM-head gather.
+    TensorParallel,
+}
+
+impl PartitionStrategy {
+    /// Parse the JSON/CLI spelling: `layer_pipeline | tensor_parallel`.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "layer_pipeline" => Ok(Self::LayerPipeline),
+            "tensor_parallel" => Ok(Self::TensorParallel),
+            _ => bail!("unknown partition strategy '{s}' (layer_pipeline | tensor_parallel)"),
+        }
+    }
+}
+
+impl std::fmt::Display for PartitionStrategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::LayerPipeline => write!(f, "layer_pipeline"),
+            Self::TensorParallel => write!(f, "tensor_parallel"),
+        }
+    }
+}
+
+/// One device's share of the model.
+#[derive(Clone, Debug)]
+pub struct DeviceSlice {
+    /// Device index in [0, devices).
+    pub device: usize,
+    /// Global layer range this device computes (`layer_pipeline`:
+    /// its contiguous stage; `tensor_parallel`: all layers).
+    pub layers: std::ops::Range<usize>,
+    /// Weight matrices this device stores, with *device-local* layer
+    /// ids (0-based within `layers`) and device-local shapes — the
+    /// input of `ModelMapping::build_device` and exactly the matrices
+    /// this device's decode graph references.
+    pub weights: Vec<(MatrixId, u64, u64)>,
+    /// Sub-model view sizing this device's KV reservation: layer count
+    /// (`layer_pipeline`) or `d_model`/`n_head` shard
+    /// (`tensor_parallel`) shrink per device; `max_seq` never does.
+    pub kv_model: GptModel,
+}
+
+/// Per-layer operand shapes of one device's decode graph. For
+/// `layer_pipeline` the shard equals the full width (a stage computes
+/// whole layers); for `tensor_parallel` the sharded dims are `1/N`.
+struct LayerShape {
+    /// Full residual width (LayerNorm/residual ops replicate).
+    d: u64,
+    /// This device's attention width shard (`n_head_shard * d_head`).
+    d_sh: u64,
+    /// This device's attention head count.
+    h_sh: u64,
+    /// This device's FFN width shard.
+    ff_sh: u64,
+}
+
+/// The partitioning pass output: one slice per device.
+#[derive(Clone, Debug)]
+pub struct DevicePartition {
+    pub model: GptModel,
+    pub strategy: PartitionStrategy,
+    pub devices: usize,
+    pub slices: Vec<DeviceSlice>,
+}
+
+impl DevicePartition {
+    /// Partition `model` across `cfg.sched.devices` devices under
+    /// `cfg.sched.partition`. Fails loudly on shapes the strategy
+    /// cannot split (more pipeline stages than layers; heads not
+    /// divisible by the device count) — silent remainder devices would
+    /// corrupt every downstream capacity and cost number.
+    pub fn build(model: &GptModel, cfg: &HwConfig) -> Result<Self> {
+        let n = cfg.sched.devices;
+        ensure!(n >= 1, "sched.devices must be >= 1, got {n}");
+        let strategy = cfg.sched.partition;
+        let slices = match strategy {
+            PartitionStrategy::LayerPipeline => {
+                ensure!(
+                    n <= model.n_layer,
+                    "layer_pipeline cannot split {} layers across {n} devices \
+                     ({}); use fewer devices or tensor_parallel",
+                    model.n_layer,
+                    model.name,
+                );
+                (0..n).map(|i| Self::pipeline_slice(model, n, i)).collect()
+            }
+            PartitionStrategy::TensorParallel => {
+                ensure!(
+                    model.n_head % n == 0,
+                    "tensor_parallel needs n_head divisible by the device count: \
+                     {} has {} heads, devices = {n}",
+                    model.name,
+                    model.n_head,
+                );
+                (0..n).map(|i| Self::tensor_slice(model, n, i)).collect()
+            }
+        };
+        Ok(Self { model: model.clone(), strategy, devices: n, slices })
+    }
+
+    /// Contiguous layer range of pipeline stage `i` (remainder layers
+    /// go to the earliest stages: 12 layers / 5 devices -> 3,3,2,2,2).
+    fn pipeline_layers(n_layer: usize, n: usize, i: usize) -> std::ops::Range<usize> {
+        let base = n_layer / n;
+        let rem = n_layer % n;
+        let start = i * base + i.min(rem);
+        let len = base + (i < rem) as usize;
+        start..start + len
+    }
+
+    fn pipeline_slice(m: &GptModel, n: usize, i: usize) -> DeviceSlice {
+        let d = m.d_model as u64;
+        let ff = m.d_ff() as u64;
+        let layers = Self::pipeline_layers(m.n_layer, n, i);
+        let mut weights = Vec::new();
+        for l in 0..layers.len() {
+            weights.push((MatrixId::new(l, MatrixKind::Wqkv), d, 3 * d));
+            weights.push((MatrixId::new(l, MatrixKind::Wo), d, d));
+            weights.push((MatrixId::new(l, MatrixKind::W1), d, ff));
+            weights.push((MatrixId::new(l, MatrixKind::W2), ff, d));
+        }
+        if i == n - 1 {
+            weights.push((MatrixId::new(0, MatrixKind::Wte), d, m.vocab as u64));
+        }
+        let kv_model = GptModel { n_layer: layers.len(), ..m.clone() };
+        DeviceSlice { device: i, layers, weights, kv_model }
+    }
+
+    /// Vocab column range of tensor-parallel device `i` (ceil split —
+    /// device 0 holds the largest shard, so symmetric-cost bounds use
+    /// device 0).
+    fn vocab_cols(vocab: u64, n: usize, i: usize) -> u64 {
+        let per = ceil_div(vocab, n as u64);
+        let lo = (i as u64 * per).min(vocab);
+        let hi = ((i as u64 + 1) * per).min(vocab);
+        hi - lo
+    }
+
+    fn tensor_slice(m: &GptModel, n: usize, i: usize) -> DeviceSlice {
+        let d = m.d_model as u64;
+        let d_sh = d / n as u64; // exact: d = n_head * d_head, n | n_head
+        let ff_sh = m.d_ff() as u64 / n as u64;
+        let v_sh = Self::vocab_cols(m.vocab as u64, n, i);
+        let mut weights = Vec::new();
+        for l in 0..m.n_layer {
+            weights.push((MatrixId::new(l, MatrixKind::Wqkv), d, 3 * d_sh));
+            weights.push((MatrixId::new(l, MatrixKind::Wo), d_sh, d));
+            weights.push((MatrixId::new(l, MatrixKind::W1), d, ff_sh));
+            weights.push((MatrixId::new(l, MatrixKind::W2), ff_sh, d));
+        }
+        weights.push((MatrixId::new(0, MatrixKind::Wte), d, v_sh));
+        let kv_model = GptModel {
+            d_model: d_sh as usize,
+            n_head: m.n_head / n,
+            ..m.clone()
+        };
+        DeviceSlice { device: i, layers: 0..m.n_layer, weights, kv_model }
+    }
+
+    /// Build device `dev`'s decode graph for generating the token at
+    /// position `pos` — the per-device mirror of `DecodeGraph::build`,
+    /// with sharded operand shapes and only the ops this device runs.
+    /// Every graph starts with an ingress residual-add (device 0: the
+    /// embedding lookup; later pipeline stages: merging the hopped
+    /// activation into the residual stream; tensor-parallel replicas:
+    /// the replicated embedding). Only the device holding an LM-head
+    /// shard emits the final LayerNorm + LM-head VMM.
+    pub fn device_graph(&self, dev: usize, pos: u64) -> DecodeGraph {
+        let m = &self.model;
+        let slice = &self.slices[dev];
+        let ltoken = pos + 1;
+        let d = m.d_model as u64;
+        let shape = match self.strategy {
+            PartitionStrategy::LayerPipeline => LayerShape {
+                d,
+                d_sh: d,
+                h_sh: m.n_head as u64,
+                ff_sh: m.d_ff() as u64,
+            },
+            PartitionStrategy::TensorParallel => LayerShape {
+                d,
+                d_sh: slice.kv_model.d_model as u64,
+                h_sh: slice.kv_model.n_head as u64,
+                ff_sh: m.d_ff() as u64 / self.devices as u64,
+            },
+        };
+        let lm_head_cols = slice
+            .weights
+            .iter()
+            .find(|(id, _, _)| id.kind == MatrixKind::Wte)
+            .map(|(_, _, cols)| *cols);
+        let mut nodes: Vec<GraphNode> = Vec::with_capacity(slice.layers.len() * 20 + 3);
+        let mut push = |nodes: &mut Vec<GraphNode>, op: GraphOp, deps: Vec<usize>| -> usize {
+            nodes.push(GraphNode { op, deps });
+            nodes.len() - 1
+        };
+
+        // Ingress: embedding lookup (device 0 / replicas) or the hopped
+        // stage activation merged into the residual stream.
+        let mut prev = push(&mut nodes, GraphOp::Asic(AsicOp::ResidualAdd { n: shape.d }), vec![]);
+
+        for l in 0..slice.layers.len() {
+            let ln1 =
+                push(&mut nodes, GraphOp::Asic(AsicOp::LayerNorm { n: shape.d }), vec![prev]);
+            let qkv = push(
+                &mut nodes,
+                GraphOp::Vmm {
+                    matrix: MatrixId::new(l, MatrixKind::Wqkv),
+                    class: VmmClass::Qkv,
+                    in_elems: shape.d,
+                    out_elems: 3 * shape.d_sh,
+                },
+                vec![ln1],
+            );
+            let bias =
+                push(&mut nodes, GraphOp::Asic(AsicOp::BiasAdd { n: 3 * shape.d_sh }), vec![qkv]);
+            let wk = push(&mut nodes, GraphOp::WriteK { layer: l, elems: shape.d_sh }, vec![bias]);
+            let wv = push(&mut nodes, GraphOp::WriteV { layer: l, elems: shape.d_sh }, vec![bias]);
+            let score = push(
+                &mut nodes,
+                GraphOp::Vmm {
+                    matrix: MatrixId::new(l, MatrixKind::KCache),
+                    class: VmmClass::Score,
+                    in_elems: shape.d_sh,
+                    out_elems: shape.h_sh * ltoken,
+                },
+                vec![bias, wk],
+            );
+            let scale = push(
+                &mut nodes,
+                GraphOp::Asic(AsicOp::Scale { n: shape.h_sh * ltoken }),
+                vec![score],
+            );
+            let softmax = push(
+                &mut nodes,
+                GraphOp::Asic(AsicOp::Softmax { n: shape.h_sh * ltoken, groups: shape.h_sh }),
+                vec![scale],
+            );
+            let av = push(
+                &mut nodes,
+                GraphOp::Vmm {
+                    matrix: MatrixId::new(l, MatrixKind::VCache),
+                    class: VmmClass::AttnV,
+                    in_elems: shape.h_sh * ltoken,
+                    out_elems: shape.d_sh,
+                },
+                vec![softmax, wv],
+            );
+            let concat =
+                push(&mut nodes, GraphOp::Asic(AsicOp::Concat { n: shape.d_sh }), vec![av]);
+            let proj = push(
+                &mut nodes,
+                GraphOp::Vmm {
+                    matrix: MatrixId::new(l, MatrixKind::Wo),
+                    class: VmmClass::Proj,
+                    in_elems: shape.d_sh,
+                    out_elems: shape.d,
+                },
+                vec![concat],
+            );
+            let bias2 = push(&mut nodes, GraphOp::Asic(AsicOp::BiasAdd { n: shape.d }), vec![proj]);
+            let res1 = push(
+                &mut nodes,
+                GraphOp::Asic(AsicOp::ResidualAdd { n: shape.d }),
+                vec![bias2, prev],
+            );
+            let ln2 = push(&mut nodes, GraphOp::Asic(AsicOp::LayerNorm { n: shape.d }), vec![res1]);
+            let fc1 = push(
+                &mut nodes,
+                GraphOp::Vmm {
+                    matrix: MatrixId::new(l, MatrixKind::W1),
+                    class: VmmClass::Fc1,
+                    in_elems: shape.d,
+                    out_elems: shape.ff_sh,
+                },
+                vec![ln2],
+            );
+            let bias3 =
+                push(&mut nodes, GraphOp::Asic(AsicOp::BiasAdd { n: shape.ff_sh }), vec![fc1]);
+            let gelu =
+                push(&mut nodes, GraphOp::Asic(AsicOp::Gelu { n: shape.ff_sh }), vec![bias3]);
+            let fc2 = push(
+                &mut nodes,
+                GraphOp::Vmm {
+                    matrix: MatrixId::new(l, MatrixKind::W2),
+                    class: VmmClass::Fc2,
+                    in_elems: shape.ff_sh,
+                    out_elems: shape.d,
+                },
+                vec![gelu],
+            );
+            let bias4 = push(&mut nodes, GraphOp::Asic(AsicOp::BiasAdd { n: shape.d }), vec![fc2]);
+            prev = push(
+                &mut nodes,
+                GraphOp::Asic(AsicOp::ResidualAdd { n: shape.d }),
+                vec![bias4, res1],
+            );
+        }
+
+        if let Some(cols) = lm_head_cols {
+            let lnf = push(&mut nodes, GraphOp::Asic(AsicOp::LayerNorm { n: shape.d }), vec![prev]);
+            push(
+                &mut nodes,
+                GraphOp::Vmm {
+                    matrix: MatrixId::new(0, MatrixKind::Wte),
+                    class: VmmClass::LmHead,
+                    in_elems: shape.d,
+                    out_elems: cols,
+                },
+                vec![lnf],
+            );
+        }
+
+        DecodeGraph { nodes, ltoken }
+    }
+
+    /// Cycles one link hop of `bytes` costs: fixed hop latency plus the
+    /// serialized byte time at `sched.link_gbit_s`, in DRAM cycles —
+    /// the interconnect mirror of `kv_transfer_cycles`.
+    pub fn link_cycles(cfg: &HwConfig, bytes: u64) -> u64 {
+        let bit_cycles = bytes as f64 * 8.0 * cfg.gddr6.freq_ghz / cfg.sched.link_gbit_s;
+        cfg.sched.link_hop_cycles + bit_cycles.ceil() as u64
+    }
+
+    /// Link cycles one pipeline-stage boundary costs for `passes`
+    /// activation vectors (`d_model` bf16 elements each).
+    pub fn stage_hop_cycles(&self, cfg: &HwConfig, passes: u64) -> u64 {
+        Self::link_cycles(cfg, passes * self.model.d_model as u64 * 2)
+    }
+
+    /// Link cycles one tensor-parallel all-reduce of `d_model` partial
+    /// sums costs for `passes` vectors: each device moves
+    /// `2 * (N-1) / N` of the vector over its link (reduce-scatter +
+    /// all-gather), paid once per row-parallel matrix (Wo, W2).
+    pub fn all_reduce_cycles(&self, cfg: &HwConfig, passes: u64) -> u64 {
+        let n = self.devices as u64;
+        let bytes = passes * self.model.d_model as u64 * 2;
+        Self::link_cycles(cfg, 2 * bytes * (n - 1) / n)
+    }
+
+    /// Link cycles the LM-head logit gather costs for `passes` vectors
+    /// (each device contributes its vocab shard; `(N-1)/N` of the full
+    /// logit vector crosses links).
+    pub fn lm_gather_cycles(&self, cfg: &HwConfig, passes: u64) -> u64 {
+        let n = self.devices as u64;
+        let bytes = passes * self.model.vocab as u64 * 2;
+        Self::link_cycles(cfg, bytes * (n - 1) / n)
+    }
+
+    /// Total link-transfer cycles one decode/prefill step pays beyond
+    /// per-device compute: the fleet engine charges these as explicit
+    /// transfer edges between device programs. 0 for a single device.
+    pub fn step_link_cycles(&self, cfg: &HwConfig, passes: u64) -> u64 {
+        if self.devices == 1 {
+            return 0;
+        }
+        match self.strategy {
+            // N-1 stage boundaries, one activation hop each.
+            PartitionStrategy::LayerPipeline => {
+                (self.devices as u64 - 1) * self.stage_hop_cycles(cfg, passes)
+            }
+            // Two all-reduces per layer (Wo, W2) + one logit gather.
+            PartitionStrategy::TensorParallel => {
+                2 * self.model.n_layer as u64 * self.all_reduce_cycles(cfg, passes)
+                    + self.lm_gather_cycles(cfg, passes)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::gpt::by_name;
+    use std::collections::BTreeMap;
+
+    fn partition(model: &str, n: usize, strategy: PartitionStrategy) -> DevicePartition {
+        let m = by_name(model).unwrap();
+        let cfg = HwConfig::paper_baseline().with_devices(n).with_partition(strategy);
+        DevicePartition::build(&m, &cfg).unwrap()
+    }
+
+    #[test]
+    fn parse_and_display_roundtrip() {
+        for s in ["layer_pipeline", "tensor_parallel"] {
+            assert_eq!(PartitionStrategy::parse(s).unwrap().to_string(), s);
+        }
+        for bad in ["", "pipeline", "tensor", "LAYER_PIPELINE", "tp"] {
+            assert!(PartitionStrategy::parse(bad).is_err(), "accepted '{bad}'");
+        }
+        assert_eq!(PartitionStrategy::default(), PartitionStrategy::LayerPipeline);
+    }
+
+    #[test]
+    fn single_device_is_the_whole_model() {
+        for strategy in [PartitionStrategy::LayerPipeline, PartitionStrategy::TensorParallel] {
+            let p = partition("gpt2-small", 1, strategy);
+            assert_eq!(p.slices.len(), 1);
+            assert_eq!(p.slices[0].layers, 0..12);
+            let m = by_name("gpt2-small").unwrap();
+            assert_eq!(p.slices[0].weights, DecodeGraph::weight_matrices(&m));
+            assert_eq!(p.slices[0].kv_model, m);
+            assert_eq!(p.step_link_cycles(&HwConfig::paper_baseline(), 1), 0);
+        }
+    }
+
+    /// Satellite edge case: uneven pipeline splits put the remainder on
+    /// the earliest devices, covering every layer exactly once.
+    #[test]
+    fn pipeline_uneven_split_covers_all_layers() {
+        let m = by_name("gpt2-small").unwrap(); // 12 layers
+        let cfg = HwConfig::paper_baseline().with_devices(5);
+        let p = DevicePartition::build(&m, &cfg).unwrap();
+        let lens: Vec<usize> = p.slices.iter().map(|s| s.layers.len()).collect();
+        assert_eq!(lens, vec![3, 3, 2, 2, 2]);
+        let mut next = 0;
+        for s in &p.slices {
+            assert_eq!(s.layers.start, next, "contiguous, in order");
+            next = s.layers.end;
+            assert_eq!(s.kv_model.n_layer, s.layers.len());
+        }
+        assert_eq!(next, 12);
+        // Only the last stage stores the LM head.
+        for s in &p.slices {
+            let has_wte = s.weights.iter().any(|(id, _, _)| id.kind == MatrixKind::Wte);
+            assert_eq!(has_wte, s.device == 4, "device {}", s.device);
+        }
+    }
+
+    /// Satellite edge case: more pipeline stages than layers is a loud
+    /// config error, not a silent empty device.
+    #[test]
+    fn pipeline_more_devices_than_layers_fails_loudly() {
+        let m = by_name("gpt2-small").unwrap(); // 12 layers
+        let cfg = HwConfig::paper_baseline().with_devices(13);
+        let err = DevicePartition::build(&m, &cfg).unwrap_err().to_string();
+        assert!(err.contains("12 layers"), "{err}");
+        assert!(err.contains("13 devices"), "{err}");
+    }
+
+    #[test]
+    fn tensor_parallel_indivisible_heads_fails_loudly() {
+        let m = by_name("gpt2-xl").unwrap(); // 25 heads
+        let cfg = HwConfig::paper_baseline()
+            .with_devices(2)
+            .with_partition(PartitionStrategy::TensorParallel);
+        let err = DevicePartition::build(&m, &cfg).unwrap_err().to_string();
+        assert!(err.contains("25 heads"), "{err}");
+    }
+
+    /// Per-device weight lists are element-conserving: the union over
+    /// devices stores every weight element of the single-device model
+    /// exactly once (per matrix kind and layer), under both strategies.
+    fn assert_element_conserving(model: &str, n: usize, strategy: PartitionStrategy) {
+        let m = by_name(model).unwrap();
+        let p = partition(model, n, strategy);
+        // Per-(global layer, kind) element totals across devices.
+        let mut got: BTreeMap<MatrixId, u64> = BTreeMap::new();
+        for s in &p.slices {
+            for (id, d_in, d_out) in &s.weights {
+                let global = if id.kind == MatrixKind::Wte {
+                    MatrixId::new(0, MatrixKind::Wte)
+                } else {
+                    MatrixId::new(s.layers.start + id.layer, id.kind)
+                };
+                *got.entry(global).or_insert(0) += d_in * d_out;
+            }
+        }
+        let want: BTreeMap<MatrixId, u64> = DecodeGraph::weight_matrices(&m)
+            .into_iter()
+            .map(|(id, d_in, d_out)| (id, d_in * d_out))
+            .collect();
+        assert_eq!(got, want, "{model} x{n} {strategy}");
+    }
+
+    #[test]
+    fn prop_weight_elements_conserved_across_devices() {
+        for model in ["gpt2-small", "gpt2-xl", "gpt3-xl"] {
+            for n in [1usize, 2, 4] {
+                assert_element_conserving(model, n, PartitionStrategy::LayerPipeline);
+                let heads = by_name(model).unwrap().n_head;
+                if heads % n == 0 {
+                    assert_element_conserving(model, n, PartitionStrategy::TensorParallel);
+                }
+            }
+        }
+        // Uneven pipeline split + a head count with larger divisors.
+        assert_element_conserving("gpt2-small", 5, PartitionStrategy::LayerPipeline);
+        assert_element_conserving("gpt3-xl", 8, PartitionStrategy::TensorParallel);
+    }
+
+    /// Device graphs reference exactly the weight matrices their slice
+    /// stores (a missing id would panic at issue time) and mirror the
+    /// single-device node count in total.
+    #[test]
+    fn device_graphs_reference_only_stored_weights() {
+        for (model, strategy) in [
+            ("gpt2-small", PartitionStrategy::LayerPipeline),
+            ("gpt2-medium", PartitionStrategy::TensorParallel),
+        ] {
+            let p = partition(model, 4, strategy);
+            let mut weight_vmms = 0usize;
+            for s in &p.slices {
+                let stored: Vec<MatrixId> = s.weights.iter().map(|(id, _, _)| *id).collect();
+                let g = p.device_graph(s.device, 7);
+                for node in &g.nodes {
+                    if let GraphOp::Vmm { matrix, .. } = node.op {
+                        if !matrix.kind.is_kv_cache() {
+                            assert!(
+                                stored.contains(&matrix),
+                                "device {} graph reads unstored {matrix:?}",
+                                s.device
+                            );
+                            weight_vmms += 1;
+                        } else {
+                            assert!(
+                                matrix.layer < s.kv_model.n_layer,
+                                "KV layer out of the device's reservation"
+                            );
+                        }
+                    }
+                }
+            }
+            let m = by_name(model).unwrap();
+            // 4 weight (non-KV) VMMs per layer: Wqkv, Wo, W1, W2.
+            let single = 4 * m.n_layer + 1;
+            let want = match strategy {
+                // Layers covered once; one LM head total.
+                PartitionStrategy::LayerPipeline => single,
+                // Every device runs every layer's (sharded) VMMs and an
+                // LM-head shard.
+                PartitionStrategy::TensorParallel => single * 4,
+            };
+            assert_eq!(weight_vmms, want, "{model} {strategy}");
+        }
+    }
+
+    #[test]
+    fn tensor_shapes_are_megatron_sharded() {
+        let m = by_name("gpt3-xl").unwrap(); // 24 heads, d=2048
+        let p = partition("gpt3-xl", 4, PartitionStrategy::TensorParallel);
+        let s = &p.slices[1];
+        assert_eq!(s.kv_model.n_head, 6);
+        assert_eq!(s.kv_model.d_model, 512);
+        assert_eq!(s.kv_model.max_seq, m.max_seq, "full context per device");
+        let d = m.d_model as u64;
+        for (id, d_in, d_out) in &s.weights {
+            match id.kind {
+                MatrixKind::Wqkv => assert_eq!((*d_in, *d_out), (d, 3 * d / 4)),
+                MatrixKind::Wo => assert_eq!((*d_in, *d_out), (d / 4, d)),
+                MatrixKind::W1 => assert_eq!((*d_in, *d_out), (d, d)),
+                MatrixKind::W2 => assert_eq!((*d_in, *d_out), (d, d)),
+                MatrixKind::Wte => assert_eq!(*d_in, d),
+                _ => panic!("unexpected {id:?}"),
+            }
+        }
+        // Vocab shards sum to the full vocab (ceil split, device 0
+        // largest).
+        let total: u64 = (0..4).map(|i| DevicePartition::vocab_cols(m.vocab as u64, 4, i)).sum();
+        assert_eq!(total, m.vocab as u64);
+        assert!(DevicePartition::vocab_cols(m.vocab as u64, 4, 0) >= total / 4);
+    }
+
+    #[test]
+    fn link_cost_model() {
+        let cfg = HwConfig::paper_baseline(); // 256 Gbit/s, 250-cycle hop
+        // 32 bytes = 256 bits = 1 cycle at 256 Gbit/s and 1 GHz.
+        assert_eq!(DevicePartition::link_cycles(&cfg, 32), 251);
+        assert_eq!(DevicePartition::link_cycles(&cfg, 0), 250);
+        // Pipeline step: N-1 activation hops.
+        let p = partition("gpt2-small", 4, PartitionStrategy::LayerPipeline);
+        let hop = p.stage_hop_cycles(&cfg, 1);
+        assert_eq!(hop, DevicePartition::link_cycles(&cfg, 768 * 2));
+        assert_eq!(p.step_link_cycles(&cfg, 1), 3 * hop);
+        // Bytes scale with passes; the fixed hop is paid once per hop.
+        assert!(p.stage_hop_cycles(&cfg, 8) < 8 * hop);
+        // Tensor-parallel step: 2 all-reduces per layer + the gather.
+        let p = partition("gpt2-small", 4, PartitionStrategy::TensorParallel);
+        let step = p.step_link_cycles(&cfg, 1);
+        assert_eq!(
+            step,
+            2 * 12 * p.all_reduce_cycles(&cfg, 1) + p.lm_gather_cycles(&cfg, 1)
+        );
+        assert!(step > 0);
+    }
+}

@@ -96,18 +96,44 @@ impl ModelMapping {
     /// placement per candidate count — and records a `KvSlotReport`.
     /// Only a model that cannot fit even a single context fails.
     pub fn build(model: &GptModel, cfg: &HwConfig) -> Result<Self, CapacityError> {
+        Self::build_for(model, cfg, &DecodeGraph::weight_matrices(model))
+    }
+
+    /// Map one *device slice* of a partitioned model
+    /// (`mapping::partition`): `kv_model` is the device's sub-model
+    /// view — layer count (pipeline) or head/width shard
+    /// (tensor-parallel) — which sizes its KV reservation, and
+    /// `weights` are exactly the matrices this device stores, with
+    /// device-local ids and shapes. Each device gets its own
+    /// channel/bank space, so the degradation contract (and the paged
+    /// frame pool) applies per device: a model that degrades to 2
+    /// slots on one device can grant full contexts on each of 2.
+    /// `build` is the trivial single-device slice.
+    pub fn build_device(
+        kv_model: &GptModel,
+        cfg: &HwConfig,
+        weights: &[(MatrixId, u64, u64)],
+    ) -> Result<Self, CapacityError> {
+        Self::build_for(kv_model, cfg, weights)
+    }
+
+    fn build_for(
+        model: &GptModel,
+        cfg: &HwConfig,
+        weights: &[(MatrixId, u64, u64)],
+    ) -> Result<Self, CapacityError> {
         if cfg.sched.kv_paging {
-            return Self::build_paged(model, cfg);
+            return Self::build_paged(model, cfg, weights);
         }
         let requested = cfg.sched.max_streams.max(1);
-        match Self::build_with_slots(model, cfg, requested) {
+        match Self::build_with_slots(model, cfg, requested, weights) {
             Ok(mm) => Ok(mm),
             // A pattern overflow is independent of the slot count —
             // fewer slots cannot help.
             Err(e @ CapacityError::Pattern { .. }) => Err(e),
             Err(cause) => {
                 let mut scratch = BankAllocator::new(cfg);
-                Self::place_weights(model, cfg, &mut scratch)?;
+                Self::place_weights(cfg, &mut scratch, weights)?;
                 let per_slot =
                     super::kv_reserve::slot_rows_per_unit(model, cfg, scratch.n_units()).max(1);
                 let granted = (scratch.min_free_rows() / per_slot) as usize;
@@ -117,7 +143,7 @@ impl ModelMapping {
                 if granted == 0 {
                     return Err(cause);
                 }
-                let mut mm = Self::build_with_slots(model, cfg, granted)?;
+                let mut mm = Self::build_with_slots(model, cfg, granted, weights)?;
                 mm.kv_shortfall = Some(KvSlotReport { requested, granted, cause });
                 Ok(mm)
             }
@@ -135,18 +161,22 @@ impl ModelMapping {
     /// scratch placement + closed-form per-frame footprint
     /// (`kv_reserve::frame_rows_per_unit`). Only a model whose weights
     /// leave no room for even one frame fails.
-    fn build_paged(model: &GptModel, cfg: &HwConfig) -> Result<Self, CapacityError> {
+    fn build_paged(
+        model: &GptModel,
+        cfg: &HwConfig,
+        weights: &[(MatrixId, u64, u64)],
+    ) -> Result<Self, CapacityError> {
         let n_units = cfg.gddr6.channels * cfg.gddr6.banks_per_channel;
         let max_seq = model.max_seq as u64;
         let p = super::kv_reserve::round_page_tokens(cfg.sched.kv_page_tokens, n_units, max_seq);
         let frames_per_context = crate::util::ceil_div(max_seq.max(1), p) as usize;
         let requested = (cfg.sched.max_streams.max(1) * frames_per_context).max(1);
-        match Self::build_with_frames(model, cfg, requested, p) {
+        match Self::build_with_frames(model, cfg, requested, p, weights) {
             Ok(mm) => Ok(mm),
             Err(e @ CapacityError::Pattern { .. }) => Err(e),
             Err(cause) => {
                 let mut scratch = BankAllocator::new(cfg);
-                Self::place_weights(model, cfg, &mut scratch)?;
+                Self::place_weights(cfg, &mut scratch, weights)?;
                 let per_frame =
                     super::kv_reserve::frame_rows_per_unit(model, cfg, scratch.n_units(), p).max(1);
                 let granted = (scratch.min_free_rows() / per_frame) as usize;
@@ -156,7 +186,7 @@ impl ModelMapping {
                 if granted == 0 {
                     return Err(cause);
                 }
-                let mut mm = Self::build_with_frames(model, cfg, granted, p)?;
+                let mut mm = Self::build_with_frames(model, cfg, granted, p, weights)?;
                 mm.kv_shortfall = Some(KvSlotReport { requested, granted, cause });
                 Ok(mm)
             }
@@ -169,6 +199,7 @@ impl ModelMapping {
         cfg: &HwConfig,
         n_frames: usize,
         page_tokens: u64,
+        weights: &[(MatrixId, u64, u64)],
     ) -> Result<Self, CapacityError> {
         let mut alloc = BankAllocator::new(cfg);
         // Frames first, weights second — same ordering as the slot path
@@ -176,7 +207,7 @@ impl ModelMapping {
         // slot base rows (the pinned cycle-equivalence anchor).
         let kv =
             super::KvReservation::build_paged(model, cfg, &mut alloc, n_frames, page_tokens)?;
-        let matrices = Self::place_weights(model, cfg, &mut alloc)?;
+        let matrices = Self::place_weights(cfg, &mut alloc, weights)?;
         Ok(Self {
             matrices,
             kv,
@@ -193,6 +224,7 @@ impl ModelMapping {
         model: &GptModel,
         cfg: &HwConfig,
         n_slots: usize,
+        weights: &[(MatrixId, u64, u64)],
     ) -> Result<Self, CapacityError> {
         let mut alloc = BankAllocator::new(cfg);
 
@@ -201,7 +233,7 @@ impl ModelMapping {
         let kv = super::KvReservation::build(model, cfg, &mut alloc, n_slots)?;
 
         // Map weights (lines 1-7).
-        let matrices = Self::place_weights(model, cfg, &mut alloc)?;
+        let matrices = Self::place_weights(cfg, &mut alloc, weights)?;
 
         Ok(Self {
             matrices,
@@ -214,16 +246,18 @@ impl ModelMapping {
         })
     }
 
-    /// Place every weight matrix (Algorithm 3 lines 1-7) into `alloc`.
+    /// Place the given weight matrices (Algorithm 3 lines 1-7) into
+    /// `alloc` — the full model's list for a single device, or one
+    /// device's slice of a partitioned model.
     fn place_weights(
-        model: &GptModel,
         cfg: &HwConfig,
         alloc: &mut BankAllocator,
+        weights: &[(MatrixId, u64, u64)],
     ) -> Result<BTreeMap<MatrixId, MatrixPlacement>, CapacityError> {
         let row_elems = cfg.gddr6.row_elems();
         let n_units = alloc.n_units() as u64;
         let mut matrices = BTreeMap::new();
-        for (id, d_in, d_out) in DecodeGraph::weight_matrices(model) {
+        for &(id, d_in, d_out) in weights {
             let cols_pu = columns_per_unit(d_out, n_units);
             let mut per_unit = Vec::with_capacity(n_units as usize);
             let mut out_cols = Vec::with_capacity(n_units as usize);
@@ -431,6 +465,95 @@ mod tests {
         let id = MatrixId::new(0, MatrixKind::Wqkv);
         let total: u64 = (0..8).map(|c| mm.channel_out_elems(&id, c)).sum();
         assert_eq!(total, 3 * 768);
+    }
+
+    /// Device mappings are row-conserving: the union of the per-device
+    /// placements stores exactly the single-device element footprint
+    /// (rows may carry per-unit tail padding, so the exact invariant is
+    /// in elements; padded-row slack is bounded by one row per unit per
+    /// matrix and checked as an upper bound).
+    #[test]
+    fn prop_device_mappings_conserve_single_device_footprint() {
+        use crate::mapping::partition::{DevicePartition, PartitionStrategy};
+        let m = by_name("gpt2-small").unwrap();
+        let cfg = HwConfig::paper_baseline();
+        let row_elems = cfg.gddr6.row_elems();
+        let single = ModelMapping::build(&m, &cfg).unwrap();
+        let single_elems: u64 =
+            single.matrices.values().map(|p| p.total_elems(row_elems as u32)).sum();
+        let single_rows: u64 = single
+            .matrices
+            .values()
+            .flat_map(|p| p.per_unit.iter().map(|b| b.total_rows() as u64))
+            .sum();
+        for strategy in [PartitionStrategy::LayerPipeline, PartitionStrategy::TensorParallel] {
+            for n in [2usize, 4] {
+                let pcfg = cfg.clone().with_devices(n).with_partition(strategy);
+                let p = DevicePartition::build(&m, &pcfg).unwrap();
+                let maps: Vec<ModelMapping> = p
+                    .slices
+                    .iter()
+                    .map(|s| ModelMapping::build_device(&s.kv_model, &pcfg, &s.weights).unwrap())
+                    .collect();
+                let elems: u64 = maps
+                    .iter()
+                    .flat_map(|mm| mm.matrices.values().map(|p| p.total_elems(row_elems as u32)))
+                    .sum();
+                assert_eq!(elems, single_elems, "{strategy} x{n}");
+                // Row slack from finer column shards: at most one padded
+                // tail row per unit per stored matrix.
+                let rows: u64 = maps
+                    .iter()
+                    .flat_map(|mm| {
+                        mm.matrices
+                            .values()
+                            .flat_map(|p| p.per_unit.iter().map(|b| b.total_rows() as u64))
+                    })
+                    .sum();
+                let stored: u64 = maps.iter().map(|mm| mm.matrices.len() as u64).sum();
+                let n_units = (cfg.gddr6.channels * cfg.gddr6.banks_per_channel) as u64;
+                assert!(rows >= single_rows, "{strategy} x{n}: lost rows");
+                assert!(
+                    rows <= single_rows + stored * n_units,
+                    "{strategy} x{n}: rows {rows} vs single {single_rows}"
+                );
+                // Per-device placements stay disjoint within each
+                // device's own bank space by allocator construction;
+                // out_cols per matrix sum to that device's shard width.
+                for (mm, s) in maps.iter().zip(&p.slices) {
+                    for (id, d_in, d_out) in &s.weights {
+                        let pl = &mm.matrices[id];
+                        assert_eq!((pl.d_in, pl.d_out), (*d_in, *d_out));
+                        assert_eq!(pl.out_cols.iter().sum::<u64>(), *d_out);
+                    }
+                }
+            }
+        }
+    }
+
+    /// The capacity headline of sharding: gpt2-xl degrades to 2 of 4
+    /// slots on one device, but each of 2 pipeline-stage devices grants
+    /// all 4 full-context slots (weights and KV both halve per device).
+    #[test]
+    fn xl_pipeline_devices_outgrant_single_device_slots() {
+        use crate::mapping::partition::DevicePartition;
+        let m = by_name("gpt2-xl").unwrap();
+        let cfg = HwConfig::paper_baseline().with_max_streams(4);
+        let single = ModelMapping::build(&m, &cfg).unwrap();
+        assert!(single.kv.n_slots < 4, "premise: xl is capacity-squeezed");
+        let pcfg = cfg.clone().with_devices(2);
+        let p = DevicePartition::build(&m, &pcfg).unwrap();
+        for s in &p.slices {
+            let mm = ModelMapping::build_device(&s.kv_model, &pcfg, &s.weights).unwrap();
+            assert!(
+                mm.kv.n_slots > single.kv.n_slots,
+                "device {}: {} slots vs single {}",
+                s.device,
+                mm.kv.n_slots,
+                single.kv.n_slots
+            );
+            assert!(mm.kv_shortfall.is_none(), "device {}", s.device);
+        }
     }
 
     #[test]

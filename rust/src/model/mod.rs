@@ -4,4 +4,4 @@ pub mod gpt;
 pub mod graph;
 
 pub use gpt::{GptModel, PAPER_MODELS};
-pub use graph::{DecodeGraph, GraphOp, MatrixId, MatrixKind, VmmClass};
+pub use graph::{DecodeGraph, GraphNode, GraphOp, MatrixId, MatrixKind, VmmClass};

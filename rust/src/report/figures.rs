@@ -10,11 +10,11 @@
 use crate::baselines::{cpu_xeon_6154, gpu_t4};
 use crate::config::HwConfig;
 use crate::energy::SystemEnergy;
-use crate::mapping::ModelMapping;
+use crate::mapping::{ModelMapping, PartitionStrategy};
 use crate::model::gpt::by_name;
 use crate::model::{GptModel, PAPER_MODELS};
 use crate::sim::arrivals::{self, ArrivalSpec};
-use crate::sim::{LatencyReport, MultiSim, Simulator, StreamOutcome, StreamSpec};
+use crate::sim::{FleetSim, LatencyReport, MultiSim, Simulator, StreamOutcome, StreamSpec};
 use crate::util::json::Json;
 use crate::util::table::{fmt_time_s, sig3, Table};
 use anyhow::{anyhow, Result};
@@ -859,6 +859,117 @@ pub fn fig_paging(gen_tokens: u64, models: &[String]) -> Result<FigureReport> {
     })
 }
 
+/// Multi-device sharding figure (beyond the paper): serve a small
+/// closed-loop workload on N in {1, 2, 4} devices under both partition
+/// strategies, reporting aggregate throughput, decode latency,
+/// co-resident stream capacity, per-device utilization and the modeled
+/// interconnect cycles (`SimStats::link_transfer_cycles` — never folded
+/// into compute). Layer-pipeline rows need N <= n_layer and
+/// tensor-parallel rows need n_head % N == 0 (the partition pass
+/// rejects the rest loudly); unviable combinations are skipped here,
+/// not silently zeroed — gpt2-xl's 25 heads make it pipeline-only.
+/// `models` filters the paper zoo (empty = all 8; the CI smoke runs one
+/// model via `--models`). Fully deterministic (closed loop, no RNG).
+pub fn fig_sharding(gen_tokens: u64, models: &[String]) -> Result<FigureReport> {
+    anyhow::ensure!(gen_tokens >= 1, "need at least one generated token");
+    for name in models {
+        anyhow::ensure!(
+            PAPER_MODELS.iter().any(|m| m.name == name),
+            "unknown model '{name}' in --models"
+        );
+    }
+    const K: usize = 2;
+    let base = HwConfig::paper_baseline();
+    let freq = base.gddr6.freq_ghz;
+    let mut t = Table::new(vec![
+        "model", "devices", "strategy", "streams", "tok/s", "decode c/tok", "link cycles",
+        "device util",
+    ]);
+    let mut arr = Vec::new();
+    let selected = PAPER_MODELS
+        .iter()
+        .filter(|m| models.is_empty() || models.iter().any(|n| n == m.name));
+    for m in selected {
+        for devices in [1usize, 2, 4] {
+            let strategies: &[PartitionStrategy] = if devices == 1 {
+                // Both strategies are the identity partition at N = 1.
+                &[PartitionStrategy::LayerPipeline]
+            } else {
+                &[PartitionStrategy::LayerPipeline, PartitionStrategy::TensorParallel]
+            };
+            for &strategy in strategies {
+                let viable = match strategy {
+                    PartitionStrategy::LayerPipeline => devices <= m.n_layer,
+                    PartitionStrategy::TensorParallel => m.n_head % devices == 0,
+                };
+                if !viable {
+                    continue;
+                }
+                let cfg = base
+                    .clone()
+                    .with_max_streams(K)
+                    .with_devices(devices)
+                    .with_partition(strategy);
+                let mut fleet = FleetSim::new(m, &cfg)?;
+                for id in 0..K as u64 {
+                    fleet.submit(StreamSpec::new(id, 1 + gen_tokens))?;
+                }
+                let done = fleet.run_all()?.len();
+                anyhow::ensure!(done == K, "{done} of {K} streams retired");
+                let clock = fleet.clock();
+                let streams = fleet.kv_slots();
+                let s = fleet.finalize_stats();
+                let decode_per_tok = s.decode_cycles as f64 / (K as u64 * gen_tokens) as f64;
+                let tput = s.tokens as f64 / (clock as f64 / (freq * 1e9));
+                let label =
+                    if devices == 1 { "single".to_string() } else { strategy.to_string() };
+                let utils: Vec<f64> =
+                    (0..s.device_busy_cycles.len()).map(|d| s.device_utilization(d)).collect();
+                let util_str = if utils.is_empty() {
+                    "-".to_string()
+                } else {
+                    utils.iter().map(|u| format!("{u:.2}")).collect::<Vec<_>>().join("/")
+                };
+                t.row(vec![
+                    m.name.to_string(),
+                    devices.to_string(),
+                    label.clone(),
+                    streams.to_string(),
+                    format!("{tput:.0}"),
+                    format!("{decode_per_tok:.0}"),
+                    s.link_transfer_cycles.to_string(),
+                    util_str,
+                ]);
+                arr.push(Json::obj(vec![
+                    ("model", m.name.into()),
+                    ("devices", devices.into()),
+                    ("strategy", label.into()),
+                    ("kv_streams", streams.into()),
+                    ("gen_tokens", gen_tokens.into()),
+                    ("tokens_per_s", tput.into()),
+                    ("decode_cycles_per_token", decode_per_tok.into()),
+                    ("link_transfer_cycles", s.link_transfer_cycles.into()),
+                    ("makespan_cycles", clock.into()),
+                    (
+                        "device_utilization",
+                        Json::Arr(utils.iter().map(|&u| u.into()).collect()),
+                    ),
+                ]));
+            }
+        }
+    }
+    Ok(FigureReport {
+        id: "sharding",
+        title: format!(
+            "Multi-device sharding: throughput, decode latency and link cycles \
+             vs device count and partition strategy (K={K}, +{gen_tokens} \
+             generated tokens per stream)"
+        ),
+        rendered: t.render(),
+        json: Json::Arr(arr),
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -994,6 +1105,40 @@ mod tests {
     #[test]
     fn fig_paging_rejects_unknown_model() {
         assert!(fig_paging(2, &["no-such-model".to_string()]).is_err());
+    }
+
+    /// Acceptance: the sharding figure covers N = 1/2/4 for a
+    /// TP-capable model, reports link cycles only when devices move
+    /// activations, and per-device utilization matches the device count.
+    #[test]
+    fn fig_sharding_covers_strategies_and_links() {
+        let r = fig_sharding(2, &["gpt2-small".to_string()]).unwrap();
+        let arr = r.json.as_arr().unwrap();
+        // gpt2-small: 12 layers, 12 heads — every combination viable:
+        // N=1 (single) + N=2 x 2 strategies + N=4 x 2 strategies.
+        assert_eq!(arr.len(), 5);
+        let f = |e: &Json, k: &str| e.get(k).unwrap().as_f64().unwrap();
+        let single = &arr[0];
+        assert_eq!(f(single, "devices"), 1.0);
+        assert_eq!(f(single, "link_transfer_cycles"), 0.0, "N=1 has no links");
+        assert!(single.get("device_utilization").unwrap().as_arr().unwrap().is_empty());
+        for e in &arr[1..] {
+            let n = f(e, "devices") as usize;
+            assert!(f(e, "link_transfer_cycles") > 0.0, "N={n} never paid links");
+            assert_eq!(e.get("device_utilization").unwrap().as_arr().unwrap().len(), n);
+            assert!(f(e, "tokens_per_s") > 0.0);
+        }
+        assert!(r.rendered.contains("tensor_parallel") && r.rendered.contains("layer_pipeline"));
+    }
+
+    #[test]
+    fn fig_sharding_skips_indivisible_tensor_parallel() {
+        // gpt2-xl has 25 heads: no TP at N = 2 or 4, and the pipeline
+        // rows still appear — 1 + 2 rows in total.
+        let r = fig_sharding(1, &["gpt2-xl".to_string()]).unwrap();
+        let arr = r.json.as_arr().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert!(!r.rendered.contains("tensor_parallel"));
     }
 
     #[test]

@@ -1,0 +1,927 @@
+//! Multi-device fleet engine: serve streams over a model partitioned
+//! across N PIM-GPT devices (`mapping::partition`).
+//!
+//! `FleetSim` is the device-count-generic front end. At
+//! `sched.devices = 1` it *contains* a [`MultiSim`] and delegates every
+//! call — byte-identical to the single-package engine by construction
+//! (and pinned on random traces, with batching and paging, in
+//! `tests/integration_fleet.rs`). At `devices > 1` it runs the fleet
+//! engine below.
+//!
+//! **The fleet engine is a calibrated step-cost composition**, the
+//! first instalment of the ROADMAP "metasim" direction: each device's
+//! per-step cost is measured *exactly* — the device slice's decode
+//! graph is compiled (`compiler::compile`) and walked on scratch
+//! [`Resources`] through the same `Resources::issue` path as the
+//! cycle-accurate engine, then memoized per `(ltoken, passes, batch)`
+//! — and steps are composed across devices at step granularity:
+//!
+//! * `layer_pipeline`: a step visits the stages in order; each stage
+//!   waits for the previous stage's activations (plus one link hop)
+//!   and for its own device to free up. Different streams overlap
+//!   across stages — device 0 prefills stream B while device 1 runs
+//!   stream A.
+//! * `tensor_parallel`: all devices run the step in lockstep; the step
+//!   costs the slowest device's compute plus the per-layer all-reduce
+//!   and LM-head-gather link cycles.
+//!
+//! Interconnect cycles come from the `DevicePartition` link-cost model
+//! (`sched.{link_gbit_s, link_hop_cycles}`) and are charged as
+//! explicit transfer time between device programs — reported in
+//! `SimStats::link_transfer_cycles`, never folded into compute.
+//!
+//! Cross-stream batched decode (`sched.batch_decode`) and paged KV
+//! (`sched.kv_paging`) work per device at step granularity: fused
+//! sweeps issue shareable (weight-stationary) nodes once with
+//! `passes = k` while per-stream KV nodes issue serially (the
+//! `compiler::template` sharing rule), and each device holds its own
+//! KV frame pool — faults evict a `PickPolicy::pick_victim` victim
+//! with modeled per-device writeback, honoring
+//! `sched.kv_evict_watermark`.
+//!
+//! **Determinism rules**: admission is arrival-order (ties by id),
+//! step selection is earliest-ready (ties by id), all state lives in
+//! `Vec`/`BTreeMap` — no hashing, no RNG, no wall clock. Two runs of
+//! the same trace are identical. Scope notes, in exchange for
+//! composing at step granularity: the fleet path reports makespan,
+//! latency percentiles, per-device busy and link cycles, and
+//! instruction counts, but not the single-package micro-counters (row
+//! hits, per-class cycles); SLO admission shedding stays a
+//! single-device feature.
+
+use std::collections::BTreeMap;
+
+use super::policy::{self, IssueCandidate, PickPolicy};
+use super::prefill;
+use super::resources::{empty_plan, IssueCtx, Resources};
+use super::sched::{MultiSim, StreamOutcome, StreamResult, StreamSpec};
+use super::stats::{SimStats, StreamStats};
+use crate::asic::AsicOp;
+use crate::compiler::{compile, Instr, Program};
+use crate::config::HwConfig;
+use crate::dram::TimingCycles;
+use crate::mapping::{DevicePartition, ModelMapping, PartitionStrategy};
+use crate::model::GptModel;
+use anyhow::{anyhow, bail, Result};
+
+/// Device-count-generic serving engine: a single-package [`MultiSim`]
+/// at `sched.devices = 1`, the fleet step-composition engine above it.
+pub struct FleetSim {
+    inner: Inner,
+}
+
+enum Inner {
+    Single(Box<MultiSim>),
+    Multi(Box<FleetEngine>),
+}
+
+impl FleetSim {
+    pub fn new(model: &GptModel, cfg: &HwConfig) -> Result<Self> {
+        let inner = if cfg.sched.devices <= 1 {
+            Inner::Single(Box::new(MultiSim::new(model, cfg)?))
+        } else {
+            Inner::Multi(Box::new(FleetEngine::new(model, cfg)?))
+        };
+        Ok(Self { inner })
+    }
+
+    /// Devices the model is partitioned across.
+    pub fn devices(&self) -> usize {
+        match &self.inner {
+            Inner::Single(_) => 1,
+            Inner::Multi(f) => f.partition.devices,
+        }
+    }
+
+    /// Co-resident stream contexts (paged: page frames) *per device
+    /// fleet*: the minimum over devices, since every device must hold
+    /// its share of every active stream's KV.
+    pub fn kv_slots(&self) -> usize {
+        match &self.inner {
+            Inner::Single(ms) => ms.kv_slots(),
+            Inner::Multi(f) => f.pool,
+        }
+    }
+
+    pub fn clock(&self) -> u64 {
+        match &self.inner {
+            Inner::Single(ms) => ms.clock(),
+            Inner::Multi(f) => f.clock,
+        }
+    }
+
+    pub fn submit(&mut self, spec: StreamSpec) -> Result<()> {
+        match &mut self.inner {
+            Inner::Single(ms) => ms.submit(spec),
+            Inner::Multi(f) => f.submit(spec),
+        }
+    }
+
+    /// Run every submitted stream to completion; outcomes in completion
+    /// order.
+    pub fn run_all(&mut self) -> Result<Vec<StreamOutcome>> {
+        match &mut self.inner {
+            Inner::Single(ms) => ms.run_all(),
+            Inner::Multi(f) => f.run_all(),
+        }
+    }
+
+    pub fn stats(&self) -> &SimStats {
+        match &self.inner {
+            Inner::Single(ms) => &ms.stats,
+            Inner::Multi(f) => &f.stats,
+        }
+    }
+
+    pub fn finalize_stats(&mut self) -> &SimStats {
+        match &mut self.inner {
+            Inner::Single(ms) => {
+                ms.finalize_stats();
+                ms.stats.devices = 1;
+                &ms.stats
+            }
+            Inner::Multi(f) => f.finalize_stats(),
+        }
+    }
+}
+
+/// Memoized exact cost of one device's step program.
+#[derive(Clone, Copy, Debug)]
+struct StepCost {
+    cycles: u64,
+    instructions: u64,
+}
+
+struct DeviceState {
+    /// The device's own channel/bank space (weights + its KV share).
+    mapping: ModelMapping,
+    /// Sub-model view consistent with the device graph's KV shapes.
+    model_view: GptModel,
+    /// Cycle the device finishes its last accepted work.
+    free_at: u64,
+    /// Compute cycles charged to this device (excludes link time).
+    busy_cycles: u64,
+    /// (ltoken, passes, batch) -> measured step cost.
+    memo: BTreeMap<(u64, u64, u64), StepCost>,
+}
+
+struct FleetStream {
+    spec: StreamSpec,
+    /// Next position to execute (0-based; < prompt_tokens = prefill).
+    pos: u64,
+    /// Cycle this stream may start its next step.
+    ready: u64,
+    admitted_cycle: u64,
+    token_finishes: Vec<u64>,
+    /// Logical KV slot (non-paged) / stable victim id (paged).
+    slot: usize,
+    /// Page frames currently held on every device (paged mode).
+    frames_held: usize,
+    instructions: u64,
+    attributed_cycles: u64,
+}
+
+struct FleetEngine {
+    cfg: HwConfig,
+    model: GptModel,
+    partition: DevicePartition,
+    t: TimingCycles,
+    devices: Vec<DeviceState>,
+    pick: Box<dyn PickPolicy>,
+    /// Submitted, not yet admitted (arrival order, ties by id).
+    queued: Vec<StreamSpec>,
+    /// Evicted mid-flight, waiting to resume (keeps pos/finishes).
+    preempted: Vec<FleetStream>,
+    active: Vec<FleetStream>,
+    outcomes: Vec<StreamOutcome>,
+    clock: u64,
+    /// Co-resident contexts (paged: physical page frames) — min over
+    /// devices, clamped by `max_streams` in the slot path.
+    pool: usize,
+    /// Paged mode: tokens per frame (`None` = slot mode).
+    page_tokens: Option<u64>,
+    /// Paged mode: free physical frames (fleet-wide lockstep — every
+    /// device allocates the same frame count per stream).
+    frames_free: usize,
+    /// Paged mode: virtual-frame admission budget
+    /// (`floor(pool * kv_oversub)`) minus worst-case commitments.
+    admit_frames_left: usize,
+    slot_used: Vec<bool>,
+    stats: SimStats,
+    link_cycles: u64,
+}
+
+impl FleetEngine {
+    fn new(model: &GptModel, cfg: &HwConfig) -> Result<Self> {
+        let partition = DevicePartition::build(model, cfg)?;
+        let mut devices = Vec::with_capacity(partition.devices);
+        for s in &partition.slices {
+            let mapping = ModelMapping::build_device(&s.kv_model, cfg, &s.weights)
+                .map_err(|e| anyhow!("device {} of {}: {e}", s.device, partition.devices))?;
+            devices.push(DeviceState {
+                mapping,
+                model_view: s.kv_model.clone(),
+                free_at: 0,
+                busy_cycles: 0,
+                memo: BTreeMap::new(),
+            });
+        }
+        // Every device must hold its share of every active stream's
+        // KV, so fleet capacity is the weakest device's pool.
+        let pool_raw = devices
+            .iter()
+            .map(|d| d.mapping.kv.n_slots)
+            .min()
+            .expect("devices >= 1");
+        let page_tokens = devices[0].mapping.kv.page_tokens;
+        let pool = if page_tokens.is_some() {
+            pool_raw
+        } else {
+            pool_raw.min(cfg.sched.max_streams.max(1))
+        };
+        let admit_frames_left = if page_tokens.is_some() {
+            ((pool as f64) * cfg.sched.kv_oversub).floor() as usize
+        } else {
+            0
+        };
+        let (pick, _admission) = policy::build(&cfg.sched);
+        Ok(Self {
+            cfg: cfg.clone(),
+            model: model.clone(),
+            t: TimingCycles::from_config(cfg),
+            devices,
+            pick,
+            queued: Vec::new(),
+            preempted: Vec::new(),
+            active: Vec::new(),
+            outcomes: Vec::new(),
+            clock: 0,
+            pool,
+            page_tokens,
+            frames_free: if page_tokens.is_some() { pool } else { 0 },
+            admit_frames_left,
+            slot_used: vec![false; pool],
+            stats: SimStats::default(),
+            partition,
+            link_cycles: 0,
+        })
+    }
+
+    fn submit(&mut self, spec: StreamSpec) -> Result<()> {
+        if spec.n_tokens == 0 {
+            bail!("request {} has zero tokens", spec.id);
+        }
+        if spec.n_tokens > self.model.max_seq as u64 {
+            bail!(
+                "request {} length {} exceeds max_seq {}",
+                spec.id,
+                spec.n_tokens,
+                self.model.max_seq
+            );
+        }
+        if spec.prompt_tokens == 0 || spec.prompt_tokens > spec.n_tokens {
+            bail!(
+                "request {} prompt {} outside [1, {}]",
+                spec.id,
+                spec.prompt_tokens,
+                spec.n_tokens
+            );
+        }
+        if let Some(p) = self.page_tokens {
+            let need = crate::util::ceil_div(spec.n_tokens, p) as usize;
+            if need > self.pool {
+                bail!(
+                    "request {} needs {need} KV page frames but every-device pool holds {}",
+                    spec.id,
+                    self.pool
+                );
+            }
+        }
+        self.queued.push(spec);
+        self.queued.sort_by_key(|s| (s.arrival_cycle, s.id));
+        Ok(())
+    }
+
+    fn frames_for(&self, tokens: u64) -> usize {
+        match self.page_tokens {
+            Some(p) => crate::util::ceil_div(tokens.max(1), p) as usize,
+            None => 0,
+        }
+    }
+
+    /// Worst-case frame commitment the admission budget charges — the
+    /// request's full context (mirror of the single-device rule: no
+    /// admitted set can exceed `kv_oversub` times the pool even if
+    /// every stream runs to its end).
+    fn admit_commit(&self, spec: &StreamSpec) -> usize {
+        self.frames_for(spec.n_tokens)
+    }
+
+    /// Admit resumable preempted streams first, then arrived queued
+    /// requests in arrival order, while capacity lasts.
+    fn admit(&mut self) {
+        // Resumed streams need their current context's frames back
+        // before they can run (their budget commitment never lapsed).
+        while !self.preempted.is_empty() {
+            let need = self.frames_for(self.preempted[0].pos.max(1));
+            if self.active.len() >= self.cfg.sched.max_streams.max(1)
+                || need > self.frames_free
+            {
+                break;
+            }
+            let mut s = self.preempted.remove(0);
+            self.frames_free -= need;
+            s.frames_held = need;
+            s.ready = s.ready.max(self.clock);
+            // Modeled KV restore onto every device's channel buses.
+            for dev in 0..self.devices.len() {
+                let wb = self.device_kv_transfer_cycles(dev, s.pos);
+                self.devices[dev].free_at = self.devices[dev].free_at.max(self.clock) + wb;
+            }
+            self.active.push(s);
+        }
+        // Strict arrival-order admission: a blocked head of line blocks
+        // everyone behind it (no overtaking — determinism rule).
+        loop {
+            let Some(&spec) = self.queued.first() else { break };
+            if spec.arrival_cycle > self.clock {
+                break; // sorted: nothing further has arrived yet
+            }
+            let admitted = if self.active.len() >= self.cfg.sched.max_streams.max(1) {
+                false
+            } else if self.page_tokens.is_some() {
+                let commit = self.admit_commit(&spec);
+                let first = self.frames_for(spec.prompt_tokens);
+                commit <= self.admit_frames_left && first <= self.frames_free
+            } else {
+                self.slot_used.iter().any(|u| !u)
+            };
+            if !admitted {
+                break;
+            }
+            self.queued.remove(0);
+            let (slot, frames) = if self.page_tokens.is_some() {
+                let first = self.frames_for(spec.prompt_tokens);
+                self.admit_frames_left -= self.admit_commit(&spec);
+                self.frames_free -= first;
+                (spec.id as usize, first)
+            } else {
+                let slot = self.slot_used.iter().position(|u| !u).expect("checked above");
+                self.slot_used[slot] = true;
+                (slot, 0)
+            };
+            let admitted_cycle = self.clock.max(spec.arrival_cycle);
+            self.active.push(FleetStream {
+                spec,
+                pos: 0,
+                ready: admitted_cycle,
+                admitted_cycle,
+                token_finishes: Vec::with_capacity(spec.n_tokens as usize),
+                slot,
+                frames_held: frames,
+                instructions: 0,
+                attributed_cycles: 0,
+            });
+        }
+        let blocked = self
+            .queued
+            .iter()
+            .filter(|s| s.arrival_cycle <= self.clock)
+            .count() as u64;
+        self.stats.admission_blocked += blocked;
+        let in_use = self.active.len() as u64;
+        self.stats.peak_slots_in_use = self.stats.peak_slots_in_use.max(in_use);
+    }
+
+    /// Modeled KV writeback/restore time for `tokens` positions of one
+    /// stream on device `dev`'s channel buses — the per-device mirror
+    /// of the single-package `kv_transfer_cycles` (bf16 K + V rows of
+    /// the device's KV share).
+    fn device_kv_transfer_cycles(&self, dev: usize, tokens: u64) -> u64 {
+        let m = &self.partition.slices[dev].kv_model;
+        let bytes = tokens * m.n_layer as u64 * 2 * m.d_model as u64 * 2;
+        let per_cycle =
+            self.cfg.gddr6.channel_bytes_per_cycle() * self.cfg.gddr6.channels as f64;
+        (bytes as f64 / per_cycle).ceil() as u64
+    }
+
+    /// A node is shareable across a fused decode batch iff it is
+    /// ltoken- and slot-invariant — weight-stationary VMMs and
+    /// elementwise ASIC ops. The rule mirrors
+    /// `compiler::template::shareable_across_streams`: KV writes, KV
+    /// VMMs, Scale/Softmax (score-length-shaped), and PartialSums fed
+    /// by a KV VMM stay per-stream.
+    fn shareable(program: &Program, i: usize) -> bool {
+        match &program.nodes[i].instr {
+            Instr::WriteK { .. } | Instr::WriteV { .. } => false,
+            Instr::PimVmm { matrix, .. } => !matrix.kind.is_kv_cache(),
+            Instr::Asic(op) => match op {
+                AsicOp::Scale { .. } | AsicOp::Softmax { .. } => false,
+                AsicOp::PartialSum { .. } => {
+                    !program.nodes[i].deps.iter().any(|&d| {
+                        matches!(&program.nodes[d].instr,
+                            Instr::PimVmm { matrix, .. } if matrix.kind.is_kv_cache())
+                    })
+                }
+                _ => true,
+            },
+        }
+    }
+
+    /// Exact cost of device `dev`'s step program at context `ltoken`,
+    /// covering `passes` positions (prefill chunk; 1 = decode) for a
+    /// fused batch of `batch` streams: compile the device graph, walk
+    /// it on scratch `Resources` through the same `issue` path as the
+    /// cycle-accurate engine, memoize. Slot/page base rows shift
+    /// addresses, not uncontended cycle costs, so the scratch walk at
+    /// slot 0 is exact for every stream.
+    fn step_cost(&mut self, dev: usize, ltoken: u64, passes: u64, batch: u64) -> Result<StepCost> {
+        let key = (ltoken, passes, batch);
+        if let Some(c) = self.devices[dev].memo.get(&key) {
+            return Ok(*c);
+        }
+        let graph = self.partition.device_graph(dev, ltoken - 1);
+        let program = compile(&graph, &self.cfg)?;
+        let cost = {
+            let d = &self.devices[dev];
+            let ctx = IssueCtx {
+                cfg: &self.cfg,
+                t: &self.t,
+                model: &d.model_view,
+                mapping: &d.mapping,
+            };
+            let mut res = Resources::new(&self.cfg);
+            let mut plan = empty_plan(&self.cfg);
+            let n = program.nodes.len();
+            let mut finish: Vec<u64> = Vec::with_capacity(n);
+            let mut first_ready: Vec<u64> = Vec::with_capacity(n);
+            let mut instructions = 0u64;
+            let mut step_finish = 0u64;
+            let pos = ltoken - 1;
+            // Paged mappings address KV through a page table; frame
+            // identity shifts addresses, not uncontended cycle costs,
+            // so the identity table covering `ltoken` is exact.
+            let table: Option<Vec<u32>> = self
+                .page_tokens
+                .map(|p| (0..crate::util::ceil_div(ltoken, p) as u32).collect());
+            let pages = table.as_deref();
+            for i in 0..n {
+                let node = &program.nodes[i];
+                let fused = batch > 1 && Self::shareable(&program, i);
+                let (node_finish, node_first) = if fused {
+                    // One multi-pass weight sweep shared by the batch.
+                    let out = res.issue(
+                        &ctx,
+                        &mut plan,
+                        &node.instr,
+                        &node.deps,
+                        0,
+                        &finish,
+                        &first_ready,
+                        pos,
+                        ltoken,
+                        passes * batch,
+                        pages,
+                    );
+                    instructions += 1;
+                    (out.finish, out.first_ready)
+                } else {
+                    // Per-stream nodes run once per batch member,
+                    // serializing on the hardware they contend for.
+                    let reps = batch.max(1);
+                    let mut fin = 0u64;
+                    let mut first = u64::MAX;
+                    for _ in 0..reps {
+                        let out = res.issue(
+                            &ctx,
+                            &mut plan,
+                            &node.instr,
+                            &node.deps,
+                            0,
+                            &finish,
+                            &first_ready,
+                            pos,
+                            ltoken,
+                            passes,
+                            pages,
+                        );
+                        fin = fin.max(out.finish);
+                        first = first.min(out.first_ready);
+                        instructions += 1;
+                    }
+                    (fin, first)
+                };
+                finish.push(node_finish);
+                first_ready.push(node_first);
+                step_finish = step_finish.max(node_finish);
+            }
+            StepCost { cycles: step_finish, instructions }
+        };
+        self.devices[dev].memo.insert(key, cost);
+        Ok(cost)
+    }
+
+    /// Index of an active stream by id (fleet sets are small — a scan
+    /// keeps every reference stable across evictions, which remove
+    /// from `active` and would invalidate raw indices).
+    fn idx_of(&self, id: u64) -> usize {
+        self.active.iter().position(|s| s.spec.id == id).expect("stream is active")
+    }
+
+    /// Grow stream `id`'s page tables to cover `ltoken`, faulting and
+    /// evicting (policy victim, modeled writeback) when the free list
+    /// runs dry. `protected` streams are never victims — they are
+    /// about to run. Honors the `kv_evict_watermark` early-evict.
+    fn grow_frames(&mut self, id: u64, ltoken: u64, protected: &[u64]) {
+        if self.page_tokens.is_none() {
+            return;
+        }
+        let wm = self.cfg.sched.kv_evict_watermark;
+        if wm > 0.0 {
+            let wm_frames = ((self.pool as f64) * wm).floor() as usize;
+            while wm_frames > 0
+                && self.frames_free < wm_frames
+                && self.evict_victim(protected)
+            {}
+        }
+        let need = self.frames_for(ltoken);
+        while self.active[self.idx_of(id)].frames_held < need {
+            if self.frames_free == 0 {
+                self.stats.page_faults += 1;
+                if !self.evict_victim(protected) {
+                    // Every peer is protected (e.g. the whole active set
+                    // fused into this batch): run short — the step cost
+                    // depends on `ltoken`, not frame identity, and the
+                    // growth retries before the stream's next step.
+                    break;
+                }
+                continue;
+            }
+            self.frames_free -= 1;
+            let idx = self.idx_of(id);
+            self.active[idx].frames_held += 1;
+        }
+        let in_use = (self.pool - self.frames_free) as u64;
+        self.stats.peak_pages_in_use = self.stats.peak_pages_in_use.max(in_use);
+    }
+
+    /// Evict one active stream (not in `protected`) chosen by the pick
+    /// policy; returns false if none is evictable. The victim's frames
+    /// return to the pool, its KV writes back on every device's
+    /// channel buses, and it re-queues ahead of fresh arrivals.
+    fn evict_victim(&mut self, protected: &[u64]) -> bool {
+        let candidates: Vec<(usize, IssueCandidate)> = self
+            .active
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| !protected.contains(&s.spec.id))
+            .map(|(i, s)| {
+                (
+                    i,
+                    IssueCandidate {
+                        id: s.spec.id,
+                        slot: s.slot,
+                        ready: s.ready,
+                        remaining_tokens: s.spec.n_tokens - s.pos,
+                        served_cycles: s.attributed_cycles,
+                    },
+                )
+            })
+            .collect();
+        if candidates.is_empty() {
+            return false;
+        }
+        let cands: Vec<IssueCandidate> = candidates.iter().map(|(_, c)| *c).collect();
+        let victim = candidates[self.pick.pick_victim(&cands)].0;
+        let mut s = self.active.remove(victim);
+        self.frames_free += s.frames_held;
+        s.frames_held = 0;
+        self.stats.preemptions += 1;
+        self.stats.evicted_tokens += s.pos;
+        for dev in 0..self.devices.len() {
+            let wb = self.device_kv_transfer_cycles(dev, s.pos);
+            self.devices[dev].free_at = self.devices[dev].free_at.max(self.clock) + wb;
+        }
+        self.preempted.push(s);
+        self.preempted.sort_by_key(|s| (s.ready, s.spec.id));
+        true
+    }
+
+    /// Execute one step for the streams in `batch` (ids; all at the
+    /// same position when fused, singleton otherwise), composing
+    /// per-device costs under the partition strategy. Returns the
+    /// step's finish.
+    fn exec_step(&mut self, batch: &[u64], pos: u64, passes: u64) -> Result<u64> {
+        let ltoken = pos + passes;
+        let k = batch.len() as u64;
+        let ready = batch
+            .iter()
+            .map(|&id| self.active[self.idx_of(id)].ready)
+            .max()
+            .unwrap_or(self.clock);
+        let n = self.devices.len();
+        let mut instructions = 0u64;
+        let finish = match self.partition.strategy {
+            PartitionStrategy::LayerPipeline => {
+                // Stage-serial within the step; per-device free_at lets
+                // other streams' steps overlap on earlier stages.
+                let mut acts_at = ready;
+                let mut fin = ready;
+                for dev in 0..n {
+                    let cost = self.step_cost(dev, ltoken, passes, k)?;
+                    let start = acts_at.max(self.devices[dev].free_at);
+                    fin = start + cost.cycles;
+                    self.devices[dev].free_at = fin;
+                    self.devices[dev].busy_cycles += cost.cycles;
+                    instructions += cost.instructions;
+                    if dev + 1 < n {
+                        let hop = self.partition.stage_hop_cycles(&self.cfg, passes * k);
+                        self.link_cycles += hop;
+                        acts_at = fin + hop;
+                    }
+                }
+                fin
+            }
+            PartitionStrategy::TensorParallel => {
+                // Lockstep: every device runs the step; all-reduce and
+                // gather link time extends the shared step.
+                let start = self
+                    .devices
+                    .iter()
+                    .map(|d| d.free_at)
+                    .max()
+                    .unwrap_or(0)
+                    .max(ready);
+                let mut worst = 0u64;
+                for dev in 0..n {
+                    let cost = self.step_cost(dev, ltoken, passes, k)?;
+                    self.devices[dev].busy_cycles += cost.cycles;
+                    instructions += cost.instructions;
+                    worst = worst.max(cost.cycles);
+                }
+                let link = self.partition.step_link_cycles(&self.cfg, passes * k);
+                self.link_cycles += link;
+                let fin = start + worst + link;
+                for d in &mut self.devices {
+                    d.free_at = fin;
+                }
+                fin
+            }
+        };
+        let started = ready;
+        for &id in batch {
+            let i = self.idx_of(id);
+            let s = &mut self.active[i];
+            s.pos += passes;
+            for _ in 0..passes {
+                s.token_finishes.push(finish);
+            }
+            s.ready = finish;
+            s.instructions += instructions / k.max(1);
+            s.attributed_cycles += finish - started;
+            self.stats.tokens += passes;
+        }
+        self.stats.instructions += instructions;
+        self.clock = self.clock.max(finish);
+        Ok(finish)
+    }
+
+    /// Retire every batch member that has finished its last position.
+    fn retire_finished(&mut self, finish: u64) {
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].pos < self.active[i].spec.n_tokens {
+                i += 1;
+                continue;
+            }
+            let s = self.active.remove(i);
+            if self.page_tokens.is_some() {
+                self.frames_free += s.frames_held;
+                self.admit_frames_left += self.admit_commit(&s.spec);
+            } else {
+                self.slot_used[s.slot] = false;
+            }
+            let result = StreamResult {
+                id: s.spec.id,
+                arrival_cycle: s.spec.arrival_cycle,
+                admitted_cycle: s.admitted_cycle,
+                finish_cycle: finish.max(*s.token_finishes.last().unwrap_or(&finish)),
+                tokens: s.spec.n_tokens,
+                prompt_tokens: s.spec.prompt_tokens,
+                kv_slot: s.slot,
+                token_finishes: s.token_finishes,
+            };
+            self.stats.prefill_cycles += result.prefill_cycles();
+            self.stats.decode_cycles += result.decode_cycles();
+            self.stats
+                .streams
+                .push(StreamStats::from_result(&result, s.instructions, s.attributed_cycles));
+            self.outcomes.push(StreamOutcome::Completed(result));
+        }
+    }
+
+    fn run_all(&mut self) -> Result<Vec<StreamOutcome>> {
+        loop {
+            self.admit();
+            if self.active.is_empty() {
+                if self.queued.is_empty() && self.preempted.is_empty() {
+                    break;
+                }
+                // Idle: warp to the next arrival (or resume point).
+                let next = self
+                    .queued
+                    .iter()
+                    .map(|s| s.arrival_cycle)
+                    .chain(self.preempted.iter().map(|s| s.ready))
+                    .min()
+                    .expect("non-empty");
+                let next = next.max(self.clock + 1);
+                self.stats.idle_cycles += next - self.clock;
+                self.clock = next;
+                continue;
+            }
+            // Earliest-ready stream (ties by id) leads the step.
+            let lead = self
+                .active
+                .iter()
+                .min_by_key(|s| (s.ready, s.spec.id))
+                .expect("non-empty active set");
+            let lead_id = lead.spec.id;
+            let lead_ready = lead.ready;
+            let pos = lead.pos;
+            let in_prefill = pos < lead.spec.prompt_tokens;
+            let passes = if in_prefill {
+                prefill::chunk_at(pos, lead.spec.prompt_tokens, self.cfg.sched.prefill_chunk)
+                    .map(|c| c.len)
+                    .unwrap_or(1)
+            } else {
+                1
+            };
+            // Fuse same-position decode partners that are already ready
+            // (iteration-level batching: batches form per sweep).
+            let mut batch = vec![lead_id];
+            if !in_prefill && self.cfg.sched.batch_decode {
+                for p in &self.active {
+                    if p.spec.id != lead_id
+                        && p.pos == pos
+                        && p.pos >= p.spec.prompt_tokens
+                        && p.ready <= lead_ready
+                    {
+                        batch.push(p.spec.id);
+                    }
+                }
+                batch.sort_unstable();
+            }
+            if in_prefill {
+                self.stats.prefill_chunks += 1;
+            } else if batch.len() > 1 {
+                self.stats.fused_sweeps += 1;
+                self.stats.fused_streams += batch.len() as u64;
+                self.stats.max_decode_batch =
+                    self.stats.max_decode_batch.max(batch.len() as u64);
+            } else {
+                self.stats.solo_decode_steps += 1;
+            }
+            for &id in &batch {
+                self.grow_frames(id, pos + passes, &batch);
+            }
+            let finish = self.exec_step(&batch, pos, passes)?;
+            self.retire_finished(finish);
+        }
+        Ok(std::mem::take(&mut self.outcomes))
+    }
+
+    fn finalize_stats(&mut self) -> &SimStats {
+        self.stats.cycles = self.clock;
+        self.stats.devices = self.partition.devices as u64;
+        self.stats.link_transfer_cycles = self.link_cycles;
+        self.stats.device_busy_cycles = self.devices.iter().map(|d| d.busy_cycles).collect();
+        self.stats.kv_slots = self.pool as u64;
+        if self.page_tokens.is_some() {
+            self.stats.kv_pages = self.pool as u64;
+        }
+        self.stats.streams.sort_by_key(|s| s.id);
+        &self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::gpt::by_name;
+
+    fn fleet_cfg(devices: usize, strategy: PartitionStrategy) -> HwConfig {
+        HwConfig::paper_baseline().with_devices(devices).with_partition(strategy)
+    }
+
+    #[test]
+    fn single_device_delegates_to_multisim() {
+        let m = by_name("gpt-nano").unwrap();
+        let cfg = HwConfig::paper_baseline();
+        let mut fleet = FleetSim::new(&m, &cfg).unwrap();
+        let mut msim = MultiSim::new(&m, &cfg).unwrap();
+        for spec in [StreamSpec::new(0, 3), StreamSpec::new(1, 2)] {
+            fleet.submit(spec).unwrap();
+            msim.submit(spec).unwrap();
+        }
+        fleet.run_all().unwrap();
+        msim.run_all().unwrap();
+        assert_eq!(fleet.clock(), msim.clock());
+        assert_eq!(fleet.devices(), 1);
+        let fs = fleet.finalize_stats();
+        assert_eq!(fs.devices, 1);
+        assert_eq!(fs.link_transfer_cycles, 0);
+    }
+
+    #[test]
+    fn fleet_runs_both_strategies_and_charges_links() {
+        let m = by_name("gpt-nano").unwrap(); // 2 layers, 4 heads
+        for strategy in [PartitionStrategy::LayerPipeline, PartitionStrategy::TensorParallel] {
+            let cfg = fleet_cfg(2, strategy);
+            let mut fleet = FleetSim::new(&m, &cfg).unwrap();
+            assert_eq!(fleet.devices(), 2);
+            fleet.submit(StreamSpec::with_prompt(0, 4, 3)).unwrap();
+            fleet.submit(StreamSpec::new(1, 2)).unwrap();
+            let outcomes = fleet.run_all().unwrap();
+            assert_eq!(outcomes.len(), 2);
+            for o in &outcomes {
+                let r = o.as_completed().expect("no shedding in the fleet path");
+                assert_eq!(r.token_finishes.len() as u64, r.tokens);
+                assert!(r.finish_cycle > 0);
+            }
+            let stats = fleet.finalize_stats();
+            assert_eq!(stats.devices, 2);
+            assert!(stats.link_transfer_cycles > 0, "{strategy}: links never charged");
+            assert_eq!(stats.device_busy_cycles.len(), 2);
+            assert!(stats.device_busy_cycles.iter().all(|&b| b > 0), "{strategy}");
+            assert_eq!(stats.tokens, 7 + 2);
+            assert!(stats.latency_report().is_some());
+        }
+    }
+
+    #[test]
+    fn pipeline_stages_overlap_across_streams() {
+        // Two streams through a 2-stage pipeline must finish sooner
+        // than strictly serializing both streams' full steps would
+        // (device 0 starts stream 1 while device 1 still runs stream
+        // 0), and decode is deterministic.
+        let m = by_name("gpt-nano").unwrap();
+        let cfg = fleet_cfg(2, PartitionStrategy::LayerPipeline);
+        let run = |n_streams: u64| {
+            let mut fleet = FleetSim::new(&m, &cfg).unwrap();
+            for id in 0..n_streams {
+                fleet.submit(StreamSpec::new(id, 4)).unwrap();
+            }
+            fleet.run_all().unwrap();
+            fleet.clock()
+        };
+        let one = run(1);
+        let two = run(2);
+        assert_eq!(run(2), two, "deterministic");
+        assert!(two < 2 * one, "no cross-stream stage overlap: {two} vs 2x{one}");
+    }
+
+    #[test]
+    fn tensor_parallel_two_devices_beat_one_on_decode() {
+        // The acceptance-criteria mechanism at unit scale: TP halves
+        // per-device compute; with the default link budget the step
+        // gets strictly faster 1 -> 2 devices. (gpt2-xl's 25 heads
+        // don't shard — covered by the partition-pass rejection tests.)
+        let m = by_name("gpt3-xl").unwrap(); // 24 heads, d=2048
+        let decode_clock = |devices: usize| {
+            let cfg = fleet_cfg(devices, PartitionStrategy::TensorParallel);
+            let mut fleet = FleetSim::new(&m, &cfg).unwrap();
+            fleet.submit(StreamSpec::new(0, 4)).unwrap();
+            fleet.run_all().unwrap();
+            fleet.clock()
+        };
+        let one = decode_clock(1);
+        let two = decode_clock(2);
+        assert!(two < one, "TP 1->2 regressed: {two} !< {one}");
+    }
+
+    #[test]
+    fn fleet_batched_decode_fuses_and_paging_survives_pressure() {
+        let m = by_name("gpt-mini").unwrap();
+        let mut cfg = fleet_cfg(2, PartitionStrategy::LayerPipeline);
+        cfg = cfg.with_max_streams(4).with_batch_decode(true);
+        let mut fleet = FleetSim::new(&m, &cfg).unwrap();
+        for id in 0..4 {
+            fleet.submit(StreamSpec::new(id, 6)).unwrap();
+        }
+        fleet.run_all().unwrap();
+        let stats = fleet.finalize_stats();
+        assert!(stats.fused_sweeps > 0, "same-position decode streams must fuse");
+        assert!(stats.max_decode_batch >= 2);
+        // Paged mode on the same workload completes and reports pages.
+        let cfg = cfg.with_kv_paging(true);
+        let mut fleet = FleetSim::new(&m, &cfg).unwrap();
+        for id in 0..4 {
+            fleet.submit(StreamSpec::new(id, 6)).unwrap();
+        }
+        let outcomes = fleet.run_all().unwrap();
+        assert_eq!(outcomes.len(), 4);
+        let stats = fleet.finalize_stats();
+        assert!(stats.kv_pages > 0);
+    }
+}

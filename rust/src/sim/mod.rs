@@ -19,10 +19,14 @@
 //! weight sweep (continuous batching): weight-stationary VMMs issue
 //! once with `passes = K` while per-stream KV attention stays separate,
 //! amortizing DRAM row activations and ASIC pipeline fills over the
-//! batch. See `sim/README.md`.
+//! batch. With `sched.devices > 1`, [`fleet`] partitions the model
+//! across several PIM packages (layer-pipeline or tensor-parallel, see
+//! `mapping::partition`) and composes calibrated per-device step costs
+//! with modeled interconnect transfers. See `sim/README.md`.
 
 pub mod arrivals;
 pub mod engine;
+pub mod fleet;
 pub mod policy;
 pub mod prefill;
 pub mod resources;
@@ -31,6 +35,7 @@ pub mod stats;
 
 pub use arrivals::{ArrivalSpec, TraceRequest};
 pub use engine::{Simulator, StepResult};
+pub use fleet::FleetSim;
 pub use policy::{AdmissionPolicy, PickPolicy, PolicySpec};
 pub use prefill::Chunk;
 pub use resources::Resources;

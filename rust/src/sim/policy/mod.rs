@@ -266,11 +266,17 @@ mod tests {
         };
         let candidates: Vec<IssueCandidate> = (0..3).map(cand).collect();
         let mut sched = SchedulerConfig::default();
-        for spec in [PolicySpec::Fcfs, PolicySpec::Srf, PolicySpec::Fair, PolicySpec::Slo] {
+        // SRF overrides the victim rule (most-remaining-first) — see
+        // `pick::tests::srf_evicts_the_longest_remaining_stream`.
+        for spec in [PolicySpec::Fcfs, PolicySpec::Fair, PolicySpec::Slo] {
             sched.policy = spec;
             let (mut pick, _) = build(&sched);
             assert_eq!(pick.pick_victim(&candidates), 2, "{spec}");
             assert_eq!(pick.pick_victim(&candidates[..1]), 0, "{spec}");
         }
+        sched.policy = PolicySpec::Srf;
+        let (mut pick, _) = build(&sched);
+        assert_eq!(pick.pick_victim(&candidates), 2, "remaining grows with id here");
+        assert_eq!(pick.pick_victim(&candidates[..1]), 0);
     }
 }

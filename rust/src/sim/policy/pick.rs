@@ -65,6 +65,20 @@ impl PickPolicy for ShortestRemainingFirst {
             .map(|(i, _)| i)
             .expect("pick_issue called with candidates")
     }
+
+    /// Evict the stream with the *most* remaining tokens: it holds its
+    /// KV frames the longest and is the least likely to finish soon, so
+    /// preempting it frees capacity for the short work SRF favors (the
+    /// preemption mirror of shortest-remaining-first issue). Ties break
+    /// toward the latest-admitted candidate, matching the default rule.
+    fn pick_victim(&mut self, candidates: &[IssueCandidate]) -> usize {
+        candidates
+            .iter()
+            .enumerate()
+            .max_by_key(|(i, c)| (c.remaining_tokens, *i))
+            .map(|(i, _)| i)
+            .expect("pick_victim called with candidates")
+    }
 }
 
 /// Deficit round-robin over stream slots: every issue goes to the
@@ -125,6 +139,20 @@ mod tests {
         assert_eq!(p.pick_issue(&[cand(0, 9, 0), cand(100, 2, 0)]), 1);
         // ...and equal remaining falls back to the FCFS order.
         assert_eq!(p.pick_issue(&[cand(50, 2, 0), cand(10, 2, 0)]), 1);
+    }
+
+    #[test]
+    fn srf_evicts_the_longest_remaining_stream() {
+        let mut srf = ShortestRemainingFirst;
+        // Remaining [5, 3, 1]: SRF preempts index 0 (most left to do);
+        // the default recompute-last-admitted rule would pick index 2.
+        let candidates = [cand(0, 5, 0), cand(0, 3, 0), cand(0, 1, 0)];
+        assert_eq!(srf.pick_victim(&candidates), 0);
+        let mut fcfs = Fcfs;
+        assert_eq!(fcfs.pick_victim(&candidates), 2, "default rule diverges");
+        // Equal remaining falls back to the latest-admitted default.
+        let tied = [cand(0, 4, 0), cand(0, 4, 0)];
+        assert_eq!(srf.pick_victim(&tied), 1);
     }
 
     #[test]

@@ -767,6 +767,20 @@ impl MultiSim {
             let s = &self.active[si];
             self.mapping.kv.frames_for(s.pos + s.step_positions)
         };
+        // Low-watermark early eviction (`sched.kv_evict_watermark`):
+        // when a growing stream finds the free list below the
+        // watermark, preempt victims ahead of demand so the
+        // allocations below come from the free list instead of
+        // faulting one frame at a time. Only solo peers are taken —
+        // dissolving fused sweeps stays a real-fault measure. Off at
+        // 0.0 (the default): `wm_frames` is 0 and nothing runs.
+        let wm_frames =
+            (self.n_frames as f64 * self.cfg.sched.kv_evict_watermark).floor() as usize;
+        if wm_frames > 0 && self.active[si].pages.len() < needed {
+            while self.free_frames.len() < wm_frames && self.has_evictable_peer(slot) {
+                self.evict_victim(slot)?;
+            }
+        }
         loop {
             // Re-derive the index each round: eviction removes streams
             // and shifts `active` (the slot is the stable identity).
@@ -787,6 +801,16 @@ impl MultiSim {
             s.step_finish = s.step_finish.max(s.step_start);
         }
         Ok(())
+    }
+
+    /// Whether a stream other than `faulting_slot`'s could be preempted
+    /// right now without dissolving a fused sweep — the watermark
+    /// early-evict's guard (it never breaks up batches; that cost is
+    /// reserved for real faults).
+    fn has_evictable_peer(&self, faulting_slot: usize) -> bool {
+        self.active
+            .iter()
+            .any(|s| s.slot != faulting_slot && s.pos < s.end_pos && !self.slot_in_batch(s.slot))
     }
 
     /// Resolve a page fault raised while growing the stream occupying

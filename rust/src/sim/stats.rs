@@ -162,6 +162,20 @@ pub struct SimStats {
     /// preemptions (the modeled writeback/restore traffic is
     /// proportional to this).
     pub evicted_tokens: u64,
+    /// PIM-GPT devices the model was partitioned across
+    /// (`sched.devices`; 1 for every single-package run, including all
+    /// runs that never go through `FleetSim`).
+    pub devices: u64,
+    /// Inter-device link cycles charged for activations crossing
+    /// pipeline-stage boundaries, tensor-parallel all-reduces, and the
+    /// LM-head gather (`mapping::partition` link-cost model). Always 0
+    /// at `devices = 1`.
+    pub link_transfer_cycles: u64,
+    /// Per-device busy cycles (compute the device was charged,
+    /// excluding link transfers), index = device id. Empty at
+    /// `devices = 1` — single-package utilization stays in
+    /// `bank_busy_cycles`/`asic_busy_cycles`.
+    pub device_busy_cycles: Vec<u64>,
     /// Per-request-stream attribution (one entry per retired stream;
     /// empty for plain single-program runs).
     pub streams: Vec<StreamStats>,
@@ -350,6 +364,20 @@ impl SimStats {
         self.bank_busy_cycles as f64 / (self.cycles * total_units) as f64
     }
 
+    /// Mean busy fraction of device `dev` over a fleet run (0.0 when
+    /// the run had no wall time or the index is out of range — e.g.
+    /// any single-package run, which leaves `device_busy_cycles`
+    /// empty).
+    pub fn device_utilization(&self, dev: usize) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        match self.device_busy_cycles.get(dev) {
+            Some(&busy) => busy as f64 / self.cycles as f64,
+            None => 0.0,
+        }
+    }
+
     /// Busy fraction of the ASIC computation engines over the run.
     ///
     /// Deliberately *unclamped*: the engines serialize on `asic_free`,
@@ -421,6 +449,20 @@ mod tests {
         assert!((s.asic_utilization() - 0.25).abs() < 1e-12);
         assert_eq!(SimStats::default().program_cache_hit_rate(), 1.0);
         assert_eq!(SimStats::default().asic_utilization(), 0.0);
+    }
+
+    #[test]
+    fn device_utilization_per_device() {
+        let s = SimStats {
+            cycles: 1000,
+            devices: 2,
+            device_busy_cycles: vec![800, 500],
+            ..Default::default()
+        };
+        assert!((s.device_utilization(0) - 0.8).abs() < 1e-12);
+        assert!((s.device_utilization(1) - 0.5).abs() < 1e-12);
+        assert_eq!(s.device_utilization(2), 0.0, "out of range -> 0");
+        assert_eq!(SimStats::default().device_utilization(0), 0.0);
     }
 
     #[test]
