@@ -2,8 +2,10 @@
 //! per-token decode cost across model sizes and context lengths, the
 //! mapping stage, graph compilation, the multi-request scheduler
 //! (simulated throughput at K ∈ {1, 2, 4} + program-cache hit rate),
-//! the open-loop Poisson arrival sweep (tail latency vs load), and the
-//! scheduling-policy sweep at K=4 (fcfs / srf / fair / slo).
+//! the open-loop Poisson arrival sweep (tail latency vs load), the
+//! scheduling-policy sweep at K=4 (fcfs / srf / fair / slo), and the
+//! tracing on/off sweep (the observability tax, exported to
+//! `BENCH_sim_hotpath.json` at the repo root).
 use pim_gpt::compiler::compile;
 use pim_gpt::config::HwConfig;
 use pim_gpt::mapping::{ModelMapping, PartitionStrategy};
@@ -456,5 +458,100 @@ fn main() {
                 );
             }
         }
+    }
+
+    // Tracing on/off sweep (K=4 Poisson): the observability tax. Off is
+    // the default — a dead branch per lifecycle edge, no allocation —
+    // and the simulated schedule is cycle-identical either way (checked
+    // below). The JSONL sink buffers one flat object per event, the
+    // Chrome sink defers all rendering to the end of the run; the
+    // documented bound is JSONL min wall time <= 5x untraced (in
+    // practice it sits well under 2x — the 5x guard only screens
+    // regressions through CI noise). Results land in
+    // BENCH_sim_hotpath.json at the repo root for trend tracking.
+    {
+        use pim_gpt::util::json::Json;
+        let kcfg = HwConfig::paper_baseline().with_max_streams(4);
+        let freq_hz = kcfg.gddr6.freq_ghz * 1e9;
+        let mapping = ModelMapping::build(&m, &kcfg).unwrap();
+        let n_req = 8usize;
+        let mut batch = MultiSim::from_mapping(&m, &kcfg, mapping.clone());
+        for id in 0..n_req as u64 {
+            batch.submit(StreamSpec::new(id, 8)).unwrap();
+        }
+        batch.run_all().unwrap();
+        let rate_per_s = 1.5 * n_req as f64 * freq_hz / batch.clock() as f64;
+        let at =
+            arrivals::generate(&ArrivalSpec::Poisson { rate_per_s }, n_req, cfg.gddr6.freq_ghz, 7)
+                .unwrap();
+        println!(
+            "sim::multi tracing sweep gpt2-small K=4 ({n_req} reqs x 8 tokens, Poisson 1.5x):"
+        );
+        let run_once = |tcfg: &HwConfig| {
+            let mut ms = MultiSim::from_mapping(&m, tcfg, mapping.clone());
+            for (id, &a) in at.iter().enumerate() {
+                let spec =
+                    StreamSpec { id: id as u64, n_tokens: 8, prompt_tokens: 1, arrival_cycle: a };
+                ms.submit(spec).unwrap();
+            }
+            ms.run_all().unwrap();
+            ms.finalize_stats();
+            let events = ms.trace_counts().submits
+                + ms.trace_counts().releases
+                + ms.trace_counts().admits
+                + ms.trace_counts().prefill_chunks
+                + ms.trace_counts().solo_decode_steps
+                + ms.trace_counts().fused_sweeps
+                + ms.trace_counts().retires;
+            (ms.clock(), events)
+        };
+        let mut rows: Vec<Json> = Vec::new();
+        let mut clocks: Vec<u64> = Vec::new();
+        let mut mins: Vec<(String, f64)> = Vec::new();
+        for spec in ["off", "jsonl:t.jsonl", "chrome:t.json"] {
+            let tcfg = kcfg.clone().with_trace(spec);
+            let tag = spec.split(':').next().unwrap().to_string();
+            let r = bench(&format!("sim::multi trace={tag} gpt2-small K=4"), 2, 8, || {
+                black_box(run_once(&tcfg));
+            });
+            let (clock, events) = run_once(&tcfg);
+            clocks.push(clock);
+            mins.push((tag.clone(), r.min_s));
+            rows.push(Json::obj(vec![
+                ("trace", tag.as_str().into()),
+                ("iters", r.iters.into()),
+                ("mean_s", r.mean_s.into()),
+                ("min_s", r.min_s.into()),
+                ("max_s", r.max_s.into()),
+                ("makespan_cycles", clock.into()),
+                ("events", events.into()),
+            ]));
+        }
+        assert!(
+            clocks.iter().all(|&c| c == clocks[0]),
+            "tracing changed the simulated makespan: {clocks:?}"
+        );
+        let off = mins[0].1;
+        let jsonl = mins[1].1;
+        let overhead = jsonl / off;
+        println!(
+            "  jsonl overhead {overhead:.2}x untraced (bound 5x), \
+             makespan {} cycles in every mode",
+            clocks[0]
+        );
+        assert!(
+            overhead <= 5.0,
+            "jsonl tracing overhead {overhead:.2}x exceeds the documented 5x bound"
+        );
+        let out = Json::obj(vec![
+            ("bench", "sim_hotpath".into()),
+            ("workload", "gpt2-small K=4, 8 reqs x 8 tokens, Poisson 1.5x".into()),
+            ("jsonl_overhead_x", overhead.into()),
+            ("bound_x", Json::from(5.0)),
+            ("runs", Json::Arr(rows)),
+        ]);
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_sim_hotpath.json");
+        std::fs::write(path, format!("{out}\n")).expect("write BENCH_sim_hotpath.json");
+        println!("  wrote {path}");
     }
 }

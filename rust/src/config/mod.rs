@@ -9,6 +9,7 @@
 use crate::mapping::PartitionStrategy;
 use crate::sim::arrivals::ArrivalSpec;
 use crate::sim::policy::PolicySpec;
+use crate::sim::trace::TraceSpec;
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 
@@ -257,6 +258,20 @@ pub struct SchedulerConfig {
     /// `sched.link_hop_cycles`): serialization/protocol overhead paid
     /// once per transfer on top of the byte cost.
     pub link_hop_cycles: u64,
+    /// Event tracing (JSON string key `sched.trace`: `off`,
+    /// `jsonl:<path>` or `chrome:<path>`; CLI `serve --trace`). When
+    /// on, the engine records a typed event at every request-lifecycle
+    /// edge (`sim::trace`) and renders the artifact after the run; the
+    /// CLI/server writes it to the named path. `off` (the default) is
+    /// byte-identical and allocation-free — and tracing on never
+    /// changes a simulated cycle (sinks are pure observers).
+    pub trace: TraceSpec,
+    /// Utilization-timeline window in DRAM cycles (JSON key
+    /// `sched.trace_window`). When > 0, `SimStats::timeline` gets one
+    /// row per window with busy/idle/link cycles and pages-in-use
+    /// (`figures --fig timeline`). 0 (the default) disables the
+    /// timeline. Independent of `trace`: either can be on alone.
+    pub trace_window: u64,
 }
 
 impl Default for SchedulerConfig {
@@ -277,6 +292,8 @@ impl Default for SchedulerConfig {
             partition: PartitionStrategy::LayerPipeline,
             link_gbit_s: 256.0,
             link_hop_cycles: 250,
+            trace: TraceSpec::Off,
+            trace_window: 0,
         }
     }
 }
@@ -441,6 +458,22 @@ impl HwConfig {
         self
     }
 
+    /// Observability knob: event-trace sink spec (`off`, `jsonl:<path>`
+    /// or `chrome:<path>` — the `serve --trace` spelling). Panics on a
+    /// malformed spec, like the other asserting builders; config files
+    /// and the CLI go through the error-returning parse instead.
+    pub fn with_trace(mut self, spec: &str) -> Self {
+        self.sched.trace = TraceSpec::parse(spec).expect("valid trace spec");
+        self
+    }
+
+    /// Observability knob: utilization-timeline window in cycles
+    /// (0 = timeline off).
+    pub fn with_trace_window(mut self, window: u64) -> Self {
+        self.sched.trace_window = window;
+        self
+    }
+
     /// Apply overrides from a JSON object, e.g.
     /// `{"asic": {"freq_ghz": 0.5}, "gddr6": {"channels": 16}}`.
     pub fn from_json(json: &Json) -> Result<Self> {
@@ -498,6 +531,11 @@ impl HwConfig {
             ("sched", "partition") => {
                 self.sched.partition = PartitionStrategy::parse(s)
                     .with_context(|| format!("sched.partition = '{s}'"))?;
+                Ok(())
+            }
+            ("sched", "trace") => {
+                self.sched.trace =
+                    TraceSpec::parse(s).with_context(|| format!("sched.trace = '{s}'"))?;
                 Ok(())
             }
             _ => {
@@ -631,6 +669,19 @@ impl HwConfig {
             }
             ("sched", "partition") => {
                 bail!("sched.partition must be a string: \"layer_pipeline\" or \"tensor_parallel\"")
+            }
+            ("sched", "trace") => {
+                bail!(
+                    "sched.trace must be a string: \"off\", \"jsonl:<path>\" or \"chrome:<path>\""
+                )
+            }
+            ("sched", "trace_window") => {
+                // Same exactness contract as `sched.seed`; 0 disables
+                // the utilization timeline.
+                if n < 0.0 || n.fract() != 0.0 || n >= 9_007_199_254_740_992.0 {
+                    bail!("sched.trace_window must be an integer in [0, 2^53), got {n}");
+                }
+                self.sched.trace_window = n as u64;
             }
             ("sched", "link_gbit_s") => {
                 // A zero-bandwidth link would stall every hop forever.
@@ -953,6 +1004,47 @@ mod tests {
         // A number where the strategy string is required names the
         // expectation.
         let j = Json::parse(r#"{"sched": {"partition": 2}}"#).unwrap();
+        let err = HwConfig::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("must be a string"), "{err}");
+    }
+
+    #[test]
+    fn sched_trace_overrides() {
+        use crate::sim::trace::TraceSpec;
+        let base = HwConfig::paper_baseline();
+        assert_eq!(base.sched.trace, TraceSpec::Off, "tracing off by default");
+        assert_eq!(base.sched.trace_window, 0, "timeline off by default");
+        let src = r#"{"sched": {"trace": "jsonl:events.jsonl", "trace_window": 100000}}"#;
+        let cfg = HwConfig::from_json(&Json::parse(src).unwrap()).unwrap();
+        assert_eq!(cfg.sched.trace, TraceSpec::Jsonl("events.jsonl".into()));
+        assert_eq!(cfg.sched.trace_window, 100_000);
+        let j = Json::parse(r#"{"sched": {"trace": "chrome:trace.json"}}"#).unwrap();
+        let cfg = HwConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.sched.trace, TraceSpec::Chrome("trace.json".into()));
+        let j = Json::parse(r#"{"sched": {"trace": "off"}}"#).unwrap();
+        assert_eq!(HwConfig::from_json(&j).unwrap().sched.trace, TraceSpec::Off);
+        let cfg = HwConfig::paper_baseline().with_trace("jsonl:x.jsonl").with_trace_window(500);
+        assert_eq!(cfg.sched.trace, TraceSpec::Jsonl("x.jsonl".into()));
+        assert_eq!(cfg.sched.trace_window, 500);
+        // Unknown formats, empty paths, mistyped values and typo'd keys
+        // are rejected loudly, like every other sched key.
+        for bad in [
+            r#"{"sched": {"trace": "perfetto:x"}}"#,
+            r#"{"sched": {"trace": "jsonl:"}}"#,
+            r#"{"sched": {"trace": "chrome:"}}"#,
+            r#"{"sched": {"trace": 1}}"#,
+            r#"{"sched": {"trce": "off"}}"#,
+            r#"{"sched": {"trace_window": -1}}"#,
+            r#"{"sched": {"trace_window": 2.5}}"#,
+            r#"{"sched": {"trace_window": 9007199254740993}}"#,
+            r#"{"sched": {"trace_window": "100"}}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(HwConfig::from_json(&j).is_err(), "accepted {bad}");
+        }
+        // A number where the trace spec string is required names the
+        // expectation.
+        let j = Json::parse(r#"{"sched": {"trace": 1}}"#).unwrap();
         let err = HwConfig::from_json(&j).unwrap_err().to_string();
         assert!(err.contains("must be a string"), "{err}");
     }

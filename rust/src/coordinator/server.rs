@@ -58,7 +58,9 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use super::generation::PimGptSystem;
+use crate::sim::stats::Percentiles;
 use crate::sim::{LatencyReport, MultiSim, StreamOutcome, StreamSpec};
+use crate::util::json::Json;
 use anyhow::{anyhow, Result};
 
 /// A generation request.
@@ -106,7 +108,7 @@ pub struct Response {
 }
 
 /// Aggregate serving metrics.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct ServerMetrics {
     pub requests: u64,
     pub failed: u64,
@@ -181,6 +183,11 @@ pub struct ServerMetrics {
     /// (`StreamResult::ttft_cycles`). `None` for FIFO/functional
     /// serving and runs that completed no stream.
     pub latency: Option<LatencyReport>,
+    /// Rendered trace artifact `(path, contents)` when the run was
+    /// traced (`sched.trace` / `serve --trace`); the engine never does
+    /// IO, so the caller writes the file. `None` with tracing off and
+    /// for FIFO/functional serving.
+    pub trace: Option<(String, String)>,
 }
 
 impl ServerMetrics {
@@ -211,6 +218,64 @@ impl ServerMetrics {
         } else {
             self.sim_tokens_per_s()
         }
+    }
+
+    /// The full metrics as machine-readable JSON (`serve
+    /// --metrics-json`): every aggregate counter, the derived
+    /// throughputs, and the latency percentiles (`null` when the run
+    /// recorded none). The trace artifact itself is not embedded —
+    /// only its output path, when tracing was on.
+    pub fn to_json(&self) -> Json {
+        let pct = |p: &Percentiles| {
+            Json::obj(vec![
+                ("p50", p.p50.into()),
+                ("p95", p.p95.into()),
+                ("p99", p.p99.into()),
+                ("max", p.max.into()),
+            ])
+        };
+        let latency = match &self.latency {
+            Some(l) => Json::obj(vec![
+                ("queue", pct(&l.queue)),
+                ("ttft", pct(&l.ttft)),
+                ("e2e", pct(&l.e2e)),
+            ]),
+            None => Json::Null,
+        };
+        let trace_path = match &self.trace {
+            Some((path, _)) => Json::from(path.clone()),
+            None => Json::Null,
+        };
+        Json::obj(vec![
+            ("requests", self.requests.into()),
+            ("failed", self.failed.into()),
+            ("tokens", self.tokens.into()),
+            ("sim_seconds", self.sim_seconds.into()),
+            ("wall_seconds", self.wall_seconds.into()),
+            ("sim_makespan_seconds", self.sim_makespan_seconds.into()),
+            ("sim_busy_seconds", self.sim_busy_seconds.into()),
+            ("sim_prefill_seconds", self.sim_prefill_seconds.into()),
+            ("sim_decode_seconds", self.sim_decode_seconds.into()),
+            ("sim_tokens_per_s", self.sim_tokens_per_s().into()),
+            ("sim_tokens_per_busy_s", self.sim_tokens_per_busy_s().into()),
+            ("fused_sweeps", self.fused_sweeps.into()),
+            ("mean_decode_batch", self.mean_decode_batch.into()),
+            ("max_decode_batch", self.max_decode_batch.into()),
+            ("solo_decode_steps", self.solo_decode_steps.into()),
+            ("kv_slots", self.kv_slots.into()),
+            ("peak_slots_in_use", self.peak_slots_in_use.into()),
+            ("admission_blocked", self.admission_blocked.into()),
+            ("kv_pages", self.kv_pages.into()),
+            ("peak_pages_in_use", self.peak_pages_in_use.into()),
+            ("page_faults", self.page_faults.into()),
+            ("preemptions", self.preemptions.into()),
+            ("evicted_tokens", self.evicted_tokens.into()),
+            ("rejected", self.rejected.into()),
+            ("devices", self.devices.into()),
+            ("link_transfer_cycles", self.link_transfer_cycles.into()),
+            ("latency", latency),
+            ("trace_path", trace_path),
+        ])
     }
 }
 
@@ -260,8 +325,8 @@ impl Server {
     /// stay available via `recv()`. A panicked worker is reported on
     /// stderr and yields default (all-zero) metrics.
     pub fn shutdown(&mut self) -> ServerMetrics {
-        if let Some(m) = self.done {
-            return m;
+        if let Some(m) = &self.done {
+            return m.clone();
         }
         drop(self.tx.take());
         let m = match self.worker.take().map(|w| w.join()) {
@@ -272,7 +337,7 @@ impl Server {
             }
             None => ServerMetrics::default(),
         };
-        self.done = Some(m);
+        self.done = Some(m.clone());
         m
     }
 }
@@ -569,6 +634,7 @@ fn interleaved_loop(
     metrics.devices = msim.stats.devices.max(1);
     metrics.link_transfer_cycles = msim.stats.link_transfer_cycles;
     metrics.latency = msim.stats.latency_report();
+    metrics.trace = msim.render_trace();
     Ok(())
 }
 
@@ -986,5 +1052,69 @@ mod tests {
         let srf = run("srf");
         assert_eq!(fcfs.tokens, srf.tokens);
         assert_eq!(srf.rejected, 0);
+    }
+
+    /// `--metrics-json` satellite: the dump round-trips through the
+    /// repo's own JSON parser and carries the headline counters and
+    /// the latency percentiles.
+    #[test]
+    fn metrics_json_round_trips() {
+        let mut s = server_k("gpt-nano", 2);
+        for id in 0..3 {
+            s.submit(Request { id, prompt: vec![1, 2], n_new: 2, arrival_cycle: 0 }).unwrap();
+        }
+        for _ in 0..3 {
+            assert!(s.recv().unwrap().error.is_none());
+        }
+        let m = s.shutdown();
+        let parsed = Json::parse(&m.to_json().to_string()).expect("metrics JSON parses");
+        assert_eq!(parsed.get("requests").and_then(|j| j.as_f64()), Some(3.0));
+        assert_eq!(parsed.get("tokens").and_then(|j| j.as_f64()), Some(12.0));
+        assert_eq!(parsed.get("trace_path"), Some(&Json::Null), "untraced run");
+        let lat = parsed.get("latency").expect("latency key present");
+        assert!(
+            lat.get("ttft").and_then(|t| t.get("p50")).and_then(|j| j.as_f64()).unwrap() > 0.0
+        );
+    }
+
+    /// Traced serving: the worker renders the artifact through the
+    /// metrics (the engine never writes files), every JSONL line
+    /// parses, and the traced run's simulated results are identical to
+    /// the untraced run's (observer-effect-free).
+    #[test]
+    fn traced_serving_returns_artifact_without_perturbing_results() {
+        let run = |trace: bool| {
+            let mut s = Server::start(move || {
+                let m = by_name("gpt-nano").unwrap();
+                let mut cfg = HwConfig::paper_baseline().with_max_streams(2);
+                if trace {
+                    cfg = cfg.with_trace("jsonl:t.jsonl");
+                }
+                PimGptSystem::timing_only(&m, &cfg)
+            });
+            for id in 0..3 {
+                s.submit(Request { id, prompt: vec![1, 2], n_new: 3, arrival_cycle: 0 })
+                    .unwrap();
+            }
+            let mut sims = Vec::new();
+            for _ in 0..3 {
+                let r = s.recv().unwrap();
+                assert!(r.error.is_none());
+                sims.push((r.id, r.sim_seconds.to_bits(), r.sim_queue_seconds.to_bits()));
+            }
+            sims.sort_unstable();
+            (s.shutdown(), sims)
+        };
+        let (plain, plain_sims) = run(false);
+        let (traced, traced_sims) = run(true);
+        assert_eq!(plain_sims, traced_sims, "tracing must not change simulated results");
+        assert_eq!(plain.sim_makespan_seconds.to_bits(), traced.sim_makespan_seconds.to_bits());
+        assert!(plain.trace.is_none());
+        let (path, contents) = traced.trace.expect("traced run returns the artifact");
+        assert_eq!(path, "t.jsonl");
+        assert!(!contents.is_empty());
+        for line in contents.lines() {
+            Json::parse(line).expect("every trace line is one JSON event");
+        }
     }
 }

@@ -24,7 +24,7 @@ use pim_gpt::energy::SystemEnergy;
 use pim_gpt::model::gpt::by_name;
 use pim_gpt::report;
 use pim_gpt::sim::arrivals::{self, ArrivalSpec};
-use pim_gpt::sim::Simulator;
+use pim_gpt::sim::{validate_chrome, Simulator, TraceSpec};
 use pim_gpt::util::table::fmt_time_s;
 
 /// A parsed flag: bare (`--json`) or valued (`--tokens 64`,
@@ -170,11 +170,12 @@ USAGE:
   pim-gpt info     [--config FILE]
   pim-gpt simulate --model NAME [--tokens N] [--config FILE] [--json]
   pim-gpt figures  [--fig 1|8|10|11|12|13|14|15|t1|t2|serving|policies|prefill|batching|
-                    paging|sharding|all] [--tokens N] [--models A,B]
+                    paging|sharding|timeline|all] [--tokens N] [--models A,B]
   pim-gpt generate --model gpt-nano|gpt-mini [--artifacts DIR] [--prompt 1,2,3] [--n N]
   pim-gpt serve    --model NAME [--requests N] [--concurrency K] [--arrivals SPEC]
                    [--policy SPEC] [--seed N] [--prompt-tokens P] [--batch-decode on|off]
-                   [--kv-paging on|off] [--artifacts DIR]
+                   [--kv-paging on|off] [--trace SPEC] [--metrics-json FILE]
+                   [--artifacts DIR]
 
 ARRIVALS (open-loop serving; latencies report p50/p95/p99 from arrival):
   batch (default) | fixed:<cycles> | poisson:<req/s> | trace:<file.json>
@@ -209,6 +210,16 @@ MULTI-DEVICE SHARDING (sched.devices / sched.partition in --config):
   with interconnect modeled from sched.link_gbit_s / sched.link_hop_cycles
   and charged explicitly. devices = 1 (default) is cycle-identical to the
   single-package engine; see figures --fig sharding.
+
+TRACING (sched.trace / sched.trace_window in --config, or serve --trace SPEC):
+  SPEC = off | jsonl:<path> | chrome:<path>. Records every lifecycle edge
+  (submit/release/admit/reject, prefill chunks, decode steps, fused sweeps,
+  page faults, evictions, writebacks/restores, retires, link transfers) as a
+  JSONL event log or a Perfetto-loadable Chrome trace (streams = tracks).
+  Deterministic and observer-effect-free: tracing never changes a simulated
+  cycle. sched.trace_window > 0 additionally bins a busy/idle/link/pages
+  utilization timeline into the stats — see figures --fig timeline.
+  serve --metrics-json FILE dumps the full aggregate ServerMetrics as JSON.
 
 POLICY (scheduling; sched.policy / sched.slo_ttft_cycles in --config):
   fcfs (default) | srf | fair | slo[:<ttft-cycles>]
@@ -339,6 +350,9 @@ fn cmd_figures(args: &Args) -> Result<()> {
     if all || which == "sharding" {
         reports.push(report::fig_sharding(tokens.min(8), &models)?);
     }
+    if all || which == "timeline" {
+        reports.push(report::fig_timeline(tokens.min(8), &models)?);
+    }
     if reports.is_empty() {
         bail!("unknown figure '{which}'");
     }
@@ -388,6 +402,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "prompt-tokens",
             "batch-decode",
             "kv-paging",
+            "trace",
+            "metrics-json",
             "artifacts",
             "config",
         ],
@@ -423,6 +439,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "off" => false,
             other => bail!("--kv-paging must be 'on' or 'off', got '{other}'"),
         };
+    }
+    if let Some(spec) = args.get("trace")? {
+        cfg.sched.trace = TraceSpec::parse(spec)?;
     }
     // Build the whole request trace up front: arrivals are *simulated*
     // cycles, so the set is known before serving starts. The worker is
@@ -607,13 +626,36 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!("policy {}: rejected {}", cfg.sched.policy, m.rejected);
     }
     // Open-loop tail latency, measured from each request's arrival.
-    if let Some(lat) = m.latency {
+    if let Some(lat) = &m.latency {
         let t = |cycles: u64| fmt_time_s(cycles as f64 / (cfg.gddr6.freq_ghz * 1e9));
         println!("arrivals {} (seed {})", cfg.sched.arrival, cfg.sched.seed);
         println!("latency (simulated)   p50 / p95 / p99");
         println!("  queue     {} / {} / {}", t(lat.queue.p50), t(lat.queue.p95), t(lat.queue.p99));
         println!("  ttft      {} / {} / {}", t(lat.ttft.p50), t(lat.ttft.p95), t(lat.ttft.p99));
         println!("  e2e       {} / {} / {}", t(lat.e2e.p50), t(lat.e2e.p95), t(lat.e2e.p99));
+    }
+    // Trace artifact: the engine renders it in memory (it never does
+    // IO); write it here, validating Chrome traces before they land.
+    if let Some((path, contents)) = &m.trace {
+        let summary = match &cfg.sched.trace {
+            TraceSpec::Chrome(_) => {
+                let events = validate_chrome(contents)
+                    .map_err(|e| anyhow!("chrome trace failed validation: {e}"))?;
+                format!("{events} events (chrome)")
+            }
+            _ => format!("{} events (jsonl)", contents.lines().count()),
+        };
+        std::fs::write(path, contents)
+            .map_err(|e| anyhow!("writing trace to '{path}': {e}"))?;
+        println!("trace: {summary} -> {path}");
+    } else if cfg.sched.trace != TraceSpec::Off {
+        // Functional (FIFO) serving has no interleaved engine to trace.
+        eprintln!("pim-gpt serve: no trace produced (functional serving is untraced)");
+    }
+    if let Some(path) = args.get("metrics-json")? {
+        std::fs::write(path, format!("{}\n", m.to_json()))
+            .map_err(|e| anyhow!("writing metrics to '{path}': {e}"))?;
+        println!("metrics json -> {path}");
     }
     Ok(())
 }

@@ -56,6 +56,7 @@ use super::prefill;
 use super::resources::{empty_plan, IssueCtx, Resources};
 use super::sched::{MultiSim, StreamOutcome, StreamResult, StreamSpec};
 use super::stats::{SimStats, StreamStats};
+use super::trace::{TraceCounts, TraceEvent, TraceSink, Tracer};
 use crate::asic::AsicOp;
 use crate::compiler::{compile, Instr, Program};
 use crate::config::HwConfig;
@@ -143,6 +144,33 @@ impl FleetSim {
             Inner::Multi(f) => f.finalize_stats(),
         }
     }
+
+    /// Replace the trace sink (test harnesses; keeps the configured
+    /// spec and timeline window).
+    pub fn set_trace_sink(&mut self, sink: Box<dyn TraceSink>) {
+        match &mut self.inner {
+            Inner::Single(ms) => ms.set_trace_sink(sink),
+            Inner::Multi(f) => f.trace.set_sink(sink),
+        }
+    }
+
+    /// Reconciliation tallies of every event emitted so far.
+    pub fn trace_counts(&self) -> &TraceCounts {
+        match &self.inner {
+            Inner::Single(ms) => ms.trace_counts(),
+            Inner::Multi(f) => f.trace.counts(),
+        }
+    }
+
+    /// Render the configured trace artifact as `(path, contents)`;
+    /// `None` when tracing is off. The engine never touches the
+    /// filesystem — the caller writes the file.
+    pub fn render_trace(&mut self) -> Option<(String, String)> {
+        match &mut self.inner {
+            Inner::Single(ms) => ms.render_trace(),
+            Inner::Multi(f) => f.trace.render(),
+        }
+    }
 }
 
 /// Memoized exact cost of one device's step program.
@@ -209,6 +237,9 @@ struct FleetEngine {
     slot_used: Vec<bool>,
     stats: SimStats,
     link_cycles: u64,
+    /// Event tracing + windowed timeline (`sched.trace{,_window}`);
+    /// off by default — one dead branch per lifecycle edge.
+    trace: Tracer,
 }
 
 impl FleetEngine {
@@ -264,6 +295,7 @@ impl FleetEngine {
             stats: SimStats::default(),
             partition,
             link_cycles: 0,
+            trace: Tracer::new(cfg.sched.trace.clone(), cfg.sched.trace_window),
         })
     }
 
@@ -297,6 +329,13 @@ impl FleetEngine {
                 );
             }
         }
+        self.trace.emit(|| TraceEvent::Submit {
+            stream: spec.id,
+            at: self.clock,
+            arrival: spec.arrival_cycle,
+            prompt_tokens: spec.prompt_tokens,
+            tokens: spec.n_tokens,
+        });
         self.queued.push(spec);
         self.queued.sort_by_key(|s| (s.arrival_cycle, s.id));
         Ok(())
@@ -334,10 +373,21 @@ impl FleetEngine {
             s.frames_held = need;
             s.ready = s.ready.max(self.clock);
             // Modeled KV restore onto every device's channel buses.
+            let restore_start = self.clock;
+            let mut restore_done = restore_start;
             for dev in 0..self.devices.len() {
                 let wb = self.device_kv_transfer_cycles(dev, s.pos);
                 self.devices[dev].free_at = self.devices[dev].free_at.max(self.clock) + wb;
+                restore_done = restore_done.max(self.devices[dev].free_at);
             }
+            let (rid, rpos) = (s.spec.id, s.pos);
+            self.trace.emit(|| TraceEvent::Restore {
+                stream: rid,
+                start: restore_start,
+                finish: restore_done,
+                tokens: rpos,
+            });
+            self.sample_pages();
             self.active.push(s);
         }
         // Strict arrival-order admission: a blocked head of line blocks
@@ -371,6 +421,13 @@ impl FleetEngine {
                 (slot, 0)
             };
             let admitted_cycle = self.clock.max(spec.arrival_cycle);
+            self.trace.emit(|| TraceEvent::Release { stream: spec.id, at: admitted_cycle });
+            self.trace.emit(|| TraceEvent::Admit {
+                stream: spec.id,
+                at: admitted_cycle,
+                slot: slot as u64,
+            });
+            self.sample_pages();
             self.active.push(FleetStream {
                 spec,
                 pos: 0,
@@ -541,14 +598,16 @@ impl FleetEngine {
             let wm_frames = ((self.pool as f64) * wm).floor() as usize;
             while wm_frames > 0
                 && self.frames_free < wm_frames
-                && self.evict_victim(protected)
+                && self.evict_victim(protected, id)
             {}
         }
         let need = self.frames_for(ltoken);
         while self.active[self.idx_of(id)].frames_held < need {
             if self.frames_free == 0 {
                 self.stats.page_faults += 1;
-                if !self.evict_victim(protected) {
+                let at = self.clock;
+                self.trace.emit(|| TraceEvent::PageFault { stream: id, at });
+                if !self.evict_victim(protected, id) {
                     // Every peer is protected (e.g. the whole active set
                     // fused into this batch): run short — the step cost
                     // depends on `ltoken`, not frame identity, and the
@@ -563,13 +622,25 @@ impl FleetEngine {
         }
         let in_use = (self.pool - self.frames_free) as u64;
         self.stats.peak_pages_in_use = self.stats.peak_pages_in_use.max(in_use);
+        self.sample_pages();
+    }
+
+    /// Timeline hook: record the current frame occupancy at the engine
+    /// clock (no-op in slot mode or unless `sched.trace_window > 0`).
+    fn sample_pages(&mut self) {
+        if self.page_tokens.is_some() {
+            let in_use = (self.pool - self.frames_free) as u64;
+            self.trace.pages_sample(self.clock, in_use);
+        }
     }
 
     /// Evict one active stream (not in `protected`) chosen by the pick
     /// policy; returns false if none is evictable. The victim's frames
     /// return to the pool, its KV writes back on every device's
-    /// channel buses, and it re-queues ahead of fresh arrivals.
-    fn evict_victim(&mut self, protected: &[u64]) -> bool {
+    /// channel buses, and it re-queues ahead of fresh arrivals. `by`
+    /// is the growing stream whose allocation forced the eviction
+    /// (trace attribution only).
+    fn evict_victim(&mut self, protected: &[u64], by: u64) -> bool {
         let candidates: Vec<(usize, IssueCandidate)> = self
             .active
             .iter()
@@ -598,10 +669,22 @@ impl FleetEngine {
         s.frames_held = 0;
         self.stats.preemptions += 1;
         self.stats.evicted_tokens += s.pos;
+        let wb_start = self.clock;
+        let mut wb_done = wb_start;
         for dev in 0..self.devices.len() {
             let wb = self.device_kv_transfer_cycles(dev, s.pos);
             self.devices[dev].free_at = self.devices[dev].free_at.max(self.clock) + wb;
+            wb_done = wb_done.max(self.devices[dev].free_at);
         }
+        let (vid, vpos) = (s.spec.id, s.pos);
+        self.trace.emit(|| TraceEvent::Evict { victim: vid, by, at: wb_start, tokens: vpos });
+        self.trace.emit(|| TraceEvent::Writeback {
+            stream: vid,
+            start: wb_start,
+            finish: wb_done,
+            tokens: vpos,
+        });
+        self.sample_pages();
         self.preempted.push(s);
         self.preempted.sort_by_key(|s| (s.ready, s.spec.id));
         true
@@ -637,6 +720,15 @@ impl FleetEngine {
                     if dev + 1 < n {
                         let hop = self.partition.stage_hop_cycles(&self.cfg, passes * k);
                         self.link_cycles += hop;
+                        let lead = batch[0];
+                        self.trace.emit(|| TraceEvent::LinkTransfer {
+                            stream: lead,
+                            src: dev as u64,
+                            dst: (dev + 1) as u64,
+                            start: fin,
+                            finish: fin + hop,
+                        });
+                        self.trace.link_cycles(fin, hop);
                         acts_at = fin + hop;
                     }
                 }
@@ -662,6 +754,18 @@ impl FleetEngine {
                 let link = self.partition.step_link_cycles(&self.cfg, passes * k);
                 self.link_cycles += link;
                 let fin = start + worst + link;
+                // The all-reduce + gather involves every device; it is
+                // rendered as one collective span on device 0's link
+                // track (src 0 -> last device).
+                let lead = batch[0];
+                self.trace.emit(|| TraceEvent::LinkTransfer {
+                    stream: lead,
+                    src: 0,
+                    dst: (n - 1) as u64,
+                    start: start + worst,
+                    finish: fin,
+                });
+                self.trace.link_cycles(start + worst, link);
                 for d in &mut self.devices {
                     d.free_at = fin;
                 }
@@ -669,6 +773,43 @@ impl FleetEngine {
             }
         };
         let started = ready;
+        // Step span (before member updates advance `pos`): a fused
+        // sweep for multi-member batches, a prefill chunk or solo
+        // decode step otherwise. Fleet steps span every device; the
+        // span is attributed to device 0 (see sim/README.md).
+        if self.trace.is_on() {
+            let lead = batch[0];
+            let in_prefill = {
+                let s = &self.active[self.idx_of(lead)];
+                s.pos < s.spec.prompt_tokens
+            };
+            if batch.len() > 1 {
+                let ids = batch.to_vec();
+                self.trace.emit(move || TraceEvent::FusedSweep {
+                    device: 0,
+                    start: started,
+                    finish,
+                    streams: ids,
+                });
+            } else if in_prefill {
+                self.trace.emit(|| TraceEvent::PrefillChunk {
+                    stream: lead,
+                    device: 0,
+                    start: started,
+                    finish,
+                    pos,
+                    positions: passes,
+                });
+            } else {
+                self.trace.emit(|| TraceEvent::DecodeStep {
+                    stream: lead,
+                    device: 0,
+                    start: started,
+                    finish,
+                    pos,
+                });
+            }
+        }
         for &id in batch {
             let i = self.idx_of(id);
             let s = &mut self.active[i];
@@ -698,9 +839,13 @@ impl FleetEngine {
             if self.page_tokens.is_some() {
                 self.frames_free += s.frames_held;
                 self.admit_frames_left += self.admit_commit(&s.spec);
+                self.sample_pages();
             } else {
                 self.slot_used[s.slot] = false;
             }
+            let (rid, rtok) = (s.spec.id, s.spec.n_tokens);
+            let rat = finish.max(*s.token_finishes.last().unwrap_or(&finish));
+            self.trace.emit(|| TraceEvent::StreamRetire { stream: rid, at: rat, tokens: rtok });
             let result = StreamResult {
                 id: s.spec.id,
                 arrival_cycle: s.spec.arrival_cycle,
@@ -737,6 +882,7 @@ impl FleetEngine {
                     .expect("non-empty");
                 let next = next.max(self.clock + 1);
                 self.stats.idle_cycles += next - self.clock;
+                self.trace.idle_span(self.clock, next);
                 self.clock = next;
                 continue;
             }
@@ -801,6 +947,11 @@ impl FleetEngine {
             self.stats.kv_pages = self.pool as u64;
         }
         self.stats.streams.sort_by_key(|s| s.id);
+        self.stats.timeline = self.trace.finish_timeline(self.clock);
+        #[cfg(debug_assertions)]
+        if let Err(e) = self.trace.reconcile(&self.stats) {
+            panic!("fleet trace reconciliation failed: {e}");
+        }
         &self.stats
     }
 }

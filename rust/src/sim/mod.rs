@@ -22,7 +22,11 @@
 //! batch. With `sched.devices > 1`, [`fleet`] partitions the model
 //! across several PIM packages (layer-pipeline or tensor-parallel, see
 //! `mapping::partition`) and composes calibrated per-device step costs
-//! with modeled interconnect transfers. See `sim/README.md`.
+//! with modeled interconnect transfers. Every lifecycle edge in both
+//! engines can be recorded by the deterministic event-tracing layer in
+//! [`trace`] (`sched.trace = off|jsonl:<path>|chrome:<path>`), which
+//! also bins a windowed utilization timeline into `SimStats` when
+//! `sched.trace_window > 0`. See `sim/README.md`.
 
 pub mod arrivals;
 pub mod engine;
@@ -32,6 +36,7 @@ pub mod prefill;
 pub mod resources;
 pub mod sched;
 pub mod stats;
+pub mod trace;
 
 pub use arrivals::{ArrivalSpec, TraceRequest};
 pub use engine::{Simulator, StepResult};
@@ -41,3 +46,7 @@ pub use prefill::Chunk;
 pub use resources::Resources;
 pub use sched::{MultiSim, RejectedStream, StreamOutcome, StreamResult, StreamSpec};
 pub use stats::{LatClass, LatencyReport, Percentiles, SimStats, StreamStats};
+pub use trace::{
+    validate_chrome, ChromeSink, JsonlSink, NullSink, TraceCounts, TraceEvent, TraceSink,
+    TraceSpec, TraceWindow, Tracer,
+};

@@ -124,6 +124,7 @@ use super::policy::{self, AdmissionDecision, AdmissionPolicy, IssueCandidate, Pi
 use super::prefill;
 use super::resources::{empty_plan, IssueCtx, Resources};
 use super::stats::{SimStats, StreamStats};
+use super::trace::{TraceEvent, Tracer};
 use crate::compiler::{PosRegime, ProgramCache, ProgramTemplate};
 use crate::config::HwConfig;
 use crate::dram::TimingCycles;
@@ -459,6 +460,11 @@ pub struct MultiSim {
     /// Preempted streams awaiting re-admission, in eviction order.
     /// Re-admission has priority over the fresh queue.
     evicted: VecDeque<EvictedStream>,
+    /// Event tracing + utilization timeline (`sim::trace`). Off (the
+    /// default, `cfg.sched.trace = off` and `trace_window = 0`) costs
+    /// one branch per emission site and never allocates; on, sinks are
+    /// pure observers — no simulated cycle ever depends on them.
+    trace: Tracer,
 }
 
 impl MultiSim {
@@ -516,7 +522,28 @@ impl MultiSim {
             frame_free_at: vec![0; n_frames],
             committed_frames: 0,
             evicted: VecDeque::new(),
+            trace: Tracer::new(cfg.sched.trace.clone(), cfg.sched.trace_window),
         }
+    }
+
+    /// Attach a trace sink directly (test harnesses; runs normally use
+    /// `cfg.sched.trace`). The sink observes — it can never perturb
+    /// scheduling.
+    pub fn set_trace_sink(&mut self, sink: Box<dyn super::trace::TraceSink>) {
+        self.trace.set_sink(sink);
+    }
+
+    /// Traced event tallies (all zero when tracing is off) — the
+    /// reconciliation source checked against `SimStats` at finalize.
+    pub fn trace_counts(&self) -> &super::trace::TraceCounts {
+        self.trace.counts()
+    }
+
+    /// Render the trace artifact: `(path, contents)` when a sink is
+    /// attached via config. Call after the run; the caller writes the
+    /// file (engines never touch the filesystem).
+    pub fn render_trace(&mut self) -> Option<(String, String)> {
+        self.trace.render()
     }
 
     /// Effective concurrency cap: the number of disjoint KV slots the
@@ -639,6 +666,13 @@ impl MultiSim {
                 );
             }
         }
+        self.trace.emit(|| TraceEvent::Submit {
+            stream: spec.id,
+            at: self.now,
+            arrival: spec.arrival_cycle,
+            prompt_tokens: spec.prompt_tokens,
+            tokens: spec.n_tokens,
+        });
         // Keep pending sorted by (arrival, submit order): stable insert
         // behind every entry arriving at or before this one (O(1) for
         // traces already in arrival order).
@@ -652,6 +686,7 @@ impl MultiSim {
     fn release_arrivals(&mut self) {
         while self.next_arrival().is_some_and(|a| a <= self.now) {
             let spec = self.pending.pop_front().expect("checked non-empty");
+            self.trace.emit(|| TraceEvent::Release { stream: spec.id, at: self.now });
             self.queue.push_back(spec);
         }
     }
@@ -790,6 +825,8 @@ impl MultiSim {
             }
             if self.free_frames.is_empty() {
                 self.stats.page_faults += 1;
+                let (faulter, at) = (self.active[si].id, self.now);
+                self.trace.emit(|| TraceEvent::PageFault { stream: faulter, at });
                 self.evict_victim(slot)?;
             }
             let (frames, free_at) =
@@ -799,8 +836,17 @@ impl MultiSim {
             s.pages.push(frames[0]);
             s.step_start = s.step_start.max(free_at);
             s.step_finish = s.step_finish.max(s.step_start);
+            let at = self.active[si].step_start;
+            self.sample_pages(at);
         }
         Ok(())
+    }
+
+    /// Timeline hook: record the current frame occupancy at cycle `at`
+    /// (no-op unless `sched.trace_window > 0`).
+    fn sample_pages(&mut self, at: u64) {
+        let in_use = (self.n_frames - self.free_frames.len()) as u64;
+        self.trace.pages_sample(at, in_use);
     }
 
     /// Whether a stream other than `faulting_slot`'s could be preempted
@@ -886,6 +932,20 @@ impl MultiSim {
         self.committed_frames -= self.mapping.kv.frames_for(v.end_pos) as u64;
         self.stats.preemptions += 1;
         self.stats.evicted_tokens += v.pos;
+        let by = self.stream_by_slot(faulting_slot).id;
+        self.trace.emit(|| TraceEvent::Evict {
+            victim: v.id,
+            by,
+            at: v.step_finish,
+            tokens: v.pos,
+        });
+        self.trace.emit(|| TraceEvent::Writeback {
+            stream: v.id,
+            start: v.step_finish,
+            finish: done,
+            tokens: v.pos,
+        });
+        self.sample_pages(done);
         self.evicted.push_back(EvictedStream {
             id: v.id,
             end_pos: v.end_pos,
@@ -913,6 +973,7 @@ impl MultiSim {
         }
         if self.cfg.sched.kv_paging {
             self.committed_frames -= self.mapping.kv.frames_for(s.end_pos) as u64;
+            self.sample_pages(s.step_finish);
         }
     }
 
@@ -973,6 +1034,13 @@ impl MultiSim {
                 e.ready_at.max(self.slot_free_at[slot]).max(frames_free_at);
             let step_start = restore_start + self.kv_transfer_cycles(e.pos);
             self.committed_frames += need_total;
+            self.trace.emit(|| TraceEvent::Restore {
+                stream: e.id,
+                start: restore_start,
+                finish: step_start,
+                tokens: e.pos,
+            });
+            self.sample_pages(step_start);
             self.active.push(Stream {
                 id: e.id,
                 tpl,
@@ -1108,7 +1176,13 @@ impl MultiSim {
                         self.take_frames(&first_frames);
                         self.committed_frames +=
                             self.mapping.kv.frames_for(spec.n_tokens) as u64;
+                        self.sample_pages(admitted);
                     }
+                    self.trace.emit(|| TraceEvent::Admit {
+                        stream: spec.id,
+                        at: admitted,
+                        slot: slot as u64,
+                    });
                     self.active.push(Stream {
                         id: spec.id,
                         tpl,
@@ -1134,6 +1208,12 @@ impl MultiSim {
                 }
                 AdmissionDecision::Reject { predicted_ttft_cycles, ttft_budget_cycles } => {
                     self.stats.rejected += 1;
+                    self.trace.emit(|| TraceEvent::Reject {
+                        stream: spec.id,
+                        at: admitted,
+                        predicted_ttft: predicted_ttft_cycles,
+                        ttft_budget: ttft_budget_cycles,
+                    });
                     self.rejections.push_back(RejectedStream {
                         id: spec.id,
                         arrival_cycle: spec.arrival_cycle,
@@ -1419,6 +1499,19 @@ impl MultiSim {
         self.stats.fused_streams += members.len() as u64;
         self.stats.max_decode_batch = self.stats.max_decode_batch.max(members.len() as u64);
         self.stats.tokens += members.len() as u64;
+        if self.trace.is_on() {
+            let ids: Vec<u64> = members.iter().map(|&mi| self.active[mi].id).collect();
+            let start =
+                members.iter().map(|&mi| self.active[mi].step_start).min().unwrap_or(0);
+            let finish =
+                members.iter().map(|&mi| self.active[mi].step_finish).max().unwrap_or(0);
+            self.trace.emit(move || TraceEvent::FusedSweep {
+                device: 0,
+                start,
+                finish,
+                streams: ids,
+            });
+        }
         let mut finished_slots = Vec::new();
         let mut survivor_slots = Vec::new();
         for &mi in &members {
@@ -1446,6 +1539,8 @@ impl MultiSim {
             let s = self.active.remove(si);
             self.release_stream_kv(&s);
             self.now = self.now.max(s.step_finish);
+            let (rid, rat, rtok) = (s.id, s.step_finish, s.token_finishes.len() as u64);
+            self.trace.emit(|| TraceEvent::StreamRetire { stream: rid, at: rat, tokens: rtok });
             let result = StreamResult {
                 id: s.id,
                 arrival_cycle: s.arrival,
@@ -1531,6 +1626,7 @@ impl MultiSim {
             // engine capacity: count it so busy-cycle throughput can
             // subtract it (`SimStats::busy_cycles`).
             self.stats.idle_cycles += arrival.saturating_sub(self.now);
+            self.trace.idle_span(self.now, arrival);
             self.now = self.now.max(arrival);
             self.release_arrivals();
             self.admit(false)?;
@@ -1689,10 +1785,29 @@ impl MultiSim {
             // finish (its tokens only exist once the whole chunk has
             // run), a decode step completes its single token.
             self.stats.tokens += step_positions;
+            let (sid, step_fin) = {
+                let s = &self.active[si];
+                (s.id, s.step_finish)
+            };
             if pos < self.active[si].prompt_tokens {
                 self.stats.prefill_chunks += 1;
+                self.trace.emit(|| TraceEvent::PrefillChunk {
+                    stream: sid,
+                    device: 0,
+                    start: step_start,
+                    finish: step_fin,
+                    pos,
+                    positions: step_positions,
+                });
             } else {
                 self.stats.solo_decode_steps += 1;
+                self.trace.emit(|| TraceEvent::DecodeStep {
+                    stream: sid,
+                    device: 0,
+                    start: step_start,
+                    finish: step_fin,
+                    pos,
+                });
             }
             let stream_done = {
                 let s = &mut self.active[si];
@@ -1738,6 +1853,8 @@ impl MultiSim {
             let s = self.active.remove(si);
             self.release_stream_kv(&s);
             self.now = self.now.max(s.step_finish);
+            let (rid, rat, rtok) = (s.id, s.step_finish, s.token_finishes.len() as u64);
+            self.trace.emit(|| TraceEvent::StreamRetire { stream: rid, at: rat, tokens: rtok });
             let result = StreamResult {
                 id: s.id,
                 arrival_cycle: s.arrival,
@@ -1777,6 +1894,11 @@ impl MultiSim {
         self.res.fold_stats(&mut self.stats);
         self.stats.program_cache_hits = self.cache.hits;
         self.stats.program_cache_misses = self.cache.misses;
+        self.stats.timeline = self.trace.finish_timeline(self.clock);
+        #[cfg(debug_assertions)]
+        if let Err(e) = self.trace.reconcile(&self.stats) {
+            panic!("trace reconciliation failed: {e}");
+        }
         &self.stats
     }
 

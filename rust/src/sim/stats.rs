@@ -179,6 +179,11 @@ pub struct SimStats {
     /// Per-request-stream attribution (one entry per retired stream;
     /// empty for plain single-program runs).
     pub streams: Vec<StreamStats>,
+    /// Windowed utilization timeline (`sim::trace::Timeline`): one row
+    /// per `sched.trace_window` cycles with busy/idle/link cycles and
+    /// pages-in-use. Empty whenever `trace_window` is 0 (the default),
+    /// so pinned-stats equivalence is unaffected.
+    pub timeline: Vec<super::trace::TraceWindow>,
 }
 
 /// Per-stream share of a multi-request run (`sim::sched::MultiSim`).

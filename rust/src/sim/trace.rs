@@ -1,0 +1,1118 @@
+//! Deterministic event tracing for the cycle-accurate engines.
+//!
+//! `MultiSim` and `FleetSim` aggregate everything into `SimStats` — good
+//! for end-of-run figures, useless for asking *which* stream waited,
+//! *where* (queue vs fault writeback vs link hop) and *when*. This module
+//! adds a structured trace layer that records a typed [`TraceEvent`] at
+//! every request-lifecycle edge:
+//!
+//! | event           | edge                                                |
+//! |-----------------|-----------------------------------------------------|
+//! | `submit`        | request handed to the simulator                     |
+//! | `release`       | arrival cycle reached — pending request became ready|
+//! | `admit`         | scheduler granted a KV slot / page budget           |
+//! | `reject`        | admission policy shed the request (predicted cost)  |
+//! | `prefill_chunk` | one chunked-prefill program span (start/finish)     |
+//! | `decode_step`   | one solo decode-token span                          |
+//! | `fused_sweep`   | one cross-stream batched decode sweep (occupancy)   |
+//! | `page_fault`    | frame demand found the free list empty              |
+//! | `evict`         | victim preempted to resolve a fault                 |
+//! | `writeback`     | victim KV pages drained to host (span)              |
+//! | `restore`       | re-admitted victim's KV pages reloaded (span)       |
+//! | `stream_retire` | last token produced                                 |
+//! | `link_transfer` | inter-device hop in the fleet engine (span)         |
+//!
+//! # Sink contract and determinism rules
+//!
+//! Events flow into a [`TraceSink`]. Sinks are *observers*: they receive
+//! `&TraceEvent`, buffer in memory, and render a `String` artifact after
+//! the run — they cannot mutate the engine, perform IO, read clocks, or
+//! otherwise perturb scheduling. Tracing **on** must not change a single
+//! simulated cycle (pinned by `tests/integration_trace.rs`), and tracing
+//! **off** is a `None` sink — one branch on the hot path, no allocation,
+//! byte-identical to pre-trace behavior.
+//!
+//! Two concrete sinks ship here:
+//! - [`JsonlSink`] — one JSON object per line, the machine-diffable log
+//!   (and the calibration source for the planned fast-path metasim);
+//! - [`ChromeSink`] — a Chrome-trace / Perfetto-loadable export mapping
+//!   streams to tracks (`tid` = stream id, `pid` = device id) and spans
+//!   to begin/end pairs.
+//!
+//! Independently of any sink, [`Tracer`] keeps [`TraceCounts`] — event
+//! tallies that must reconcile exactly with the `SimStats` aggregates
+//! ([`reconcile`]; checked under `debug_assertions` at finalize) — and an
+//! optional windowed utilization [`Timeline`] (`sched.trace_window`)
+//! whose per-window busy/idle/link cycles and pages-in-use land in
+//! `SimStats::timeline` and feed `figures --fig timeline`.
+
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+use super::stats::SimStats;
+use crate::util::json::Json;
+
+/// One typed trace event. Point events carry `at`; span events carry
+/// `start`/`finish` in simulated DRAM cycles. `device` is 0 for every
+/// single-package engine and the fleet's device id otherwise.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TraceEvent {
+    /// Request handed to the simulator front end.
+    Submit { stream: u64, at: u64, arrival: u64, prompt_tokens: u64, tokens: u64 },
+    /// Arrival cycle reached: pending request moved to the ready queue.
+    Release { stream: u64, at: u64 },
+    /// Scheduler admitted the request into a KV slot.
+    Admit { stream: u64, at: u64, slot: u64 },
+    /// Admission policy shed the request, with its predicted cost.
+    Reject { stream: u64, at: u64, predicted_ttft: u64, ttft_budget: u64 },
+    /// One chunked-prefill program: `positions` prompt tokens starting
+    /// at position `pos`.
+    PrefillChunk { stream: u64, device: u64, start: u64, finish: u64, pos: u64, positions: u64 },
+    /// One solo (unfused) decode step producing the token at `pos`.
+    DecodeStep { stream: u64, device: u64, start: u64, finish: u64, pos: u64 },
+    /// One fused decode sweep; `streams` are the batch members
+    /// (occupancy = `streams.len()`), one token each.
+    FusedSweep { device: u64, start: u64, finish: u64, streams: Vec<u64> },
+    /// On-demand frame allocation found the free list empty.
+    PageFault { stream: u64, at: u64 },
+    /// `victim` preempted (by stream `by`) to resolve a fault; `tokens`
+    /// KV positions are scheduled for writeback.
+    Evict { victim: u64, by: u64, at: u64, tokens: u64 },
+    /// Victim KV writeback span on the channel buses.
+    Writeback { stream: u64, start: u64, finish: u64, tokens: u64 },
+    /// Re-admitted victim's KV restore span.
+    Restore { stream: u64, start: u64, finish: u64, tokens: u64 },
+    /// Last token produced; the stream left the engine.
+    StreamRetire { stream: u64, at: u64, tokens: u64 },
+    /// Inter-device activation/reduction hop (fleet engine).
+    LinkTransfer { stream: u64, src: u64, dst: u64, start: u64, finish: u64 },
+}
+
+impl TraceEvent {
+    /// Stable event-type name used by both sinks and the goldens.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceEvent::Submit { .. } => "submit",
+            TraceEvent::Release { .. } => "release",
+            TraceEvent::Admit { .. } => "admit",
+            TraceEvent::Reject { .. } => "reject",
+            TraceEvent::PrefillChunk { .. } => "prefill_chunk",
+            TraceEvent::DecodeStep { .. } => "decode_step",
+            TraceEvent::FusedSweep { .. } => "fused_sweep",
+            TraceEvent::PageFault { .. } => "page_fault",
+            TraceEvent::Evict { .. } => "evict",
+            TraceEvent::Writeback { .. } => "writeback",
+            TraceEvent::Restore { .. } => "restore",
+            TraceEvent::StreamRetire { .. } => "stream_retire",
+            TraceEvent::LinkTransfer { .. } => "link_transfer",
+        }
+    }
+
+    /// JSONL encoding: one flat object, `"ev"` first. Point events use
+    /// `"t"`; span events use `"t0"`/`"t1"`.
+    pub fn to_json(&self) -> Json {
+        let ev = Json::from(self.name());
+        match self {
+            TraceEvent::Submit { stream, at, arrival, prompt_tokens, tokens } => Json::obj(vec![
+                ("ev", ev),
+                ("t", (*at).into()),
+                ("stream", (*stream).into()),
+                ("arrival", (*arrival).into()),
+                ("prompt_tokens", (*prompt_tokens).into()),
+                ("tokens", (*tokens).into()),
+            ]),
+            TraceEvent::Release { stream, at } => {
+                Json::obj(vec![("ev", ev), ("t", (*at).into()), ("stream", (*stream).into())])
+            }
+            TraceEvent::Admit { stream, at, slot } => Json::obj(vec![
+                ("ev", ev),
+                ("t", (*at).into()),
+                ("stream", (*stream).into()),
+                ("slot", (*slot).into()),
+            ]),
+            TraceEvent::Reject { stream, at, predicted_ttft, ttft_budget } => Json::obj(vec![
+                ("ev", ev),
+                ("t", (*at).into()),
+                ("stream", (*stream).into()),
+                ("predicted_ttft", (*predicted_ttft).into()),
+                ("ttft_budget", (*ttft_budget).into()),
+            ]),
+            TraceEvent::PrefillChunk { stream, device, start, finish, pos, positions } => {
+                Json::obj(vec![
+                    ("ev", ev),
+                    ("t0", (*start).into()),
+                    ("t1", (*finish).into()),
+                    ("stream", (*stream).into()),
+                    ("device", (*device).into()),
+                    ("pos", (*pos).into()),
+                    ("positions", (*positions).into()),
+                ])
+            }
+            TraceEvent::DecodeStep { stream, device, start, finish, pos } => Json::obj(vec![
+                ("ev", ev),
+                ("t0", (*start).into()),
+                ("t1", (*finish).into()),
+                ("stream", (*stream).into()),
+                ("device", (*device).into()),
+                ("pos", (*pos).into()),
+            ]),
+            TraceEvent::FusedSweep { device, start, finish, streams } => Json::obj(vec![
+                ("ev", ev),
+                ("t0", (*start).into()),
+                ("t1", (*finish).into()),
+                ("device", (*device).into()),
+                ("batch", streams.len().into()),
+                ("streams", Json::Arr(streams.iter().map(|&s| s.into()).collect())),
+            ]),
+            TraceEvent::PageFault { stream, at } => {
+                Json::obj(vec![("ev", ev), ("t", (*at).into()), ("stream", (*stream).into())])
+            }
+            TraceEvent::Evict { victim, by, at, tokens } => Json::obj(vec![
+                ("ev", ev),
+                ("t", (*at).into()),
+                ("victim", (*victim).into()),
+                ("by", (*by).into()),
+                ("tokens", (*tokens).into()),
+            ]),
+            TraceEvent::Writeback { stream, start, finish, tokens }
+            | TraceEvent::Restore { stream, start, finish, tokens } => Json::obj(vec![
+                ("ev", ev),
+                ("t0", (*start).into()),
+                ("t1", (*finish).into()),
+                ("stream", (*stream).into()),
+                ("tokens", (*tokens).into()),
+            ]),
+            TraceEvent::StreamRetire { stream, at, tokens } => Json::obj(vec![
+                ("ev", ev),
+                ("t", (*at).into()),
+                ("stream", (*stream).into()),
+                ("tokens", (*tokens).into()),
+            ]),
+            TraceEvent::LinkTransfer { stream, src, dst, start, finish } => Json::obj(vec![
+                ("ev", ev),
+                ("t0", (*start).into()),
+                ("t1", (*finish).into()),
+                ("stream", (*stream).into()),
+                ("src", (*src).into()),
+                ("dst", (*dst).into()),
+            ]),
+        }
+    }
+}
+
+/// Observer of the engine's event stream. Implementations buffer in
+/// memory and render a `String` artifact after the run; they must not
+/// perform IO, read clocks, or feed anything back into scheduling (the
+/// engine only ever hands out `&TraceEvent`).
+pub trait TraceSink {
+    fn event(&mut self, ev: &TraceEvent);
+    /// Render the buffered artifact. Called once, after the run; the
+    /// *caller* (CLI/server) writes it to disk so engines stay IO-free.
+    fn render(&mut self) -> String {
+        String::new()
+    }
+}
+
+/// Explicit no-op sink. The engines represent "tracing off" as a `None`
+/// sink (cheaper still: the event is never even constructed), but the
+/// type exists so external harnesses can satisfy the trait explicitly.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NullSink;
+
+impl TraceSink for NullSink {
+    fn event(&mut self, _ev: &TraceEvent) {}
+}
+
+/// JSON-lines event log: one `TraceEvent::to_json` object per line, in
+/// emission order (which is deterministic simulation order).
+#[derive(Debug, Default)]
+pub struct JsonlSink {
+    buf: String,
+    events: u64,
+}
+
+impl JsonlSink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn events(&self) -> u64 {
+        self.events
+    }
+}
+
+impl TraceSink for JsonlSink {
+    fn event(&mut self, ev: &TraceEvent) {
+        self.buf.push_str(&ev.to_json().to_string());
+        self.buf.push('\n');
+        self.events += 1;
+    }
+
+    fn render(&mut self) -> String {
+        std::mem::take(&mut self.buf)
+    }
+}
+
+/// Chrome-trace (catapult / Perfetto) exporter. Streams map to tracks
+/// (`tid` = stream id), devices to processes (`pid`), span events to
+/// `"B"`/`"E"` pairs and point events to thread-scoped instants (`"i"`).
+/// Zero-length spans degrade to instants so every `"B"` always has a
+/// matching later `"E"`. Events are buffered raw and ordered at render
+/// time: per track by timestamp, with ends before begins at equal
+/// stamps (so back-to-back spans never overlap) and longer spans opened
+/// first (so equal-stamp nesting is well-formed).
+#[derive(Debug, Default)]
+pub struct ChromeSink {
+    events: Vec<TraceEvent>,
+}
+
+/// One flattened Chrome event plus its track sort key.
+struct ChromeRow {
+    pid: u64,
+    tid: u64,
+    ts: u64,
+    /// 0 = end, 1 = instant, 2 = begin — ends sort first at equal ts.
+    rank: u8,
+    /// Equal-stamp tiebreak: begins open longest-first, ends close
+    /// latest-started-first.
+    tie: u64,
+    json: Json,
+}
+
+impl ChromeSink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn instant(rows: &mut Vec<ChromeRow>, name: &str, pid: u64, tid: u64, ts: u64, args: Json) {
+        let json = Json::obj(vec![
+            ("name", name.into()),
+            ("ph", "i".into()),
+            ("ts", ts.into()),
+            ("pid", pid.into()),
+            ("tid", tid.into()),
+            ("s", "t".into()),
+            ("args", args),
+        ]);
+        rows.push(ChromeRow { pid, tid, ts, rank: 1, tie: 0, json });
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn span(
+        rows: &mut Vec<ChromeRow>,
+        name: &str,
+        pid: u64,
+        tid: u64,
+        t0: u64,
+        t1: u64,
+        args: Json,
+    ) {
+        if t0 == t1 {
+            Self::instant(rows, name, pid, tid, t0, args);
+            return;
+        }
+        let begin = Json::obj(vec![
+            ("name", name.into()),
+            ("ph", "B".into()),
+            ("ts", t0.into()),
+            ("pid", pid.into()),
+            ("tid", tid.into()),
+            ("args", args),
+        ]);
+        let end = Json::obj(vec![
+            ("name", name.into()),
+            ("ph", "E".into()),
+            ("ts", t1.into()),
+            ("pid", pid.into()),
+            ("tid", tid.into()),
+        ]);
+        // Longer spans open first; later-started spans close first.
+        rows.push(ChromeRow { pid, tid, ts: t0, rank: 2, tie: u64::MAX - t1, json: begin });
+        rows.push(ChromeRow { pid, tid, ts: t1, rank: 0, tie: u64::MAX - t0, json: end });
+    }
+
+    fn flatten(ev: &TraceEvent, rows: &mut Vec<ChromeRow>) {
+        match ev {
+            TraceEvent::Submit { stream, at, arrival, prompt_tokens, tokens } => {
+                let args = Json::obj(vec![
+                    ("arrival", (*arrival).into()),
+                    ("prompt_tokens", (*prompt_tokens).into()),
+                    ("tokens", (*tokens).into()),
+                ]);
+                Self::instant(rows, "submit", 0, *stream, *at, args);
+            }
+            TraceEvent::Release { stream, at } => {
+                Self::instant(rows, "release", 0, *stream, *at, Json::obj(vec![]));
+            }
+            TraceEvent::Admit { stream, at, slot } => {
+                let args = Json::obj(vec![("slot", (*slot).into())]);
+                Self::instant(rows, "admit", 0, *stream, *at, args);
+            }
+            TraceEvent::Reject { stream, at, predicted_ttft, ttft_budget } => {
+                let args = Json::obj(vec![
+                    ("predicted_ttft", (*predicted_ttft).into()),
+                    ("ttft_budget", (*ttft_budget).into()),
+                ]);
+                Self::instant(rows, "reject", 0, *stream, *at, args);
+            }
+            TraceEvent::PrefillChunk { stream, device, start, finish, pos, positions } => {
+                let args =
+                    Json::obj(vec![("pos", (*pos).into()), ("positions", (*positions).into())]);
+                Self::span(rows, "prefill", *device, *stream, *start, *finish, args);
+            }
+            TraceEvent::DecodeStep { stream, device, start, finish, pos } => {
+                let args = Json::obj(vec![("pos", (*pos).into())]);
+                Self::span(rows, "decode", *device, *stream, *start, *finish, args);
+            }
+            TraceEvent::FusedSweep { device, start, finish, streams } => {
+                // One span per member on its own track, labelled with
+                // the sweep occupancy.
+                let name = format!("fused(b={})", streams.len());
+                for &member in streams {
+                    let args = Json::obj(vec![("batch", streams.len().into())]);
+                    Self::span(rows, &name, *device, member, *start, *finish, args);
+                }
+            }
+            TraceEvent::PageFault { stream, at } => {
+                Self::instant(rows, "page_fault", 0, *stream, *at, Json::obj(vec![]));
+            }
+            TraceEvent::Evict { victim, by, at, tokens } => {
+                let args = Json::obj(vec![("by", (*by).into()), ("tokens", (*tokens).into())]);
+                Self::instant(rows, "evict", 0, *victim, *at, args);
+            }
+            TraceEvent::Writeback { stream, start, finish, tokens } => {
+                let args = Json::obj(vec![("tokens", (*tokens).into())]);
+                Self::span(rows, "writeback", 0, *stream, *start, *finish, args);
+            }
+            TraceEvent::Restore { stream, start, finish, tokens } => {
+                let args = Json::obj(vec![("tokens", (*tokens).into())]);
+                Self::span(rows, "restore", 0, *stream, *start, *finish, args);
+            }
+            TraceEvent::StreamRetire { stream, at, tokens } => {
+                let args = Json::obj(vec![("tokens", (*tokens).into())]);
+                Self::instant(rows, "retire", 0, *stream, *at, args);
+            }
+            TraceEvent::LinkTransfer { stream, src, dst, start, finish } => {
+                let name = format!("link d{src}->d{dst}");
+                let args = Json::obj(vec![("src", (*src).into()), ("dst", (*dst).into())]);
+                Self::span(rows, &name, *src, *stream, *start, *finish, args);
+            }
+        }
+    }
+}
+
+impl TraceSink for ChromeSink {
+    fn event(&mut self, ev: &TraceEvent) {
+        self.events.push(ev.clone());
+    }
+
+    fn render(&mut self) -> String {
+        let mut rows: Vec<ChromeRow> = Vec::new();
+        for ev in &self.events {
+            Self::flatten(ev, &mut rows);
+        }
+        // Per-track timestamp order with deterministic tiebreaks; the
+        // sort is stable so same-key rows keep emission order.
+        rows.sort_by_key(|r| (r.pid, r.tid, r.ts, r.rank, r.tie));
+        // Name the tracks: one process per device, one thread per
+        // stream within it.
+        let mut meta: Vec<Json> = Vec::new();
+        let mut seen: Vec<(u64, u64)> = rows.iter().map(|r| (r.pid, r.tid)).collect();
+        seen.sort_unstable();
+        seen.dedup();
+        let mut named_pid: Vec<u64> = Vec::new();
+        for (pid, tid) in seen {
+            if !named_pid.contains(&pid) {
+                named_pid.push(pid);
+                meta.push(Json::obj(vec![
+                    ("name", "process_name".into()),
+                    ("ph", "M".into()),
+                    ("pid", pid.into()),
+                    ("args", Json::obj(vec![("name", format!("device {pid}").into())])),
+                ]));
+            }
+            meta.push(Json::obj(vec![
+                ("name", "thread_name".into()),
+                ("ph", "M".into()),
+                ("pid", pid.into()),
+                ("tid", tid.into()),
+                ("args", Json::obj(vec![("name", format!("stream {tid}").into())])),
+            ]));
+        }
+        meta.extend(rows.into_iter().map(|r| r.json));
+        Json::obj(vec![("traceEvents", Json::Arr(meta))]).to_string()
+    }
+}
+
+/// Structural validation of a rendered Chrome trace: parses, every
+/// event carries `ph`/`ts`/`pid`/`tid`, per-track timestamps are
+/// monotonically non-decreasing, and every `"B"` is closed by a
+/// matching same-name `"E"` on its track. Returns the number of
+/// non-metadata events.
+pub fn validate_chrome(text: &str) -> Result<u64, String> {
+    let root = Json::parse(text).map_err(|e| format!("chrome trace does not parse: {e}"))?;
+    let events = root
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "missing traceEvents array".to_string())?;
+    let mut last_ts: std::collections::BTreeMap<(u64, u64), u64> = Default::default();
+    let mut stacks: std::collections::BTreeMap<(u64, u64), Vec<String>> = Default::default();
+    let mut n = 0u64;
+    for (i, ev) in events.iter().enumerate() {
+        let ph = ev.get("ph").and_then(Json::as_str).ok_or(format!("event {i}: missing ph"))?;
+        let name =
+            ev.get("name").and_then(Json::as_str).ok_or(format!("event {i}: missing name"))?;
+        if ph == "M" {
+            continue;
+        }
+        n += 1;
+        let ts = ev.get("ts").and_then(Json::as_f64).ok_or(format!("event {i}: missing ts"))?;
+        let pid =
+            ev.get("pid").and_then(Json::as_f64).ok_or(format!("event {i}: missing pid"))? as u64;
+        let tid =
+            ev.get("tid").and_then(Json::as_f64).ok_or(format!("event {i}: missing tid"))? as u64;
+        if ts < 0.0 || ts.fract() != 0.0 {
+            return Err(format!("event {i}: non-integer ts {ts}"));
+        }
+        let ts = ts as u64;
+        let track = (pid, tid);
+        if let Some(&prev) = last_ts.get(&track) {
+            if ts < prev {
+                return Err(format!(
+                    "event {i} ({name}): ts {ts} < {prev} on track pid={pid} tid={tid}"
+                ));
+            }
+        }
+        last_ts.insert(track, ts);
+        match ph {
+            "B" => stacks.entry(track).or_default().push(name.to_string()),
+            "E" => match stacks.entry(track).or_default().pop() {
+                Some(open) if open == name => {}
+                Some(open) => {
+                    return Err(format!(
+                        "event {i}: E '{name}' closes '{open}' on track pid={pid} tid={tid}"
+                    ))
+                }
+                None => {
+                    return Err(format!(
+                        "event {i}: E '{name}' with no open span on track pid={pid} tid={tid}"
+                    ))
+                }
+            },
+            "i" => {}
+            other => return Err(format!("event {i}: unexpected ph '{other}'")),
+        }
+    }
+    for ((pid, tid), stack) in stacks {
+        if let Some(open) = stack.last() {
+            return Err(format!("unclosed span '{open}' on track pid={pid} tid={tid}"));
+        }
+    }
+    Ok(n)
+}
+
+/// Parsed `sched.trace` spec: `off`, `jsonl:<path>` or `chrome:<path>`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub enum TraceSpec {
+    #[default]
+    Off,
+    Jsonl(String),
+    Chrome(String),
+}
+
+impl TraceSpec {
+    pub fn parse(s: &str) -> Result<Self> {
+        let s = s.trim();
+        if s.is_empty() || s == "off" {
+            return Ok(TraceSpec::Off);
+        }
+        if let Some(path) = s.strip_prefix("jsonl:") {
+            if path.is_empty() {
+                bail!("trace spec 'jsonl:' needs a path, e.g. jsonl:events.jsonl");
+            }
+            return Ok(TraceSpec::Jsonl(path.to_string()));
+        }
+        if let Some(path) = s.strip_prefix("chrome:") {
+            if path.is_empty() {
+                bail!("trace spec 'chrome:' needs a path, e.g. chrome:trace.json");
+            }
+            return Ok(TraceSpec::Chrome(path.to_string()));
+        }
+        bail!("unknown trace spec '{s}' (expected off, jsonl:<path> or chrome:<path>)");
+    }
+
+    /// Artifact path, when tracing is on.
+    pub fn path(&self) -> Option<&str> {
+        match self {
+            TraceSpec::Off => None,
+            TraceSpec::Jsonl(p) | TraceSpec::Chrome(p) => Some(p),
+        }
+    }
+
+    /// Build the sink this spec names (`None` when off).
+    pub fn make_sink(&self) -> Option<Box<dyn TraceSink>> {
+        match self {
+            TraceSpec::Off => None,
+            TraceSpec::Jsonl(_) => Some(Box::new(JsonlSink::new())),
+            TraceSpec::Chrome(_) => Some(Box::new(ChromeSink::new())),
+        }
+    }
+}
+
+impl fmt::Display for TraceSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TraceSpec::Off => write!(f, "off"),
+            TraceSpec::Jsonl(p) => write!(f, "jsonl:{p}"),
+            TraceSpec::Chrome(p) => write!(f, "chrome:{p}"),
+        }
+    }
+}
+
+/// Event tallies kept by [`Tracer`] alongside (and independent of) the
+/// sink. These must agree exactly with the `SimStats` aggregates — see
+/// [`reconcile`].
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TraceCounts {
+    pub submits: u64,
+    pub releases: u64,
+    pub admits: u64,
+    pub rejects: u64,
+    pub prefill_chunks: u64,
+    pub solo_decode_steps: u64,
+    pub fused_sweeps: u64,
+    pub fused_streams: u64,
+    /// Token positions produced: prefill-chunk positions + solo decode
+    /// retires + fused-sweep members (mirrors `SimStats::tokens`).
+    pub tokens: u64,
+    pub page_faults: u64,
+    pub evictions: u64,
+    pub writebacks: u64,
+    pub restores: u64,
+    pub retires: u64,
+    pub link_transfers: u64,
+}
+
+impl TraceCounts {
+    fn absorb(&mut self, ev: &TraceEvent) {
+        match ev {
+            TraceEvent::Submit { .. } => self.submits += 1,
+            TraceEvent::Release { .. } => self.releases += 1,
+            TraceEvent::Admit { .. } => self.admits += 1,
+            TraceEvent::Reject { .. } => self.rejects += 1,
+            TraceEvent::PrefillChunk { positions, .. } => {
+                self.prefill_chunks += 1;
+                self.tokens += positions;
+            }
+            TraceEvent::DecodeStep { .. } => {
+                self.solo_decode_steps += 1;
+                self.tokens += 1;
+            }
+            TraceEvent::FusedSweep { streams, .. } => {
+                self.fused_sweeps += 1;
+                self.fused_streams += streams.len() as u64;
+                self.tokens += streams.len() as u64;
+            }
+            TraceEvent::PageFault { .. } => self.page_faults += 1,
+            TraceEvent::Evict { .. } => self.evictions += 1,
+            TraceEvent::Writeback { .. } => self.writebacks += 1,
+            TraceEvent::Restore { .. } => self.restores += 1,
+            TraceEvent::StreamRetire { .. } => self.retires += 1,
+            TraceEvent::LinkTransfer { .. } => self.link_transfers += 1,
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.submits
+            + self.releases
+            + self.admits
+            + self.rejects
+            + self.prefill_chunks
+            + self.solo_decode_steps
+            + self.fused_sweeps
+            + self.page_faults
+            + self.evictions
+            + self.writebacks
+            + self.restores
+            + self.retires
+            + self.link_transfers
+    }
+}
+
+/// The reconciliation invariant: every traced tally must equal its
+/// `SimStats` aggregate. A mismatch means an emission site was missed
+/// (or double-fired) — checked under `debug_assertions` at stats
+/// finalize and by the randomized property test.
+pub fn reconcile(counts: &TraceCounts, stats: &SimStats) -> Result<(), String> {
+    let checks: [(&str, u64, u64); 9] = [
+        ("tokens", counts.tokens, stats.tokens),
+        ("prefill_chunks", counts.prefill_chunks, stats.prefill_chunks),
+        ("solo_decode_steps", counts.solo_decode_steps, stats.solo_decode_steps),
+        ("fused_sweeps", counts.fused_sweeps, stats.fused_sweeps),
+        ("fused_streams", counts.fused_streams, stats.fused_streams),
+        ("page_faults", counts.page_faults, stats.page_faults),
+        ("preemptions", counts.evictions, stats.preemptions),
+        ("rejected", counts.rejects, stats.rejected),
+        ("stream_retires", counts.retires, stats.streams.len() as u64),
+    ];
+    let bad: Vec<String> = checks
+        .iter()
+        .filter(|(_, a, b)| a != b)
+        .map(|(k, a, b)| format!("{k}: traced {a} != stats {b}"))
+        .collect();
+    if bad.is_empty() {
+        Ok(())
+    } else {
+        Err(format!("trace/stats reconciliation failed: {}", bad.join("; ")))
+    }
+}
+
+/// One utilization window of the timeline (`[start, end)` cycles).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TraceWindow {
+    pub start: u64,
+    pub end: u64,
+    /// Cycles the engine had work: `(end - start) - idle`.
+    pub busy: u64,
+    /// Cycles spent warped forward to the next arrival.
+    pub idle: u64,
+    /// Inter-device link cycles charged in this window (fleet only).
+    pub link: u64,
+    /// KV page frames in use at the window's end (carry-forward sample;
+    /// 0 when paging is off).
+    pub pages_in_use: u64,
+}
+
+impl TraceWindow {
+    /// Busy fraction of the window (0.0 for an empty window).
+    pub fn utilization(&self) -> f64 {
+        let len = self.end.saturating_sub(self.start);
+        if len == 0 {
+            return 0.0;
+        }
+        self.busy as f64 / len as f64
+    }
+}
+
+/// Windowed utilization accumulator: records idle spans, link charges
+/// and pages-in-use changes during the run, then bins them into
+/// `window`-cycle [`TraceWindow`]s at finalize.
+#[derive(Clone, Debug, Default)]
+pub struct Timeline {
+    window: u64,
+    idle: Vec<(u64, u64)>,
+    link: Vec<(u64, u64)>,
+    pages: Vec<(u64, u64)>,
+}
+
+impl Timeline {
+    pub fn new(window: u64) -> Self {
+        Self { window, ..Default::default() }
+    }
+
+    /// Record an idle warp `[start, end)`.
+    pub fn idle_span(&mut self, start: u64, end: u64) {
+        if end > start {
+            self.idle.push((start, end));
+        }
+    }
+
+    /// Charge `cycles` of link transfer at cycle `at`.
+    pub fn link_cycles(&mut self, at: u64, cycles: u64) {
+        if cycles > 0 {
+            self.link.push((at, cycles));
+        }
+    }
+
+    /// Record that `in_use` page frames are allocated as of cycle `at`.
+    pub fn pages_sample(&mut self, at: u64, in_use: u64) {
+        self.pages.push((at, in_use));
+    }
+
+    /// Bin everything into windows covering `[0, clock)`. The last
+    /// window is truncated at the makespan.
+    pub fn finish(&self, clock: u64) -> Vec<TraceWindow> {
+        if self.window == 0 || clock == 0 {
+            return Vec::new();
+        }
+        let n = clock.div_ceil(self.window);
+        let mut out: Vec<TraceWindow> = (0..n)
+            .map(|w| TraceWindow {
+                start: w * self.window,
+                end: ((w + 1) * self.window).min(clock),
+                ..Default::default()
+            })
+            .collect();
+        for &(s, e) in &self.idle {
+            let (s, e) = (s.min(clock), e.min(clock));
+            if e <= s {
+                continue;
+            }
+            let (w0, w1) = ((s / self.window) as usize, ((e - 1) / self.window) as usize);
+            for w in out.iter_mut().take(w1 + 1).skip(w0) {
+                w.idle += e.min(w.end) - s.max(w.start);
+            }
+        }
+        for &(at, cycles) in &self.link {
+            let w = ((at / self.window) as usize).min(out.len() - 1);
+            out[w].link += cycles;
+        }
+        // Pages: carry-forward step function sampled at each window end.
+        let mut i = 0usize;
+        let mut current = 0u64;
+        for w in out.iter_mut() {
+            while i < self.pages.len() && self.pages[i].0 < w.end {
+                current = self.pages[i].1;
+                i += 1;
+            }
+            w.pages_in_use = current;
+            let len = w.end - w.start;
+            w.busy = len - w.idle.min(len);
+        }
+        out
+    }
+}
+
+/// The engine-side tracing front end: owns the optional sink, the
+/// reconciliation tallies and the optional timeline. A default
+/// (`Tracer::off()`) tracer is a pair of `None`s — the hot path pays
+/// one branch and constructs nothing.
+#[derive(Default)]
+pub struct Tracer {
+    spec: TraceSpec,
+    sink: Option<Box<dyn TraceSink>>,
+    counts: TraceCounts,
+    timeline: Option<Timeline>,
+}
+
+impl Tracer {
+    /// Tracing disabled (the default for every engine).
+    pub fn off() -> Self {
+        Self::default()
+    }
+
+    /// Build from an already-parsed spec and timeline window — the
+    /// engine-side constructor (`cfg.sched.trace` / `trace_window` are
+    /// validated at config-parse time, so this cannot fail).
+    pub fn new(spec: TraceSpec, window: u64) -> Self {
+        let sink = spec.make_sink();
+        let timeline = (window > 0).then(|| Timeline::new(window));
+        Self { spec, sink, counts: TraceCounts::default(), timeline }
+    }
+
+    /// Build from the `sched.trace` / `sched.trace_window` string pair.
+    pub fn from_config(spec: &str, window: u64) -> Result<Self> {
+        Ok(Self::new(TraceSpec::parse(spec)?, window))
+    }
+
+    /// Replace the sink (test harnesses; keeps spec/timeline).
+    pub fn set_sink(&mut self, sink: Box<dyn TraceSink>) {
+        self.sink = Some(sink);
+    }
+
+    pub fn is_on(&self) -> bool {
+        self.sink.is_some()
+    }
+
+    pub fn spec(&self) -> &TraceSpec {
+        &self.spec
+    }
+
+    pub fn counts(&self) -> &TraceCounts {
+        &self.counts
+    }
+
+    /// Emit an event. The closure only runs when a sink is attached, so
+    /// the disabled path never constructs the event.
+    #[inline]
+    pub fn emit<F: FnOnce() -> TraceEvent>(&mut self, f: F) {
+        if let Some(sink) = self.sink.as_deref_mut() {
+            let ev = f();
+            self.counts.absorb(&ev);
+            sink.event(&ev);
+        }
+    }
+
+    /// Timeline hook: idle warp span.
+    #[inline]
+    pub fn idle_span(&mut self, start: u64, end: u64) {
+        if let Some(t) = self.timeline.as_mut() {
+            t.idle_span(start, end);
+        }
+    }
+
+    /// Timeline hook: link cycles charged at `at`.
+    #[inline]
+    pub fn link_cycles(&mut self, at: u64, cycles: u64) {
+        if let Some(t) = self.timeline.as_mut() {
+            t.link_cycles(at, cycles);
+        }
+    }
+
+    /// Timeline hook: pages-in-use changed.
+    #[inline]
+    pub fn pages_sample(&mut self, at: u64, in_use: u64) {
+        if let Some(t) = self.timeline.as_mut() {
+            t.pages_sample(at, in_use);
+        }
+    }
+
+    /// Finalize the timeline into windows (empty when `trace_window`
+    /// is 0).
+    pub fn finish_timeline(&self, clock: u64) -> Vec<TraceWindow> {
+        self.timeline.as_ref().map(|t| t.finish(clock)).unwrap_or_default()
+    }
+
+    /// Render the artifact: `(path, contents)` when a sink is attached.
+    pub fn render(&mut self) -> Option<(String, String)> {
+        let path = self.spec.path()?.to_string();
+        let sink = self.sink.as_deref_mut()?;
+        Some((path, sink.render()))
+    }
+
+    /// Check the reconciliation invariant against finalized stats.
+    /// Trivially `Ok` when tracing is off.
+    pub fn reconcile(&self, stats: &SimStats) -> Result<(), String> {
+        if !self.is_on() {
+            return Ok(());
+        }
+        reconcile(&self.counts, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_events() -> Vec<TraceEvent> {
+        vec![
+            TraceEvent::Submit { stream: 0, at: 0, arrival: 0, prompt_tokens: 2, tokens: 4 },
+            TraceEvent::Release { stream: 0, at: 0 },
+            TraceEvent::Admit { stream: 0, at: 0, slot: 0 },
+            TraceEvent::PrefillChunk {
+                stream: 0,
+                device: 0,
+                start: 0,
+                finish: 90,
+                pos: 0,
+                positions: 2,
+            },
+            TraceEvent::DecodeStep { stream: 0, device: 0, start: 90, finish: 130, pos: 2 },
+            TraceEvent::PageFault { stream: 1, at: 130 },
+            TraceEvent::Evict { victim: 0, by: 1, at: 130, tokens: 3 },
+            TraceEvent::Writeback { stream: 0, start: 130, finish: 150, tokens: 3 },
+            TraceEvent::Restore { stream: 0, start: 160, finish: 180, tokens: 3 },
+            TraceEvent::FusedSweep { device: 0, start: 180, finish: 240, streams: vec![0, 1] },
+            TraceEvent::StreamRetire { stream: 0, at: 240, tokens: 4 },
+            TraceEvent::LinkTransfer { stream: 1, src: 0, dst: 1, start: 240, finish: 260 },
+            TraceEvent::Reject { stream: 2, at: 260, predicted_ttft: 9000, ttft_budget: 100 },
+        ]
+    }
+
+    #[test]
+    fn spec_parse_and_display_round_trip() {
+        for s in ["off", "jsonl:events.jsonl", "chrome:trace.json"] {
+            let spec = TraceSpec::parse(s).unwrap();
+            assert_eq!(spec.to_string(), s);
+        }
+        assert_eq!(TraceSpec::parse("").unwrap(), TraceSpec::Off);
+        assert_eq!(TraceSpec::parse("jsonl:a/b.jsonl").unwrap().path(), Some("a/b.jsonl"));
+        assert!(TraceSpec::parse("jsonl:").is_err(), "empty path rejected");
+        assert!(TraceSpec::parse("chrome:").is_err());
+        assert!(TraceSpec::parse("perfetto:x").is_err(), "unknown format rejected");
+        assert!(TraceSpec::Off.make_sink().is_none());
+        assert!(TraceSpec::parse("chrome:t.json").unwrap().make_sink().is_some());
+    }
+
+    #[test]
+    fn jsonl_sink_emits_one_parseable_object_per_line() {
+        let mut sink = JsonlSink::new();
+        let events = sample_events();
+        for ev in &events {
+            sink.event(ev);
+        }
+        assert_eq!(sink.events(), events.len() as u64);
+        let text = sink.render();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), events.len());
+        for (line, ev) in lines.iter().zip(&events) {
+            let json = Json::parse(line).expect("line parses");
+            assert_eq!(json.get("ev").and_then(Json::as_str), Some(ev.name()));
+        }
+        // Span events carry t0 <= t1; point events carry t.
+        let j = Json::parse(lines[3]).unwrap();
+        assert_eq!(j.get("t0").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(j.get("t1").and_then(Json::as_f64), Some(90.0));
+        assert_eq!(j.get("positions").and_then(Json::as_f64), Some(2.0));
+        // render() drains the buffer.
+        assert!(sink.render().is_empty());
+    }
+
+    #[test]
+    fn chrome_sink_is_well_formed_ordered_and_paired() {
+        let mut sink = ChromeSink::new();
+        for ev in sample_events() {
+            sink.event(&ev);
+        }
+        let text = sink.render();
+        let n = validate_chrome(&text).expect("valid chrome trace");
+        assert!(n > 0);
+        // The fused sweep fans out to one span per member track.
+        let root = Json::parse(&text).unwrap();
+        let events = root.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let fused: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("name").and_then(Json::as_str) == Some("fused(b=2)"))
+            .collect();
+        assert_eq!(fused.len(), 4, "B+E on each of the two member tracks");
+    }
+
+    #[test]
+    fn chrome_zero_length_span_degrades_to_instant() {
+        let mut sink = ChromeSink::new();
+        sink.event(&TraceEvent::DecodeStep { stream: 0, device: 0, start: 7, finish: 7, pos: 1 });
+        let text = sink.render();
+        validate_chrome(&text).unwrap();
+        let root = Json::parse(&text).unwrap();
+        let events = root.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let decode: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("name").and_then(Json::as_str) == Some("decode"))
+            .collect();
+        assert_eq!(decode.len(), 1);
+        assert_eq!(decode[0].get("ph").and_then(Json::as_str), Some("i"));
+    }
+
+    #[test]
+    fn chrome_back_to_back_spans_close_before_opening() {
+        let mut sink = ChromeSink::new();
+        // Two abutting decode steps on one track: E@50 must precede B@50.
+        sink.event(&TraceEvent::DecodeStep { stream: 3, device: 0, start: 10, finish: 50, pos: 1 });
+        sink.event(&TraceEvent::DecodeStep { stream: 3, device: 0, start: 50, finish: 80, pos: 2 });
+        let text = sink.render();
+        validate_chrome(&text).expect("abutting spans stay paired");
+    }
+
+    #[test]
+    fn validate_chrome_rejects_malformed_traces() {
+        assert!(validate_chrome("not json").is_err());
+        assert!(validate_chrome("{}").is_err(), "missing traceEvents");
+        let unclosed = r#"{"traceEvents":[{"name":"x","ph":"B","ts":1,"pid":0,"tid":0}]}"#;
+        assert!(validate_chrome(unclosed).unwrap_err().contains("unclosed"));
+        let unordered = r#"{"traceEvents":[
+            {"name":"a","ph":"i","ts":5,"pid":0,"tid":0,"s":"t"},
+            {"name":"b","ph":"i","ts":4,"pid":0,"tid":0,"s":"t"}]}"#;
+        assert!(validate_chrome(unordered).unwrap_err().contains("ts"));
+        let crossed = r#"{"traceEvents":[
+            {"name":"a","ph":"B","ts":1,"pid":0,"tid":0},
+            {"name":"b","ph":"E","ts":2,"pid":0,"tid":0}]}"#;
+        assert!(validate_chrome(crossed).unwrap_err().contains("closes"));
+    }
+
+    #[test]
+    fn counts_absorb_and_reconcile() {
+        let mut tracer = Tracer::from_config("jsonl:x.jsonl", 0).unwrap();
+        for ev in sample_events() {
+            tracer.emit(|| ev.clone());
+        }
+        let c = tracer.counts();
+        assert_eq!(c.submits, 1);
+        assert_eq!(c.prefill_chunks, 1);
+        assert_eq!(c.solo_decode_steps, 1);
+        assert_eq!(c.fused_sweeps, 1);
+        assert_eq!(c.fused_streams, 2);
+        assert_eq!(c.tokens, 2 + 1 + 2, "chunk positions + solo retire + fused members");
+        assert_eq!(c.page_faults, 1);
+        assert_eq!(c.evictions, 1);
+        assert_eq!(c.rejects, 1);
+        assert_eq!(c.retires, 1);
+        assert_eq!(c.link_transfers, 1);
+
+        let mut stats = SimStats {
+            tokens: 5,
+            prefill_chunks: 1,
+            solo_decode_steps: 1,
+            fused_sweeps: 1,
+            fused_streams: 2,
+            page_faults: 1,
+            preemptions: 1,
+            rejected: 1,
+            ..Default::default()
+        };
+        stats.streams.push(Default::default());
+        tracer.reconcile(&stats).expect("tallies match aggregates");
+        stats.tokens = 6;
+        let err = tracer.reconcile(&stats).unwrap_err();
+        assert!(err.contains("tokens: traced 5 != stats 6"), "{err}");
+    }
+
+    #[test]
+    fn tracer_off_is_inert() {
+        let mut tracer = Tracer::off();
+        assert!(!tracer.is_on());
+        tracer.emit(|| panic!("event closure must not run when tracing is off"));
+        assert_eq!(tracer.counts(), &TraceCounts::default());
+        assert!(tracer.render().is_none());
+        assert!(tracer.finish_timeline(1000).is_empty());
+        tracer.reconcile(&SimStats { tokens: 99, ..Default::default() }).unwrap();
+    }
+
+    #[test]
+    fn timeline_bins_idle_link_and_pages() {
+        let mut t = Timeline::new(100);
+        t.idle_span(50, 120); // 50 idle in w0, 20 in w1
+        t.idle_span(250, 250); // empty span ignored
+        t.link_cycles(130, 7);
+        t.link_cycles(205, 3);
+        t.pages_sample(10, 2);
+        t.pages_sample(110, 5);
+        t.pages_sample(180, 4);
+        let w = t.finish(250);
+        assert_eq!(w.len(), 3);
+        assert_eq!((w[0].start, w[0].end), (0, 100));
+        assert_eq!((w[2].start, w[2].end), (200, 250), "last window truncated at makespan");
+        assert_eq!(w[0].idle, 50);
+        assert_eq!(w[0].busy, 50);
+        assert_eq!(w[1].idle, 20);
+        assert_eq!(w[1].busy, 80);
+        assert_eq!(w[1].link, 7);
+        assert_eq!(w[2].link, 3);
+        assert_eq!(w[0].pages_in_use, 2, "value at window end");
+        assert_eq!(w[1].pages_in_use, 4, "last change before end wins");
+        assert_eq!(w[2].pages_in_use, 4, "carried forward");
+        assert!((w[1].utilization() - 0.8).abs() < 1e-12);
+        assert!(Timeline::new(0).finish(1000).is_empty(), "window 0 = timeline off");
+        assert!(Timeline::new(100).finish(0).is_empty());
+    }
+
+    #[test]
+    fn timeline_clamps_idle_past_makespan() {
+        let mut t = Timeline::new(100);
+        t.idle_span(150, 900); // finalize at 200: only [150, 200) counts
+        let w = t.finish(200);
+        assert_eq!(w.len(), 2);
+        assert_eq!(w[1].idle, 50);
+        assert_eq!(w[1].busy, 0);
+    }
+
+    #[test]
+    fn chrome_golden_single_stream() {
+        // Pinned artifact for a tiny hand-built trace: any formatting or
+        // mapping change must be deliberate.
+        let mut sink = ChromeSink::new();
+        sink.event(&TraceEvent::Admit { stream: 0, at: 0, slot: 0 });
+        sink.event(&TraceEvent::DecodeStep { stream: 0, device: 0, start: 0, finish: 40, pos: 1 });
+        let got = sink.render();
+        let want = concat!(
+            r#"{"traceEvents":["#,
+            r#"{"args":{"name":"device 0"},"name":"process_name","ph":"M","pid":0},"#,
+            r#"{"args":{"name":"stream 0"},"name":"thread_name","ph":"M","pid":0,"tid":0},"#,
+            r#"{"args":{"slot":0},"name":"admit","ph":"i","pid":0,"s":"t","tid":0,"ts":0},"#,
+            r#"{"args":{"pos":1},"name":"decode","ph":"B","pid":0,"tid":0,"ts":0},"#,
+            r#"{"name":"decode","ph":"E","pid":0,"tid":0,"ts":40}"#,
+            r#"]}"#,
+        );
+        assert_eq!(got, want);
+    }
+}

@@ -1,0 +1,288 @@
+//! Tracing acceptance invariants (PR tentpole): the trace layer is an
+//! observer, never a participant. Tracing **off** is the default and
+//! costs one dead branch; tracing **on** (either sink) must not move a
+//! single simulated cycle — pinned here on random traces crossed with
+//! batched decode x paged KV x device count. The traced event tallies
+//! must reconcile exactly with the `SimStats` aggregates, the JSONL
+//! artifact must parse line-by-line, and the Chrome artifact must pass
+//! structural validation with the fault -> writeback -> restore
+//! sequence landing on the victim's track in order.
+
+use pim_gpt::config::HwConfig;
+use pim_gpt::model::gpt::by_name;
+use pim_gpt::sim::{validate_chrome, FleetSim, MultiSim, StreamOutcome, StreamSpec};
+use pim_gpt::util::json::Json;
+
+/// Everything the schedule determines, order-normalized: final clock,
+/// token count, and per-stream (id, admitted, finish, per-token
+/// finishes) rows.
+type Signature = (u64, u64, Vec<(u64, u64, u64, Vec<u64>)>);
+
+fn signature(outcomes: Vec<StreamOutcome>, clock: u64, tokens: u64) -> Signature {
+    let mut rows: Vec<_> = outcomes
+        .into_iter()
+        .filter_map(StreamOutcome::into_completed)
+        .map(|r| (r.id, r.admitted_cycle, r.finish_cycle, r.token_finishes))
+        .collect();
+    rows.sort();
+    (clock, tokens, rows)
+}
+
+/// Run one fleet config to completion and return its signature plus the
+/// rendered trace artifact (None when tracing is off).
+fn run_fleet(
+    m: &pim_gpt::model::GptModel,
+    cfg: &HwConfig,
+    specs: &[StreamSpec],
+) -> (Signature, Option<(String, String)>) {
+    let mut fleet = FleetSim::new(m, cfg).unwrap();
+    for spec in specs {
+        fleet.submit(*spec).unwrap();
+    }
+    let out = fleet.run_all().unwrap();
+    let clock = fleet.clock();
+    // finalize_stats reconciles trace counts against the aggregates
+    // under debug_assertions — a mismatch panics right here.
+    let tokens = fleet.finalize_stats().tokens;
+    let sig = signature(out, clock, tokens);
+    (sig, fleet.render_trace())
+}
+
+/// Acceptance pin: tracing (off / jsonl / chrome) is observer-effect
+/// free. All three runs of the same random trace produce byte-identical
+/// schedules across every batched-decode x paged-KV x devices
+/// combination; the JSONL artifact parses per line, the Chrome artifact
+/// passes structural validation, and (satellite 1) the traced tallies
+/// reconcile with `SimStats` — enforced by the `debug_assertions` check
+/// inside `finalize_stats`, which `cargo test` builds always run.
+#[test]
+fn tracing_is_observer_effect_free_on_random_traces() {
+    use pim_gpt::util::prop::check;
+    let m = by_name("gpt-nano").unwrap();
+    check("tracing observer-effect-free", 4, |rng| {
+        let n_streams = 2 + rng.gen_range(3);
+        let specs: Vec<StreamSpec> = (0..n_streams)
+            .map(|id| {
+                let n_tokens = 2 + rng.gen_range(10);
+                StreamSpec {
+                    id,
+                    n_tokens,
+                    prompt_tokens: 1 + rng.gen_range(n_tokens),
+                    arrival_cycle: rng.gen_range(1_000_000),
+                }
+            })
+            .collect();
+        for devices in [1usize, 2] {
+            for (batch, paging) in
+                [(false, false), (true, false), (false, true), (true, true)]
+            {
+                let mut base = HwConfig::paper_baseline()
+                    .with_max_streams(2)
+                    .with_batch_decode(batch)
+                    .with_devices(devices);
+                if paging {
+                    base.sched.kv_paging = true;
+                    base.sched.kv_page_tokens = 32;
+                    base.sched.kv_oversub = 1.5;
+                }
+                let (want, none) = run_fleet(&m, &base, &specs);
+                assert!(none.is_none(), "untraced run rendered an artifact");
+                let (jsonl_sig, jsonl) =
+                    run_fleet(&m, &base.clone().with_trace("jsonl:t.jsonl"), &specs);
+                let (chrome_sig, chrome) =
+                    run_fleet(&m, &base.clone().with_trace("chrome:t.json"), &specs);
+                if jsonl_sig != want || chrome_sig != want {
+                    return Err(format!(
+                        "devices={devices} batch={batch} paging={paging}: tracing \
+                         changed the schedule (clock {} / {} vs {})",
+                        jsonl_sig.0, chrome_sig.0, want.0
+                    ));
+                }
+                let (path, contents) = jsonl.expect("jsonl run rendered no artifact");
+                assert_eq!(path, "t.jsonl");
+                for line in contents.lines() {
+                    let ev = Json::parse(line)
+                        .map_err(|e| format!("jsonl line does not parse: {e}: {line}"))?;
+                    if ev.get("ev").and_then(Json::as_str).is_none() {
+                        return Err(format!("jsonl line without ev tag: {line}"));
+                    }
+                }
+                let (path, contents) = chrome.expect("chrome run rendered no artifact");
+                assert_eq!(path, "t.json");
+                let n = validate_chrome(&contents)
+                    .map_err(|e| format!("chrome validation failed: {e}"))?;
+                if n == 0 {
+                    return Err("chrome trace has no events".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Satellite pin: the traced tallies agree with the aggregate counters
+/// field by field on a paged, batched, eviction-heavy single-package
+/// run — the reconciliation contract spelled out, not just the
+/// debug-assert inside `finalize_stats`.
+#[test]
+fn trace_counts_reconcile_with_stats_field_by_field() {
+    let m = by_name("gpt2-small").unwrap();
+    let mut cfg = HwConfig::paper_baseline()
+        .with_max_streams(4)
+        .with_batch_decode(true)
+        .with_trace("jsonl:t.jsonl");
+    cfg.gddr6.capacity_gbit = 0.34;
+    cfg.sched.kv_paging = true;
+    cfg.sched.kv_page_tokens = 128;
+    cfg.sched.kv_oversub = 2.0;
+    let mut ms = MultiSim::new(&m, &cfg).unwrap();
+    for id in 0..4 {
+        ms.submit(StreamSpec::with_prompt(id, 704, 64)).unwrap();
+    }
+    let done = ms.run_all().unwrap().len();
+    assert_eq!(done, 4);
+    ms.finalize_stats();
+    let c = ms.trace_counts().clone();
+    let s = &ms.stats;
+    assert_eq!(c.tokens, s.tokens);
+    assert_eq!(c.prefill_chunks, s.prefill_chunks);
+    assert_eq!(c.solo_decode_steps, s.solo_decode_steps);
+    assert_eq!(c.fused_sweeps, s.fused_sweeps);
+    assert_eq!(c.fused_streams, s.fused_streams);
+    assert_eq!(c.page_faults, s.page_faults);
+    assert_eq!(c.evictions, s.preemptions);
+    assert_eq!(c.rejects, s.rejected);
+    assert_eq!(c.retires, s.streams.len() as u64);
+    assert!(c.page_faults >= 1, "premise: the over-committed pool must fault");
+    assert_eq!(c.evictions, c.writebacks, "every eviction drains a writeback");
+    assert!(c.restores >= 1, "an evicted stream must restore to finish");
+}
+
+/// Chrome-trace span-nesting acceptance: on an eviction-heavy paged
+/// run, the victim's track shows the preemption in causal order — an
+/// `evict` instant, then the `writeback` span, and a later `restore`
+/// span that begins only after the writeback ends. The whole artifact
+/// passes structural validation (per-track monotonic timestamps, every
+/// B closed by a matching E).
+#[test]
+fn chrome_trace_orders_fault_writeback_restore_on_victim_track() {
+    let m = by_name("gpt2-small").unwrap();
+    let mut cfg = HwConfig::paper_baseline()
+        .with_max_streams(4)
+        .with_trace("chrome:trace.json");
+    cfg.gddr6.capacity_gbit = 0.34;
+    cfg.sched.kv_paging = true;
+    cfg.sched.kv_page_tokens = 128;
+    cfg.sched.kv_oversub = 2.0;
+    let mut ms = MultiSim::new(&m, &cfg).unwrap();
+    for id in 0..4 {
+        ms.submit(StreamSpec::with_prompt(id, 704, 64)).unwrap();
+    }
+    assert_eq!(ms.run_all().unwrap().len(), 4);
+    ms.finalize_stats();
+    let (_, contents) = ms.render_trace().expect("no chrome artifact");
+    let n = validate_chrome(&contents).expect("chrome validation");
+    assert!(n > 0);
+    // Collect (name, ph, ts) per stream track.
+    let root = Json::parse(&contents).unwrap();
+    let events = root.get("traceEvents").unwrap().as_arr().unwrap();
+    let mut tracks: std::collections::BTreeMap<u64, Vec<(String, String, u64)>> =
+        Default::default();
+    for ev in events {
+        let ph = ev.get("ph").unwrap().as_str().unwrap();
+        if ph == "M" {
+            continue;
+        }
+        let tid = ev.get("tid").unwrap().as_f64().unwrap() as u64;
+        let name = ev.get("name").unwrap().as_str().unwrap().to_string();
+        let ts = ev.get("ts").unwrap().as_f64().unwrap() as u64;
+        tracks.entry(tid).or_default().push((name, ph.to_string(), ts));
+    }
+    let fault = events
+        .iter()
+        .any(|e| e.get("name").and_then(Json::as_str) == Some("page_fault"));
+    assert!(fault, "premise: the over-committed pool must fault");
+    // At least one victim shows evict -> writeback -> restore in order
+    // on its own track (rows are already per-track time-sorted).
+    let mut nested = 0usize;
+    for rows in tracks.values() {
+        let pos = |name: &str, ph: &str| {
+            rows.iter().position(|(n, p, _)| n == name && p == ph)
+        };
+        let (Some(ev), Some(wb_b), Some(wb_e)) =
+            (pos("evict", "i"), pos("writeback", "B"), pos("writeback", "E"))
+        else {
+            continue;
+        };
+        assert!(ev <= wb_b, "writeback began before the evict decision");
+        assert!(wb_b < wb_e);
+        if let Some(rs_b) = pos("restore", "B") {
+            assert!(
+                rows[rs_b].2 >= rows[wb_e].2,
+                "restore began at {} before writeback ended at {}",
+                rows[rs_b].2,
+                rows[wb_e].2
+            );
+            nested += 1;
+        }
+    }
+    assert!(nested >= 1, "no track shows the evict -> writeback -> restore sequence");
+}
+
+/// Golden lifecycle order on a deterministic single-stream gpt-nano
+/// run: the JSONL log opens with `submit`, admits exactly once, the
+/// compute spans account for every token position, and `stream_retire`
+/// closes the log. Event stamps never decrease per stream.
+#[test]
+fn jsonl_lifecycle_order_is_golden_on_gpt_nano() {
+    let m = by_name("gpt-nano").unwrap();
+    let cfg = HwConfig::paper_baseline().with_trace("jsonl:t.jsonl");
+    let mut ms = MultiSim::new(&m, &cfg).unwrap();
+    ms.submit(StreamSpec::with_prompt(0, 1, 2)).unwrap();
+    assert_eq!(ms.run_all().unwrap().len(), 1);
+    ms.finalize_stats();
+    let (_, contents) = ms.render_trace().expect("no jsonl artifact");
+    let names: Vec<String> = contents
+        .lines()
+        .map(|l| {
+            Json::parse(l).unwrap().get("ev").unwrap().as_str().unwrap().to_string()
+        })
+        .collect();
+    assert_eq!(names.first().map(String::as_str), Some("submit"));
+    assert_eq!(names.last().map(String::as_str), Some("stream_retire"));
+    assert_eq!(names.iter().filter(|n| *n == "admit").count(), 1);
+    assert_eq!(names.iter().filter(|n| *n == "stream_retire").count(), 1);
+    let admit = names.iter().position(|n| n == "admit").unwrap();
+    let first_span = names
+        .iter()
+        .position(|n| n == "prefill_chunk" || n == "decode_step")
+        .expect("no compute spans");
+    assert!(admit < first_span, "compute before admission");
+    // Positions produced must cover all 3 tokens (1 prompt + 2 gen).
+    let mut produced = 0u64;
+    for l in contents.lines() {
+        let ev = Json::parse(l).unwrap();
+        match ev.get("ev").unwrap().as_str().unwrap() {
+            "prefill_chunk" => {
+                produced += ev.get("positions").unwrap().as_f64().unwrap() as u64
+            }
+            "decode_step" => produced += 1,
+            _ => {}
+        }
+    }
+    assert_eq!(produced, 3);
+}
+
+/// Tracing off is genuinely off: no artifact, all tallies zero.
+#[test]
+fn tracing_off_renders_nothing_and_counts_nothing() {
+    let m = by_name("gpt-nano").unwrap();
+    let cfg = HwConfig::paper_baseline();
+    let mut ms = MultiSim::new(&m, &cfg).unwrap();
+    ms.submit(StreamSpec::new(0, 3)).unwrap();
+    assert_eq!(ms.run_all().unwrap().len(), 1);
+    ms.finalize_stats();
+    assert!(ms.render_trace().is_none());
+    assert_eq!(*ms.trace_counts(), Default::default());
+    assert!(ms.stats.timeline.is_empty(), "no timeline without trace_window");
+}
