@@ -3,9 +3,11 @@
 //! mapping stage, graph compilation, the multi-request scheduler
 //! (simulated throughput at K ∈ {1, 2, 4} + program-cache hit rate),
 //! the open-loop Poisson arrival sweep (tail latency vs load), the
-//! scheduling-policy sweep at K=4 (fcfs / srf / fair / slo), and the
+//! scheduling-policy sweep at K=4 (fcfs / srf / fair / slo), the
 //! tracing on/off sweep (the observability tax, exported to
-//! `BENCH_sim_hotpath.json` at the repo root).
+//! `BENCH_sim_hotpath.json` at the repo root), and the profiler's
+//! cost-table calibration (relative-error envelope per model, exported
+//! to `BENCH_calibration.json`).
 use pim_gpt::compiler::compile;
 use pim_gpt::config::HwConfig;
 use pim_gpt::mapping::{ModelMapping, PartitionStrategy};
@@ -552,6 +554,48 @@ fn main() {
         ]);
         let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_sim_hotpath.json");
         std::fs::write(path, format!("{out}\n")).expect("write BENCH_sim_hotpath.json");
+        println!("  wrote {path}");
+    }
+
+    // Cost-table calibration: train a per-span cost table on a small
+    // profiled workload per model, cross-validate `predict()` against
+    // fresh cycle-accurate single-request runs, and record the
+    // relative-error envelope to BENCH_calibration.json for trend
+    // tracking (the acceptance bound — mean <= 5%, max <= 15% — is
+    // pinned in tests/integration_profile.rs; this export is the CI
+    // artifact behind it).
+    {
+        use pim_gpt::sim::calibrate;
+        use pim_gpt::util::json::Json;
+        let names = ["gpt2-small", "gpt2-medium", "gpt2-large", "gpt2-xl"];
+        let mut rows: Vec<Json> = Vec::new();
+        let (mut mean_sum, mut worst) = (0.0f64, 0.0f64);
+        println!("sim::profile calibration (seed 7, 6 validation reqs per model):");
+        for name in names {
+            let model = by_name(name).unwrap();
+            let rep = calibrate(&model, &cfg, 7, 6).unwrap();
+            println!(
+                "  {name:>12}: mean rel err {:.2}%, max {:.2}% over {} validation rows \
+                 ({} train reqs)",
+                100.0 * rep.mean_rel_err,
+                100.0 * rep.max_rel_err,
+                rep.rows.len(),
+                rep.n_train,
+            );
+            mean_sum += rep.mean_rel_err;
+            worst = worst.max(rep.max_rel_err);
+            rows.push(rep.to_json());
+        }
+        let out = Json::obj(vec![
+            ("bench", "calibration".into()),
+            ("seed", 7u64.into()),
+            ("n_validate", 6u64.into()),
+            ("mean_rel_err", (mean_sum / names.len() as f64).into()),
+            ("max_rel_err", worst.into()),
+            ("models", Json::Arr(rows)),
+        ]);
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_calibration.json");
+        std::fs::write(path, format!("{out}\n")).expect("write BENCH_calibration.json");
         println!("  wrote {path}");
     }
 }

@@ -9,6 +9,7 @@
 use crate::mapping::PartitionStrategy;
 use crate::sim::arrivals::ArrivalSpec;
 use crate::sim::policy::PolicySpec;
+use crate::sim::profile::ProfileSpec;
 use crate::sim::trace::TraceSpec;
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
@@ -272,6 +273,20 @@ pub struct SchedulerConfig {
     /// (`figures --fig timeline`). 0 (the default) disables the
     /// timeline. Independent of `trace`: either can be on alone.
     pub trace_window: u64,
+    /// Online profiling (JSON string key `sched.profile`: `off`,
+    /// `text:<path>` or `json:<path>`; CLI `serve --profile`). When
+    /// on, a `sim::profile::ProfileSink` rides the tracer and
+    /// aggregates spans into the hierarchical cycle-attribution tree,
+    /// span-latency histograms and the calibrated `CostTable`
+    /// (`pim-gpt profile`). Like `trace`, it is a pure observer:
+    /// profiling on never changes a simulated cycle.
+    pub profile: ProfileSpec,
+    /// Run the trace-vs-stats reconciliation tallies in release builds
+    /// too (JSON key `sched.strict_reconcile`, 0/1). Debug builds
+    /// always reconcile and panic on mismatch; with this on, release
+    /// builds record a structured `SimStats::reconcile_error` instead
+    /// of panicking, and the server surfaces it in `ServerMetrics`.
+    pub strict_reconcile: bool,
 }
 
 impl Default for SchedulerConfig {
@@ -294,6 +309,8 @@ impl Default for SchedulerConfig {
             link_hop_cycles: 250,
             trace: TraceSpec::Off,
             trace_window: 0,
+            profile: ProfileSpec::Off,
+            strict_reconcile: false,
         }
     }
 }
@@ -474,6 +491,22 @@ impl HwConfig {
         self
     }
 
+    /// Observability knob: online-profiler spec (`off`, `text:<path>`
+    /// or `json:<path>` — the `serve --profile` spelling). Panics on a
+    /// malformed spec, like `with_trace`.
+    pub fn with_profile(mut self, spec: &str) -> Self {
+        self.sched.profile = ProfileSpec::parse(spec).expect("valid profile spec");
+        self
+    }
+
+    /// Observability knob: reconcile trace tallies against `SimStats`
+    /// in release builds too, recording a structured error instead of
+    /// panicking.
+    pub fn with_strict_reconcile(mut self, on: bool) -> Self {
+        self.sched.strict_reconcile = on;
+        self
+    }
+
     /// Apply overrides from a JSON object, e.g.
     /// `{"asic": {"freq_ghz": 0.5}, "gddr6": {"channels": 16}}`.
     pub fn from_json(json: &Json) -> Result<Self> {
@@ -536,6 +569,11 @@ impl HwConfig {
             ("sched", "trace") => {
                 self.sched.trace =
                     TraceSpec::parse(s).with_context(|| format!("sched.trace = '{s}'"))?;
+                Ok(())
+            }
+            ("sched", "profile") => {
+                self.sched.profile =
+                    ProfileSpec::parse(s).with_context(|| format!("sched.profile = '{s}'"))?;
                 Ok(())
             }
             _ => {
@@ -674,6 +712,18 @@ impl HwConfig {
                 bail!(
                     "sched.trace must be a string: \"off\", \"jsonl:<path>\" or \"chrome:<path>\""
                 )
+            }
+            ("sched", "profile") => {
+                bail!(
+                    "sched.profile must be a string: \"off\", \"text:<path>\" or \"json:<path>\""
+                )
+            }
+            ("sched", "strict_reconcile") => {
+                // Same 0/1 strap as batch_decode.
+                if n != 0.0 && n != 1.0 {
+                    bail!("sched.strict_reconcile must be 0 (off) or 1 (on), got {n}");
+                }
+                self.sched.strict_reconcile = n == 1.0;
             }
             ("sched", "trace_window") => {
                 // Same exactness contract as `sched.seed`; 0 disables
@@ -1047,6 +1097,62 @@ mod tests {
         let j = Json::parse(r#"{"sched": {"trace": 1}}"#).unwrap();
         let err = HwConfig::from_json(&j).unwrap_err().to_string();
         assert!(err.contains("must be a string"), "{err}");
+    }
+
+    #[test]
+    fn sched_profile_overrides() {
+        use crate::sim::profile::ProfileSpec;
+        let base = HwConfig::paper_baseline();
+        assert_eq!(base.sched.profile, ProfileSpec::Off, "profiling off by default");
+        let src = r#"{"sched": {"profile": "json:profile.json"}}"#;
+        let cfg = HwConfig::from_json(&Json::parse(src).unwrap()).unwrap();
+        assert_eq!(cfg.sched.profile, ProfileSpec::Json("profile.json".into()));
+        let j = Json::parse(r#"{"sched": {"profile": "text:p.txt"}}"#).unwrap();
+        assert_eq!(
+            HwConfig::from_json(&j).unwrap().sched.profile,
+            ProfileSpec::Text("p.txt".into())
+        );
+        let j = Json::parse(r#"{"sched": {"profile": "off"}}"#).unwrap();
+        assert_eq!(HwConfig::from_json(&j).unwrap().sched.profile, ProfileSpec::Off);
+        let cfg = HwConfig::paper_baseline().with_profile("json:x.json");
+        assert_eq!(cfg.sched.profile, ProfileSpec::Json("x.json".into()));
+        // Unknown formats, empty paths, mistyped values and typo'd keys
+        // are rejected loudly, like every other sched key.
+        for bad in [
+            r#"{"sched": {"profile": "csv:x"}}"#,
+            r#"{"sched": {"profile": "text:"}}"#,
+            r#"{"sched": {"profile": "json:"}}"#,
+            r#"{"sched": {"profile": 1}}"#,
+            r#"{"sched": {"profil": "off"}}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(HwConfig::from_json(&j).is_err(), "accepted {bad}");
+        }
+        let j = Json::parse(r#"{"sched": {"profile": 1}}"#).unwrap();
+        let err = HwConfig::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("must be a string"), "{err}");
+    }
+
+    #[test]
+    fn sched_strict_reconcile_overrides() {
+        assert!(!HwConfig::paper_baseline().sched.strict_reconcile, "off by default");
+        let j = Json::parse(r#"{"sched": {"strict_reconcile": 1}}"#).unwrap();
+        assert!(HwConfig::from_json(&j).unwrap().sched.strict_reconcile);
+        let j = Json::parse(r#"{"sched": {"strict_reconcile": 0}}"#).unwrap();
+        assert!(!HwConfig::from_json(&j).unwrap().sched.strict_reconcile);
+        assert!(
+            HwConfig::paper_baseline().with_strict_reconcile(true).sched.strict_reconcile
+        );
+        // 0/1 strap like batch_decode; anything else rejected loudly.
+        for bad in [
+            r#"{"sched": {"strict_reconcile": 2}}"#,
+            r#"{"sched": {"strict_reconcile": 0.5}}"#,
+            r#"{"sched": {"strict_reconcile": "on"}}"#,
+            r#"{"sched": {"strict_reconcil": 1}}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(HwConfig::from_json(&j).is_err(), "accepted {bad}");
+        }
     }
 
     /// Satellite: typo'd or mistyped `sched` keys must be rejected with

@@ -188,6 +188,14 @@ pub struct ServerMetrics {
     /// IO, so the caller writes the file. `None` with tracing off and
     /// for FIFO/functional serving.
     pub trace: Option<(String, String)>,
+    /// Rendered profile artifact `(path, contents)` when the run was
+    /// profiled (`sched.profile` / `serve --profile`); same IO contract
+    /// as `trace`.
+    pub profile: Option<(String, String)>,
+    /// Trace-vs-stats reconciliation failure surfaced by
+    /// `sched.strict_reconcile` (`SimStats::reconcile_error`). `None`
+    /// when the run reconciled clean or the check was off.
+    pub reconcile_error: Option<String>,
 }
 
 impl ServerMetrics {
@@ -246,6 +254,14 @@ impl ServerMetrics {
             Some((path, _)) => Json::from(path.clone()),
             None => Json::Null,
         };
+        let profile_path = match &self.profile {
+            Some((path, _)) => Json::from(path.clone()),
+            None => Json::Null,
+        };
+        let reconcile_error = match &self.reconcile_error {
+            Some(e) => Json::from(e.clone()),
+            None => Json::Null,
+        };
         Json::obj(vec![
             ("requests", self.requests.into()),
             ("failed", self.failed.into()),
@@ -275,6 +291,8 @@ impl ServerMetrics {
             ("link_transfer_cycles", self.link_transfer_cycles.into()),
             ("latency", latency),
             ("trace_path", trace_path),
+            ("profile_path", profile_path),
+            ("reconcile_error", reconcile_error),
         ])
     }
 }
@@ -635,6 +653,8 @@ fn interleaved_loop(
     metrics.link_transfer_cycles = msim.stats.link_transfer_cycles;
     metrics.latency = msim.stats.latency_report();
     metrics.trace = msim.render_trace();
+    metrics.profile = msim.render_profile();
+    metrics.reconcile_error = msim.stats.reconcile_error.clone();
     Ok(())
 }
 

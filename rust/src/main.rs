@@ -7,6 +7,8 @@
 //! pim-gpt generate --model NAME [--artifacts DIR] [--prompt 1,2,3] [--n N]
 //! pim-gpt serve --model NAME [--requests N] [--concurrency K] [--arrivals SPEC]
 //!               [--policy SPEC] [--seed N] [--prompt-tokens P] [--artifacts DIR]
+//! pim-gpt profile --model NAME [--json FILE] [--from-jsonl FILE]
+//! pim-gpt profile --calibrate [--models A,B] [--json FILE]
 //! ```
 //!
 //! (Arg parsing is hand-rolled — clap is unavailable offline, DESIGN.md
@@ -24,7 +26,11 @@ use pim_gpt::energy::SystemEnergy;
 use pim_gpt::model::gpt::by_name;
 use pim_gpt::report;
 use pim_gpt::sim::arrivals::{self, ArrivalSpec};
-use pim_gpt::sim::{validate_chrome, Simulator, TraceSpec};
+use pim_gpt::sim::{
+    calibrate, validate_chrome, FleetSim, Profile, ProfileSink, ProfileSpec, Simulator,
+    StreamSpec, TraceSpec,
+};
+use pim_gpt::util::json::Json;
 use pim_gpt::util::table::fmt_time_s;
 
 /// A parsed flag: bare (`--json`) or valued (`--tokens 64`,
@@ -155,6 +161,7 @@ fn run(argv: &[String]) -> Result<()> {
         "figures" => cmd_figures(&args),
         "generate" => cmd_generate(&args),
         "serve" => cmd_serve(&args),
+        "profile" => cmd_profile(&args),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
             Ok(())
@@ -170,12 +177,16 @@ USAGE:
   pim-gpt info     [--config FILE]
   pim-gpt simulate --model NAME [--tokens N] [--config FILE] [--json]
   pim-gpt figures  [--fig 1|8|10|11|12|13|14|15|t1|t2|serving|policies|prefill|batching|
-                    paging|sharding|timeline|all] [--tokens N] [--models A,B]
+                    paging|sharding|timeline|profile|all] [--tokens N] [--models A,B]
   pim-gpt generate --model gpt-nano|gpt-mini [--artifacts DIR] [--prompt 1,2,3] [--n N]
   pim-gpt serve    --model NAME [--requests N] [--concurrency K] [--arrivals SPEC]
                    [--policy SPEC] [--seed N] [--prompt-tokens P] [--batch-decode on|off]
-                   [--kv-paging on|off] [--trace SPEC] [--metrics-json FILE]
-                   [--artifacts DIR]
+                   [--kv-paging on|off] [--trace SPEC] [--profile SPEC]
+                   [--metrics-json FILE] [--artifacts DIR]
+  pim-gpt profile  --model NAME [--requests N] [--prompt-tokens P] [--gen-tokens G]
+                   [--concurrency K] [--batch-decode on|off] [--kv-paging on|off]
+                   [--seed N] [--config FILE] [--json FILE] [--from-jsonl FILE]
+  pim-gpt profile  --calibrate [--models A,B] [--requests N] [--seed N] [--json FILE]
 
 ARRIVALS (open-loop serving; latencies report p50/p95/p99 from arrival):
   batch (default) | fixed:<cycles> | poisson:<req/s> | trace:<file.json>
@@ -221,6 +232,20 @@ TRACING (sched.trace / sched.trace_window in --config, or serve --trace SPEC):
   utilization timeline into the stats — see figures --fig timeline.
   serve --metrics-json FILE dumps the full aggregate ServerMetrics as JSON.
 
+PROFILING (sched.profile in --config, or serve --profile SPEC; pim-gpt profile):
+  SPEC = off | text:<path> | json:<path> (a bare serve --profile path means
+  json:). Aggregates the trace stream online — no event log needed — into a
+  hierarchical cycle-attribution tree (phase x position-regime x decode-batch
+  occupancy x device; leaf sums + residual reconcile exactly against busy
+  cycles), log-bucketed span-latency histograms (p50/p95/p99 per class) and a
+  per-span CostTable whose predict() estimates a request's cycles without
+  simulating it. `pim-gpt profile --calibrate` cross-validates those
+  predictions against the cycle-accurate engine and reports mean/max relative
+  error per model. `pim-gpt profile --from-jsonl FILE` replays a recorded
+  jsonl: trace through the same aggregation. sched.strict_reconcile = 1
+  extends trace/stats reconciliation to release builds, surfacing mismatches
+  as a structured ServerMetrics error instead of a debug panic.
+
 POLICY (scheduling; sched.policy / sched.slo_ttft_cycles in --config):
   fcfs (default) | srf | fair | slo[:<ttft-cycles>]
   slo sheds requests whose predicted TTFT busts the budget; they come
@@ -255,7 +280,6 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let s = &sim.stats;
     let secs = s.seconds(cfg.gddr6.freq_ghz);
     if args.has("json") {
-        use pim_gpt::util::json::Json;
         let j = Json::obj(vec![
             ("model", name.into()),
             ("tokens", tokens.into()),
@@ -353,6 +377,9 @@ fn cmd_figures(args: &Args) -> Result<()> {
     if all || which == "timeline" {
         reports.push(report::fig_timeline(tokens.min(8), &models)?);
     }
+    if all || which == "profile" {
+        reports.push(report::fig_profile(tokens.min(8), &models)?);
+    }
     if reports.is_empty() {
         bail!("unknown figure '{which}'");
     }
@@ -403,6 +430,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "batch-decode",
             "kv-paging",
             "trace",
+            "profile",
             "metrics-json",
             "artifacts",
             "config",
@@ -442,6 +470,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     if let Some(spec) = args.get("trace")? {
         cfg.sched.trace = TraceSpec::parse(spec)?;
+    }
+    if let Some(spec) = args.get("profile")? {
+        // A bare path is the ergonomic form: `--profile out.json` means
+        // `json:out.json`; the explicit `off|text:|json:` spellings
+        // still go through the strict parser.
+        cfg.sched.profile = if spec == "off" || spec.contains(':') {
+            ProfileSpec::parse(spec)?
+        } else {
+            ProfileSpec::Json(spec.to_string())
+        };
     }
     // Build the whole request trace up front: arrivals are *simulated*
     // cycles, so the set is known before serving starts. The worker is
@@ -652,10 +690,177 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // Functional (FIFO) serving has no interleaved engine to trace.
         eprintln!("pim-gpt serve: no trace produced (functional serving is untraced)");
     }
+    // Profile artifact: same in-memory rendering contract as the trace.
+    if let Some((path, contents)) = &m.profile {
+        std::fs::write(path, contents)
+            .map_err(|e| anyhow!("writing profile to '{path}': {e}"))?;
+        println!("profile -> {path}");
+    } else if cfg.sched.profile.is_on() {
+        eprintln!("pim-gpt serve: no profile produced (functional serving is unprofiled)");
+    }
+    // sched.strict_reconcile turns a release-build trace/stats mismatch
+    // into data instead of a debug panic; make it loud at the CLI too.
+    if let Some(e) = &m.reconcile_error {
+        eprintln!("pim-gpt serve: trace reconciliation FAILED: {e}");
+    }
     if let Some(path) = args.get("metrics-json")? {
         std::fs::write(path, format!("{}\n", m.to_json()))
             .map_err(|e| anyhow!("writing metrics to '{path}': {e}"))?;
         println!("metrics json -> {path}");
+    }
+    Ok(())
+}
+
+fn on_off(args: &Args, key: &str) -> Result<Option<bool>> {
+    match args.get(key)? {
+        None => Ok(None),
+        Some("on") => Ok(Some(true)),
+        Some("off") => Ok(Some(false)),
+        Some(other) => bail!("--{key} must be 'on' or 'off', got '{other}'"),
+    }
+}
+
+/// `pim-gpt profile`: run a small interleaved workload with the
+/// profiling observer attached and print the attribution tree, latency
+/// histograms and extracted cost table (or replay a recorded `jsonl:`
+/// trace with --from-jsonl, or cross-validate cost predictions with
+/// --calibrate). The attribution is hard-checked against the engine's
+/// busy cycles before anything is printed — a mismatch is an error, not
+/// a footnote.
+fn cmd_profile(args: &Args) -> Result<()> {
+    args.expect_only(
+        "profile",
+        &[
+            "model",
+            "requests",
+            "prompt-tokens",
+            "gen-tokens",
+            "concurrency",
+            "batch-decode",
+            "kv-paging",
+            "seed",
+            "config",
+            "json",
+            "from-jsonl",
+            "calibrate",
+            "models",
+        ],
+    )?;
+    if args.has("calibrate") {
+        return cmd_profile_calibrate(args);
+    }
+    if args.has("models") {
+        bail!("--models only applies to --calibrate (use --model NAME)");
+    }
+    let name = args.get("model")?.ok_or_else(|| anyhow!("--model required (or --calibrate)"))?;
+    let model = by_name(name).ok_or_else(|| anyhow!("unknown model '{name}'"))?;
+    let mut cfg = load_config(args)?;
+    if let Some(k) = args.get("concurrency")? {
+        let k: usize = k.parse().map_err(|_| anyhow!("--concurrency must be an integer"))?;
+        if k == 0 {
+            bail!("--concurrency must be >= 1");
+        }
+        cfg.sched.max_streams = k;
+    }
+    if let Some(v) = on_off(args, "batch-decode")? {
+        cfg.sched.batch_decode = v;
+    }
+    if let Some(v) = on_off(args, "kv-paging")? {
+        cfg.sched.kv_paging = v;
+    }
+    if let Some(seed) = args.get("seed")? {
+        cfg.sched.seed = seed.parse().map_err(|_| anyhow!("--seed must be an integer"))?;
+    }
+    let profile = if let Some(path) = args.get("from-jsonl")? {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading trace '{path}': {e}"))?;
+        Profile::from_jsonl(&text, &model, &cfg)?
+    } else {
+        let n = args.u64_or("requests", 6)?.max(1);
+        let prompt = args.u64_or("prompt-tokens", 8)?;
+        let gen = args.u64_or("gen-tokens", 8)?;
+        if prompt == 0 || gen == 0 {
+            bail!("--prompt-tokens and --gen-tokens must be >= 1");
+        }
+        let max_seq = model.max_seq as u64;
+        let mut fleet = FleetSim::new(&model, &cfg)?;
+        fleet.set_profile(ProfileSink::new(&model, &cfg));
+        for id in 0..n {
+            // Deterministic shape jitter so the profile exercises more
+            // than one (regime, occupancy) attribution cell.
+            let p = (prompt + id % 3).clamp(1, max_seq.saturating_sub(1).max(1));
+            let g = (gen + id % 2).clamp(1, (max_seq - p).max(1));
+            fleet.submit(StreamSpec {
+                id,
+                n_tokens: p + g,
+                prompt_tokens: p,
+                arrival_cycle: 0,
+            })?;
+        }
+        fleet.run_all()?;
+        fleet.finalize_stats();
+        fleet
+            .profile_report()
+            .ok_or_else(|| anyhow!("profiler produced no report (sink not attached?)"))?
+    };
+    profile.check().map_err(|e| anyhow!("cycle attribution failed to reconcile: {e}"))?;
+    println!("{}", profile.render_text());
+    if let Some(path) = args.get("json")? {
+        std::fs::write(path, format!("{}\n", profile.to_json()))
+            .map_err(|e| anyhow!("writing profile to '{path}': {e}"))?;
+        println!("profile json -> {path}");
+    }
+    Ok(())
+}
+
+/// `pim-gpt profile --calibrate`: for each model, train a CostTable on
+/// a small simulated workload, cross-validate `predict` against fresh
+/// cycle-accurate runs and report the per-model mean/max relative
+/// error (the --json artifact is the CI calibration record).
+fn cmd_profile_calibrate(args: &Args) -> Result<()> {
+    for conflict in ["model", "from-jsonl", "concurrency", "batch-decode", "kv-paging"] {
+        if args.has(conflict) {
+            bail!("--{conflict} does not apply to --calibrate (use --models A,B)");
+        }
+    }
+    let cfg = load_config(args)?;
+    let seed = args.u64_or("seed", 7)?;
+    let n_validate = args.u64_or("requests", 6)?.max(1) as usize;
+    let models: Vec<String> = match args.get("models")? {
+        Some(list) => list.split(',').map(|s| s.trim().to_string()).collect(),
+        None => ["gpt2-small", "gpt2-medium", "gpt2-large", "gpt2-xl"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+    };
+    let mut rows = Vec::new();
+    let (mut worst, mut mean_sum) = (0.0f64, 0.0f64);
+    for name in &models {
+        let model = by_name(name).ok_or_else(|| anyhow!("unknown model '{name}'"))?;
+        let rep = calibrate(&model, &cfg, seed, n_validate)?;
+        println!("{}", rep.render_text());
+        worst = worst.max(rep.max_rel_err);
+        mean_sum += rep.mean_rel_err;
+        rows.push(rep.to_json());
+    }
+    let mean = mean_sum / models.len() as f64;
+    println!(
+        "calibration over {} models: mean rel err {:.2}%, max rel err {:.2}%",
+        models.len(),
+        100.0 * mean,
+        100.0 * worst
+    );
+    if let Some(path) = args.get("json")? {
+        let j = Json::obj(vec![
+            ("seed", seed.into()),
+            ("n_validate", (n_validate as u64).into()),
+            ("mean_rel_err", mean.into()),
+            ("max_rel_err", worst.into()),
+            ("models", Json::Arr(rows)),
+        ]);
+        std::fs::write(path, format!("{j}\n"))
+            .map_err(|e| anyhow!("writing calibration to '{path}': {e}"))?;
+        println!("calibration json -> {path}");
     }
     Ok(())
 }

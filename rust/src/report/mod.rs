@@ -6,6 +6,6 @@ pub mod figures;
 pub use figures::{
     fig1_model_zoo, fig10_breakdown, fig11_locality, fig12_asic_freq, fig13_bandwidth,
     fig14_long_token, fig15_scalability, fig8_9_speedup_energy, fig_batching,
-    fig_paging, fig_policy_comparison, fig_prefill, fig_serving_tail_latency, fig_sharding,
-    fig_timeline, table1_config, table2_comparison, FigureReport, RunSummary,
+    fig_paging, fig_policy_comparison, fig_prefill, fig_profile, fig_serving_tail_latency,
+    fig_sharding, fig_timeline, table1_config, table2_comparison, FigureReport, RunSummary,
 };

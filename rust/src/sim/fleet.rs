@@ -76,12 +76,68 @@ enum Inner {
     Multi(Box<FleetEngine>),
 }
 
+/// Pre-computed placement shared between repeated `FleetSim`
+/// constructions of the same `(model, cfg)`: the Algorithm-3 mapping
+/// (single package) or the partition pass plus every device mapping
+/// (fleet). `figures --fig timeline` runs the same config twice (the
+/// traced run and the plain re-run backing the makespan-equality
+/// check); prebuilding stops it paying the placement twice.
+#[derive(Clone, Debug)]
+pub enum PrebuiltFleet {
+    Single(ModelMapping),
+    Multi { partition: DevicePartition, mappings: Vec<ModelMapping> },
+}
+
 impl FleetSim {
     pub fn new(model: &GptModel, cfg: &HwConfig) -> Result<Self> {
-        let inner = if cfg.sched.devices <= 1 {
-            Inner::Single(Box::new(MultiSim::new(model, cfg)?))
+        let pre = Self::prebuild(model, cfg)?;
+        Self::from_prebuilt(model, cfg, &pre)
+    }
+
+    /// Run the placement passes once, for reuse across several
+    /// `from_prebuilt` constructions. The result is only valid for the
+    /// same model and a config with the same device count/partition —
+    /// scheduler knobs (trace, windows, policies) may differ freely.
+    pub fn prebuild(model: &GptModel, cfg: &HwConfig) -> Result<PrebuiltFleet> {
+        if cfg.sched.devices <= 1 {
+            Ok(PrebuiltFleet::Single(ModelMapping::build(model, cfg)?))
         } else {
-            Inner::Multi(Box::new(FleetEngine::new(model, cfg)?))
+            let partition = DevicePartition::build(model, cfg)?;
+            let mut mappings = Vec::with_capacity(partition.slices.len());
+            for s in &partition.slices {
+                let mapping = ModelMapping::build_device(&s.kv_model, cfg, &s.weights)
+                    .map_err(|e| anyhow!("device {} of {}: {e}", s.device, partition.devices))?;
+                mappings.push(mapping);
+            }
+            Ok(PrebuiltFleet::Multi { partition, mappings })
+        }
+    }
+
+    /// Build from a [`PrebuiltFleet`] produced by [`FleetSim::prebuild`]
+    /// for the same model/device configuration.
+    pub fn from_prebuilt(model: &GptModel, cfg: &HwConfig, pre: &PrebuiltFleet) -> Result<Self> {
+        let inner = match pre {
+            PrebuiltFleet::Single(mapping) => {
+                if cfg.sched.devices > 1 {
+                    bail!("prebuilt single-package placement used with sched.devices > 1");
+                }
+                Inner::Single(Box::new(MultiSim::from_mapping(model, cfg, mapping.clone())))
+            }
+            PrebuiltFleet::Multi { partition, mappings } => {
+                if cfg.sched.devices != partition.devices {
+                    bail!(
+                        "prebuilt partition holds {} devices but sched.devices = {}",
+                        partition.devices,
+                        cfg.sched.devices
+                    );
+                }
+                Inner::Multi(Box::new(FleetEngine::from_parts(
+                    model,
+                    cfg,
+                    partition.clone(),
+                    mappings.clone(),
+                )?))
+            }
         };
         Ok(Self { inner })
     }
@@ -171,6 +227,55 @@ impl FleetSim {
             Inner::Multi(f) => f.trace.render(),
         }
     }
+
+    /// Attach a profiler directly (test harnesses; runs normally use
+    /// `cfg.sched.profile`).
+    pub fn set_profile(&mut self, profile: super::profile::ProfileSink) {
+        match &mut self.inner {
+            Inner::Single(ms) => ms.set_profile(profile),
+            Inner::Multi(f) => f.trace.set_profile(profile),
+        }
+    }
+
+    /// Finished profile when a profiler is attached, reconciled against
+    /// the run's busy/link cycles. Call after `finalize_stats`.
+    pub fn profile_report(&self) -> Option<super::profile::Profile> {
+        match &self.inner {
+            Inner::Single(ms) => ms.profile_report(),
+            Inner::Multi(f) => f.trace.profile_sink().map(|p| {
+                p.finish(Some(f.stats.busy_cycles()), Some(f.stats.link_transfer_cycles))
+            }),
+        }
+    }
+
+    /// Render the profile artifact per `cfg.sched.profile`:
+    /// `(path, contents)`. The caller writes the file.
+    pub fn render_profile(&self) -> Option<(String, String)> {
+        match &self.inner {
+            Inner::Single(ms) => ms.render_profile(),
+            Inner::Multi(f) => {
+                let profile = self.profile_report()?;
+                match &f.cfg.sched.profile {
+                    super::profile::ProfileSpec::Off => None,
+                    super::profile::ProfileSpec::Text(p) => {
+                        Some((p.clone(), profile.render_text()))
+                    }
+                    super::profile::ProfileSpec::Json(p) => {
+                        Some((p.clone(), profile.to_json().to_string() + "\n"))
+                    }
+                }
+            }
+        }
+    }
+
+    /// Install a calibrated cost table on the admission policy. SLO
+    /// admission shedding is a single-device feature (see module docs);
+    /// the fleet path ignores the table.
+    pub fn set_cost_table(&mut self, table: super::profile::CostTable) {
+        if let Inner::Single(ms) = &mut self.inner {
+            ms.set_cost_table(table);
+        }
+    }
 }
 
 /// Memoized exact cost of one device's step program.
@@ -243,20 +348,33 @@ struct FleetEngine {
 }
 
 impl FleetEngine {
-    fn new(model: &GptModel, cfg: &HwConfig) -> Result<Self> {
-        let partition = DevicePartition::build(model, cfg)?;
-        let mut devices = Vec::with_capacity(partition.devices);
-        for s in &partition.slices {
-            let mapping = ModelMapping::build_device(&s.kv_model, cfg, &s.weights)
-                .map_err(|e| anyhow!("device {} of {}: {e}", s.device, partition.devices))?;
-            devices.push(DeviceState {
+    /// Build from an already-run partition pass and per-device
+    /// mappings (`FleetSim::prebuild` order: one mapping per slice).
+    fn from_parts(
+        model: &GptModel,
+        cfg: &HwConfig,
+        partition: DevicePartition,
+        mappings: Vec<ModelMapping>,
+    ) -> Result<Self> {
+        if mappings.len() != partition.slices.len() {
+            bail!(
+                "partition holds {} device slices but {} mappings were prebuilt",
+                partition.slices.len(),
+                mappings.len()
+            );
+        }
+        let devices: Vec<DeviceState> = partition
+            .slices
+            .iter()
+            .zip(mappings)
+            .map(|(s, mapping)| DeviceState {
                 mapping,
                 model_view: s.kv_model.clone(),
                 free_at: 0,
                 busy_cycles: 0,
                 memo: BTreeMap::new(),
-            });
-        }
+            })
+            .collect();
         // Every device must hold its share of every active stream's
         // KV, so fleet capacity is the weakest device's pool.
         let pool_raw = devices
@@ -276,6 +394,10 @@ impl FleetEngine {
             0
         };
         let (pick, _admission) = policy::build(&cfg.sched);
+        let mut trace = Tracer::new(cfg.sched.trace.clone(), cfg.sched.trace_window);
+        if cfg.sched.profile.is_on() {
+            trace.set_profile(super::profile::ProfileSink::new(model, cfg));
+        }
         Ok(Self {
             cfg: cfg.clone(),
             model: model.clone(),
@@ -295,7 +417,7 @@ impl FleetEngine {
             stats: SimStats::default(),
             partition,
             link_cycles: 0,
-            trace: Tracer::new(cfg.sched.trace.clone(), cfg.sched.trace_window),
+            trace,
         })
     }
 
@@ -948,9 +1070,14 @@ impl FleetEngine {
         }
         self.stats.streams.sort_by_key(|s| s.id);
         self.stats.timeline = self.trace.finish_timeline(self.clock);
-        #[cfg(debug_assertions)]
-        if let Err(e) = self.trace.reconcile(&self.stats) {
-            panic!("fleet trace reconciliation failed: {e}");
+        // Same strict-reconcile contract as `MultiSim::finalize_stats`.
+        match self.trace.reconcile(&self.stats) {
+            Err(e) if self.cfg.sched.strict_reconcile => {
+                self.stats.reconcile_error = Some(e);
+            }
+            #[cfg(debug_assertions)]
+            Err(e) => panic!("fleet trace reconciliation failed: {e}"),
+            _ => {}
         }
         &self.stats
     }

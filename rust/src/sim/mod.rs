@@ -26,13 +26,18 @@
 //! engines can be recorded by the deterministic event-tracing layer in
 //! [`trace`] (`sched.trace = off|jsonl:<path>|chrome:<path>`), which
 //! also bins a windowed utilization timeline into `SimStats` when
-//! `sched.trace_window > 0`. See `sim/README.md`.
+//! `sched.trace_window > 0`. The profiling observer in [`profile`]
+//! (`sched.profile = off|text:<path>|json:<path>`) aggregates the same
+//! event stream online into an exactly-reconciling cycle-attribution
+//! tree, span-latency histograms and a calibrated per-span cost table
+//! (`pim-gpt profile`, `figures --fig profile`). See `sim/README.md`.
 
 pub mod arrivals;
 pub mod engine;
 pub mod fleet;
 pub mod policy;
 pub mod prefill;
+pub mod profile;
 pub mod resources;
 pub mod sched;
 pub mod stats;
@@ -40,9 +45,12 @@ pub mod trace;
 
 pub use arrivals::{ArrivalSpec, TraceRequest};
 pub use engine::{Simulator, StepResult};
-pub use fleet::FleetSim;
+pub use fleet::{FleetSim, PrebuiltFleet};
 pub use policy::{AdmissionPolicy, PickPolicy, PolicySpec};
 pub use prefill::Chunk;
+pub use profile::{
+    calibrate, CalibrationReport, CostTable, PredictedCost, Profile, ProfileSink, ProfileSpec,
+};
 pub use resources::Resources;
 pub use sched::{MultiSim, RejectedStream, StreamOutcome, StreamResult, StreamSpec};
 pub use stats::{LatClass, LatencyReport, Percentiles, SimStats, StreamStats};

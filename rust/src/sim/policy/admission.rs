@@ -1,6 +1,7 @@
 //! Admission policies: whether a picked request is admitted at all.
 
 use super::{AdmissionDecision, AdmissionPolicy};
+use crate::sim::profile::CostTable;
 use crate::sim::sched::StreamSpec;
 
 /// Admit every request the moment a KV slot is free — the engine's
@@ -49,10 +50,20 @@ impl AdmissionPolicy for AdmitAlways {
 /// request cost 1/B of the solo sweep. The policy itself stays a pure
 /// threshold on `wait + est`; the amortization is the engine's estimate
 /// refinement, not a policy knob.
+///
+/// **Calibrated estimates.** When a trace-calibrated
+/// `sim::profile::CostTable` is installed (`MultiSim::set_cost_table`),
+/// the policy supplies `CostTable::predict`'s first-token cycles via
+/// `first_token_override` instead of the engine's replay — same
+/// occupancy amortization applies on top, but the base estimate now
+/// reflects measured span costs rather than the conservative bound.
 pub struct SloAdmission {
     /// TTFT budget in DRAM cycles (`sched.slo_ttft_cycles`,
     /// `--policy slo:<cycles>`).
     pub ttft_budget_cycles: u64,
+    /// Optional calibrated per-span cost table (`pim-gpt profile
+    /// --calibrate` is the producer).
+    pub cost_table: Option<CostTable>,
 }
 
 impl AdmissionPolicy for SloAdmission {
@@ -80,6 +91,18 @@ impl AdmissionPolicy for SloAdmission {
             AdmissionDecision::Admit
         }
     }
+
+    fn first_token_override(&self, spec: &StreamSpec) -> Option<u64> {
+        let table = self.cost_table.as_ref()?;
+        if table.is_empty() {
+            return None;
+        }
+        Some(table.predict(spec)?.first_token_cycles())
+    }
+
+    fn install_cost_table(&mut self, table: CostTable) {
+        self.cost_table = Some(table);
+    }
 }
 
 #[cfg(test)]
@@ -99,7 +122,8 @@ mod tests {
 
     #[test]
     fn slo_rejects_exactly_past_the_budget() {
-        let mut p = SloAdmission { ttft_budget_cycles: 1_000 };
+        let mut p = SloAdmission { ttft_budget_cycles: 1_000, cost_table: None };
+        assert!(p.first_token_override(&spec()).is_none(), "no table installed");
         assert!(p.needs_estimate());
         // On-budget (wait + est == budget) still admits.
         assert_eq!(p.decide(&spec(), 400, 600), AdmissionDecision::Admit);

@@ -192,6 +192,18 @@ pub trait AdmissionPolicy {
         wait_cycles: u64,
         first_token_est_cycles: u64,
     ) -> AdmissionDecision;
+
+    /// Policy-supplied first-token estimate that replaces the engine's
+    /// uncontended replay when `Some` (e.g. `SloAdmission` with a
+    /// calibrated `CostTable` installed). The engine still applies its
+    /// batch-occupancy amortization on top.
+    fn first_token_override(&self, _spec: &StreamSpec) -> Option<u64> {
+        None
+    }
+
+    /// Install a calibrated cost table (`sim::profile::CostTable`).
+    /// Policies that don't price admission ignore it.
+    fn install_cost_table(&mut self, _table: crate::sim::profile::CostTable) {}
 }
 
 /// Instantiate the pick + admission policy pair configured in `sched`.
@@ -202,7 +214,10 @@ pub fn build(sched: &SchedulerConfig) -> (Box<dyn PickPolicy>, Box<dyn Admission
         PolicySpec::Fair => Box::new(FairShare),
     };
     let admission: Box<dyn AdmissionPolicy> = match sched.policy {
-        PolicySpec::Slo => Box::new(SloAdmission { ttft_budget_cycles: sched.slo_ttft_cycles }),
+        PolicySpec::Slo => Box::new(SloAdmission {
+            ttft_budget_cycles: sched.slo_ttft_cycles,
+            cost_table: None,
+        }),
         _ => Box::new(AdmitAlways),
     };
     (pick, admission)

@@ -1,0 +1,1177 @@
+//! Trace-driven profiler: hierarchical cycle attribution, span-latency
+//! histograms, and a calibrated per-span cost table.
+//!
+//! [`ProfileSink`] is a [`TraceSink`] observer: the engines feed it the
+//! same `TraceEvent` stream the JSONL/Chrome sinks see (online, no
+//! round-trip), and [`Profile::from_jsonl`] replays a recorded
+//! `jsonl:` artifact through the identical path. From the spans it
+//! builds:
+//!
+//! * **Cycle attribution** — a tree keyed phase (prefill / solo-decode
+//!   / fused-sweep / writeback / restore) × position regime
+//!   (gb-resident vs av-chunked) × decode-batch occupancy × device.
+//!   Concurrent streams overlap, so naive span summing over-counts;
+//!   instead the sweep partitions the *union* of compute spans into
+//!   elementary intervals and charges each busy interval to exactly one
+//!   covering span (highest-priority phase, then earliest start, then
+//!   lowest stream id). Uncovered busy cycles land in an explicit
+//!   residual leaf, so leaf sums + residual equal
+//!   `SimStats::busy_cycles` cycle-for-cycle by construction. Link
+//!   cycles are a separate additive axis keyed `(src, dst)`: the fleet
+//!   engine emits one `link_transfer` span per charged hop, so the
+//!   span-duration sum must equal `SimStats::link_transfer_cycles`
+//!   exactly.
+//! * **Latency histograms** — log₂-bucketed span durations with exact
+//!   nearest-rank p50/p95/p99 per span class.
+//! * **A [`CostTable`]** — per-span costs keyed (regime, passes,
+//!   occupancy) with exact per-`ltoken` samples plus a least-squares
+//!   linear fall-back, a `predict(StreamSpec)` replay, and a
+//!   [`calibrate`] cross-validation mode that pins the predictor's
+//!   per-request e2e error against the cycle-accurate engine. This is
+//!   the calibration source the ROADMAP metasim item names, and
+//!   `SloAdmission` consumes it as an optional first-token estimate.
+//!
+//! Like every sink, the profiler is a pure observer: profiling on must
+//! not move a single simulated cycle (pinned by
+//! `tests/integration_profile.rs`).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use super::prefill;
+use super::sched::{MultiSim, StreamOutcome, StreamSpec};
+use super::trace::{TraceEvent, TraceSink, TraceSpec};
+use crate::config::HwConfig;
+use crate::model::GptModel;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::table::Table;
+
+/// Parsed `sched.profile` spec: `off`, `text:<path>` or `json:<path>`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub enum ProfileSpec {
+    #[default]
+    Off,
+    Text(String),
+    Json(String),
+}
+
+impl ProfileSpec {
+    pub fn parse(s: &str) -> Result<Self> {
+        let s = s.trim();
+        if s.is_empty() || s == "off" {
+            return Ok(ProfileSpec::Off);
+        }
+        if let Some(path) = s.strip_prefix("text:") {
+            if path.is_empty() {
+                bail!("profile spec 'text:' needs a path, e.g. text:profile.txt");
+            }
+            return Ok(ProfileSpec::Text(path.to_string()));
+        }
+        if let Some(path) = s.strip_prefix("json:") {
+            if path.is_empty() {
+                bail!("profile spec 'json:' needs a path, e.g. json:profile.json");
+            }
+            return Ok(ProfileSpec::Json(path.to_string()));
+        }
+        bail!("unknown profile spec '{s}' (expected off, text:<path> or json:<path>)");
+    }
+
+    pub fn is_on(&self) -> bool {
+        !matches!(self, ProfileSpec::Off)
+    }
+
+    /// Artifact path, when profiling is on.
+    pub fn path(&self) -> Option<&str> {
+        match self {
+            ProfileSpec::Off => None,
+            ProfileSpec::Text(p) | ProfileSpec::Json(p) => Some(p),
+        }
+    }
+}
+
+impl fmt::Display for ProfileSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ProfileSpec::Off => write!(f, "off"),
+            ProfileSpec::Text(p) => write!(f, "text:{p}"),
+            ProfileSpec::Json(p) => write!(f, "json:{p}"),
+        }
+    }
+}
+
+/// Attribution phase. Declaration order doubles as the overlap
+/// priority: when spans overlap on the clock, the interval is charged
+/// to the lowest variant (a fused sweep is the batch-wide work the
+/// overlapping members describe per-stream; prefill/decode compute
+/// outranks the KV traffic it overlaps).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Phase {
+    FusedSweep,
+    Prefill,
+    SoloDecode,
+    Writeback,
+    Restore,
+}
+
+impl Phase {
+    pub fn label(self) -> &'static str {
+        match self {
+            Phase::FusedSweep => "fused-sweep",
+            Phase::Prefill => "prefill",
+            Phase::SoloDecode => "solo-decode",
+            Phase::Writeback => "writeback",
+            Phase::Restore => "restore",
+        }
+    }
+}
+
+/// Display name of a position regime (`av_chunked` per
+/// `compiler::template::PosRegime`).
+pub fn regime_label(av_chunked: bool) -> &'static str {
+    if av_chunked {
+        "av-chunked"
+    } else {
+        "gb-resident"
+    }
+}
+
+/// One leaf key of the attribution tree.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct AttrKey {
+    pub device: u64,
+    pub phase: Phase,
+    pub av_chunked: bool,
+    /// Decode-batch occupancy (1 for everything but fused sweeps).
+    pub occupancy: u64,
+}
+
+/// One classified compute span, as the attribution sweep and the cost
+/// table see it.
+#[derive(Clone, Copy, Debug)]
+struct SpanRec {
+    start: u64,
+    finish: u64,
+    phase: Phase,
+    av_chunked: bool,
+    occupancy: u64,
+    device: u64,
+    /// Tie-break id (lead/lowest member for fused sweeps).
+    stream: u64,
+    /// Context length the span's KV reads use (the cost-table x value).
+    ltoken: u64,
+    /// Positions the span advances (chunk length; 1 per decode step; 0
+    /// for KV traffic, which never feeds the cost table).
+    passes: u64,
+}
+
+/// Span-duration histogram: exact samples, log₂ buckets for display.
+#[derive(Clone, Debug, Default)]
+pub struct Hist {
+    samples: Vec<u64>,
+}
+
+impl Hist {
+    fn add(&mut self, d: u64) {
+        self.samples.push(d);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.samples.len() as u64
+    }
+
+    fn sorted(&self) -> Vec<u64> {
+        let mut v = self.samples.clone();
+        v.sort_unstable();
+        v
+    }
+
+    fn rank(sorted: &[u64], q: f64) -> u64 {
+        if sorted.is_empty() {
+            return 0;
+        }
+        let n = sorted.len();
+        let idx = ((q * n as f64).ceil() as usize).clamp(1, n);
+        sorted[idx - 1]
+    }
+
+    /// Exact nearest-rank (p50, p95, p99).
+    pub fn percentiles(&self) -> (u64, u64, u64) {
+        let s = self.sorted();
+        (Self::rank(&s, 0.50), Self::rank(&s, 0.95), Self::rank(&s, 0.99))
+    }
+
+    /// Non-empty log₂ buckets as `(lo, hi, count)` with inclusive
+    /// bounds: bucket 0 holds duration 0, bucket i holds
+    /// `[2^(i-1), 2^i)`.
+    pub fn buckets(&self) -> Vec<(u64, u64, u64)> {
+        let mut counts: BTreeMap<u32, u64> = BTreeMap::new();
+        for &d in &self.samples {
+            let b = if d == 0 { 0 } else { 64 - d.leading_zeros() };
+            *counts.entry(b).or_insert(0) += 1;
+        }
+        counts
+            .into_iter()
+            .map(|(b, c)| {
+                if b == 0 {
+                    return (0, 0, c);
+                }
+                let lo = 1u64 << (b - 1);
+                let hi = if b >= 64 { u64::MAX } else { (1u64 << b) - 1 };
+                (lo, hi, c)
+            })
+            .collect()
+    }
+}
+
+/// Least-squares linear model `cycles ≈ a + b·ltoken`.
+#[derive(Clone, Copy, Debug)]
+pub struct LinFit {
+    pub a: f64,
+    pub b: f64,
+    pub n: u64,
+    pub min_x: u64,
+    pub max_x: u64,
+}
+
+impl LinFit {
+    /// Fit over `(ltoken, cycles)` samples (caller guarantees
+    /// non-empty). Degenerates to the mean when every x is equal.
+    fn fit(samples: &[(u64, u64)]) -> LinFit {
+        let n = samples.len() as f64;
+        let (mut sx, mut sy, mut sxx, mut sxy) = (0f64, 0f64, 0f64, 0f64);
+        let (mut min_x, mut max_x) = (u64::MAX, 0u64);
+        for &(x, y) in samples {
+            let (xf, yf) = (x as f64, y as f64);
+            sx += xf;
+            sy += yf;
+            sxx += xf * xf;
+            sxy += xf * yf;
+            min_x = min_x.min(x);
+            max_x = max_x.max(x);
+        }
+        let denom = n * sxx - sx * sx;
+        let (a, b) = if denom.abs() < 1e-9 {
+            (sy / n, 0.0)
+        } else {
+            let b = (n * sxy - sx * sy) / denom;
+            ((sy - b * sx) / n, b)
+        };
+        LinFit { a, b, n: samples.len() as u64, min_x, max_x }
+    }
+
+    pub fn eval(&self, ltoken: u64) -> f64 {
+        (self.a + self.b * ltoken as f64).max(0.0)
+    }
+}
+
+/// One cost-table entry: exact per-`ltoken` means where the trace
+/// observed that context length, the linear fit everywhere else.
+#[derive(Clone, Debug)]
+pub struct CostEntry {
+    pub fit: LinFit,
+    /// `ltoken -> mean observed cycles` (uncontended spans are
+    /// deterministic per ltoken, so exact lookup beats the fit).
+    exact: BTreeMap<u64, u64>,
+}
+
+impl CostEntry {
+    fn build(samples: &[(u64, u64)]) -> CostEntry {
+        let mut acc: BTreeMap<u64, (u64, u64)> = BTreeMap::new();
+        for &(x, y) in samples {
+            let e = acc.entry(x).or_insert((0, 0));
+            e.0 += y;
+            e.1 += 1;
+        }
+        let exact = acc.into_iter().map(|(x, (sum, n))| (x, sum / n.max(1))).collect();
+        CostEntry { fit: LinFit::fit(samples), exact }
+    }
+
+    pub fn eval(&self, ltoken: u64) -> f64 {
+        if let Some(&d) = self.exact.get(&ltoken) {
+            return d as f64;
+        }
+        self.fit.eval(ltoken)
+    }
+}
+
+/// `(av_chunked, passes, occupancy)` — the per-model cost-table key.
+pub type CostKey = (bool, u64, u64);
+
+/// Calibrated per-span cost table extracted from a profile, keyed
+/// (model, regime, chunk/passes, occupancy). `predict` replays a
+/// request's deterministic chunk/step schedule against the table.
+#[derive(Clone, Debug)]
+pub struct CostTable {
+    pub model: String,
+    /// Prefill chunk size the prediction replay uses
+    /// (`sched.prefill_chunk` of the profiled run).
+    pub chunk: u64,
+    /// Largest gb-resident context length (`gb_elems / n_head`);
+    /// ltokens above it are av-chunked.
+    pub regime_boundary: u64,
+    pub entries: BTreeMap<CostKey, CostEntry>,
+}
+
+impl CostTable {
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    fn av_chunked(&self, ltoken: u64) -> bool {
+        ltoken > self.regime_boundary
+    }
+
+    /// Cost of one span. Exact key first; otherwise the nearest key
+    /// (same occupancy, then same regime, then closest passes) scaled
+    /// by the passes ratio — chunk cost is one pass per position.
+    fn span_cost(&self, av: bool, passes: u64, occupancy: u64, ltoken: u64) -> Option<f64> {
+        if let Some(e) = self.entries.get(&(av, passes, occupancy)) {
+            return Some(e.eval(ltoken));
+        }
+        let mut best: Option<((u64, u64, u64, u64), (u64, &CostEntry))> = None;
+        for (&(r, p, occ), e) in &self.entries {
+            let score = (occ.abs_diff(occupancy), u64::from(r != av), p.abs_diff(passes), p);
+            let better = match &best {
+                None => true,
+                Some((s, _)) => score < *s,
+            };
+            if better {
+                best = Some((score, (p, e)));
+            }
+        }
+        let (_, (p, e)) = best?;
+        Some(e.eval(ltoken) * passes as f64 / p.max(1) as f64)
+    }
+
+    /// Replay `spec`'s deterministic chunked-prefill + decode schedule
+    /// against the table. `None` only when the table is empty.
+    pub fn predict(&self, spec: &StreamSpec) -> Option<PredictedCost> {
+        if self.entries.is_empty() {
+            return None;
+        }
+        let mut prefill_cycles = 0f64;
+        for c in prefill::chunks(spec.prompt_tokens, self.chunk) {
+            let lt = c.ltoken_end();
+            prefill_cycles += self.span_cost(self.av_chunked(lt), c.len, 1, lt)?;
+        }
+        let mut decode_cycles = 0f64;
+        for pos in spec.prompt_tokens..spec.n_tokens {
+            let lt = pos + 1;
+            decode_cycles += self.span_cost(self.av_chunked(lt), 1, 1, lt)?;
+        }
+        Some(PredictedCost {
+            prefill_cycles: prefill_cycles.round() as u64,
+            decode_cycles: decode_cycles.round() as u64,
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let entries = self
+            .entries
+            .iter()
+            .map(|(&(av, passes, occ), e)| {
+                Json::obj(vec![
+                    ("regime", regime_label(av).into()),
+                    ("passes", passes.into()),
+                    ("occupancy", occ.into()),
+                    ("samples", e.fit.n.into()),
+                    ("ltoken_min", e.fit.min_x.into()),
+                    ("ltoken_max", e.fit.max_x.into()),
+                    ("a", e.fit.a.into()),
+                    ("b", e.fit.b.into()),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("model", self.model.as_str().into()),
+            ("chunk", self.chunk.into()),
+            ("regime_boundary", self.regime_boundary.into()),
+            ("entries", Json::Arr(entries)),
+        ])
+    }
+}
+
+/// Predicted per-request cost from [`CostTable::predict`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PredictedCost {
+    pub prefill_cycles: u64,
+    pub decode_cycles: u64,
+}
+
+impl PredictedCost {
+    /// Uncontended first-generated-token estimate (the prompt's last
+    /// position produces the first token).
+    pub fn first_token_cycles(&self) -> u64 {
+        self.prefill_cycles
+    }
+
+    pub fn e2e_cycles(&self) -> u64 {
+        self.prefill_cycles + self.decode_cycles
+    }
+}
+
+/// Online profiling sink: classifies the engine's span events as they
+/// are emitted. A pure observer — it never feeds anything back.
+#[derive(Clone, Debug)]
+pub struct ProfileSink {
+    model: String,
+    chunk: u64,
+    regime_boundary: u64,
+    /// Next position each stream will produce (fused sweeps carry no
+    /// positions, so the sink replays them from the per-stream event
+    /// order).
+    next_pos: BTreeMap<u64, u64>,
+    spans: Vec<SpanRec>,
+    links: BTreeMap<(u64, u64), u64>,
+    hists: BTreeMap<&'static str, Hist>,
+}
+
+impl ProfileSink {
+    pub fn new(model: &GptModel, cfg: &HwConfig) -> Self {
+        Self {
+            model: model.name.to_string(),
+            chunk: cfg.sched.prefill_chunk,
+            regime_boundary: cfg.pim.gb_elems() as u64 / (model.n_head as u64).max(1),
+            next_pos: BTreeMap::new(),
+            spans: Vec::new(),
+            links: BTreeMap::new(),
+            hists: BTreeMap::new(),
+        }
+    }
+
+    fn record(&mut self, class: &'static str, dur: u64) {
+        self.hists.entry(class).or_default().add(dur);
+    }
+
+    /// Partition the union of compute spans over elementary intervals:
+    /// each covered interval is charged to one covering span (lowest
+    /// `Phase`, then earliest start, then lowest stream id). Returns
+    /// the leaves and the total covered cycles.
+    fn attribute(&self) -> (BTreeMap<AttrKey, u64>, u64) {
+        let mut spans: Vec<&SpanRec> = self.spans.iter().filter(|s| s.finish > s.start).collect();
+        spans.sort_by_key(|s| (s.start, s.finish, s.stream));
+        let mut cuts: Vec<u64> = Vec::with_capacity(spans.len() * 2);
+        for s in &spans {
+            cuts.push(s.start);
+            cuts.push(s.finish);
+        }
+        cuts.sort_unstable();
+        cuts.dedup();
+        let mut leaves: BTreeMap<AttrKey, u64> = BTreeMap::new();
+        let mut covered = 0u64;
+        let mut active: Vec<&SpanRec> = Vec::new();
+        let mut next = 0usize;
+        for w in cuts.windows(2) {
+            let (a, b) = (w[0], w[1]);
+            while next < spans.len() && spans[next].start <= a {
+                active.push(spans[next]);
+                next += 1;
+            }
+            active.retain(|s| s.finish > a);
+            if let Some(best) = active.iter().min_by_key(|s| (s.phase, s.start, s.stream)) {
+                let key = AttrKey {
+                    device: best.device,
+                    phase: best.phase,
+                    av_chunked: best.av_chunked,
+                    occupancy: best.occupancy,
+                };
+                *leaves.entry(key).or_insert(0) += b - a;
+                covered += b - a;
+            }
+        }
+        (leaves, covered)
+    }
+
+    fn cost_table(&self) -> CostTable {
+        let mut samples: BTreeMap<CostKey, Vec<(u64, u64)>> = BTreeMap::new();
+        for s in &self.spans {
+            if !matches!(s.phase, Phase::Prefill | Phase::SoloDecode | Phase::FusedSweep) {
+                continue;
+            }
+            samples
+                .entry((s.av_chunked, s.passes, s.occupancy))
+                .or_default()
+                .push((s.ltoken, s.finish - s.start));
+        }
+        CostTable {
+            model: self.model.clone(),
+            chunk: self.chunk,
+            regime_boundary: self.regime_boundary,
+            entries: samples.into_iter().map(|(k, v)| (k, CostEntry::build(&v))).collect(),
+        }
+    }
+
+    /// Finalize into a [`Profile`]. `busy_cycles` /`link_cycles` are
+    /// the `SimStats` reconciliation targets; `None` (offline JSONL
+    /// replay, where no stats exist) pins them to the traced sums.
+    pub fn finish(&self, busy_cycles: Option<u64>, link_cycles: Option<u64>) -> Profile {
+        let (leaves, covered) = self.attribute();
+        let busy = busy_cycles.unwrap_or(covered);
+        let traced_link: u64 = self.links.values().sum();
+        let link = link_cycles.unwrap_or(traced_link);
+        Profile {
+            model: self.model.clone(),
+            leaves: leaves.into_iter().collect(),
+            residual: busy as i64 - covered as i64,
+            busy_cycles: busy,
+            links: self.links.iter().map(|(&k, &v)| (k, v)).collect(),
+            link_cycles: link,
+            link_residual: link as i64 - traced_link as i64,
+            histograms: self.hists.iter().map(|(&k, v)| (k.to_string(), v.clone())).collect(),
+            cost_table: self.cost_table(),
+        }
+    }
+}
+
+impl TraceSink for ProfileSink {
+    fn event(&mut self, ev: &TraceEvent) {
+        match ev {
+            TraceEvent::PrefillChunk { stream, device, start, finish, pos, positions } => {
+                let positions = (*positions).max(1);
+                let lt = pos + positions;
+                self.next_pos.insert(*stream, lt);
+                self.record("prefill_chunk", finish - start);
+                self.spans.push(SpanRec {
+                    start: *start,
+                    finish: *finish,
+                    phase: Phase::Prefill,
+                    av_chunked: lt > self.regime_boundary,
+                    occupancy: 1,
+                    device: *device,
+                    stream: *stream,
+                    ltoken: lt,
+                    passes: positions,
+                });
+            }
+            TraceEvent::DecodeStep { stream, device, start, finish, pos } => {
+                let lt = pos + 1;
+                self.next_pos.insert(*stream, lt);
+                self.record("decode_step", finish - start);
+                self.spans.push(SpanRec {
+                    start: *start,
+                    finish: *finish,
+                    phase: Phase::SoloDecode,
+                    av_chunked: lt > self.regime_boundary,
+                    occupancy: 1,
+                    device: *device,
+                    stream: *stream,
+                    ltoken: lt,
+                    passes: 1,
+                });
+            }
+            TraceEvent::FusedSweep { device, start, finish, streams } => {
+                let occ = streams.len().max(1) as u64;
+                let mut lt = 1u64;
+                let mut lead = u64::MAX;
+                for &s in streams {
+                    let p = self.next_pos.entry(s).or_insert(0);
+                    lt = lt.max(*p + 1);
+                    lead = lead.min(s);
+                    *p += 1;
+                }
+                self.record("fused_sweep", finish - start);
+                self.spans.push(SpanRec {
+                    start: *start,
+                    finish: *finish,
+                    phase: Phase::FusedSweep,
+                    av_chunked: lt > self.regime_boundary,
+                    occupancy: occ,
+                    device: *device,
+                    stream: lead,
+                    ltoken: lt,
+                    passes: 1,
+                });
+            }
+            TraceEvent::Writeback { stream, start, finish, tokens } => {
+                let lt = (*tokens).max(1);
+                self.record("writeback", finish - start);
+                self.spans.push(SpanRec {
+                    start: *start,
+                    finish: *finish,
+                    phase: Phase::Writeback,
+                    av_chunked: lt > self.regime_boundary,
+                    occupancy: 1,
+                    device: 0,
+                    stream: *stream,
+                    ltoken: lt,
+                    passes: 0,
+                });
+            }
+            TraceEvent::Restore { stream, start, finish, tokens } => {
+                let lt = (*tokens).max(1);
+                self.record("restore", finish - start);
+                self.spans.push(SpanRec {
+                    start: *start,
+                    finish: *finish,
+                    phase: Phase::Restore,
+                    av_chunked: lt > self.regime_boundary,
+                    occupancy: 1,
+                    device: 0,
+                    stream: *stream,
+                    ltoken: lt,
+                    passes: 0,
+                });
+            }
+            TraceEvent::LinkTransfer { src, dst, start, finish, .. } => {
+                self.record("link_transfer", finish - start);
+                *self.links.entry((*src, *dst)).or_insert(0) += finish - start;
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Finalized profile: the attribution tree, histograms and cost table,
+/// plus the reconciliation targets they were closed against.
+#[derive(Clone, Debug)]
+pub struct Profile {
+    pub model: String,
+    pub leaves: Vec<(AttrKey, u64)>,
+    /// Busy cycles no compute span covered (>= 0 on a healthy trace;
+    /// negative means spans overlapped idle time — an engine bug).
+    pub residual: i64,
+    /// `SimStats::busy_cycles` target the leaves + residual sum to.
+    pub busy_cycles: u64,
+    pub links: Vec<((u64, u64), u64)>,
+    /// `SimStats::link_transfer_cycles` target.
+    pub link_cycles: u64,
+    /// `link_cycles` minus the traced link-span sum (must be 0).
+    pub link_residual: i64,
+    pub histograms: Vec<(String, Hist)>,
+    pub cost_table: CostTable,
+}
+
+impl Profile {
+    /// Sum over the attribution leaves (excluding the residual).
+    pub fn attributed_cycles(&self) -> u64 {
+        self.leaves.iter().map(|(_, c)| c).sum()
+    }
+
+    /// The reconciliation invariants: leaves + residual == busy cycles
+    /// with a non-negative residual, and link spans sum exactly to the
+    /// charged link cycles.
+    pub fn check(&self) -> Result<(), String> {
+        let attributed = self.attributed_cycles();
+        if self.residual < 0 {
+            return Err(format!(
+                "attribution overruns busy cycles: covered {attributed} > busy {}",
+                self.busy_cycles
+            ));
+        }
+        if attributed + self.residual as u64 != self.busy_cycles {
+            return Err(format!(
+                "attribution total {attributed} + residual {} != busy {}",
+                self.residual, self.busy_cycles
+            ));
+        }
+        if self.link_residual != 0 {
+            return Err(format!(
+                "link spans sum to {} but stats charge {}",
+                self.link_cycles as i64 - self.link_residual,
+                self.link_cycles
+            ));
+        }
+        Ok(())
+    }
+
+    /// Replay a recorded `jsonl:` trace through the same classification
+    /// path. No `SimStats` exist offline, so the reconciliation targets
+    /// pin to the traced sums (residual 0 by construction).
+    pub fn from_jsonl(text: &str, model: &GptModel, cfg: &HwConfig) -> Result<Profile> {
+        let mut sink = ProfileSink::new(model, cfg);
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let json = Json::parse(line).map_err(|e| anyhow!("trace line {}: {e}", i + 1))?;
+            let ev = TraceEvent::from_json(&json).map_err(|e| anyhow!("trace line {}: {e}", i + 1))?;
+            sink.event(&ev);
+        }
+        Ok(sink.finish(None, None))
+    }
+
+    fn share(&self, cycles: f64) -> String {
+        format!("{:.1}%", 100.0 * cycles / self.busy_cycles.max(1) as f64)
+    }
+
+    pub fn render_text(&self) -> String {
+        let mut out = format!(
+            "profile: {} (busy {} cycles, link {} cycles)\n\ncycle attribution (device x phase x regime x occupancy)\n",
+            self.model, self.busy_cycles, self.link_cycles
+        );
+        let mut t = Table::new(vec!["device", "phase", "regime", "occ", "cycles", "share"]);
+        for (k, c) in &self.leaves {
+            t.row(vec![
+                k.device.to_string(),
+                k.phase.label().to_string(),
+                regime_label(k.av_chunked).to_string(),
+                k.occupancy.to_string(),
+                c.to_string(),
+                self.share(*c as f64),
+            ]);
+        }
+        t.row(vec![
+            "-".to_string(),
+            "unattributed".to_string(),
+            "-".to_string(),
+            "-".to_string(),
+            self.residual.to_string(),
+            self.share(self.residual as f64),
+        ]);
+        out.push_str(&t.render());
+        if !self.links.is_empty() {
+            out.push_str("\nlink transfer cycles (src -> dst)\n");
+            let mut t = Table::new(vec!["src", "dst", "cycles"]);
+            for &((s, d), c) in &self.links {
+                t.row(vec![s.to_string(), d.to_string(), c.to_string()]);
+            }
+            out.push_str(&t.render());
+        }
+        if !self.histograms.is_empty() {
+            out.push_str("\nspan latency (cycles)\n");
+            let mut t = Table::new(vec!["class", "count", "p50", "p95", "p99", "log2 buckets"]);
+            for (class, h) in &self.histograms {
+                let (p50, p95, p99) = h.percentiles();
+                let buckets = h
+                    .buckets()
+                    .into_iter()
+                    .map(|(lo, hi, n)| format!("[{lo}..{hi}]x{n}"))
+                    .collect::<Vec<_>>()
+                    .join(" ");
+                t.row(vec![
+                    class.clone(),
+                    h.count().to_string(),
+                    p50.to_string(),
+                    p95.to_string(),
+                    p99.to_string(),
+                    buckets,
+                ]);
+            }
+            out.push_str(&t.render());
+        }
+        if !self.cost_table.is_empty() {
+            out.push_str("\ncost table (cycles = a + b * ltoken; exact samples preferred)\n");
+            let mut t =
+                Table::new(vec!["regime", "passes", "occ", "samples", "ltoken range", "a", "b"]);
+            for (&(av, passes, occ), e) in &self.cost_table.entries {
+                t.row(vec![
+                    regime_label(av).to_string(),
+                    passes.to_string(),
+                    occ.to_string(),
+                    e.fit.n.to_string(),
+                    format!("{}..{}", e.fit.min_x, e.fit.max_x),
+                    format!("{:.1}", e.fit.a),
+                    format!("{:.3}", e.fit.b),
+                ]);
+            }
+            out.push_str(&t.render());
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let attribution = self
+            .leaves
+            .iter()
+            .map(|(k, c)| {
+                Json::obj(vec![
+                    ("device", k.device.into()),
+                    ("phase", k.phase.label().into()),
+                    ("regime", regime_label(k.av_chunked).into()),
+                    ("occupancy", k.occupancy.into()),
+                    ("cycles", (*c).into()),
+                ])
+            })
+            .collect();
+        let links = self
+            .links
+            .iter()
+            .map(|&((s, d), c)| {
+                Json::obj(vec![("src", s.into()), ("dst", d.into()), ("cycles", c.into())])
+            })
+            .collect();
+        let histograms = self
+            .histograms
+            .iter()
+            .map(|(class, h)| {
+                let (p50, p95, p99) = h.percentiles();
+                let buckets = h
+                    .buckets()
+                    .into_iter()
+                    .map(|(lo, hi, n)| {
+                        Json::obj(vec![
+                            ("lo", lo.into()),
+                            ("hi", hi.into()),
+                            ("count", n.into()),
+                        ])
+                    })
+                    .collect();
+                Json::obj(vec![
+                    ("class", class.as_str().into()),
+                    ("count", h.count().into()),
+                    ("p50", p50.into()),
+                    ("p95", p95.into()),
+                    ("p99", p99.into()),
+                    ("buckets", Json::Arr(buckets)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("model", self.model.as_str().into()),
+            ("busy_cycles", self.busy_cycles.into()),
+            ("attributed_cycles", self.attributed_cycles().into()),
+            ("residual_cycles", (self.residual as f64).into()),
+            ("link_cycles", self.link_cycles.into()),
+            ("attribution", Json::Arr(attribution)),
+            ("links", Json::Arr(links)),
+            ("histograms", Json::Arr(histograms)),
+            ("cost_table", self.cost_table.to_json()),
+        ])
+    }
+}
+
+/// One validation request of a calibration run.
+#[derive(Clone, Copy, Debug)]
+pub struct CalibrationRow {
+    pub prompt_tokens: u64,
+    pub gen_tokens: u64,
+    pub predicted_cycles: u64,
+    pub actual_cycles: u64,
+    pub rel_err: f64,
+}
+
+/// Cross-validation of [`CostTable::predict`] against the
+/// cycle-accurate engine.
+#[derive(Clone, Debug)]
+pub struct CalibrationReport {
+    pub model: String,
+    pub n_train: usize,
+    pub rows: Vec<CalibrationRow>,
+    pub mean_rel_err: f64,
+    pub max_rel_err: f64,
+}
+
+impl CalibrationReport {
+    pub fn render_text(&self) -> String {
+        let mut out = format!(
+            "calibration: {} ({} train requests, {} validation requests)\n",
+            self.model,
+            self.n_train,
+            self.rows.len()
+        );
+        let mut t = Table::new(vec!["prompt", "gen", "predicted", "actual", "rel err"]);
+        for r in &self.rows {
+            t.row(vec![
+                r.prompt_tokens.to_string(),
+                r.gen_tokens.to_string(),
+                r.predicted_cycles.to_string(),
+                r.actual_cycles.to_string(),
+                format!("{:.2}%", 100.0 * r.rel_err),
+            ]);
+        }
+        out.push_str(&t.render());
+        out.push_str(&format!(
+            "mean rel err {:.2}%  max rel err {:.2}%\n",
+            100.0 * self.mean_rel_err,
+            100.0 * self.max_rel_err
+        ));
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let rows = self
+            .rows
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("prompt_tokens", r.prompt_tokens.into()),
+                    ("gen_tokens", r.gen_tokens.into()),
+                    ("predicted_cycles", r.predicted_cycles.into()),
+                    ("actual_cycles", r.actual_cycles.into()),
+                    ("rel_err", r.rel_err.into()),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("model", self.model.as_str().into()),
+            ("n_train", self.n_train.into()),
+            ("n_validate", self.rows.len().into()),
+            ("mean_rel_err", self.mean_rel_err.into()),
+            ("max_rel_err", self.max_rel_err.into()),
+            ("rows", Json::Arr(rows)),
+        ])
+    }
+}
+
+/// Train a [`CostTable`] on a deterministic grid of uncontended
+/// requests, then cross-validate `predict` on `n_validate` seeded
+/// random shapes, each replayed on a fresh single-request engine
+/// (arrival 0, so e2e cycles are pure service time).
+pub fn calibrate(
+    model: &GptModel,
+    cfg: &HwConfig,
+    seed: u64,
+    n_validate: usize,
+) -> Result<CalibrationReport> {
+    ensure!(n_validate > 0, "calibration needs at least one validation request");
+    let mut cfg = cfg.clone();
+    cfg.sched.devices = 1;
+    cfg.sched.max_streams = 1;
+    cfg.sched.batch_decode = false;
+    cfg.sched.kv_paging = false;
+    cfg.sched.policy = super::policy::PolicySpec::Fcfs;
+    cfg.sched.trace = TraceSpec::Off;
+    cfg.sched.trace_window = 0;
+    cfg.sched.profile = ProfileSpec::Off;
+    let max_total = (model.max_seq as u64).min(96).max(4);
+    // Training grid: totals span [2, max_total]; shapes rotate between
+    // balanced, decode-heavy (prompt 1, which alone covers every decode
+    // ltoken up to its total) and prefill-heavy (chunk passes + odd
+    // remainders).
+    let n_train = 8u64;
+    let mut ms = MultiSim::new(model, &cfg)?;
+    ms.set_profile(ProfileSink::new(model, &cfg));
+    for i in 0..n_train {
+        let total = 2 + (max_total - 2) * i / (n_train - 1);
+        let prompt = match i % 3 {
+            0 => (total / 2).max(1),
+            1 => 1,
+            _ => total - 1,
+        };
+        ms.submit(StreamSpec { id: i, n_tokens: total, prompt_tokens: prompt, arrival_cycle: 0 })?;
+    }
+    ms.run_all()?;
+    ms.finalize_stats();
+    let profile = ms.profile_report().context("training run carries a profile sink")?;
+    let table = profile.cost_table;
+    ensure!(!table.is_empty(), "calibration training produced no cost samples");
+    let mut rng = Rng::new(seed);
+    let mut rows: Vec<CalibrationRow> = Vec::with_capacity(n_validate);
+    for i in 0..n_validate {
+        let total = 2 + rng.gen_range(max_total - 1);
+        let prompt = 1 + rng.gen_range(total - 1);
+        let spec =
+            StreamSpec { id: i as u64, n_tokens: total, prompt_tokens: prompt, arrival_cycle: 0 };
+        let predicted = table.predict(&spec).context("cost table covers validation shapes")?;
+        let mut vms = MultiSim::new(model, &cfg)?;
+        vms.submit(spec)?;
+        let outcomes = vms.run_all()?;
+        let r = outcomes
+            .into_iter()
+            .filter_map(StreamOutcome::into_completed)
+            .next()
+            .context("single uncontended request completes")?;
+        let actual = r.e2e_cycles();
+        let rel_err =
+            (predicted.e2e_cycles() as f64 - actual as f64).abs() / actual.max(1) as f64;
+        rows.push(CalibrationRow {
+            prompt_tokens: prompt,
+            gen_tokens: total - prompt,
+            predicted_cycles: predicted.e2e_cycles(),
+            actual_cycles: actual,
+            rel_err,
+        });
+    }
+    let mean_rel_err = rows.iter().map(|r| r.rel_err).sum::<f64>() / rows.len() as f64;
+    let max_rel_err = rows.iter().map(|r| r.rel_err).fold(0.0, f64::max);
+    Ok(CalibrationReport {
+        model: model.name.to_string(),
+        n_train: n_train as usize,
+        rows,
+        mean_rel_err,
+        max_rel_err,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model;
+
+    fn sink() -> ProfileSink {
+        let m = model::gpt::by_name("gpt2-small").unwrap();
+        ProfileSink::new(&m, &HwConfig::paper_baseline())
+    }
+
+    #[test]
+    fn spec_parse_and_display_round_trip() {
+        for s in ["off", "text:profile.txt", "json:profile.json"] {
+            let spec = ProfileSpec::parse(s).unwrap();
+            assert_eq!(spec.to_string(), s);
+        }
+        assert_eq!(ProfileSpec::parse("").unwrap(), ProfileSpec::Off);
+        assert!(!ProfileSpec::Off.is_on());
+        assert!(ProfileSpec::parse("json:p.json").unwrap().is_on());
+        assert_eq!(ProfileSpec::parse("text:a/b.txt").unwrap().path(), Some("a/b.txt"));
+        assert!(ProfileSpec::parse("text:").is_err(), "empty path rejected");
+        assert!(ProfileSpec::parse("json:").is_err());
+        assert!(ProfileSpec::parse("yaml:x").is_err(), "unknown format rejected");
+    }
+
+    #[test]
+    fn hist_buckets_and_percentiles() {
+        let mut h = Hist::default();
+        for d in [0, 1, 2, 3, 7, 1000] {
+            h.add(d);
+        }
+        assert_eq!(h.count(), 6);
+        let (p50, p95, p99) = h.percentiles();
+        assert_eq!(p50, 2, "nearest rank at q=0.5 over 6 samples");
+        assert_eq!(p95, 1000);
+        assert_eq!(p99, 1000);
+        let buckets = h.buckets();
+        assert_eq!(buckets[0], (0, 0, 1), "duration 0 bucket");
+        assert_eq!(buckets[1], (1, 1, 1));
+        assert_eq!(buckets[2], (2, 3, 2));
+        assert_eq!(buckets[3], (4, 7, 1));
+        assert_eq!(buckets[4], (512, 1023, 1));
+        assert!(Hist::default().percentiles() == (0, 0, 0));
+    }
+
+    #[test]
+    fn attribution_partitions_overlaps_by_priority() {
+        let mut s = sink();
+        s.event(&TraceEvent::PrefillChunk {
+            stream: 0,
+            device: 0,
+            start: 0,
+            finish: 100,
+            pos: 0,
+            positions: 10,
+        });
+        s.event(&TraceEvent::DecodeStep { stream: 1, device: 0, start: 50, finish: 150, pos: 20 });
+        s.event(&TraceEvent::FusedSweep { device: 0, start: 90, finish: 120, streams: vec![0, 1] });
+        let p = s.finish(Some(160), None);
+        let by_phase = |ph: Phase| -> u64 {
+            p.leaves.iter().filter(|(k, _)| k.phase == ph).map(|(_, c)| c).sum()
+        };
+        assert_eq!(by_phase(Phase::Prefill), 90, "prefill outranks the overlapping solo decode");
+        assert_eq!(by_phase(Phase::FusedSweep), 30, "fused sweep outranks everything");
+        assert_eq!(by_phase(Phase::SoloDecode), 30);
+        assert_eq!(p.attributed_cycles(), 150);
+        assert_eq!(p.residual, 10, "10 busy cycles no span covered");
+        p.check().expect("leaves + residual == busy");
+        let fused_key = p.leaves.iter().find(|(k, _)| k.phase == Phase::FusedSweep).unwrap().0;
+        assert_eq!(fused_key.occupancy, 2);
+        // Busy below coverage means spans overlapped idle time: an error.
+        assert!(s.finish(Some(140), None).check().is_err());
+    }
+
+    #[test]
+    fn link_spans_reconcile_additively() {
+        let mut s = sink();
+        s.event(&TraceEvent::LinkTransfer { stream: 0, src: 0, dst: 1, start: 10, finish: 30 });
+        s.event(&TraceEvent::LinkTransfer { stream: 1, src: 0, dst: 1, start: 40, finish: 45 });
+        s.event(&TraceEvent::LinkTransfer { stream: 0, src: 1, dst: 2, start: 30, finish: 37 });
+        let p = s.finish(Some(0), Some(32));
+        assert_eq!(p.links, vec![((0, 1), 25), ((1, 2), 7)]);
+        assert_eq!(p.link_residual, 0);
+        p.check().unwrap();
+        assert!(s.finish(Some(0), Some(30)).check().is_err(), "link mismatch is loud");
+    }
+
+    #[test]
+    fn cost_table_predicts_linear_costs_exactly() {
+        let mut s = sink();
+        // Solo decode steps with cost 100 + 5 * ltoken at ltoken 2..=21.
+        let mut t = 0u64;
+        for pos in 1..=20u64 {
+            let dur = 100 + 5 * (pos + 1);
+            s.event(&TraceEvent::DecodeStep {
+                stream: 0,
+                device: 0,
+                start: t,
+                finish: t + dur,
+                pos,
+            });
+            t += dur;
+        }
+        let p = s.finish(None, None);
+        let table = &p.cost_table;
+        assert!(!table.is_empty());
+        // Prompt 1 has no prefill sample: the nearest-key fallback lands
+        // on the decode entry, whose linear fit extrapolates ltoken 1.
+        let spec = StreamSpec { id: 0, n_tokens: 21, prompt_tokens: 1, arrival_cycle: 0 };
+        let pred = table.predict(&spec).unwrap();
+        let want: u64 = (1..=21u64).map(|lt| 100 + 5 * lt).sum();
+        assert_eq!(pred.e2e_cycles(), want);
+        assert_eq!(pred.first_token_cycles(), 105);
+        assert!(CostTable {
+            model: "m".into(),
+            chunk: 32,
+            regime_boundary: 8,
+            entries: BTreeMap::new()
+        }
+        .predict(&spec)
+        .is_none());
+    }
+
+    #[test]
+    fn fused_sweeps_replay_member_positions() {
+        let mut s = sink();
+        s.event(&TraceEvent::PrefillChunk {
+            stream: 0,
+            device: 0,
+            start: 0,
+            finish: 10,
+            pos: 0,
+            positions: 4,
+        });
+        s.event(&TraceEvent::PrefillChunk {
+            stream: 1,
+            device: 0,
+            start: 10,
+            finish: 20,
+            pos: 0,
+            positions: 4,
+        });
+        s.event(&TraceEvent::FusedSweep { device: 0, start: 20, finish: 30, streams: vec![0, 1] });
+        s.event(&TraceEvent::FusedSweep { device: 0, start: 30, finish: 40, streams: vec![0, 1] });
+        let p = s.finish(None, None);
+        let key: Vec<&CostKey> =
+            p.cost_table.entries.keys().filter(|(_, _, occ)| *occ == 2).collect();
+        assert_eq!(key.len(), 1, "both sweeps share the occupancy-2 key");
+        let e = &p.cost_table.entries[key[0]];
+        assert_eq!(e.fit.n, 2);
+        assert_eq!((e.fit.min_x, e.fit.max_x), (5, 6), "positions advanced between sweeps");
+    }
+
+    #[test]
+    fn from_jsonl_matches_online_profile() {
+        let events = vec![
+            TraceEvent::Submit { stream: 0, at: 0, arrival: 0, prompt_tokens: 4, tokens: 6 },
+            TraceEvent::Admit { stream: 0, at: 0, slot: 0 },
+            TraceEvent::PrefillChunk {
+                stream: 0,
+                device: 0,
+                start: 0,
+                finish: 90,
+                pos: 0,
+                positions: 4,
+            },
+            TraceEvent::DecodeStep { stream: 0, device: 0, start: 90, finish: 130, pos: 4 },
+            TraceEvent::FusedSweep { device: 0, start: 130, finish: 170, streams: vec![0, 1] },
+            TraceEvent::Writeback { stream: 1, start: 170, finish: 180, tokens: 3 },
+            TraceEvent::Restore { stream: 1, start: 185, finish: 195, tokens: 3 },
+            TraceEvent::LinkTransfer { stream: 0, src: 0, dst: 1, start: 170, finish: 190 },
+            TraceEvent::StreamRetire { stream: 0, at: 195, tokens: 6 },
+        ];
+        let mut online = sink();
+        let mut jsonl = String::new();
+        for ev in &events {
+            online.event(ev);
+            jsonl.push_str(&ev.to_json().to_string());
+            jsonl.push('\n');
+        }
+        let m = model::gpt::by_name("gpt2-small").unwrap();
+        let replayed = Profile::from_jsonl(&jsonl, &m, &HwConfig::paper_baseline()).unwrap();
+        assert_eq!(replayed.to_json(), online.finish(None, None).to_json());
+        assert_eq!(replayed.residual, 0, "offline targets pin to the traced sums");
+        replayed.check().unwrap();
+        assert!(Profile::from_jsonl("not json\n", &m, &HwConfig::paper_baseline()).is_err());
+    }
+}

@@ -492,6 +492,10 @@ impl MultiSim {
         };
         let n_frames = if paging { mapping.kv.n_slots } else { 0 };
         let (pick, admission) = policy::build(&cfg.sched);
+        let mut trace = Tracer::new(cfg.sched.trace.clone(), cfg.sched.trace_window);
+        if cfg.sched.profile.is_on() {
+            trace.set_profile(super::profile::ProfileSink::new(model, cfg));
+        }
         Self {
             cfg: cfg.clone(),
             model: model.clone(),
@@ -522,7 +526,7 @@ impl MultiSim {
             frame_free_at: vec![0; n_frames],
             committed_frames: 0,
             evicted: VecDeque::new(),
-            trace: Tracer::new(cfg.sched.trace.clone(), cfg.sched.trace_window),
+            trace,
         }
     }
 
@@ -544,6 +548,43 @@ impl MultiSim {
     /// file (engines never touch the filesystem).
     pub fn render_trace(&mut self) -> Option<(String, String)> {
         self.trace.render()
+    }
+
+    /// Attach a profiler directly (test harnesses and `calibrate`; runs
+    /// normally use `cfg.sched.profile`). Like every sink it observes —
+    /// it can never perturb scheduling.
+    pub fn set_profile(&mut self, profile: super::profile::ProfileSink) {
+        self.trace.set_profile(profile);
+    }
+
+    /// Finished profile when a profiler is attached, reconciled against
+    /// the run's busy/link cycles. Call after the run drains (the
+    /// stats are finalized on the last `step`).
+    pub fn profile_report(&self) -> Option<super::profile::Profile> {
+        self.trace.profile_sink().map(|p| {
+            p.finish(Some(self.stats.busy_cycles()), Some(self.stats.link_transfer_cycles))
+        })
+    }
+
+    /// Render the profile artifact per `cfg.sched.profile`:
+    /// `(path, contents)`. The caller writes the file (engines never
+    /// touch the filesystem).
+    pub fn render_profile(&self) -> Option<(String, String)> {
+        let profile = self.profile_report()?;
+        match &self.cfg.sched.profile {
+            super::profile::ProfileSpec::Off => None,
+            super::profile::ProfileSpec::Text(p) => Some((p.clone(), profile.render_text())),
+            super::profile::ProfileSpec::Json(p) => {
+                Some((p.clone(), profile.to_json().to_string() + "\n"))
+            }
+        }
+    }
+
+    /// Install a calibrated cost table on the admission policy
+    /// (`SloAdmission` uses it as its first-token estimate; other
+    /// policies ignore it).
+    pub fn set_cost_table(&mut self, table: super::profile::CostTable) {
+        self.admission.install_cost_table(table);
     }
 
     /// Effective concurrency cap: the number of disjoint KV slots the
@@ -1140,7 +1181,13 @@ impl MultiSim {
             };
             let wait = admitted - spec.arrival_cycle;
             let est = if self.admission.needs_estimate() {
-                let est = self.first_token_estimate(spec.prompt_tokens)?;
+                // A calibrated cost table on the policy outranks the
+                // uncontended replay; both then get the same
+                // batch-occupancy amortization below.
+                let est = match self.admission.first_token_override(&spec) {
+                    Some(cycles) => cycles,
+                    None => self.first_token_estimate(spec.prompt_tokens)?,
+                };
                 if self.cfg.sched.batch_decode {
                     // Batch-aware estimate: the uncontended replay
                     // charges full per-step sweep cost, but with fused
@@ -1895,9 +1942,16 @@ impl MultiSim {
         self.stats.program_cache_hits = self.cache.hits;
         self.stats.program_cache_misses = self.cache.misses;
         self.stats.timeline = self.trace.finish_timeline(self.clock);
-        #[cfg(debug_assertions)]
-        if let Err(e) = self.trace.reconcile(&self.stats) {
-            panic!("trace reconciliation failed: {e}");
+        // Debug builds always reconcile and panic; `strict_reconcile`
+        // extends the check to release builds, recording a structured
+        // error instead of aborting a serving process.
+        match self.trace.reconcile(&self.stats) {
+            Err(e) if self.cfg.sched.strict_reconcile => {
+                self.stats.reconcile_error = Some(e);
+            }
+            #[cfg(debug_assertions)]
+            Err(e) => panic!("trace reconciliation failed: {e}"),
+            _ => {}
         }
         &self.stats
     }

@@ -184,6 +184,11 @@ pub struct SimStats {
     /// pages-in-use. Empty whenever `trace_window` is 0 (the default),
     /// so pinned-stats equivalence is unaffected.
     pub timeline: Vec<super::trace::TraceWindow>,
+    /// Trace-vs-stats reconciliation failure recorded at finalize when
+    /// `sched.strict_reconcile` is on (release builds return the
+    /// structured error instead of panicking; debug builds still
+    /// panic). `None` = reconciled clean or reconciliation not run.
+    pub reconcile_error: Option<String>,
 }
 
 /// Per-stream share of a multi-request run (`sim::sched::MultiSim`).

@@ -199,6 +199,114 @@ impl TraceEvent {
             ]),
         }
     }
+
+    /// Inverse of [`TraceEvent::to_json`]: parse one JSONL object back
+    /// into an event — the offline replay path of
+    /// `profile::Profile::from_jsonl`.
+    pub fn from_json(j: &Json) -> Result<TraceEvent, String> {
+        fn field(j: &Json, k: &str) -> Result<u64, String> {
+            let n = j
+                .get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("missing numeric field '{k}'"))?;
+            if n < 0.0 || n.fract() != 0.0 {
+                return Err(format!("field '{k}' is not a non-negative integer: {n}"));
+            }
+            Ok(n as u64)
+        }
+        let ev = j.get("ev").and_then(Json::as_str).ok_or_else(|| "missing 'ev'".to_string())?;
+        match ev {
+            "submit" => Ok(TraceEvent::Submit {
+                stream: field(j, "stream")?,
+                at: field(j, "t")?,
+                arrival: field(j, "arrival")?,
+                prompt_tokens: field(j, "prompt_tokens")?,
+                tokens: field(j, "tokens")?,
+            }),
+            "release" => {
+                Ok(TraceEvent::Release { stream: field(j, "stream")?, at: field(j, "t")? })
+            }
+            "admit" => Ok(TraceEvent::Admit {
+                stream: field(j, "stream")?,
+                at: field(j, "t")?,
+                slot: field(j, "slot")?,
+            }),
+            "reject" => Ok(TraceEvent::Reject {
+                stream: field(j, "stream")?,
+                at: field(j, "t")?,
+                predicted_ttft: field(j, "predicted_ttft")?,
+                ttft_budget: field(j, "ttft_budget")?,
+            }),
+            "prefill_chunk" => Ok(TraceEvent::PrefillChunk {
+                stream: field(j, "stream")?,
+                device: field(j, "device")?,
+                start: field(j, "t0")?,
+                finish: field(j, "t1")?,
+                pos: field(j, "pos")?,
+                positions: field(j, "positions")?,
+            }),
+            "decode_step" => Ok(TraceEvent::DecodeStep {
+                stream: field(j, "stream")?,
+                device: field(j, "device")?,
+                start: field(j, "t0")?,
+                finish: field(j, "t1")?,
+                pos: field(j, "pos")?,
+            }),
+            "fused_sweep" => {
+                let streams = j
+                    .get("streams")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| "fused_sweep missing 'streams'".to_string())?
+                    .iter()
+                    .map(|s| {
+                        s.as_f64()
+                            .map(|n| n as u64)
+                            .ok_or_else(|| "non-numeric stream id".to_string())
+                    })
+                    .collect::<Result<Vec<u64>, String>>()?;
+                Ok(TraceEvent::FusedSweep {
+                    device: field(j, "device")?,
+                    start: field(j, "t0")?,
+                    finish: field(j, "t1")?,
+                    streams,
+                })
+            }
+            "page_fault" => {
+                Ok(TraceEvent::PageFault { stream: field(j, "stream")?, at: field(j, "t")? })
+            }
+            "evict" => Ok(TraceEvent::Evict {
+                victim: field(j, "victim")?,
+                by: field(j, "by")?,
+                at: field(j, "t")?,
+                tokens: field(j, "tokens")?,
+            }),
+            "writeback" => Ok(TraceEvent::Writeback {
+                stream: field(j, "stream")?,
+                start: field(j, "t0")?,
+                finish: field(j, "t1")?,
+                tokens: field(j, "tokens")?,
+            }),
+            "restore" => Ok(TraceEvent::Restore {
+                stream: field(j, "stream")?,
+                start: field(j, "t0")?,
+                finish: field(j, "t1")?,
+                tokens: field(j, "tokens")?,
+            }),
+            "stream_retire" => Ok(TraceEvent::StreamRetire {
+                stream: field(j, "stream")?,
+                at: field(j, "t")?,
+                tokens: field(j, "tokens")?,
+            }),
+            "link_transfer" => Ok(TraceEvent::LinkTransfer {
+                stream: field(j, "stream")?,
+                src: field(j, "src")?,
+                dst: field(j, "dst")?,
+                start: field(j, "t0")?,
+                finish: field(j, "t1")?,
+            }),
+            other => Err(format!("unknown event type '{other}'")),
+        }
+    }
 }
 
 /// Observer of the engine's event stream. Implementations buffer in
@@ -207,6 +315,10 @@ impl TraceEvent {
 /// engine only ever hands out `&TraceEvent`).
 pub trait TraceSink {
     fn event(&mut self, ev: &TraceEvent);
+    /// Pages-in-use changed to `in_use` frames at cycle `at` (paged KV
+    /// only). Default no-op: a counter sample, not an event, so sinks
+    /// that only consume the event stream can ignore it.
+    fn pages(&mut self, _at: u64, _in_use: u64) {}
     /// Render the buffered artifact. Called once, after the run; the
     /// *caller* (CLI/server) writes it to disk so engines stay IO-free.
     fn render(&mut self) -> String {
@@ -262,9 +374,16 @@ impl TraceSink for JsonlSink {
 /// time: per track by timestamp, with ends before begins at equal
 /// stamps (so back-to-back spans never overlap) and longer spans opened
 /// first (so equal-stamp nesting is well-formed).
+/// Thread id the Perfetto counter tracks (`"ph":"C"`) render on — a
+/// sentinel far above real stream ids, exactly representable as an f64
+/// so it round-trips through the JSON number grammar.
+pub const COUNTER_TID: u64 = 0xFFFF_FFFF;
+
 #[derive(Debug, Default)]
 pub struct ChromeSink {
     events: Vec<TraceEvent>,
+    /// Pages-in-use counter samples (via the [`TraceSink::pages`] hook).
+    pages: Vec<(u64, u64)>,
 }
 
 /// One flattened Chrome event plus its track sort key.
@@ -402,9 +521,63 @@ impl ChromeSink {
     }
 }
 
+impl ChromeSink {
+    /// Perfetto counter rows: pages-in-use samples (pid 0 — paging is a
+    /// single-package feature) and the decode-batch occupancy step
+    /// function derived from buffered fused sweeps (+batch at sweep
+    /// start, back down at finish, per device). Rendered only when
+    /// counter data exists, so counter-free traces stay byte-identical.
+    fn counter_rows(&self, rows: &mut Vec<ChromeRow>) {
+        for &(at, in_use) in &self.pages {
+            let json = Json::obj(vec![
+                ("name", "pages_in_use".into()),
+                ("ph", "C".into()),
+                ("ts", at.into()),
+                ("pid", 0u64.into()),
+                ("tid", COUNTER_TID.into()),
+                ("args", Json::obj(vec![("pages", in_use.into())])),
+            ]);
+            rows.push(ChromeRow { pid: 0, tid: COUNTER_TID, ts: at, rank: 1, tie: 0, json });
+        }
+        let mut deltas: Vec<(u64, u64, i64)> = Vec::new();
+        for ev in &self.events {
+            if let TraceEvent::FusedSweep { device, start, finish, streams } = ev {
+                let k = streams.len() as i64;
+                deltas.push((*device, *start, k));
+                deltas.push((*device, *finish, -k));
+            }
+        }
+        // Lexicographic order drops the counter to 0 before the next
+        // sweep opens at the same stamp (-k sorts before +k).
+        deltas.sort_unstable();
+        let mut value: i64 = 0;
+        let mut prev_device: Option<u64> = None;
+        for (device, ts, d) in deltas {
+            if prev_device != Some(device) {
+                value = 0;
+                prev_device = Some(device);
+            }
+            value += d;
+            let json = Json::obj(vec![
+                ("name", "decode_batch".into()),
+                ("ph", "C".into()),
+                ("ts", ts.into()),
+                ("pid", device.into()),
+                ("tid", COUNTER_TID.into()),
+                ("args", Json::obj(vec![("occupancy", (value.max(0) as u64).into())])),
+            ]);
+            rows.push(ChromeRow { pid: device, tid: COUNTER_TID, ts, rank: 1, tie: 0, json });
+        }
+    }
+}
+
 impl TraceSink for ChromeSink {
     fn event(&mut self, ev: &TraceEvent) {
         self.events.push(ev.clone());
+    }
+
+    fn pages(&mut self, at: u64, in_use: u64) {
+        self.pages.push((at, in_use));
     }
 
     fn render(&mut self) -> String {
@@ -412,6 +585,7 @@ impl TraceSink for ChromeSink {
         for ev in &self.events {
             Self::flatten(ev, &mut rows);
         }
+        self.counter_rows(&mut rows);
         // Per-track timestamp order with deterministic tiebreaks; the
         // sort is stable so same-key rows keep emission order.
         rows.sort_by_key(|r| (r.pid, r.tid, r.ts, r.rank, r.tie));
@@ -432,12 +606,17 @@ impl TraceSink for ChromeSink {
                     ("args", Json::obj(vec![("name", format!("device {pid}").into())])),
                 ]));
             }
+            let tname = if tid == COUNTER_TID {
+                "counters".to_string()
+            } else {
+                format!("stream {tid}")
+            };
             meta.push(Json::obj(vec![
                 ("name", "thread_name".into()),
                 ("ph", "M".into()),
                 ("pid", pid.into()),
                 ("tid", tid.into()),
-                ("args", Json::obj(vec![("name", format!("stream {tid}").into())])),
+                ("args", Json::obj(vec![("name", tname.into())])),
             ]));
         }
         meta.extend(rows.into_iter().map(|r| r.json));
@@ -501,6 +680,9 @@ pub fn validate_chrome(text: &str) -> Result<u64, String> {
                 }
             },
             "i" => {}
+            // Counter samples only need the shared per-track monotonic
+            // timestamp check above.
+            "C" => {}
             other => return Err(format!("event {i}: unexpected ph '{other}'")),
         }
     }
@@ -782,6 +964,10 @@ impl Timeline {
 pub struct Tracer {
     spec: TraceSpec,
     sink: Option<Box<dyn TraceSink>>,
+    /// Online profiler (`sched.profile`). A second, typed observer fed
+    /// the same event stream as `sink` — kept separate so the engine
+    /// can extract the finished `Profile` after the run.
+    profile: Option<Box<super::profile::ProfileSink>>,
     counts: TraceCounts,
     timeline: Option<Timeline>,
 }
@@ -798,7 +984,7 @@ impl Tracer {
     pub fn new(spec: TraceSpec, window: u64) -> Self {
         let sink = spec.make_sink();
         let timeline = (window > 0).then(|| Timeline::new(window));
-        Self { spec, sink, counts: TraceCounts::default(), timeline }
+        Self { spec, sink, profile: None, counts: TraceCounts::default(), timeline }
     }
 
     /// Build from the `sched.trace` / `sched.trace_window` string pair.
@@ -811,8 +997,19 @@ impl Tracer {
         self.sink = Some(sink);
     }
 
+    /// Attach an online profiler. Both observers see every event.
+    pub fn set_profile(&mut self, profile: super::profile::ProfileSink) {
+        self.profile = Some(Box::new(profile));
+    }
+
+    /// The attached profiler, if any (finalize it with
+    /// `ProfileSink::finish` against the run's stats).
+    pub fn profile_sink(&self) -> Option<&super::profile::ProfileSink> {
+        self.profile.as_deref()
+    }
+
     pub fn is_on(&self) -> bool {
-        self.sink.is_some()
+        self.sink.is_some() || self.profile.is_some()
     }
 
     pub fn spec(&self) -> &TraceSpec {
@@ -823,14 +1020,21 @@ impl Tracer {
         &self.counts
     }
 
-    /// Emit an event. The closure only runs when a sink is attached, so
-    /// the disabled path never constructs the event.
+    /// Emit an event. The closure only runs when a sink or profiler is
+    /// attached, so the disabled path never constructs the event.
+    /// Counts absorb exactly once however many observers are attached.
     #[inline]
     pub fn emit<F: FnOnce() -> TraceEvent>(&mut self, f: F) {
+        if self.sink.is_none() && self.profile.is_none() {
+            return;
+        }
+        let ev = f();
+        self.counts.absorb(&ev);
         if let Some(sink) = self.sink.as_deref_mut() {
-            let ev = f();
-            self.counts.absorb(&ev);
             sink.event(&ev);
+        }
+        if let Some(profile) = self.profile.as_deref_mut() {
+            profile.event(&ev);
         }
     }
 
@@ -850,11 +1054,18 @@ impl Tracer {
         }
     }
 
-    /// Timeline hook: pages-in-use changed.
+    /// Pages-in-use changed: feeds the timeline and the sinks' counter
+    /// hooks (the Chrome sink renders it as a Perfetto counter track).
     #[inline]
     pub fn pages_sample(&mut self, at: u64, in_use: u64) {
         if let Some(t) = self.timeline.as_mut() {
             t.pages_sample(at, in_use);
+        }
+        if let Some(sink) = self.sink.as_deref_mut() {
+            sink.pages(at, in_use);
+        }
+        if let Some(profile) = self.profile.as_deref_mut() {
+            profile.pages(at, in_use);
         }
     }
 
@@ -1094,6 +1305,86 @@ mod tests {
         assert_eq!(w.len(), 2);
         assert_eq!(w[1].idle, 50);
         assert_eq!(w[1].busy, 0);
+    }
+
+    #[test]
+    fn trace_event_json_round_trip() {
+        for ev in sample_events() {
+            let json = ev.to_json();
+            let back = TraceEvent::from_json(&json)
+                .unwrap_or_else(|e| panic!("{} round-trips: {e}", ev.name()));
+            assert_eq!(back, ev, "{} survives to_json -> from_json", ev.name());
+        }
+        assert!(TraceEvent::from_json(&Json::parse(r#"{"ev":"nope"}"#).unwrap()).is_err());
+        assert!(
+            TraceEvent::from_json(&Json::parse(r#"{"ev":"release","stream":0}"#).unwrap())
+                .is_err(),
+            "missing field rejected"
+        );
+    }
+
+    #[test]
+    fn chrome_counter_tracks_render_and_validate() {
+        let mut sink = ChromeSink::new();
+        sink.pages(10, 2);
+        sink.pages(50, 5);
+        sink.event(&TraceEvent::FusedSweep { device: 0, start: 0, finish: 40, streams: vec![0, 1] });
+        sink.event(&TraceEvent::FusedSweep {
+            device: 0,
+            start: 40,
+            finish: 90,
+            streams: vec![0, 1, 2],
+        });
+        let text = sink.render();
+        validate_chrome(&text).expect("counter rows keep the trace valid");
+        let root = Json::parse(&text).unwrap();
+        let events = root.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let counters: Vec<&Json> =
+            events.iter().filter(|e| e.get("ph").and_then(Json::as_str) == Some("C")).collect();
+        // 2 pages samples + occupancy deltas at ts 0 (+2), 40 (-2,+3), 90 (-3).
+        let pages: Vec<&&Json> = counters
+            .iter()
+            .filter(|e| e.get("name").and_then(Json::as_str) == Some("pages_in_use"))
+            .collect();
+        let occ: Vec<&&Json> = counters
+            .iter()
+            .filter(|e| e.get("name").and_then(Json::as_str) == Some("decode_batch"))
+            .collect();
+        assert_eq!(pages.len(), 2);
+        assert_eq!(occ.len(), 4);
+        // Abutting sweeps: at ts=40 occupancy dips to 0 then rises to 3.
+        let occ_values: Vec<f64> = occ
+            .iter()
+            .map(|e| e.get("args").and_then(|a| a.get("occupancy")).and_then(Json::as_f64).unwrap())
+            .collect();
+        assert_eq!(occ_values, vec![2.0, 0.0, 3.0, 0.0]);
+        for e in &counters {
+            assert_eq!(e.get("tid").and_then(Json::as_f64), Some(COUNTER_TID as f64));
+        }
+        let named_counters = events.iter().any(|e| {
+            e.get("name").and_then(Json::as_str) == Some("thread_name")
+                && e.get("args").and_then(|a| a.get("name")).and_then(Json::as_str)
+                    == Some("counters")
+        });
+        assert!(named_counters, "counter track is labeled");
+    }
+
+    #[test]
+    fn profile_slot_observes_without_sink() {
+        use crate::config::HwConfig;
+        let model = crate::model::gpt::by_name("gpt2-small").unwrap();
+        let cfg = HwConfig::paper_baseline();
+        let mut tracer = Tracer::off();
+        assert!(!tracer.is_on());
+        tracer.set_profile(super::super::profile::ProfileSink::new(&model, &cfg));
+        assert!(tracer.is_on(), "profile slot alone turns the tracer on");
+        for ev in sample_events() {
+            tracer.emit(|| ev.clone());
+        }
+        assert_eq!(tracer.counts().prefill_chunks, 1, "counts absorb with profile only");
+        assert!(tracer.render().is_none(), "no sink, no rendered artifact");
+        let profile = tracer.profile_sink().unwrap().finish(None, None);
+        assert!(profile.attributed_cycles() > 0);
     }
 
     #[test]

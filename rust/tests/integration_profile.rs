@@ -1,0 +1,210 @@
+//! Profiler acceptance invariants (PR tentpole): the profiling observer
+//! aggregates the trace stream into a cycle-attribution tree that
+//! reconciles **exactly** against the engine's busy/link cycle
+//! aggregates, without moving a single simulated cycle. Pinned here on
+//! random traces crossed with batched decode x paged KV x device count,
+//! plus the cost-table calibration error bounds and the satellite
+//! golden on two-device timeline link binning.
+
+use pim_gpt::config::HwConfig;
+use pim_gpt::mapping::PartitionStrategy;
+use pim_gpt::model::gpt::by_name;
+use pim_gpt::sim::{calibrate, FleetSim, Profile, StreamOutcome, StreamSpec};
+
+/// Everything the schedule determines, order-normalized: final clock,
+/// token count, and per-stream (id, admitted, finish, per-token
+/// finishes) rows.
+type Signature = (u64, u64, Vec<(u64, u64, u64, Vec<u64>)>);
+
+/// Run one fleet config to completion; return the schedule signature,
+/// the finished profile (None when profiling is off) and the
+/// reconciliation targets (busy cycles, link cycles).
+fn run_fleet(
+    m: &pim_gpt::model::GptModel,
+    cfg: &HwConfig,
+    specs: &[StreamSpec],
+) -> (Signature, Option<Profile>, u64, u64) {
+    let mut fleet = FleetSim::new(m, cfg).unwrap();
+    for spec in specs {
+        fleet.submit(*spec).unwrap();
+    }
+    let out = fleet.run_all().unwrap();
+    let clock = fleet.clock();
+    let tokens = fleet.finalize_stats().tokens;
+    let busy = fleet.stats().busy_cycles();
+    let link = fleet.stats().link_transfer_cycles;
+    let mut rows: Vec<_> = out
+        .into_iter()
+        .filter_map(StreamOutcome::into_completed)
+        .map(|r| (r.id, r.admitted_cycle, r.finish_cycle, r.token_finishes))
+        .collect();
+    rows.sort();
+    ((clock, tokens, rows), fleet.profile_report(), busy, link)
+}
+
+/// Acceptance pin: profiling is observer-effect free and the
+/// attribution reconciles exactly. On random traces crossed with
+/// batched decode x paged KV x devices in {1, 2}, the profiled run's
+/// schedule is byte-identical to the unprofiled one, and the finished
+/// profile satisfies leaf sums + residual == `SimStats::busy_cycles`
+/// (residual >= 0) with link spans summing exactly to
+/// `SimStats::link_transfer_cycles`.
+#[test]
+fn profiling_reconciles_exactly_and_never_moves_a_cycle() {
+    use pim_gpt::util::prop::check;
+    let m = by_name("gpt-nano").unwrap();
+    check("profiling reconciles + observer-effect-free", 4, |rng| {
+        let n_streams = 2 + rng.gen_range(3);
+        let specs: Vec<StreamSpec> = (0..n_streams)
+            .map(|id| {
+                let n_tokens = 2 + rng.gen_range(10);
+                StreamSpec {
+                    id,
+                    n_tokens,
+                    prompt_tokens: 1 + rng.gen_range(n_tokens),
+                    arrival_cycle: rng.gen_range(1_000_000),
+                }
+            })
+            .collect();
+        for devices in [1usize, 2] {
+            for (batch, paging) in
+                [(false, false), (true, false), (false, true), (true, true)]
+            {
+                let mut base = HwConfig::paper_baseline()
+                    .with_max_streams(2)
+                    .with_batch_decode(batch)
+                    .with_devices(devices);
+                if paging {
+                    base.sched.kv_paging = true;
+                    base.sched.kv_page_tokens = 32;
+                    base.sched.kv_oversub = 1.5;
+                }
+                let (want, none, _, _) = run_fleet(&m, &base, &specs);
+                assert!(none.is_none(), "unprofiled run produced a profile");
+                let (sig, profile, busy, link) =
+                    run_fleet(&m, &base.clone().with_profile("json:p.json"), &specs);
+                if sig != want {
+                    return Err(format!(
+                        "devices={devices} batch={batch} paging={paging}: profiling \
+                         changed the schedule (clock {} vs {})",
+                        sig.0, want.0
+                    ));
+                }
+                let p = profile.expect("profiled run produced no report");
+                p.check().map_err(|e| {
+                    format!("devices={devices} batch={batch} paging={paging}: {e}")
+                })?;
+                if p.attributed_cycles() + p.residual as u64 != busy {
+                    return Err(format!(
+                        "attribution {} + residual {} != busy {busy}",
+                        p.attributed_cycles(),
+                        p.residual
+                    ));
+                }
+                let link_sum: u64 = p.links.iter().map(|(_, c)| c).sum();
+                if link_sum != link {
+                    return Err(format!("link spans sum {link_sum} != charged {link}"));
+                }
+                if devices == 2 && link == 0 {
+                    return Err("two-device run charged no link cycles".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Offline replay equivalence: aggregating a recorded `jsonl:` trace
+/// through `Profile::from_jsonl` produces the same attribution leaves,
+/// link sums and histogram counts as the online observer that watched
+/// the identical run.
+#[test]
+fn from_jsonl_replay_matches_the_online_profile() {
+    let m = by_name("gpt-nano").unwrap();
+    let cfg = HwConfig::paper_baseline()
+        .with_max_streams(2)
+        .with_batch_decode(true)
+        .with_trace("jsonl:t.jsonl")
+        .with_profile("text:p.txt");
+    let mut fleet = FleetSim::new(&m, &cfg).unwrap();
+    for id in 0..3 {
+        fleet.submit(StreamSpec::with_prompt(id, 3, 4)).unwrap();
+    }
+    assert_eq!(fleet.run_all().unwrap().len(), 3);
+    fleet.finalize_stats();
+    let online = fleet.profile_report().expect("no online profile");
+    online.check().expect("online profile must reconcile");
+    let (_, jsonl) = fleet.render_trace().expect("no jsonl artifact");
+    let offline = Profile::from_jsonl(&jsonl, &m, &cfg).expect("replay failed");
+    offline.check().expect("offline profile must reconcile");
+    assert_eq!(offline.residual, 0, "offline replay pins busy to the covered sum");
+    assert_eq!(online.leaves, offline.leaves, "attribution trees diverge");
+    assert_eq!(online.links, offline.links, "link sums diverge");
+    let counts = |p: &Profile| -> Vec<(String, u64)> {
+        p.histograms.iter().map(|(k, h)| (k.clone(), h.count())).collect()
+    };
+    assert_eq!(counts(&online), counts(&offline), "histogram populations diverge");
+}
+
+/// Acceptance pin: the calibrated cost table predicts end-to-end
+/// request cycles within 5% mean / 15% max relative error on held-out
+/// validation requests, across four paper models. The same bounds are
+/// recorded by CI into `BENCH_calibration.json`.
+#[test]
+fn cost_table_calibration_error_is_bounded_across_the_zoo() {
+    let cfg = HwConfig::paper_baseline();
+    for name in ["gpt2-small", "gpt2-medium", "gpt2-large", "gpt2-xl"] {
+        let m = by_name(name).unwrap();
+        let rep = calibrate(&m, &cfg, 7, 6).unwrap();
+        assert_eq!(rep.rows.len(), 6, "{name}: expected 6 validation rows");
+        assert!(
+            rep.mean_rel_err <= 0.05,
+            "{name}: mean rel err {:.4} > 5%",
+            rep.mean_rel_err
+        );
+        assert!(
+            rep.max_rel_err <= 0.15,
+            "{name}: max rel err {:.4} > 15%",
+            rep.max_rel_err
+        );
+    }
+}
+
+/// Satellite golden: at two devices the windowed timeline bins link
+/// cycles correctly — windows tile [0, makespan) contiguously, busy +
+/// idle fills each window exactly, and the per-window link charges sum
+/// to `SimStats::link_transfer_cycles` (nonzero for a layer pipeline).
+#[test]
+fn timeline_windows_bin_link_cycles_exactly_at_two_devices() {
+    let m = by_name("gpt2-small").unwrap();
+    let cfg = HwConfig::paper_baseline()
+        .with_max_streams(2)
+        .with_devices(2)
+        .with_partition(PartitionStrategy::LayerPipeline)
+        .with_trace_window(2_000);
+    let mut fleet = FleetSim::new(&m, &cfg).unwrap();
+    for id in 0..2 {
+        fleet.submit(StreamSpec::with_prompt(id, 4, 4)).unwrap();
+    }
+    assert_eq!(fleet.run_all().unwrap().len(), 2);
+    let clock = fleet.clock();
+    let stats = fleet.finalize_stats().clone();
+    let tl = &stats.timeline;
+    assert!(!tl.is_empty(), "trace_window produced no timeline");
+    assert_eq!(tl[0].start, 0);
+    assert_eq!(tl.last().unwrap().end, clock, "windows must cover [0, makespan)");
+    for pair in tl.windows(2) {
+        assert_eq!(pair[0].end, pair[1].start, "windows not contiguous");
+    }
+    for w in tl {
+        assert_eq!(w.busy + w.idle, w.end - w.start, "busy+idle must fill the window");
+    }
+    let busy_sum: u64 = tl.iter().map(|w| w.busy).sum();
+    assert_eq!(busy_sum, stats.busy_cycles(), "window busy sums != busy cycles");
+    let link_sum: u64 = tl.iter().map(|w| w.link).sum();
+    assert_eq!(
+        link_sum, stats.link_transfer_cycles,
+        "window link sums != charged link transfer cycles"
+    );
+    assert!(link_sum > 0, "layer pipeline paid no link cycles");
+}
